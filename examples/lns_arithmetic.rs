@@ -1,0 +1,81 @@
+//! Tour of the LNS arithmetic API (the paper's §2–3 machinery):
+//! encoding, multiplier-free ⊡/⊞, the Δ approximations, error behaviour,
+//! and the Eq. 15 bit-width analysis.
+//!
+//! ```sh
+//! cargo run --release --example lns_arithmetic
+//! ```
+
+use lnsdnn::lns::{
+    delta_minus_exact, delta_plus_exact, min_log_bits, DeltaMode, LnsConfig, LnsSystem, LutSpec,
+};
+use lnsdnn::rng::SplitMix64;
+
+fn main() {
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    println!("=== 16-bit LNS word (q_i=4, q_f=10, LUT Δ) ===\n");
+
+    // Encoding: v ↔ (log2|v| in fixed point, sign).
+    for v in [3.0, -0.5, 1024.0, 0.01] {
+        let x = sys.encode_f64(v);
+        println!("  encode({v:>8}) = (m={:>6}, s={})   decode → {:.6}", x.m, x.s as u8, sys.decode_f64(x));
+    }
+
+    // Multiplication is exact (integer add of magnitudes).
+    let a = sys.encode_f64(6.25);
+    let b = sys.encode_f64(-0.8);
+    println!("\n  6.25 ⊡ -0.8  = {:.6}   (exact in log domain: adds magnitudes)", sys.decode_f64(sys.mul(a, b)));
+    println!("  6.25 ÷ -0.8  = {:.6}   (division equally exact)", sys.decode_f64(sys.div(a, b)));
+
+    // Addition is approximate: max + Δ±(d).
+    println!("\n  Δ approximations at d = 1.0:");
+    println!("    exact   Δ+ = {:+.4}   Δ− = {:+.4}", delta_plus_exact(1.0), delta_minus_exact(1.0));
+    let cfg = sys.config();
+    let d = cfg.to_units(1.0);
+    println!(
+        "    LUT(20) Δ+ = {:+.4}   Δ− = {:+.4}",
+        cfg.from_units(sys.delta().plus(d) as i32),
+        cfg.from_units(sys.delta().minus(d) as i32)
+    );
+    let bs = LnsSystem::new(LnsConfig::w16_bitshift());
+    println!(
+        "    bitshift Δ+ = {:+.4}   Δ− = {:+.4}   (Eq. 9: ±2^-d, −1.5·2^-d)",
+        cfg.from_units(bs.delta().plus(d) as i32),
+        cfg.from_units(bs.delta().minus(d) as i32)
+    );
+
+    // Statistical error of ⊞ over random operands, per Δ mode.
+    println!("\n  mean |relative error| of x ⊞ y over 100k random pairs:");
+    for (label, mode) in [
+        ("exact Δ", DeltaMode::Exact),
+        ("LUT d_max=10 r=1/2 (paper MAC)", DeltaMode::Lut(LutSpec::MAC20)),
+        ("LUT d_max=10 r=1/64 (paper softmax)", DeltaMode::Lut(LutSpec::SOFTMAX640)),
+        ("bit-shift", DeltaMode::BitShift),
+    ] {
+        let mut cfg = LnsConfig::w16_lut();
+        cfg.delta = mode;
+        cfg.softmax_delta = mode;
+        let s = LnsSystem::new(cfg);
+        let mut rng = SplitMix64::new(1);
+        let (mut err_sum, mut n) = (0.0, 0u64);
+        for _ in 0..100_000 {
+            let x = rng.uniform(-8.0, 8.0);
+            let y = rng.uniform(-8.0, 8.0);
+            if (x + y).abs() < 1e-3 {
+                continue;
+            }
+            let z = s.decode_f64(s.add(s.encode_f64(x), s.encode_f64(y)));
+            err_sum += ((z - (x + y)) / (x + y)).abs();
+            n += 1;
+        }
+        println!("    {:<36} {:.4}", label, err_sum / n as f64);
+    }
+
+    // Eq. 15: worst-case log-domain width for linear-equivalent precision.
+    println!("\n=== Eq. 15 bit-width bound ===");
+    for (bi, bf) in [(4u32, 7u32), (4, 11), (4, 19)] {
+        let wlin = 1 + bi + bf;
+        println!("  W_lin = {wlin:>2} (b_i={bi}, b_f={bf})  →  W_log ≥ {}", min_log_bits(bi, bf));
+    }
+    println!("\n(The paper's experiments — `table1` — show W_log ≈ W_lin suffices in practice.)");
+}

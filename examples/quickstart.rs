@@ -1,0 +1,36 @@
+//! Quickstart: train the paper's MLP in 16-bit LNS on a small synthetic
+//! dataset and compare against the float baseline.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lnsdnn::coordinator::experiments::{paper_config, run_one, ConfigTag};
+use lnsdnn::data::{synth_dataset, SynthSpec};
+
+fn main() {
+    // A small MNIST-like task (600 train / 100 test images, 10 classes).
+    let ds = synth_dataset(&SynthSpec::mnist_like(0.01, 7));
+    println!(
+        "dataset: {} — {} train / {} test, {} classes\n",
+        ds.name,
+        ds.train_len(),
+        ds.test_len(),
+        ds.classes
+    );
+
+    for tag in [ConfigTag::Float, ConfigTag::Log16Lut, ConfigTag::Log16Bs] {
+        let cfg = paper_config(&ds, tag, 10, 32, 42);
+        let rec = run_one(&ds, tag, &cfg);
+        println!(
+            "{:<10}  test acc {:.1}%  (final val acc {:.1}%, {:.1}s)",
+            tag.label(),
+            rec.test_accuracy * 100.0,
+            rec.curve.last().map(|e| e.val_accuracy * 100.0).unwrap_or(0.0),
+            rec.seconds
+        );
+    }
+    println!("\n16-bit LNS should land within ~1-2 points of float — the");
+    println!("paper's headline claim, at laptop scale. Scale up with:");
+    println!("  cargo run --release -- table1 --scale 1.0 --epochs 20");
+}

@@ -1,0 +1,178 @@
+//! Batched inference serving over the AOT artifact (L3 ↔ runtime ↔ L2/L1).
+//!
+//! Trains a small LNS model natively, exports its parameters into the
+//! PJRT forward artifact's input layout, then serves concurrent
+//! single-image requests through the dynamic batcher with the *artifact*
+//! (not the native engine) executing every batch — Python is nowhere in
+//! the serving path. Reports latency/throughput/batch-occupancy.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --example serve_infer [n_requests] [n_clients]
+//! ```
+
+use lnsdnn::coordinator::server::BatchServer;
+use lnsdnn::data::{synth_dataset, SynthSpec};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::SgdConfig;
+use lnsdnn::runtime::{ArtifactExecutable, ArtifactRegistry, Runtime};
+use lnsdnn::tensor::{Backend, LnsBackend};
+use lnsdnn::train::{train, TrainConfig};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let n_clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. Train a model natively (fast, small scale).
+    let ds = synth_dataset(&SynthSpec::mnist_like(0.01, 7));
+    let backend = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let cfg = TrainConfig {
+        dims: vec![784, 100, 10],
+        epochs: 6,
+        batch_size: 5,
+        sgd: SgdConfig { lr: 0.01, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: lnsdnn::nn::InitScheme::HeNormal,
+        seed: 42,
+    };
+    println!("training serving model natively (log16-lut)…");
+    let result = train(&backend, &ds, &cfg);
+    println!("  test accuracy {:.1}%", result.test.accuracy * 100.0);
+
+    // 2. Export parameters into the artifact's (m, s)-plane layout.
+    let mut plane_params: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+    for layer in &result.model.layers {
+        let wm: Vec<i32> = layer.w.data.iter().map(|v| v.m).collect();
+        let ws: Vec<i32> = layer.w.data.iter().map(|v| v.s as i32).collect();
+        let bm: Vec<i32> = layer.b.iter().map(|v| v.m).collect();
+        let bs: Vec<i32> = layer.b.iter().map(|v| v.s as i32).collect();
+        plane_params.push((wm, ws));
+        plane_params.push((bm, bs));
+    }
+
+    // 3. The batch handler: encode pixels → planes, pad to the artifact's
+    //    compiled batch (64), execute on PJRT, argmax in the log domain.
+    //    PJRT handles live in a thread_local because the batcher worker is
+    //    a dedicated thread and the xla wrappers are not Sync.
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    let dims = [784usize, 100, 10];
+    let art_batch = 64usize;
+    let classes = 10usize;
+
+    thread_local! {
+        static EXE: std::cell::OnceCell<(Runtime, ArtifactExecutable)> =
+            const { std::cell::OnceCell::new() };
+    }
+
+    let sys_h = sys.clone();
+    let handler = move |flat: &[u8], n: usize| -> Vec<usize> {
+        EXE.with(|cell| {
+            let (_rt, exe) = cell.get_or_init(|| {
+                let rt = Runtime::cpu().expect("PJRT client");
+                let mut reg = ArtifactRegistry::open(&PathBuf::from("artifacts")).unwrap();
+                reg.load(&rt, "lns_fwd_w16_lut_paper").unwrap();
+                // Re-load to own the executable directly (registry keeps a
+                // cache; we want a standalone handle).
+                let meta = reg.meta("lns_fwd_w16_lut_paper").unwrap().clone();
+                let exe = rt
+                    .load_hlo_text(&PathBuf::from("artifacts").join(&meta.file))
+                    .unwrap();
+                (rt, exe)
+            });
+            // Encode the batch, pad to the compiled batch size.
+            let mut xm = vec![lnsdnn::lns::ZERO_M; art_batch * dims[0]];
+            let mut xs = vec![1i32; art_batch * dims[0]];
+            for i in 0..n {
+                for p in 0..dims[0] {
+                    let v = sys_h.encode_f64(flat[i * dims[0] + p] as f64 / 255.0);
+                    xm[i * dims[0] + p] = v.m;
+                    xs[i * dims[0] + p] = v.s as i32;
+                }
+            }
+            let mut inputs = Vec::new();
+            for l in 0..2 {
+                let (fi, fo) = (dims[l] as i64, dims[l + 1] as i64);
+                let (wm, ws) = &plane_params[2 * l];
+                let (bm, bs) = &plane_params[2 * l + 1];
+                inputs.push(ArtifactExecutable::lit_i32(wm, &[fi, fo]).unwrap());
+                inputs.push(ArtifactExecutable::lit_i32(ws, &[fi, fo]).unwrap());
+                inputs.push(ArtifactExecutable::lit_i32(bm, &[fo]).unwrap());
+                inputs.push(ArtifactExecutable::lit_i32(bs, &[fo]).unwrap());
+            }
+            inputs.push(
+                ArtifactExecutable::lit_i32(&xm, &[art_batch as i64, dims[0] as i64]).unwrap(),
+            );
+            inputs.push(
+                ArtifactExecutable::lit_i32(&xs, &[art_batch as i64, dims[0] as i64]).unwrap(),
+            );
+            let out = exe.run(&inputs).expect("artifact execution");
+            let lm: Vec<i32> = out[0].to_vec().unwrap();
+            let ls: Vec<i32> = out[1].to_vec().unwrap();
+            (0..n)
+                .map(|i| {
+                    let mut best = 0usize;
+                    for j in 1..classes {
+                        let a = lnsdnn::lns::LnsValue::new(lm[i * classes + j], ls[i * classes + j] == 1);
+                        let b = lnsdnn::lns::LnsValue::new(lm[i * classes + best], ls[i * classes + best] == 1);
+                        if sys_h.gt(a, b) {
+                            best = j;
+                        }
+                    }
+                    best
+                })
+                .collect()
+        })
+    };
+
+    // 4. Serve concurrent clients; measure.
+    println!("serving {n_requests} requests from {n_clients} clients (batch ≤ {art_batch}, wait 2ms)…");
+    let server = BatchServer::start(art_batch, Duration::from_millis(2), 784, handler);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let per_client = n_requests / n_clients;
+    for c in 0..n_clients {
+        let client = server.client();
+        let imgs: Vec<Vec<u8>> = (0..per_client)
+            .map(|i| {
+                let idx = (c * per_client + i) % ds.test_len();
+                ds.test_images[idx * 784..(idx + 1) * 784].to_vec()
+            })
+            .collect();
+        let labels: Vec<u8> = (0..per_client)
+            .map(|i| ds.test_labels[(c * per_client + i) % ds.test_len()])
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for (img, &lbl) in imgs.into_iter().zip(&labels) {
+                let reply = client.infer(img).expect("reply");
+                if reply.class == lbl as usize {
+                    correct += 1;
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed();
+    let stats = server.stats();
+    println!("\n== serving report ==");
+    println!("  served        {} requests in {:.2}s", stats.served, wall.as_secs_f64());
+    println!("  throughput    {:.0} req/s", stats.served as f64 / wall.as_secs_f64());
+    println!("  mean latency  {:.2} ms", stats.mean_latency().as_secs_f64() * 1e3);
+    println!("  max latency   {:.2} ms", stats.max_latency.as_secs_f64() * 1e3);
+    println!("  batches       {} (mean occupancy {:.1})", stats.batches, stats.mean_batch());
+    println!("  accuracy      {:.1}%  (native-trained model, PJRT-served)",
+        100.0 * correct as f64 / (per_client * n_clients) as f64);
+    drop(server);
+    let _ = backend.decode(result.model.layers[0].b[0]);
+}

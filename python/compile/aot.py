@@ -1,0 +1,247 @@
+"""AOT compiler: lower every model variant to HLO text + metadata.
+
+Run once via ``make artifacts``; Python never runs at request time.
+
+Outputs under ``--out-dir`` (default ``../artifacts``):
+* ``<name>.hlo.txt``  — HLO text per artifact (the interchange format the
+  image's xla_extension 0.5.1 accepts; serialized protos from jax ≥ 0.5
+  are rejected — see /opt/xla-example/README.md),
+* ``manifest.tsv``    — name/file/kind/bits/delta/dims/batch registry rows,
+* ``golden_lns.tsv``  — cross-language golden vectors: random op
+  inputs/outputs per config, compared bit-exactly by
+  ``rust/tests/cross_check.rs``,
+* ``golden_tables.tsv`` — the Δ±/pow2 tables themselves.
+"""
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import lnscore as lc
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big constants as ``constant({...})`` — which XLA 0.5.1's text parser
+    accepts *silently*, replacing the Δ/pow2 tables with garbage. (Found
+    the hard way; guarded by `rust/tests/pjrt_roundtrip.rs`.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+# The lowered variants. Small dims keep test-time compiles snappy; the
+# paper dims are the real deployment artifacts.
+PAPER_DIMS = (784, 100, 10)
+SMALL_DIMS = (12, 8, 4)
+
+LNS_CONFIGS = ["w16_lut", "w12_lut", "w16_bs", "w12_bs"]
+
+
+def lns_specs():
+    specs = []
+    for name in LNS_CONFIGS:
+        cfg = lc.BY_NAME[name]()
+        specs.append(M.LnsModelSpec(cfg=cfg, dims=PAPER_DIMS, batch=5))
+    # Small variants (16-bit LUT only) for fast integration tests.
+    specs.append(M.LnsModelSpec(cfg=lc.w16_lut(), dims=SMALL_DIMS, batch=3))
+    return specs
+
+
+def spec_tag(spec: M.LnsModelSpec) -> str:
+    size = "small" if tuple(spec.dims) == SMALL_DIMS else "paper"
+    return f"{spec.cfg.name}_{size}"
+
+
+def lower_lns(spec: M.LnsModelSpec, out_dir: str, manifest: list):
+    cfg = spec.cfg
+    delta_tag = "lut" if cfg.delta_mode == "lut" else "bs"
+    dims_s = "x".join(str(d) for d in spec.dims)
+    i32 = jnp.int32
+
+    def shape(d):
+        return jax.ShapeDtypeStruct(d, i32)
+
+    param_shapes = []
+    for l in range(len(spec.dims) - 1):
+        fi, fo = spec.dims[l], spec.dims[l + 1]
+        param_shapes += [shape((fi, fo)), shape((fi, fo)), shape((fo,)), shape((fo,))]
+
+    # Forward (inference) artifact: batch 64 for paper dims, batch for small.
+    fwd_batch = 64 if tuple(spec.dims) == PAPER_DIMS else spec.batch
+    fwd_fn = M.make_lns_fwd_fn(spec)
+    fwd_args = param_shapes + [shape((fwd_batch, spec.dims[0]))] * 2
+    name = f"lns_fwd_{spec_tag(spec)}"
+    text = to_hlo_text(jax.jit(fwd_fn).lower(*fwd_args))
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append((name, f"{name}.hlo.txt", "fwd", cfg.total_bits, delta_tag, dims_s, fwd_batch))
+    print(f"  {name}: {len(text)} chars")
+
+    # Train-step artifact (paper batch).
+    train_fn = M.make_lns_train_fn(spec)
+    train_args = param_shapes + [
+        shape((spec.batch, spec.dims[0])),
+        shape((spec.batch, spec.dims[0])),
+        shape((spec.batch,)),
+    ]
+    name = f"lns_train_{spec_tag(spec)}"
+    text = to_hlo_text(jax.jit(train_fn).lower(*train_args))
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(
+        (name, f"{name}.hlo.txt", "train_step", cfg.total_bits, delta_tag, dims_s, spec.batch)
+    )
+    print(f"  {name}: {len(text)} chars")
+
+
+def lower_float(dims, out_dir: str, manifest: list):
+    dims_s = "x".join(str(d) for d in dims)
+    f32 = jnp.float32
+
+    def shape(d):
+        return jax.ShapeDtypeStruct(d, f32)
+
+    param_shapes = []
+    for l in range(len(dims) - 1):
+        param_shapes += [shape((dims[l], dims[l + 1])), shape((dims[l + 1],))]
+
+    fwd = M.make_float_fwd_fn(dims)
+    name = "float_fwd_paper"
+    text = to_hlo_text(jax.jit(fwd).lower(*(param_shapes + [shape((64, dims[0]))])))
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append((name, f"{name}.hlo.txt", "float_fwd", 0, "-", dims_s, 64))
+    print(f"  {name}: {len(text)} chars")
+
+    train = M.make_float_train_fn(dims)
+    name = "float_train_paper"
+    args = param_shapes + [
+        shape((5, dims[0])),
+        jax.ShapeDtypeStruct((5,), jnp.int32),
+    ]
+    text = to_hlo_text(jax.jit(train).lower(*args))
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append((name, f"{name}.hlo.txt", "float_train", 0, "-", dims_s, 5))
+    print(f"  {name}: {len(text)} chars")
+
+
+# ---------------------------------------------------------------------
+# Golden vectors (cross-language bit-exactness corpus)
+# ---------------------------------------------------------------------
+
+
+def random_lns(rng, cfg, n, zero_frac=0.1):
+    m = rng.integers(cfg.m_min, cfg.m_max + 1, size=n).astype(np.int32)
+    z = rng.random(n) < zero_frac
+    m = np.where(z, lc.ZERO_M, m).astype(np.int32)
+    s = rng.integers(0, 2, size=n).astype(np.int32)
+    s = np.where(z, 1, s).astype(np.int32)
+    return m, s
+
+
+def write_golden(out_dir: str, n_cases: int = 200):
+    rows = ["# config\top\tinputs...\toutputs..."]
+    trows = ["# config\ttable\tindex\tvalue"]
+    for cname in LNS_CONFIGS:
+        cfg = lc.BY_NAME[cname]()
+        mac = lc.delta_tables(cfg, "mac")
+        sm = lc.delta_tables(cfg, "softmax")
+        p2 = lc.pow2_table(cfg)
+        beta = int(cfg.to_units(np.log2(0.01)))
+        rng = np.random.default_rng(hash(cname) % (2**31))
+
+        # Tables.
+        for tname, arr in [
+            ("delta_plus", mac[0]),
+            ("delta_minus", mac[1]),
+            ("sm_delta_plus", sm[0]),
+            ("sm_delta_minus", sm[1]),
+            ("pow2", p2[0]),
+        ]:
+            for i, v in enumerate(np.asarray(arr)):
+                trows.append(f"{cname}\t{tname}\t{i}\t{int(v)}")
+
+        # Scalar ops.
+        mx, sx = random_lns(rng, cfg, n_cases)
+        my, sy = random_lns(rng, cfg, n_cases)
+        for op in ["mul", "add", "sub"]:
+            fn = {"mul": lambda: lc.lns_mul(mx, sx, my, sy, cfg),
+                  "add": lambda: lc.lns_add(mx, sx, my, sy, cfg, mac),
+                  "sub": lambda: lc.lns_sub(mx, sx, my, sy, cfg, mac)}[op]
+            om, os_ = (np.asarray(v) for v in fn())
+            for i in range(n_cases):
+                rows.append(
+                    f"{cname}\t{op}\t{mx[i]}\t{sx[i]}\t{my[i]}\t{sy[i]}\t{om[i]}\t{os_[i]}"
+                )
+
+        # llReLU fwd.
+        om, os_ = (np.asarray(v) for v in lc.llrelu(jnp.asarray(mx), jnp.asarray(sx), cfg, beta))
+        for i in range(n_cases):
+            rows.append(f"{cname}\tllrelu\t{mx[i]}\t{sx[i]}\t{om[i]}\t{os_[i]}")
+
+        # Soft-max logit conversion.
+        t = np.asarray(lc.softmax_logit_units(jnp.asarray(mx), jnp.asarray(sx), cfg, p2))
+        for i in range(n_cases):
+            rows.append(f"{cname}\tsoftmax_logit\t{mx[i]}\t{sx[i]}\t{t[i]}")
+
+        # Full soft-max + CE grad rows (batch 4 × 5 classes).
+        lm = np.stack([random_lns(rng, cfg, 5, 0.05)[0] for _ in range(4)])
+        ls = np.stack([random_lns(rng, cfg, 5, 0.05)[1] for _ in range(4)])
+        labels = rng.integers(0, 5, size=4).astype(np.int32)
+        dm, dsn, lp = (np.asarray(v) for v in lc.log_softmax_ce_grad(
+            jnp.asarray(lm), jnp.asarray(ls), jnp.asarray(labels), cfg, sm, p2))
+        for b in range(4):
+            ins = "\t".join(f"{lm[b, j]}\t{ls[b, j]}" for j in range(5))
+            outs = "\t".join(f"{dm[b, j]}\t{dsn[b, j]}" for j in range(5))
+            rows.append(f"{cname}\tsoftmax_grad\t{labels[b]}\t{ins}\t{outs}\t{lp[b]}")
+
+    with open(os.path.join(out_dir, "golden_lns.tsv"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+    with open(os.path.join(out_dir, "golden_tables.tsv"), "w") as f:
+        f.write("\n".join(trows) + "\n")
+    print(f"  golden vectors: {len(rows)} rows; tables: {len(trows)} rows")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-paper", action="store_true", help="small artifacts only (fast tests)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    print("lowering LNS variants…")
+    for spec in lns_specs():
+        if args.skip_paper and tuple(spec.dims) == PAPER_DIMS:
+            continue
+        lower_lns(spec, args.out_dir, manifest)
+    if not args.skip_paper:
+        print("lowering float baseline…")
+        lower_float(PAPER_DIMS, args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for row in manifest:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+    write_golden(args.out_dir)
+    print("AOT bundle complete:", os.path.abspath(args.out_dir))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

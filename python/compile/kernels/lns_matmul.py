@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: LNS matrix multiply.
+
+The paper's MAC — `⊞_k (A[i,k] ⊡ W[k,j])` — as a tiled Pallas kernel.
+
+TPU adaptation (DESIGN.md §7): LNS tensors are int32 (magnitude, sign)
+planes; the ⊞ reduction is vectorized `max`/`sub`/`gather`/`add` — VPU
+work, with the Δ LUT (≤640×4 B) resident in VMEM and the operand tiles
+streamed HBM→VMEM exactly like a dense matmul. The MXU cannot express
+table lookups, so the kernel deliberately targets the vector unit; the
+`BlockSpec` grid below is the HBM↔VMEM schedule.
+
+`interpret=True` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that both pytest and
+the Rust runtime execute. Numerics are identical either way; real-TPU
+performance is *estimated* (EXPERIMENTS.md §Perf) from the VMEM footprint
+and arithmetic intensity.
+"""
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import lnscore as lc
+
+
+def _mac_kernel(*refs, cfg, index_shift, use_lut, k):
+    """One (bm × bn) output tile: sequential ⊞ over the full K axis.
+
+    Ref order: `am, as, wm, ws[, table_plus, table_minus], om, os` — the Δ
+    tables ride along as (tiny, VMEM-resident) inputs when in LUT mode.
+    """
+    if use_lut:
+        am_ref, as_ref, wm_ref, ws_ref, tp_ref, tm_ref, om_ref, os_ref = refs
+        tables = (tp_ref[...], tm_ref[...], index_shift)
+    else:
+        am_ref, as_ref, wm_ref, ws_ref, om_ref, os_ref = refs
+        import numpy as _np
+
+        tables = (_np.zeros(0, _np.int32), _np.zeros(0, _np.int32), 0)
+    am = am_ref[...]
+    as_ = as_ref[...]
+    wm = wm_ref[...]
+    ws = ws_ref[...]
+    bm, bn = om_ref.shape
+
+    def body(p, carry):
+        acc_m, acc_s = carry
+        pm, ps = lc.lns_mul(
+            jax.lax.dynamic_slice_in_dim(am, p, 1, 1),
+            jax.lax.dynamic_slice_in_dim(as_, p, 1, 1),
+            jax.lax.dynamic_slice_in_dim(wm, p, 1, 0),
+            jax.lax.dynamic_slice_in_dim(ws, p, 1, 0),
+            cfg,
+        )
+        return lc.lns_add(acc_m, acc_s, pm, ps, cfg, tables)
+
+    acc_m = jnp.full((bm, bn), lc.ZERO_M, jnp.int32)
+    acc_s = jnp.ones((bm, bn), jnp.int32)
+    acc_m, acc_s = jax.lax.fori_loop(0, k, body, (acc_m, acc_s))
+    om_ref[...] = acc_m
+    os_ref[...] = acc_s
+
+
+def lns_matmul(am, as_, wm, ws, cfg: lc.LnsConfig, tables, block_m: int = 8, block_n: int = 128):
+    """Tiled LNS matmul `[B,K]·[K,N] → [B,N]` via `pallas_call`.
+
+    The grid tiles the *output*; each program instance streams its
+    `(block_m, K)` and `(K, block_n)` operand tiles and reduces over K in
+    VMEM. Δ tables are closed over as kernel constants (they are what a
+    TPU build would pin in VMEM).
+    """
+    b, k = am.shape
+    k2, n = wm.shape
+    assert k == k2, "inner-dim mismatch"
+    bm = min(block_m, b)
+    bn = min(block_n, n)
+    # Shrink blocks to divide the problem exactly (shapes here are the
+    # paper's fixed MLP dims; generality beyond divisibility isn't needed).
+    while b % bm:
+        bm -= 1
+    while n % bn:
+        bn -= 1
+
+    table_plus, table_minus, index_shift = tables
+    use_lut = int(np.asarray(table_plus).shape[0]) > 0
+    kern = functools.partial(
+        _mac_kernel, cfg=cfg, index_shift=index_shift, use_lut=use_lut, k=k
+    )
+    grid = (b // bm, n // bn)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, n), jnp.int32),
+        jax.ShapeDtypeStruct((b, n), jnp.int32),
+    ]
+    in_specs = [
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+    ]
+    operands = [am, as_, wm, ws]
+    if use_lut:
+        nt = int(np.asarray(table_plus).shape[0])
+        in_specs += [
+            pl.BlockSpec((nt,), lambda i, j: (0,)),
+            pl.BlockSpec((nt,), lambda i, j: (0,)),
+        ]
+        operands += [jnp.asarray(table_plus, jnp.int32), jnp.asarray(table_minus, jnp.int32)]
+    out_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+    ]
+    om, os_ = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(*operands)
+    return om, os_

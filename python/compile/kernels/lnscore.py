@@ -1,0 +1,308 @@
+"""LNS fixed-point core: configs, Δ tables, and elementwise jnp ops.
+
+This module is the Python mirror of ``rust/src/lns/`` and implements the
+**identical integer semantics** (DESIGN.md §5): the Rust native engine and
+the HLO artifacts lowered from these functions are bit-exact against each
+other, which `rust/tests/cross_check.rs` and `rust/tests/pjrt_roundtrip.rs`
+verify.
+
+Representation: a tensor of LNS values is a pair of int32 arrays
+``(m, s)`` — ``m`` is the log-magnitude in units of ``2^-q_f`` with
+``ZERO_M`` as the exact-zero sentinel, ``s`` is the linear sign with the
+paper's convention ``1 ⇔ v > 0``.
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# Exact-zero sentinel (Rust: i32::MIN).
+ZERO_M = np.int32(-(2**31))
+# Δ− singular-bin sentinel: hugely negative, saturates after the clamp.
+# (Rust uses i64::MIN/4; any value far below -m_max is equivalent because
+# the subsequent add saturates. We stay in int32 range.)
+MINUS_SAT = np.int32(-(2**30))
+
+
+def _to_units(x: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Fixed-point quantization, round-half-away-from-zero (Rust to_units)."""
+    scaled = np.asarray(x, dtype=np.float64) * float(1 << frac_bits)
+    return np.where(scaled >= 0.0, np.floor(scaled + 0.5), np.ceil(scaled - 0.5)).astype(
+        np.int64
+    )
+
+
+@dataclass(frozen=True)
+class LnsConfig:
+    """Word format + Δ approximation (mirror of Rust LnsConfig).
+
+    delta_mode / softmax_delta_mode: "lut" or "bitshift".
+    LUT specs are (d_max, log2_inv_r).
+    """
+
+    total_bits: int
+    frac_bits: int
+    delta_mode: str = "lut"
+    lut: Tuple[int, int] = (10, 1)  # d_max, log2(1/r)  -> 20 entries
+    softmax_delta_mode: str = "lut"
+    softmax_lut: Tuple[int, int] = (10, 6)  # -> 640 entries
+    name: str = field(default="", compare=False)
+
+    @property
+    def m_max(self) -> int:
+        return (1 << (self.total_bits - 2)) - 1
+
+    @property
+    def m_min(self) -> int:
+        return -self.m_max
+
+    def to_units(self, x) -> np.ndarray:
+        return _to_units(x, self.frac_bits)
+
+
+def w16_lut() -> LnsConfig:
+    return LnsConfig(16, 10, "lut", (10, 1), "lut", (10, 6), name="w16_lut")
+
+
+def w12_lut() -> LnsConfig:
+    return LnsConfig(12, 6, "lut", (10, 1), "lut", (10, 6), name="w12_lut")
+
+
+def w16_bitshift() -> LnsConfig:
+    return LnsConfig(16, 10, "bitshift", (10, 1), "bitshift", (10, 6), name="w16_bs")
+
+
+def w12_bitshift() -> LnsConfig:
+    return LnsConfig(12, 6, "bitshift", (10, 1), "bitshift", (10, 6), name="w12_bs")
+
+
+BY_NAME = {
+    "w16_lut": w16_lut,
+    "w12_lut": w12_lut,
+    "w16_bs": w16_bitshift,
+    "w12_bs": w12_bitshift,
+}
+
+
+# ---------------------------------------------------------------------
+# Tables (mirror of rust delta.rs / linconv.rs — identical rounding)
+# ---------------------------------------------------------------------
+
+
+def delta_tables(cfg: LnsConfig, which: str) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Δ± tables in fixed-point units + the index shift.
+
+    ``which`` is "mac" or "softmax". For bit-shift mode returns empty
+    tables (the ops compute shifts inline).
+    """
+    mode = cfg.delta_mode if which == "mac" else cfg.softmax_delta_mode
+    if mode != "lut":
+        return np.zeros(0, np.int32), np.zeros(0, np.int32), 0
+    d_max, log2_inv_r = cfg.lut if which == "mac" else cfg.softmax_lut
+    assert log2_inv_r <= cfg.frac_bits, "LUT finer than word resolution"
+    n = d_max << log2_inv_r
+    r = 1.0 / (1 << log2_inv_r)
+    d = np.arange(n, dtype=np.float64) * r
+    plus = cfg.to_units(np.log2(1.0 + np.exp2(-d))).astype(np.int32)
+    with np.errstate(divide="ignore"):
+        minus_f = np.log2(1.0 - np.exp2(-d))
+    minus = cfg.to_units(np.where(np.isfinite(minus_f), minus_f, 0.0)).astype(np.int32)
+    minus[0] = MINUS_SAT
+    shift = cfg.frac_bits - log2_inv_r
+    return plus, minus, shift
+
+
+def pow2_table(cfg: LnsConfig) -> Tuple[np.ndarray, int]:
+    """Fractional 2^f table (mirror of rust Pow2Table): entries
+    round(2^{i/2^k} · 2^{q_f}) for i in [0, 2^k), k = min(q_f, 10)."""
+    k = min(cfg.frac_bits, 10)
+    n = 1 << k
+    f = np.arange(n, dtype=np.float64) / n
+    entries = np.floor(np.exp2(f) * float(1 << cfg.frac_bits) + 0.5).astype(np.int32)
+    return entries, k
+
+
+# ---------------------------------------------------------------------
+# Host-side encode/decode (dataset + weight conversion; mirrors Rust)
+# ---------------------------------------------------------------------
+
+
+def encode(v: np.ndarray, cfg: LnsConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Real → (m, s) int32 planes. Zero → (ZERO_M, 1)."""
+    v = np.asarray(v, dtype=np.float64)
+    nz = v != 0.0
+    with np.errstate(divide="ignore"):
+        mag = np.log2(np.abs(np.where(nz, v, 1.0)))
+    m = np.clip(cfg.to_units(mag), cfg.m_min, cfg.m_max).astype(np.int32)
+    m = np.where(nz, m, ZERO_M).astype(np.int32)
+    s = np.where(v > 0.0, 1, 0).astype(np.int32)
+    s = np.where(nz, s, 1).astype(np.int32)
+    return m, s
+
+
+def decode(m: np.ndarray, s: np.ndarray, cfg: LnsConfig) -> np.ndarray:
+    """(m, s) → float64."""
+    m = np.asarray(m, dtype=np.int64)
+    zero = m == int(ZERO_M)
+    mag = np.exp2(np.where(zero, 0, m).astype(np.float64) / float(1 << cfg.frac_bits))
+    out = np.where(np.asarray(s) == 1, mag, -mag)
+    return np.where(zero, 0.0, out)
+
+
+# ---------------------------------------------------------------------
+# Traced (jnp) elementwise ops — these lower into the artifacts
+# ---------------------------------------------------------------------
+
+
+def _sat(m, cfg: LnsConfig):
+    return jnp.clip(m, cfg.m_min, cfg.m_max)
+
+
+def lns_mul(mx, sx, my, sy, cfg: LnsConfig):
+    """⊡: add magnitudes (saturating), XNOR signs; zero annihilates."""
+    zx = mx == ZERO_M
+    zy = my == ZERO_M
+    z = zx | zy
+    mm = _sat(jnp.where(zx, 0, mx) + jnp.where(zy, 0, my), cfg)
+    m = jnp.where(z, ZERO_M, mm).astype(jnp.int32)
+    s = jnp.where(z, 1, 1 - (sx ^ sy)).astype(jnp.int32)
+    return m, s
+
+
+def _delta_plus(d, cfg: LnsConfig, tables):
+    """Δ+ of a non-negative difference in units (int32 → int32).
+
+    LUT lookups use round-to-nearest sample indexing (`(d + bin/2) >>
+    shift`) — floor indexing systematically overestimates the decreasing
+    Δ+, which compounds across long ⊞ reductions and destabilizes
+    training (mirrors rust/src/lns/delta.rs).
+    """
+    plus, _minus, shift = tables
+    if plus.shape[0] == 0:  # bit-shift mode
+        sh = jnp.minimum(d >> cfg.frac_bits, 31)
+        return (jnp.int32(1 << cfg.frac_bits) >> sh).astype(jnp.int32)
+    idx = (d + (1 << shift >> 1)) >> shift
+    n = plus.shape[0]
+    t = jnp.asarray(plus, dtype=jnp.int32)
+    return jnp.where(idx >= n, 0, t[jnp.clip(idx, 0, n - 1)]).astype(jnp.int32)
+
+
+def _delta_minus(d, cfg: LnsConfig, tables):
+    """Δ− of a positive difference in units (int32 → int32, ≤ 0)."""
+    _plus, minus, shift = tables
+    if minus.shape[0] == 0:  # bit-shift mode
+        sh = jnp.minimum(d >> cfg.frac_bits, 31)
+        base = jnp.int32((3 << cfg.frac_bits) >> 1)
+        return (-(base >> sh)).astype(jnp.int32)
+    idx = (d + (1 << shift >> 1)) >> shift  # nearest-sample (see _delta_plus)
+    n = minus.shape[0]
+    t = jnp.asarray(minus, dtype=jnp.int32)
+    return jnp.where(idx >= n, 0, t[jnp.clip(idx, 0, n - 1)]).astype(jnp.int32)
+
+
+def lns_add(mx, sx, my, sy, cfg: LnsConfig, tables):
+    """⊞ (Eq. 3): max + Δ±(|X−Y|) with the given Δ tables."""
+    zx = mx == ZERO_M
+    zy = my == ZERO_M
+    # Mask zeros out of the arithmetic then select at the end.
+    mxs = jnp.where(zx, 0, mx)
+    mys = jnp.where(zy, 0, my)
+    x_bigger = mxs > mys
+    mmax = jnp.maximum(mxs, mys)
+    d = jnp.abs(mxs - mys)
+    s_z = jnp.where(x_bigger, sx, sy).astype(jnp.int32)
+    same = sx == sy
+
+    m_same = _sat(mmax + _delta_plus(d, cfg, tables), cfg)
+    # Opposite signs: d == 0 → exact cancellation (ZERO); else saturated.
+    dm = _delta_minus(jnp.maximum(d, 1), cfg, tables)
+    m_diff = _sat(mmax + dm, cfg)
+    cancel = (~same) & (d == 0)
+
+    m = jnp.where(same, m_same, m_diff).astype(jnp.int32)
+    m = jnp.where(cancel, ZERO_M, m)
+    s = jnp.where(cancel, 1, s_z)
+    # Zero-operand identities.
+    m = jnp.where(zx, my, jnp.where(zy, mx, m)).astype(jnp.int32)
+    s = jnp.where(zx, sy, jnp.where(zy, sx, s)).astype(jnp.int32)
+    return m, s
+
+
+def lns_sub(mx, sx, my, sy, cfg: LnsConfig, tables):
+    """⊟ (Eq. 5): flip the second sign, but keep exact-zero's canonical +."""
+    sy_f = jnp.where(my == ZERO_M, sy, 1 - sy).astype(jnp.int32)
+    return lns_add(mx, sx, my, sy_f, cfg, tables)
+
+
+def llrelu(m, s, cfg: LnsConfig, beta_units: int):
+    """llReLU (Eq. 11): negative values get β added to the magnitude."""
+    neg = (s == 0) & (m != ZERO_M)
+    shifted = _sat(m + jnp.int32(beta_units), cfg)
+    return jnp.where(neg, shifted, m).astype(jnp.int32), s
+
+
+def llrelu_bwd(pre_m, pre_s, up_m, up_s, cfg: LnsConfig, beta_units: int):
+    """llReLU backprop: scale upstream by the slope where preact < 0."""
+    neg = (pre_s == 0) & (pre_m != ZERO_M) & (up_m != ZERO_M)
+    shifted = _sat(up_m + jnp.int32(beta_units), cfg)
+    return jnp.where(neg, shifted, up_m).astype(jnp.int32), up_s
+
+
+def softmax_logit_units(m, s, cfg: LnsConfig, p2):
+    """m-field of (a·log2 e) (Eq. 14a prep; mirrors Rust
+    softmax_logit_units): one shift-and-LUT 2^x evaluation."""
+    entries, k = p2
+    q = cfg.frac_bits
+    c1 = int(cfg.to_units(np.log2(np.log2(np.e))))
+    e_units = m + jnp.int32(c1 + (q << q))
+    i_part = e_units >> q  # arithmetic shift = floor division
+    f_part = e_units - (i_part << q)
+    t = jnp.asarray(entries, dtype=jnp.int32)
+    entry = t[f_part >> (q - k)]
+    shift = i_part - q
+    # Positive shifts: entry << shift (values stay well inside int32 for
+    # the clamped exponent range); negative: round-half-up right shift.
+    # Clip the left shift so entry<<shift stays inside int32: entry < 2^11
+    # and any true shift > 18 yields ≥ 2^28 ≫ m_max, so the min() below
+    # saturates identically.
+    pos_shift = jnp.clip(shift, 0, 18)
+    neg_shift = jnp.clip(-shift, 1, 31)
+    up = entry << pos_shift
+    down = (entry + (jnp.int32(1) << (neg_shift - 1))) >> neg_shift
+    mag = jnp.where(shift >= 0, up, down)
+    mag = jnp.minimum(mag, cfg.m_max)
+    t_units = jnp.where(s == 1, mag, -mag)
+    return jnp.where(m == ZERO_M, 0, t_units).astype(jnp.int32)
+
+
+def log_softmax_ce_grad(logits_m, logits_s, labels, cfg: LnsConfig, sm_tables, p2):
+    """Eq. 14: returns (δ_m, δ_s, log2p_label_units).
+
+    ``logits_*``: [batch, C]; ``labels``: int32 [batch].
+    Reduction over classes is sequential ascending (bit-exact with Rust).
+    """
+    batch, classes = logits_m.shape
+    t = softmax_logit_units(logits_m, logits_s, cfg, p2)  # [B, C] int32
+
+    # lse = ⊞_j (t_j, +): sequential over classes.
+    lse_m = jnp.full((batch,), ZERO_M, jnp.int32)
+    lse_s = jnp.ones((batch,), jnp.int32)
+    for j in range(classes):
+        lse_m, lse_s = lns_add(lse_m, lse_s, t[:, j], jnp.ones((batch,), jnp.int32), cfg, sm_tables)
+    lse_val = jnp.where(lse_m == ZERO_M, cfg.m_min, lse_m)
+
+    # log2 p_j = t_j − lse (plain saturating fixed-point subtract).
+    p_m = jnp.clip(t - lse_val[:, None], cfg.m_min, cfg.m_max).astype(jnp.int32)
+    p_s = jnp.ones_like(p_m)
+
+    onehot = (jnp.arange(classes)[None, :] == labels[:, None])
+    # δ = p ⊟ y: y = 1 (m=0,s=1) at the label, exact zero elsewhere.
+    y_m = jnp.where(onehot, 0, ZERO_M).astype(jnp.int32)
+    y_s = jnp.ones_like(y_m)
+    d_m, d_s = lns_sub(p_m, p_s, y_m, y_s, cfg, sm_tables)
+
+    log2p_label = jnp.sum(jnp.where(onehot, p_m, 0), axis=1).astype(jnp.int32)
+    return d_m, d_s, log2p_label

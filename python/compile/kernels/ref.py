@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracle for the LNS kernels.
+
+``matmul_ref`` reduces **sequentially over k ascending with the
+accumulator as the left ⊞ operand** — the documented reduction order of
+DESIGN.md §5 that the Rust engine and the Pallas kernel both follow.
+Also provides a float-domain reference for loose numeric checks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import lnscore as lc
+
+
+def matmul_ref(am, as_, wm, ws, cfg: lc.LnsConfig, tables):
+    """LNS matmul oracle: ``[B,K]·[K,N] → [B,N]`` (m, s) planes."""
+    b, k = am.shape
+    k2, n = wm.shape
+    assert k == k2, "inner-dim mismatch"
+
+    def body(p, carry):
+        acc_m, acc_s = carry
+        pm, ps = lc.lns_mul(
+            am[:, p][:, None], as_[:, p][:, None], wm[p, :][None, :], ws[p, :][None, :], cfg
+        )
+        return lc.lns_add(acc_m, acc_s, pm, ps, cfg, tables)
+
+    acc_m = jnp.full((b, n), lc.ZERO_M, jnp.int32)
+    acc_s = jnp.ones((b, n), jnp.int32)
+    return jax.lax.fori_loop(0, k, body, (acc_m, acc_s))
+
+
+def add_bias_ref(zm, zs, bm, bs, cfg, tables):
+    """Row-broadcast ⊞ bias (z as the left operand, matching Rust)."""
+    return lc.lns_add(zm, zs, bm[None, :], bs[None, :], cfg, tables)
+
+
+def col_sum_ref(xm, xs, cfg, tables):
+    """Column ⊞-sums, sequential over rows ascending (bias gradient)."""
+    rows, n = xm.shape
+
+    def body(i, carry):
+        acc_m, acc_s = carry
+        return lc.lns_add(acc_m, acc_s, xm[i, :], xs[i, :], cfg, tables)
+
+    acc_m = jnp.full((n,), lc.ZERO_M, jnp.int32)
+    acc_s = jnp.ones((n,), jnp.int32)
+    return jax.lax.fori_loop(0, rows, body, (acc_m, acc_s))
+
+
+def matmul_float(a, w):
+    """Float-domain reference for loose agreement checks."""
+    return a @ w

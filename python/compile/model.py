@@ -1,0 +1,255 @@
+"""L2: the paper's MLP in JAX, forward + manual log-domain backward.
+
+Autodiff cannot differentiate the discrete LNS ops, so — exactly as the
+paper does — the backward pass is written out in ⊞/⊡ (mirroring
+``rust/src/nn/mlp.rs`` operation-for-operation, including reduction
+orders, so the lowered artifacts are bit-exact against the native
+engine).
+
+Parameters travel as explicit arrays (m, s planes per tensor); the
+train-step artifact returns the updated parameters, making the Rust
+coordinator the owner of all state.
+"""
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lnscore as lc
+from .kernels.lns_matmul import lns_matmul
+from .kernels import ref
+
+
+class LnsModelSpec(NamedTuple):
+    """Static config for one lowered model variant."""
+
+    cfg: lc.LnsConfig
+    dims: Sequence[int]  # e.g. (784, 100, 10)
+    batch: int
+    lr: float = 0.01
+    weight_decay: float = 1e-4
+    slope: float = 0.01  # leaky/llReLU slope; β = log2(slope)
+    use_pallas: bool = True  # pallas kernel vs pure-jnp oracle for matmul
+
+
+def _tables(spec: LnsModelSpec):
+    mac = lc.delta_tables(spec.cfg, "mac")
+    sm = lc.delta_tables(spec.cfg, "softmax")
+    p2 = lc.pow2_table(spec.cfg)
+    return mac, sm, p2
+
+
+def _beta_units(spec: LnsModelSpec) -> int:
+    return int(spec.cfg.to_units(np.log2(spec.slope)))
+
+
+def _matmul(spec: LnsModelSpec, tables, am, as_, wm, ws):
+    if spec.use_pallas:
+        return lns_matmul(am, as_, wm, ws, spec.cfg, tables)
+    return ref.matmul_ref(am, as_, wm, ws, spec.cfg, tables)
+
+
+def param_names(dims: Sequence[int]):
+    """Flat parameter order: per layer W then b, each as (m, s)."""
+    names = []
+    for l in range(len(dims) - 1):
+        names += [f"w{l}m", f"w{l}s", f"b{l}m", f"b{l}s"]
+    return names
+
+
+def init_params(spec: LnsModelSpec, seed: int = 0):
+    """He-normal float init → encode (the paper's Eq.-12-equivalent
+    route); returns the flat list matching :func:`param_names`."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in range(len(spec.dims) - 1):
+        fan_in, fan_out = spec.dims[l], spec.dims[l + 1]
+        w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(fan_in, fan_out))
+        wm, ws = lc.encode(w, spec.cfg)
+        bm, bs = lc.encode(np.zeros(fan_out), spec.cfg)
+        out += [jnp.asarray(wm), jnp.asarray(ws), jnp.asarray(bm), jnp.asarray(bs)]
+    return out
+
+
+def lns_forward(spec: LnsModelSpec, params, xm, xs):
+    """Forward pass → logits (m, s). Hidden layers use llReLU (Eq. 11)."""
+    mac, sm, p2 = _tables(spec)
+    del sm, p2
+    beta = _beta_units(spec)
+    n_layers = len(spec.dims) - 1
+    am, as_ = xm, xs
+    zs = []
+    acts = [(am, as_)]
+    for l in range(n_layers):
+        wm, ws, bm, bs = params[4 * l : 4 * l + 4]
+        zm, zsg = _matmul(spec, mac, am, as_, wm, ws)
+        zm, zsg = ref.add_bias_ref(zm, zsg, bm, bs, spec.cfg, mac)
+        zs.append((zm, zsg))
+        if l + 1 < n_layers:
+            am, as_ = lc.llrelu(zm, zsg, spec.cfg, beta)
+        else:
+            am, as_ = zm, zsg
+        acts.append((am, as_))
+    return zs, acts
+
+
+def lns_logits(spec: LnsModelSpec, params, xm, xs):
+    """Inference entry point: logits only."""
+    _, acts = lns_forward(spec, params, xm, xs)
+    return acts[-1]
+
+
+def lns_train_step(spec: LnsModelSpec, params, xm, xs, labels):
+    """One SGD step, entirely in LNS (mirrors Rust `Mlp::backprop` +
+    `SgdConfig::apply`). Returns (new_params, log2p_label_units)."""
+    cfg = spec.cfg
+    mac, sm, p2 = _tables(spec)
+    beta = _beta_units(spec)
+    n_layers = len(spec.dims) - 1
+    batch = spec.batch
+
+    zs, acts = lns_forward(spec, params, xm, xs)
+    logits_m, logits_s = acts[-1]
+
+    # Soft-max + CE gradient init (Eq. 14) with the finer Δ tables.
+    d_m, d_s, log2p = lc.log_softmax_ce_grad(logits_m, logits_s, labels, cfg, sm, p2)
+
+    inv_b_m, inv_b_s = (int(v) for v in lc.encode(1.0 / batch, cfg))
+    lr_m, lr_s = (int(v) for v in lc.encode(spec.lr, cfg))
+    wd_m, wd_s = (int(v) for v in lc.encode(spec.weight_decay, cfg))
+    use_wd = spec.weight_decay != 0.0
+
+    def scale(m, s, cm, cs):
+        return lc.lns_mul(m, s, jnp.int32(cm), jnp.int32(cs), cfg)
+
+    new_params = list(params)
+    for l in range(n_layers - 1, -1, -1):
+        wm, ws, bm, bs = params[4 * l : 4 * l + 4]
+        a_m, a_s = acts[l]
+        # dW = aᵀ · δ (ascending-batch reduction), scaled by 1/B.
+        gm, gs = _matmul(spec, mac, a_m.T, a_s.T, d_m, d_s)
+        gm, gs = scale(gm, gs, inv_b_m, inv_b_s)
+        # db = column ⊞-sum of δ, scaled by 1/B.
+        dbm, dbs = ref.col_sum_ref(d_m, d_s, cfg, mac)
+        dbm, dbs = scale(dbm, dbs, inv_b_m, inv_b_s)
+        # Backprop to the previous layer (before updating W!).
+        if l > 0:
+            back_m, back_s = _matmul(spec, mac, d_m, d_s, wm.T, ws.T)
+            pz_m, pz_s = zs[l - 1]
+            d_m, d_s = lc.llrelu_bwd(pz_m, pz_s, back_m, back_s, cfg, beta)
+        # SGD update: g' = g ⊞ λ⊡w ;  w ← w ⊟ η⊡g'   (weights only get wd).
+        if use_wd:
+            wdm, wds = scale(wm, ws, wd_m, wd_s)
+            gm, gs = lc.lns_add(gm, gs, wdm, wds, cfg, mac)
+        sm_, ss_ = scale(gm, gs, lr_m, lr_s)
+        nwm, nws = lc.lns_sub(wm, ws, sm_, ss_, cfg, mac)
+        sb_m, sb_s = scale(dbm, dbs, lr_m, lr_s)
+        nbm, nbs = lc.lns_sub(bm, bs, sb_m, sb_s, cfg, mac)
+        new_params[4 * l : 4 * l + 4] = [nwm, nws, nbm, nbs]
+
+    return new_params, log2p
+
+
+# ---------------------------------------------------------------------
+# Float baseline (lowered for the PJRT float artifacts)
+# ---------------------------------------------------------------------
+
+
+def float_init(dims: Sequence[int], seed: int = 0):
+    """He-normal float parameters (W, b per layer)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in range(len(dims) - 1):
+        fan_in, fan_out = dims[l], dims[l + 1]
+        out.append(jnp.asarray(rng.normal(0.0, np.sqrt(2.0 / fan_in), (fan_in, fan_out)), jnp.float32))
+        out.append(jnp.zeros((fan_out,), jnp.float32))
+    return out
+
+
+def float_logits(params, x, slope=0.01):
+    """Float forward (leaky-ReLU hidden, linear head)."""
+    n_layers = len(params) // 2
+    a = x
+    for l in range(n_layers):
+        w, b = params[2 * l], params[2 * l + 1]
+        z = a @ w + b
+        a = jnp.where(z > 0, z, slope * z) if l + 1 < n_layers else z
+    return a
+
+
+def float_train_step(params, x, labels, lr=0.01, weight_decay=1e-4, slope=0.01):
+    """One float SGD step via jax.grad (the conventional baseline)."""
+
+    def loss_fn(ps):
+        logits = float_logits(ps, x, slope)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        return nll
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = []
+    for l in range(len(params) // 2):
+        w, b = params[2 * l], params[2 * l + 1]
+        gw, gb = grads[2 * l], grads[2 * l + 1]
+        new.append(w - lr * (gw + weight_decay * w))
+        new.append(b - lr * gb)
+    return new, loss
+
+
+# ---------------------------------------------------------------------
+# Jittable entry points (what aot.py lowers)
+# ---------------------------------------------------------------------
+
+
+def make_lns_fwd_fn(spec: LnsModelSpec):
+    """`(params..., xm, xs) -> (logits_m, logits_s)`, jit-ready."""
+    n = 4 * (len(spec.dims) - 1)
+
+    def fn(*args):
+        params = list(args[:n])
+        xm, xs = args[n], args[n + 1]
+        m, s = lns_logits(spec, params, xm, xs)
+        return (m, s)
+
+    return fn
+
+
+def make_lns_train_fn(spec: LnsModelSpec):
+    """`(params..., xm, xs, labels) -> (new_params..., log2p)`, jit-ready."""
+    n = 4 * (len(spec.dims) - 1)
+
+    def fn(*args):
+        params = list(args[:n])
+        xm, xs, labels = args[n], args[n + 1], args[n + 2]
+        new_params, log2p = lns_train_step(spec, params, xm, xs, labels)
+        return tuple(new_params) + (log2p,)
+
+    return fn
+
+
+def make_float_fwd_fn(dims, slope=0.01):
+    """Float logits entry point."""
+    n = 2 * (len(dims) - 1)
+
+    def fn(*args):
+        params = list(args[:n])
+        x = args[n]
+        return (float_logits(params, x, slope),)
+
+    return fn
+
+
+def make_float_train_fn(dims, lr=0.01, weight_decay=1e-4, slope=0.01):
+    """Float train-step entry point."""
+    n = 2 * (len(dims) - 1)
+
+    def fn(*args):
+        params = list(args[:n])
+        x, labels = args[n], args[n + 1]
+        new, loss = float_train_step(params, x, labels, lr, weight_decay, slope)
+        return tuple(new) + (loss,)
+
+    return fn

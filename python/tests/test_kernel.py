@@ -1,0 +1,109 @@
+"""L1 kernel vs oracle: the CORE correctness signal.
+
+The Pallas `lns_matmul` must be **bit-exact** against the pure-jnp
+oracle `ref.matmul_ref` for every config, shape and operand pattern —
+hypothesis sweeps shapes/values; fixed cases pin the paper's dims.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import lnscore as lc
+from compile.kernels import ref
+from compile.kernels.lns_matmul import lns_matmul
+
+
+CFGS = {c.name: c for c in [lc.w16_lut(), lc.w12_lut(), lc.w16_bitshift(), lc.w12_bitshift()]}
+
+
+def random_lns(rng, cfg, shape, zero_frac=0.1):
+    m = rng.integers(cfg.m_min, cfg.m_max + 1, size=shape).astype(np.int32)
+    z = rng.random(shape) < zero_frac
+    m = np.where(z, lc.ZERO_M, m).astype(np.int32)
+    s = rng.integers(0, 2, size=shape).astype(np.int32)
+    s = np.where(z, 1, s).astype(np.int32)
+    return jnp.asarray(m), jnp.asarray(s)
+
+
+def assert_bitexact(cfg_name, b, k, n, seed, zero_frac=0.1):
+    cfg = CFGS[cfg_name]
+    tables = lc.delta_tables(cfg, "mac")
+    rng = np.random.default_rng(seed)
+    am, as_ = random_lns(rng, cfg, (b, k), zero_frac)
+    wm, ws = random_lns(rng, cfg, (k, n), zero_frac)
+    km, ks = lns_matmul(am, as_, wm, ws, cfg, tables)
+    rm, rs = ref.matmul_ref(am, as_, wm, ws, cfg, tables)
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm), err_msg="magnitudes differ")
+    # Signs only matter for non-zero outputs.
+    nz = np.asarray(km) != lc.ZERO_M
+    np.testing.assert_array_equal(np.asarray(ks)[nz], np.asarray(rs)[nz], err_msg="signs differ")
+
+
+@pytest.mark.parametrize("cfg_name", list(CFGS))
+def test_kernel_bitexact_small(cfg_name):
+    assert_bitexact(cfg_name, 3, 7, 5, seed=1)
+
+
+@pytest.mark.parametrize("cfg_name", ["w16_lut", "w12_bs"])
+def test_kernel_bitexact_paper_layer_shape(cfg_name):
+    # The paper's hidden layer (batch 5): 5×784 · 784×100.
+    assert_bitexact(cfg_name, 5, 784, 100, seed=2)
+
+
+def test_kernel_bitexact_all_zero_inputs():
+    cfg = CFGS["w16_lut"]
+    tables = lc.delta_tables(cfg, "mac")
+    am = jnp.full((2, 4), lc.ZERO_M, jnp.int32)
+    as_ = jnp.ones((2, 4), jnp.int32)
+    wm, ws = random_lns(np.random.default_rng(0), cfg, (4, 3))
+    km, ks = lns_matmul(am, as_, wm, ws, cfg, tables)
+    assert np.all(np.asarray(km) == lc.ZERO_M)
+    rm, _ = ref.matmul_ref(am, as_, wm, ws, cfg, tables)
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cfg_name=st.sampled_from(list(CFGS)),
+    b=st.integers(1, 8),
+    k=st.integers(1, 32),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    zero_frac=st.sampled_from([0.0, 0.1, 0.5, 0.9]),
+)
+def test_kernel_bitexact_hypothesis(cfg_name, b, k, n, seed, zero_frac):
+    assert_bitexact(cfg_name, b, k, n, seed, zero_frac)
+
+
+def test_kernel_matches_float_matmul_loosely():
+    """Semantic sanity: LNS matmul ≈ float matmul for benign values."""
+    cfg = CFGS["w16_lut"]
+    tables = lc.delta_tables(cfg, "mac")
+    rng = np.random.default_rng(7)
+    a = rng.uniform(0.1, 2.0, (4, 16))
+    w = rng.uniform(0.1, 2.0, (16, 3))
+    am, as_ = (jnp.asarray(v) for v in lc.encode(a, cfg))
+    wm, ws = (jnp.asarray(v) for v in lc.encode(w, cfg))
+    km, ks = lns_matmul(am, as_, wm, ws, cfg, tables)
+    got = lc.decode(np.asarray(km), np.asarray(ks), cfg)
+    want = a @ w
+    # Same-sign accumulation: LUT error compounds but stays bounded.
+    np.testing.assert_allclose(got, want, rtol=0.25)
+
+
+def test_blockspec_tiling_matches_untiled():
+    """Different block shapes must not change the numbers (the grid only
+    partitions the output; each tile reduces the full K)."""
+    cfg = CFGS["w16_lut"]
+    tables = lc.delta_tables(cfg, "mac")
+    rng = np.random.default_rng(11)
+    am, as_ = random_lns(rng, cfg, (8, 24))
+    wm, ws = random_lns(rng, cfg, (24, 12))
+    base = lns_matmul(am, as_, wm, ws, cfg, tables, block_m=8, block_n=12)
+    for bm, bn in [(1, 12), (8, 4), (2, 6), (4, 3)]:
+        out = lns_matmul(am, as_, wm, ws, cfg, tables, block_m=bm, block_n=bn)
+        np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(out[0]))
+        np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(out[1]))

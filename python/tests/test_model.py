@@ -1,0 +1,121 @@
+"""L2 model tests: shapes, learning behaviour, pallas/oracle agreement."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import lnscore as lc
+
+
+def small_spec(cfg_name="w16_lut", use_pallas=True, **kw):
+    cfg = lc.BY_NAME[cfg_name]()
+    defaults = dict(cfg=cfg, dims=(12, 8, 4), batch=3, lr=0.05, weight_decay=0.0)
+    defaults.update(kw)
+    return M.LnsModelSpec(use_pallas=use_pallas, **defaults)
+
+
+def random_input(spec, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.0, 1.0, ((batch or spec.batch), spec.dims[0]))
+    xm, xs = lc.encode(x, spec.cfg)
+    return jnp.asarray(xm), jnp.asarray(xs)
+
+
+class TestForward:
+    def test_logits_shape(self):
+        spec = small_spec()
+        params = M.init_params(spec, seed=1)
+        xm, xs = random_input(spec)
+        m, s = M.lns_logits(spec, params, xm, xs)
+        assert m.shape == (3, 4)
+        assert s.shape == (3, 4)
+        assert m.dtype == jnp.int32
+
+    def test_pallas_and_oracle_forward_bitexact(self):
+        sp = small_spec(use_pallas=True)
+        so = small_spec(use_pallas=False)
+        params = M.init_params(sp, seed=2)
+        xm, xs = random_input(sp, seed=3)
+        mp, spg = M.lns_logits(sp, params, xm, xs)
+        mo, sog = M.lns_logits(so, params, xm, xs)
+        np.testing.assert_array_equal(np.asarray(mp), np.asarray(mo))
+        nz = np.asarray(mp) != lc.ZERO_M
+        np.testing.assert_array_equal(np.asarray(spg)[nz], np.asarray(sog)[nz])
+
+    def test_param_names_order(self):
+        names = M.param_names((12, 8, 4))
+        assert names == ["w0m", "w0s", "b0m", "b0s", "w1m", "w1s", "b1m", "b1s"]
+
+
+class TestTrainStep:
+    def test_returns_updated_params_and_loss(self):
+        spec = small_spec()
+        params = M.init_params(spec, seed=4)
+        xm, xs = random_input(spec, seed=5)
+        labels = jnp.asarray(np.array([0, 1, 2], np.int32))
+        new_params, log2p = M.lns_train_step(spec, params, xm, xs, labels)
+        assert len(new_params) == len(params)
+        assert log2p.shape == (3,)
+        # Parameters must actually move.
+        moved = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(params, new_params)
+        )
+        assert moved
+
+    def test_loss_decreases_over_repeated_steps(self):
+        import jax
+
+        spec = small_spec()
+        params = M.init_params(spec, seed=6)
+        xm, xs = random_input(spec, seed=7)
+        labels = jnp.asarray(np.array([0, 1, 2], np.int32))
+        step = jax.jit(M.make_lns_train_fn(spec))
+
+        def mean_nll(log2p):
+            return -float(np.mean(np.asarray(log2p))) / (1 << spec.cfg.frac_bits)
+
+        out = step(*params, xm, xs, labels)
+        lp0 = out[-1]
+        params = list(out[:-1])
+        for _ in range(30):
+            out = step(*params, xm, xs, labels)
+            params, lp = list(out[:-1]), out[-1]
+        assert mean_nll(lp) < mean_nll(lp0) * 0.7, (mean_nll(lp0), mean_nll(lp))
+
+    @pytest.mark.parametrize("cfg_name", ["w12_lut", "w16_bs"])
+    def test_other_configs_step_without_error(self, cfg_name):
+        spec = small_spec(cfg_name)
+        params = M.init_params(spec, seed=8)
+        xm, xs = random_input(spec, seed=9)
+        labels = jnp.asarray(np.array([1, 2, 3], np.int32))
+        new_params, _ = M.lns_train_step(spec, params, xm, xs, labels)
+        assert len(new_params) == 8
+
+
+class TestFloatBaseline:
+    def test_float_train_learns(self):
+        dims = (12, 8, 4)
+        params = M.float_init(dims, seed=0)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.uniform(0, 1, (8, 12)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 4, 8), jnp.int32)
+        _, l0 = M.float_train_step(params, x, labels, lr=0.1)
+        for _ in range(60):
+            params, loss = M.float_train_step(params, x, labels, lr=0.1)
+        assert float(loss) < float(l0) * 0.5
+
+    def test_lns_step_tracks_float_step_direction(self):
+        """After one step on the same batch, LNS loss change should have the
+        same sign as float (both decrease) — a loose semantic check."""
+        spec = small_spec(lr=0.1)
+        params = M.init_params(spec, seed=10)
+        xm, xs = random_input(spec, seed=11)
+        labels = jnp.asarray(np.array([0, 1, 2], np.int32))
+        _, lp_before = M.lns_train_step(spec, params, xm, xs, labels)
+        p2, _ = M.lns_train_step(spec, params, xm, xs, labels)
+        for _ in range(10):
+            p2, lp_after = M.lns_train_step(spec, p2, xm, xs, labels)
+        assert float(np.mean(np.asarray(lp_after))) > float(np.mean(np.asarray(lp_before)))

@@ -1,0 +1,73 @@
+//! Ablation: Δ-LUT shape co-optimization (the paper's §6 future work).
+//!
+//! Sweeps the MAC table over dynamic range and resolution, training one
+//! 16-bit LNS model per shape, and reports accuracy vs table size vs a
+//! first-order gate-count proxy → `results/ablation_lut.csv`. The
+//! paper's chosen point (d_max = 10, r = 1/2, 20 entries) should sit on
+//! the knee: smaller ranges/coarser resolutions lose accuracy, larger
+//! tables buy little.
+
+use lnsdnn::coordinator::experiments::lut_sweep;
+use lnsdnn::coordinator::report;
+use lnsdnn::data::{synth_dataset, SynthSpec};
+use std::path::Path;
+
+fn main() {
+    let ds = synth_dataset(&SynthSpec::mnist_like(0.02, 7));
+    println!(
+        "Δ-LUT sweep on {} ({} train / {} test), 6 epochs, hidden 48:",
+        ds.name,
+        ds.train_len(),
+        ds.test_len()
+    );
+    // (d_max, log2(1/r)): range sweep at r=1/2, resolution sweep at d_max=10.
+    let shapes = [
+        (2u32, 1u32),
+        (4, 1),
+        (6, 1),
+        (10, 1), // paper's MAC table (20 entries)
+        (16, 1),
+        (10, 0), // r = 1 (bit-shift-sized)
+        (10, 3), // r = 1/8  (80 entries)
+        (10, 6), // r = 1/64 (640 entries, the paper's softmax table)
+    ];
+    let rows = lut_sweep(&ds, &shapes, 6, 48, 7);
+
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.d_max.to_string(),
+                format!("{}", 1 << r.log2_inv_r),
+                r.table_len.to_string(),
+                format!("{:.0}", r.gates),
+                format!("{:.4}", r.test_accuracy),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        Path::new("results/ablation_lut.csv"),
+        &["d_max", "inv_r", "table_len", "gates", "test_accuracy"],
+        &csv,
+    )
+    .unwrap();
+    println!("→ results/ablation_lut.csv");
+
+    // Shape assertions: the paper's point is on the knee.
+    let acc = |d: u32, l: u32| rows.iter().find(|r| r.d_max == d && r.log2_inv_r == l).unwrap().test_accuracy;
+    let paper = acc(10, 1);
+    assert!(
+        paper > acc(2, 1) - 0.02,
+        "d_max=10 should beat (or match) a truncated d_max=2 range"
+    );
+    assert!(
+        acc(10, 6) - paper < 0.05,
+        "32× more entries should buy little beyond the paper's 20"
+    );
+    println!(
+        "knee check: paper(20 entries) {:.3}; d_max=2 {:.3}; 640 entries {:.3}",
+        paper,
+        acc(2, 1),
+        acc(10, 6)
+    );
+}

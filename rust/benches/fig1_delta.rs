@@ -1,0 +1,62 @@
+//! Fig. 1 regenerator + Δ-evaluation throughput.
+//!
+//! Emits `results/fig1_delta.csv` (the exact series of the paper's
+//! figure: Δ± exact vs 20-entry LUT vs bit-shift over d ∈ [0, 11]) and
+//! benchmarks the three Δ evaluations — the op the paper's hardware
+//! argument turns on.
+
+use lnsdnn::bench_util::{bench, black_box};
+use lnsdnn::coordinator::{experiments, report};
+use lnsdnn::lns::{DeltaApprox, DeltaMode, LnsConfig, LutSpec};
+use lnsdnn::rng::SplitMix64;
+use std::path::Path;
+
+fn main() {
+    // Regenerate the figure data.
+    let rows = experiments::fig1_rows(11.0, 441);
+    report::write_csv(
+        Path::new("results/fig1_delta.csv"),
+        &["d", "exact_plus", "lut_plus", "bs_plus", "exact_minus", "lut_minus", "bs_minus"],
+        &report::fig1_csv_rows(&rows),
+    )
+    .expect("write fig1 csv");
+    println!("Fig. 1 series → results/fig1_delta.csv ({} samples)", rows.len());
+
+    // Shape checks the figure must satisfy (the paper's visual claims).
+    let max_lut_err = rows
+        .iter()
+        .map(|r| (r.lut_plus - r.exact_plus).abs())
+        .fold(0.0f64, f64::max);
+    let max_bs_err = rows
+        .iter()
+        .filter(|r| r.d < 10.0)
+        .map(|r| (r.bs_plus - r.exact_plus).abs())
+        .fold(0.0f64, f64::max);
+    println!("  max |LUT − exact| over range: {max_lut_err:.4} (bin width 1/2)");
+    println!("  max |BS − exact| over d<10 : {max_bs_err:.4} (r = 1 equivalent)");
+    // Floor-indexed bins: worst case is just below a bin edge, where the
+    // d=0 entry (Δ+=1) serves d→0.5⁻ (exact 0.77) ⇒ ~0.22.
+    assert!(max_lut_err < 0.25, "LUT should stay close to exact");
+    assert!(max_bs_err > max_lut_err, "bit-shift is the coarser approximation");
+
+    // Throughput of the Δ+ evaluation itself.
+    println!("\n-- Δ+ evaluation throughput (65k random d per iter) --");
+    let cfg = LnsConfig::w16_lut();
+    let mut rng = SplitMix64::new(1);
+    let ds: Vec<i64> = (0..65_536).map(|_| (rng.next_below(12 << 10)) as i64).collect();
+    for (label, mode) in [
+        ("lut20", DeltaMode::Lut(LutSpec::MAC20)),
+        ("lut640", DeltaMode::Lut(LutSpec::SOFTMAX640)),
+        ("bitshift", DeltaMode::BitShift),
+        ("exact", DeltaMode::Exact),
+    ] {
+        let ap = DeltaApprox::new(&cfg, mode);
+        bench(&format!("delta_plus/{label}"), Some(ds.len() as f64), || {
+            let mut acc = 0i64;
+            for &d in &ds {
+                acc = acc.wrapping_add(ap.plus(d));
+            }
+            black_box(acc);
+        });
+    }
+}

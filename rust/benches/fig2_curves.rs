@@ -1,0 +1,60 @@
+//! Fig. 2 regenerator (bench-scale): learning curves for the four series
+//! (lin12/lin16/log12-lut/log16-lut) on the synthetic MNIST stand-in,
+//! plus per-epoch wall-clock so the curves double as a training-throughput
+//! benchmark. Full-scale regeneration: `cargo run --release -- fig2`.
+
+use lnsdnn::coordinator::experiments::{fig2, ConfigTag};
+use lnsdnn::coordinator::report;
+use lnsdnn::data::{synth_dataset, SynthSpec};
+use std::path::Path;
+
+fn main() {
+    let ds = synth_dataset(&SynthSpec::mnist_like(0.02, 7));
+    println!(
+        "Fig. 2 (bench scale): {} — {} train / {} test, 8 epochs",
+        ds.name,
+        ds.train_len(),
+        ds.test_len()
+    );
+    let t0 = std::time::Instant::now();
+    let recs = fig2(&ds, 8, 100, 7, 4);
+    let wall = t0.elapsed().as_secs_f64();
+
+    report::write_csv(
+        Path::new("results/fig2_mnist_bench.csv"),
+        &["dataset", "config", "epoch", "train_loss", "val_accuracy", "seconds"],
+        &report::fig2_csv_rows(&recs),
+    )
+    .expect("write fig2 csv");
+
+    println!("\n{:<12} {:>10} {:>12} {:>14}", "series", "final val", "test acc", "s/epoch (med)");
+    for r in &recs {
+        let mut secs: Vec<f64> = r.curve.iter().map(|e| e.seconds).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{:<12} {:>9.3} {:>11.3} {:>13.2}s",
+            r.tag.label(),
+            r.curve.last().map(|e| e.val_accuracy).unwrap_or(0.0),
+            r.test_accuracy,
+            secs[secs.len() / 2]
+        );
+    }
+    println!("\ntotal wall {wall:.1}s → results/fig2_mnist_bench.csv");
+
+    // Paper-shape assertions: 16-bit tracks its linear twin; curves rise.
+    let get = |t: ConfigTag| recs.iter().find(|r| r.tag == t).unwrap();
+    let log16 = get(ConfigTag::Log16Lut);
+    let lin16 = get(ConfigTag::Lin16);
+    assert!(
+        log16.test_accuracy > lin16.test_accuracy - 0.15,
+        "log16 should track lin16: {} vs {}",
+        log16.test_accuracy,
+        lin16.test_accuracy
+    );
+    for r in &recs {
+        let first = r.curve.first().unwrap().val_accuracy;
+        let last = r.curve.last().unwrap().val_accuracy;
+        assert!(last >= first - 0.05, "{}: curve should rise", r.tag.label());
+    }
+    println!("shape checks passed (log16 tracks lin16; curves rise)");
+}

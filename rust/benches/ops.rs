@@ -1,0 +1,137 @@
+//! Op-level microbenchmarks: the paper's hardware argument, in software.
+//!
+//! Measures MAC throughput per number system (the paper's claim is that
+//! LNS MACs need no multiplier; in software the LUT ⊞ costs a few integer
+//! ops + a load — this bench quantifies that overhead against linear
+//! fixed-point and float MACs) plus the Δ/softmax primitives.
+
+use lnsdnn::bench_util::{bench, black_box};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{DeltaMode, LnsConfig, LnsSystem, LnsValue};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::tensor::{ops, Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
+
+const N: usize = 4096;
+
+fn lns_operands(sys: &LnsSystem, seed: u64) -> Vec<(LnsValue, LnsValue)> {
+    let mut rng = SplitMix64::new(seed);
+    (0..N)
+        .map(|_| {
+            (
+                sys.encode_f64(rng.uniform(-8.0, 8.0)),
+                sys.encode_f64(rng.uniform(-8.0, 8.0)),
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== op-level microbenchmarks (N = {N} per iteration) ==\n");
+
+    // MAC chains per number system.
+    println!("-- MAC: acc = acc + a*b over {N} pairs --");
+    for (label, mode) in [
+        ("lns16 LUT(20)", DeltaMode::Lut(lnsdnn::lns::LutSpec::MAC20)),
+        ("lns16 bit-shift", DeltaMode::BitShift),
+        ("lns16 exact Δ (float libm)", DeltaMode::Exact),
+    ] {
+        let mut cfg = LnsConfig::w16_lut();
+        cfg.delta = mode;
+        cfg.softmax_delta = mode;
+        let sys = LnsSystem::new(cfg);
+        let pairs = lns_operands(&sys, 1);
+        bench(&format!("mac/{label}"), Some(N as f64), || {
+            let mut acc = LnsValue::ZERO;
+            for &(a, b) in &pairs {
+                acc = sys.mac(acc, a, b);
+            }
+            black_box(acc);
+        });
+    }
+    {
+        let sys = FixedSystem::new(FixedConfig::w16());
+        let mut rng = SplitMix64::new(2);
+        let pairs: Vec<(i32, i32)> = (0..N)
+            .map(|_| (sys.encode_f64(rng.uniform(-3.0, 3.0)), sys.encode_f64(rng.uniform(-3.0, 3.0))))
+            .collect();
+        bench("mac/lin16 Q-format", Some(N as f64), || {
+            let mut acc = 0i32;
+            for &(a, b) in &pairs {
+                acc = sys.mac(acc, a, b);
+            }
+            black_box(acc);
+        });
+    }
+    {
+        let mut rng = SplitMix64::new(3);
+        let pairs: Vec<(f32, f32)> = (0..N)
+            .map(|_| (rng.uniform(-3.0, 3.0) as f32, rng.uniform(-3.0, 3.0) as f32))
+            .collect();
+        bench("mac/float32", Some(N as f64), || {
+            let mut acc = 0f32;
+            for &(a, b) in &pairs {
+                acc += a * b;
+            }
+            black_box(acc);
+        });
+    }
+
+    // Matmul through the generic tensor path (the training hot loop).
+    println!("\n-- matmul 32×784 · 784×100 (one fwd layer, batch 32) --");
+    let dims = (32usize, 784usize, 100usize);
+    {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(4);
+        let a = Tensor::from_vec(dims.0, dims.1, (0..dims.0 * dims.1).map(|_| rng.uniform(-1.0, 1.0) as f32).collect());
+        let w = Tensor::from_vec(dims.1, dims.2, (0..dims.1 * dims.2).map(|_| rng.uniform(-1.0, 1.0) as f32).collect());
+        bench("matmul/float32", Some((dims.0 * dims.1 * dims.2) as f64), || {
+            black_box(ops::matmul(&b, &a, &w));
+        });
+    }
+    {
+        let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let mut rng = SplitMix64::new(5);
+        let a = Tensor::from_vec(dims.0, dims.1, (0..dims.0 * dims.1).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+        let w = Tensor::from_vec(dims.1, dims.2, (0..dims.1 * dims.2).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+        bench("matmul/lin16", Some((dims.0 * dims.1 * dims.2) as f64), || {
+            black_box(ops::matmul(&b, &a, &w));
+        });
+    }
+    for (label, cfg) in [
+        ("log16-lut", LnsConfig::w16_lut()),
+        ("log16-bs", LnsConfig::w16_bitshift()),
+    ] {
+        let b = LnsBackend::new(LnsSystem::new(cfg), 0.01);
+        let mut rng = SplitMix64::new(6);
+        let a = Tensor::from_vec(dims.0, dims.1, (0..dims.0 * dims.1).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+        let w = Tensor::from_vec(dims.1, dims.2, (0..dims.1 * dims.2).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+        bench(&format!("matmul/{label}"), Some((dims.0 * dims.1 * dims.2) as f64), || {
+            black_box(ops::matmul(&b, &a, &w));
+        });
+    }
+
+    // Soft-max path.
+    println!("\n-- log-softmax + CE grad, 26 classes × 64 rows --");
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    let backend = LnsBackend::new(sys, 0.01);
+    let mut rng = SplitMix64::new(7);
+    let rows: Vec<Vec<LnsValue>> = (0..64)
+        .map(|_| (0..26).map(|_| backend.encode(rng.uniform(-4.0, 4.0))).collect())
+        .collect();
+    let mut grad = vec![LnsValue::ZERO; 26];
+    bench("softmax/log16-lut (640-entry table)", Some(64.0 * 26.0), || {
+        for r in &rows {
+            black_box(backend.softmax_ce_grad(r, 3, &mut grad));
+        }
+    });
+    let fb = FloatBackend::default();
+    let frows: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..26).map(|_| rng.uniform(-4.0, 4.0) as f32).collect())
+        .collect();
+    let mut fgrad = vec![0f32; 26];
+    bench("softmax/float32", Some(64.0 * 26.0), || {
+        for r in &frows {
+            black_box(fb.softmax_ce_grad(r, 3, &mut fgrad));
+        }
+    });
+}

@@ -1,0 +1,131 @@
+//! End-to-end PJRT benchmarks: artifact compile/execute latency for the
+//! forward (serving) and train-step paths, against the native engine on
+//! identical work. Quantifies what the AOT boundary costs/buys.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use lnsdnn::bench_util::{bench, black_box};
+use lnsdnn::lns::{LnsConfig, LnsSystem, LnsValue, ZERO_M};
+use lnsdnn::nn::mlp::Dense;
+use lnsdnn::nn::{Mlp, SgdConfig};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::runtime::{ArtifactExecutable, ArtifactRegistry, Runtime};
+use lnsdnn::tensor::{LnsBackend, Tensor};
+use std::path::PathBuf;
+
+const DIMS: [usize; 3] = [784, 100, 10];
+
+fn random_planes(rng: &mut SplitMix64, sys: &LnsSystem, n: usize) -> (Vec<i32>, Vec<i32>) {
+    let (lo, hi) = (sys.config().m_min() as i64, sys.config().m_max() as i64);
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.1 {
+                (ZERO_M, 1)
+            } else {
+                ((lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32, rng.next_below(2) as i32)
+            }
+        })
+        .unzip()
+}
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        println!("SKIP: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    println!("platform {} ({} devices)\n", rt.platform(), rt.device_count());
+
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    let backend = LnsBackend::new(sys.clone(), 0.01);
+    let mut rng = SplitMix64::new(42);
+
+    // Parameters + inputs.
+    let mut planes = Vec::new();
+    for l in 0..2 {
+        let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+        planes.push(random_planes(&mut rng, &sys, fi * fo));
+        planes.push(random_planes(&mut rng, &sys, fo));
+    }
+    let param_lits = |planes: &[(Vec<i32>, Vec<i32>)]| -> Vec<xla::Literal> {
+        let mut v = Vec::new();
+        for l in 0..2 {
+            let (fi, fo) = (DIMS[l] as i64, DIMS[l + 1] as i64);
+            v.push(ArtifactExecutable::lit_i32(&planes[2 * l].0, &[fi, fo]).unwrap());
+            v.push(ArtifactExecutable::lit_i32(&planes[2 * l].1, &[fi, fo]).unwrap());
+            v.push(ArtifactExecutable::lit_i32(&planes[2 * l + 1].0, &[fo]).unwrap());
+            v.push(ArtifactExecutable::lit_i32(&planes[2 * l + 1].1, &[fo]).unwrap());
+        }
+        v
+    };
+
+    // Compile latency (fresh parse+compile per iteration).
+    println!("-- artifact compile (HLO text parse + XLA compile) --");
+    let meta = reg.meta("lns_fwd_w16_lut_paper").unwrap().clone();
+    bench("compile/lns_fwd_paper", None, || {
+        black_box(rt.load_hlo_text(&dir.join(&meta.file)).unwrap());
+    });
+
+    // Forward execute, batch 64.
+    println!("\n-- forward, batch 64 (serving path) --");
+    let exe = reg.load(&rt, "lns_fwd_w16_lut_paper").unwrap();
+    let x64 = random_planes(&mut rng, &sys, 64 * DIMS[0]);
+    let mut inputs = param_lits(&planes);
+    inputs.push(ArtifactExecutable::lit_i32(&x64.0, &[64, DIMS[0] as i64]).unwrap());
+    inputs.push(ArtifactExecutable::lit_i32(&x64.1, &[64, DIMS[0] as i64]).unwrap());
+    bench("pjrt/fwd batch=64", Some(64.0), || {
+        black_box(exe.run(&inputs).unwrap());
+    });
+
+    let to_vals = |m: &[i32], s: &[i32]| -> Vec<LnsValue> {
+        m.iter().zip(s).map(|(&m, &s)| LnsValue::new(m, s == 1)).collect()
+    };
+    let mlp = Mlp {
+        dims: DIMS.to_vec(),
+        layers: vec![
+            Dense {
+                w: Tensor::from_vec(784, 100, to_vals(&planes[0].0, &planes[0].1)),
+                b: to_vals(&planes[1].0, &planes[1].1),
+            },
+            Dense {
+                w: Tensor::from_vec(100, 10, to_vals(&planes[2].0, &planes[2].1)),
+                b: to_vals(&planes[3].0, &planes[3].1),
+            },
+        ],
+    };
+    let xt = Tensor::from_vec(64, DIMS[0], to_vals(&x64.0, &x64.1));
+    bench("native/fwd batch=64", Some(64.0), || {
+        black_box(mlp.logits(&backend, &xt));
+    });
+
+    // Train step, batch 5.
+    println!("\n-- train step, batch 5 (paper protocol) --");
+    let exe_t = {
+        let m = reg.meta("lns_train_w16_lut_paper").unwrap().clone();
+        rt.load_hlo_text(&dir.join(&m.file)).unwrap()
+    };
+    let x5 = random_planes(&mut rng, &sys, 5 * DIMS[0]);
+    let labels: Vec<i32> = (0..5).map(|i| (i % 10) as i32).collect();
+    let mut tin = param_lits(&planes);
+    tin.push(ArtifactExecutable::lit_i32(&x5.0, &[5, DIMS[0] as i64]).unwrap());
+    tin.push(ArtifactExecutable::lit_i32(&x5.1, &[5, DIMS[0] as i64]).unwrap());
+    tin.push(ArtifactExecutable::lit_i32(&labels, &[5]).unwrap());
+    bench("pjrt/train_step batch=5", Some(5.0), || {
+        black_box(exe_t.run(&tin).unwrap());
+    });
+
+    let x5t = Tensor::from_vec(5, DIMS[0], to_vals(&x5.0, &x5.1));
+    let lbl: Vec<usize> = labels.iter().map(|&l| l as usize).collect();
+    let sgd = SgdConfig { lr: 0.01, weight_decay: 1e-4 };
+    bench("native/train_step batch=5", Some(5.0), || {
+        let mut m = mlp.clone();
+        let (g, _) = m.backprop(&backend, &x5t, &lbl);
+        sgd.apply(&backend, &mut m, &g);
+        black_box(m);
+    });
+
+    println!("\n(The PJRT path carries the interpret-mode Pallas lowering — its");
+    println!("CPU numbers gauge the AOT boundary, not TPU perf; see DESIGN.md §7.)");
+}

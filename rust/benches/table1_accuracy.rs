@@ -1,0 +1,63 @@
+//! Table 1 regenerator (bench scale): all seven number-system columns on
+//! all four synthetic paper datasets, with shape assertions mirroring the
+//! paper's qualitative claims. Full-scale: `cargo run --release -- table1
+//! --scale 1.0 --epochs 20`.
+
+use lnsdnn::coordinator::experiments::{table1, ConfigTag};
+use lnsdnn::coordinator::report;
+use lnsdnn::data::paper_datasets;
+use std::path::Path;
+
+fn main() {
+    let datasets = paper_datasets(0.015, 7);
+    println!("Table 1 (bench scale 0.015, 6 epochs, hidden 48):");
+    for d in &datasets {
+        println!("  {}: {} train / {} test, {} classes", d.name, d.train_len(), d.test_len(), d.classes);
+    }
+    let t0 = std::time::Instant::now();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let recs = table1(&datasets, 6, 48, 7, threads);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let md = report::table1_markdown(&recs);
+    report::write_markdown(Path::new("results/table1_bench.md"), &md).unwrap();
+    report::write_csv(
+        Path::new("results/table1_bench.csv"),
+        &["dataset", "config", "test_accuracy", "test_loss", "seconds"],
+        &report::runs_csv_rows(&recs),
+    )
+    .unwrap();
+    println!("\n{md}");
+    println!("total wall {wall:.1}s → results/table1_bench.{{md,csv}}");
+
+    // The paper's qualitative claims, asserted per dataset:
+    //   (a) 16-bit log-LUT within a small gap of float;
+    //   (b) LUT ≥ bit-shift at matched width (allowing small-task noise);
+    //   (c) 16-bit ≥ 12-bit within the log-LUT family.
+    let acc = |d: &str, t: ConfigTag| {
+        recs.iter()
+            .find(|r| r.dataset == d && r.tag == t)
+            .map(|r| r.test_accuracy)
+            .unwrap()
+    };
+    let mut claims_ok = 0;
+    let mut claims = 0;
+    for d in ["mnist", "fmnist", "emnistd", "emnistl"] {
+        let float = acc(d, ConfigTag::Float);
+        let l16 = acc(d, ConfigTag::Log16Lut);
+        let l12 = acc(d, ConfigTag::Log12Lut);
+        let b16 = acc(d, ConfigTag::Log16Bs);
+        claims += 3;
+        claims_ok += (l16 > float - 0.12) as i32;
+        claims_ok += (l16 > b16 - 0.06) as i32;
+        claims_ok += (l16 > l12 - 0.06) as i32;
+        println!(
+            "  {d}: float {float:.3}  log16-lut {l16:.3}  log12-lut {l12:.3}  log16-bs {b16:.3}"
+        );
+    }
+    println!("shape claims holding: {claims_ok}/{claims}");
+    assert!(
+        claims_ok as f64 >= claims as f64 * 0.75,
+        "paper-shape claims should mostly hold at bench scale"
+    );
+}

@@ -1,0 +1,146 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmed-up, repeated timing with median/p95 statistics and a
+//! uniform report line format shared by every `cargo bench` target. Bench
+//! binaries are declared with `harness = false` and call [`bench`] /
+//! [`bench_n`] directly.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Case label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Median per-iteration time, nanoseconds.
+    pub median_ns: f64,
+    /// 95th-percentile per-iteration time, nanoseconds.
+    pub p95_ns: f64,
+    /// Mean per-iteration time, nanoseconds.
+    pub mean_ns: f64,
+    /// Optional throughput denominator ("items" processed per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchStats {
+    /// Items per second, when a denominator was supplied.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.median_ns * 1e-9))
+    }
+
+    /// The uniform report line.
+    pub fn report(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) => format!("  {:8.2} item/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} median {:>12} p95  ({} iters){}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+            tput
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget_ms` (after `warmup` calls) and
+/// collect statistics. `items_per_iter` feeds throughput reporting.
+pub fn bench_n<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    budget_ms: u64,
+    items_per_iter: Option<f64>,
+    mut f: F,
+) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut samples_ns: Vec<f64> = Vec::new();
+    while start.elapsed() < budget || samples_ns.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if samples_ns.len() >= 100_000 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let median_ns = samples_ns[n / 2];
+    let p95_ns = samples_ns[((n as f64 * 0.95) as usize).min(n - 1)];
+    let mean_ns = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        median_ns,
+        p95_ns,
+        mean_ns,
+        items_per_iter,
+    }
+}
+
+/// [`bench_n`] with standard defaults (3 warmups, 300 ms budget), printing
+/// the report line.
+pub fn bench<F: FnMut()>(name: &str, items_per_iter: Option<f64>, f: F) -> BenchStats {
+    let s = bench_n(name, 3, 300, items_per_iter, f);
+    println!("{}", s.report());
+    s
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let mut acc = 0u64;
+        let s = bench_n("noop-ish", 1, 10, Some(100.0), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median_ns >= 0.0);
+        assert!(s.p95_ns >= s.median_ns);
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 10,
+            median_ns: 1500.0,
+            p95_ns: 2e6,
+            mean_ns: 1600.0,
+            items_per_iter: Some(1e6),
+        };
+        let r = s.report();
+        assert!(r.contains("µs"), "{r}");
+        assert!(r.contains("ms"), "{r}");
+    }
+}

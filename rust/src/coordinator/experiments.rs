@@ -1,0 +1,400 @@
+//! Experiment drivers for the paper's evaluation artifacts.
+//!
+//! * [`fig1_rows`] — Δ+/Δ− exact vs LUT vs bit-shift curves (Fig. 1).
+//! * [`fig2`] — validation-accuracy learning curves, 12/16-bit log vs
+//!   linear (Fig. 2).
+//! * [`table1`] — test accuracy at 20 epochs for all seven number-system
+//!   columns × four datasets (Table 1), fanned out across threads.
+
+use crate::data::Dataset;
+use crate::fixed::{FixedConfig, FixedSystem};
+use crate::lns::{DeltaApprox, DeltaMode, LnsConfig, LnsSystem, LutSpec};
+use crate::tensor::{FixedBackend, FloatBackend, LnsBackend};
+use crate::train::{train, EpochRecord, TrainConfig};
+
+/// The leaky/llReLU slope used everywhere (paper's leaky-ReLU).
+pub const SLOPE: f64 = 0.01;
+
+/// The seven Table-1 number-system columns (+ an exact-Δ ablation).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ConfigTag {
+    /// Floating-point baseline.
+    Float,
+    /// Linear fixed-point, 12-bit.
+    Lin12,
+    /// Linear fixed-point, 16-bit.
+    Lin16,
+    /// Log-domain, 12-bit, LUT Δ.
+    Log12Lut,
+    /// Log-domain, 16-bit, LUT Δ.
+    Log16Lut,
+    /// Log-domain, 12-bit, bit-shift Δ.
+    Log12Bs,
+    /// Log-domain, 16-bit, bit-shift Δ.
+    Log16Bs,
+    /// Ablation: log-domain 16-bit with exact (float-evaluated) Δ.
+    Log16Exact,
+}
+
+impl ConfigTag {
+    /// All columns of Table 1, in the paper's order.
+    pub fn table1_columns() -> [ConfigTag; 7] {
+        [
+            ConfigTag::Float,
+            ConfigTag::Lin12,
+            ConfigTag::Lin16,
+            ConfigTag::Log12Lut,
+            ConfigTag::Log16Lut,
+            ConfigTag::Log12Bs,
+            ConfigTag::Log16Bs,
+        ]
+    }
+
+    /// The four Fig. 2 series.
+    pub fn fig2_series() -> [ConfigTag; 4] {
+        [ConfigTag::Lin12, ConfigTag::Lin16, ConfigTag::Log12Lut, ConfigTag::Log16Lut]
+    }
+
+    /// Parse a CLI tag like `log16-lut`.
+    pub fn parse(s: &str) -> Option<ConfigTag> {
+        Some(match s {
+            "float" => ConfigTag::Float,
+            "lin12" => ConfigTag::Lin12,
+            "lin16" => ConfigTag::Lin16,
+            "log12-lut" => ConfigTag::Log12Lut,
+            "log16-lut" => ConfigTag::Log16Lut,
+            "log12-bs" => ConfigTag::Log12Bs,
+            "log16-bs" => ConfigTag::Log16Bs,
+            "log16-exact" => ConfigTag::Log16Exact,
+            _ => return None,
+        })
+    }
+
+    /// Report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ConfigTag::Float => "float",
+            ConfigTag::Lin12 => "lin12",
+            ConfigTag::Lin16 => "lin16",
+            ConfigTag::Log12Lut => "log12-lut",
+            ConfigTag::Log16Lut => "log16-lut",
+            ConfigTag::Log12Bs => "log12-bs",
+            ConfigTag::Log16Bs => "log16-bs",
+            ConfigTag::Log16Exact => "log16-exact",
+        }
+    }
+
+    /// The paper notes 12-bit runs needed a larger weight-decay constant;
+    /// these defaults encode that (overridable from the CLI).
+    pub fn default_weight_decay(&self) -> f64 {
+        match self {
+            ConfigTag::Lin12 | ConfigTag::Log12Lut | ConfigTag::Log12Bs => 1e-3,
+            _ => 1e-4,
+        }
+    }
+
+    /// Word width (0 = float).
+    pub fn bits(&self) -> u32 {
+        match self {
+            ConfigTag::Float => 0,
+            ConfigTag::Lin12 | ConfigTag::Log12Lut | ConfigTag::Log12Bs => 12,
+            _ => 16,
+        }
+    }
+}
+
+/// Outcome of one (dataset × config) training run.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// Dataset tag.
+    pub dataset: String,
+    /// Number-system column.
+    pub tag: ConfigTag,
+    /// Learning curve.
+    pub curve: Vec<EpochRecord>,
+    /// Final test accuracy.
+    pub test_accuracy: f64,
+    /// Final test loss.
+    pub test_loss: f64,
+    /// Total training seconds.
+    pub seconds: f64,
+}
+
+/// Build the LNS config for a log-domain tag.
+pub fn lns_config_for(tag: ConfigTag) -> Option<LnsConfig> {
+    Some(match tag {
+        ConfigTag::Log12Lut => LnsConfig::w12_lut(),
+        ConfigTag::Log16Lut => LnsConfig::w16_lut(),
+        ConfigTag::Log12Bs => LnsConfig::w12_bitshift(),
+        ConfigTag::Log16Bs => LnsConfig::w16_bitshift(),
+        ConfigTag::Log16Exact => LnsConfig {
+            delta: DeltaMode::Exact,
+            softmax_delta: DeltaMode::Exact,
+            ..LnsConfig::w16_lut()
+        },
+        _ => return None,
+    })
+}
+
+/// Train one (dataset × config) cell.
+pub fn run_one(ds: &Dataset, tag: ConfigTag, cfg: &TrainConfig) -> RunRecord {
+    let t0 = std::time::Instant::now();
+    let (curve, test) = match tag {
+        ConfigTag::Float => {
+            let r = train(&FloatBackend { slope: SLOPE as f32 }, ds, cfg);
+            (r.curve, r.test)
+        }
+        ConfigTag::Lin12 | ConfigTag::Lin16 => {
+            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+            let r = train(&FixedBackend::new(FixedSystem::new(fc), SLOPE), ds, cfg);
+            (r.curve, r.test)
+        }
+        _ => {
+            let lc = lns_config_for(tag).expect("log tag");
+            let r = train(&LnsBackend::new(LnsSystem::new(lc), SLOPE), ds, cfg);
+            (r.curve, r.test)
+        }
+    };
+    RunRecord {
+        dataset: ds.name.clone(),
+        tag,
+        curve,
+        test_accuracy: test.accuracy,
+        test_loss: test.loss,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Paper training protocol for a dataset, with the tag's weight decay.
+pub fn paper_config(ds: &Dataset, tag: ConfigTag, epochs: usize, hidden: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::paper(ds.classes);
+    cfg.dims = vec![ds.pixels, hidden, ds.classes];
+    cfg.epochs = epochs;
+    cfg.sgd.weight_decay = tag.default_weight_decay();
+    cfg.seed = seed;
+    cfg
+}
+
+/// Fan a set of (dataset × config) runs across OS threads (the runs are
+/// independent; this is the coordinator's parallelism, not the math's).
+pub fn run_grid(
+    datasets: &[Dataset],
+    tags: &[ConfigTag],
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<RunRecord> {
+    let jobs: Vec<(usize, ConfigTag)> = (0..datasets.len())
+        .flat_map(|d| tags.iter().map(move |&t| (d, t)))
+        .collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<RunRecord>>> =
+        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1).min(jobs.len().max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (d, tag) = jobs[i];
+                let ds = &datasets[d];
+                let cfg = paper_config(ds, tag, epochs, hidden, seed);
+                let rec = run_one(ds, tag, &cfg);
+                eprintln!(
+                    "[{}/{}] {} × {:<10} acc={:.3} ({:.1}s)",
+                    i + 1,
+                    jobs.len(),
+                    rec.dataset,
+                    tag.label(),
+                    rec.test_accuracy,
+                    rec.seconds
+                );
+                *results[i].lock().unwrap() = Some(rec);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+/// Table 1: all seven columns over the given datasets.
+pub fn table1(datasets: &[Dataset], epochs: usize, hidden: usize, seed: u64, threads: usize) -> Vec<RunRecord> {
+    run_grid(datasets, &ConfigTag::table1_columns(), epochs, hidden, seed, threads)
+}
+
+/// Fig. 2: the four learning-curve series for one dataset.
+pub fn fig2(ds: &Dataset, epochs: usize, hidden: usize, seed: u64, threads: usize) -> Vec<RunRecord> {
+    run_grid(
+        std::slice::from_ref(ds),
+        &ConfigTag::fig2_series(),
+        epochs,
+        hidden,
+        seed,
+        threads,
+    )
+}
+
+/// One row of the Δ-LUT co-optimization sweep (paper §6 future work):
+/// accuracy vs. table size vs. hardware cost.
+#[derive(Clone, Debug)]
+pub struct LutSweepRow {
+    /// MAC-table dynamic range.
+    pub d_max: u32,
+    /// MAC-table `log2(1/r)`.
+    pub log2_inv_r: u32,
+    /// Table entries (`d_max / r`).
+    pub table_len: usize,
+    /// First-order MAC gate count (see [`crate::lns::lns_mac_cost`]).
+    pub gates: f64,
+    /// Test accuracy when training with this table.
+    pub test_accuracy: f64,
+}
+
+/// Sweep MAC-LUT shapes (the soft-max table stays at the paper's
+/// r = 1/64): train one model per (d_max, r) and report the
+/// accuracy/size/area trade-off — the paper's named future work.
+pub fn lut_sweep(
+    ds: &Dataset,
+    shapes: &[(u32, u32)],
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+) -> Vec<LutSweepRow> {
+    shapes
+        .iter()
+        .map(|&(d_max, log2_inv_r)| {
+            let spec = LutSpec { d_max, log2_inv_r };
+            let cfg = LnsConfig {
+                delta: DeltaMode::Lut(spec),
+                ..LnsConfig::w16_lut()
+            };
+            let backend = LnsBackend::new(LnsSystem::new(cfg), SLOPE);
+            let mut tc = TrainConfig::paper(ds.classes);
+            tc.dims = vec![ds.pixels, hidden, ds.classes];
+            tc.epochs = epochs;
+            tc.seed = seed;
+            let acc = train(&backend, ds, &tc).test.accuracy;
+            let row = LutSweepRow {
+                d_max,
+                log2_inv_r,
+                table_len: spec.len(),
+                gates: crate::lns::lns_mac_cost(&cfg).total(),
+                test_accuracy: acc,
+            };
+            eprintln!(
+                "  lut(d_max={d_max}, r=1/{}) → {} entries, {:.0} gates, acc {:.3}",
+                1 << log2_inv_r,
+                row.table_len,
+                row.gates,
+                acc
+            );
+            row
+        })
+        .collect()
+}
+
+/// One Fig.-1 row: Δ approximations at difference `d`.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig1Row {
+    /// The difference `d = |X − Y|`.
+    pub d: f64,
+    /// Exact Δ+(d).
+    pub exact_plus: f64,
+    /// 20-entry-LUT Δ+(d).
+    pub lut_plus: f64,
+    /// Bit-shift Δ+(d).
+    pub bs_plus: f64,
+    /// Exact Δ−(d) (0 at d=0 placeholder).
+    pub exact_minus: f64,
+    /// LUT Δ−(d).
+    pub lut_minus: f64,
+    /// Bit-shift Δ−(d).
+    pub bs_minus: f64,
+}
+
+/// Fig. 1 data: Δ± exact vs the paper's 20-entry LUT vs bit-shift, sampled
+/// densely over `d ∈ [0, d_end]`.
+pub fn fig1_rows(d_end: f64, samples: usize) -> Vec<Fig1Row> {
+    let cfg = LnsConfig::w16_lut();
+    let lut = DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::MAC20));
+    let bs = DeltaApprox::new(&cfg, DeltaMode::BitShift);
+    let to_f = |u: i64| u as f64 * cfg.unit();
+    (0..samples)
+        .map(|i| {
+            let d = d_end * i as f64 / (samples - 1) as f64;
+            let du = cfg.to_units(d);
+            Fig1Row {
+                d,
+                exact_plus: crate::lns::delta_plus_exact(d),
+                lut_plus: to_f(lut.plus(du)),
+                bs_plus: to_f(bs.plus(du)),
+                exact_minus: if d > 0.0 { crate::lns::delta_minus_exact(d) } else { f64::NEG_INFINITY },
+                lut_minus: if du > 0 { to_f(lut.minus(du).max(-(1 << 20))) } else { f64::NEG_INFINITY },
+                bs_minus: if du > 0 { to_f(bs.minus(du)) } else { f64::NEG_INFINITY },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_dataset, SynthSpec};
+
+    fn tiny() -> Dataset {
+        synth_dataset(&SynthSpec {
+            name: "tiny".into(),
+            classes: 3,
+            train_per_class: 30,
+            test_per_class: 10,
+            strokes: 4,
+            jitter_px: 1.5,
+            jitter_rot: 0.15,
+            noise: 0.04,
+            seed: 5,
+        })
+    }
+
+    #[test]
+    fn tags_roundtrip_through_parse() {
+        for t in ConfigTag::table1_columns() {
+            assert_eq!(ConfigTag::parse(t.label()), Some(t));
+        }
+        assert_eq!(ConfigTag::parse("nope"), None);
+    }
+
+    #[test]
+    fn fig1_rows_shape_and_agreement_at_zero() {
+        let rows = fig1_rows(11.0, 56);
+        assert_eq!(rows.len(), 56);
+        // At d = 0: exact Δ+ = 1, LUT hits it exactly, bit-shift gives 1.
+        assert!((rows[0].exact_plus - 1.0).abs() < 1e-9);
+        assert!((rows[0].lut_plus - 1.0).abs() < 0.01);
+        assert!((rows[0].bs_plus - 1.0).abs() < 1e-9);
+        // Far out: everything ≈ 0.
+        let last = rows.last().unwrap();
+        assert!(last.exact_plus < 0.001);
+        assert_eq!(last.lut_plus, 0.0);
+    }
+
+    #[test]
+    fn run_one_produces_curve() {
+        let ds = tiny();
+        let mut cfg = paper_config(&ds, ConfigTag::Float, 2, 12, 3);
+        cfg.sgd.lr = 0.02;
+        let rec = run_one(&ds, ConfigTag::Float, &cfg);
+        assert_eq!(rec.curve.len(), 2);
+        assert!(rec.test_accuracy > 0.2, "better than chance");
+    }
+
+    #[test]
+    fn grid_runs_all_cells_in_parallel() {
+        let ds = vec![tiny()];
+        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin16], 1, 8, 3, 2);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].tag, ConfigTag::Float);
+        assert_eq!(recs[1].tag, ConfigTag::Lin16);
+    }
+}

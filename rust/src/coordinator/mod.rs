@@ -1,0 +1,15 @@
+//! L3 coordinator: experiment drivers that regenerate the paper's tables
+//! and figures, report writers, and a batched inference server.
+//!
+//! The paper's contribution is the numeric format (L1/L2); per the
+//! architecture rules this layer is a thin-but-real driver: it owns
+//! configuration, process lifecycle, experiment fan-out across threads,
+//! metrics and reporting — never the arithmetic itself.
+
+pub mod experiments;
+pub mod report;
+pub mod server;
+
+pub use experiments::{fig1_rows, fig2, run_one, table1, ConfigTag, RunRecord};
+pub use report::{write_csv, write_markdown};
+pub use server::{BatchServer, ServerStats};

@@ -1,0 +1,151 @@
+//! Report writers: CSV series and markdown tables under `results/`.
+
+use super::experiments::{ConfigTag, Fig1Row, RunRecord};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write a CSV file (creates parent dirs).
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write plain text/markdown (creates parent dirs).
+pub fn write_markdown(path: &Path, content: &str) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(path, content).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Fig. 1 CSV rows.
+pub fn fig1_csv_rows(rows: &[Fig1Row]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                format!("{:.4}", r.d),
+                format!("{:.6}", r.exact_plus),
+                format!("{:.6}", r.lut_plus),
+                format!("{:.6}", r.bs_plus),
+                format!("{:.6}", r.exact_minus),
+                format!("{:.6}", r.lut_minus),
+                format!("{:.6}", r.bs_minus),
+            ]
+        })
+        .collect()
+}
+
+/// Fig. 2 CSV: one row per (series, epoch).
+pub fn fig2_csv_rows(recs: &[RunRecord]) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for rec in recs {
+        for e in &rec.curve {
+            rows.push(vec![
+                rec.dataset.clone(),
+                rec.tag.label().to_string(),
+                e.epoch.to_string(),
+                format!("{:.6}", e.train_loss),
+                format!("{:.4}", e.val_accuracy),
+                format!("{:.3}", e.seconds),
+            ]);
+        }
+    }
+    rows
+}
+
+/// Table 1 in the paper's layout: datasets down, columns across.
+pub fn table1_markdown(recs: &[RunRecord]) -> String {
+    let cols = ConfigTag::table1_columns();
+    let mut datasets: Vec<String> = recs.iter().map(|r| r.dataset.clone()).collect();
+    datasets.dedup();
+    let mut s = String::new();
+    s.push_str("# Table 1 — test accuracy (%) \n\n");
+    s.push_str("| Dataset |");
+    for c in cols {
+        s.push_str(&format!(" {} |", c.label()));
+    }
+    s.push_str("\n|---|");
+    for _ in cols {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for d in &datasets {
+        s.push_str(&format!("| {d} |"));
+        for c in cols {
+            match recs.iter().find(|r| &r.dataset == d && r.tag == c) {
+                Some(r) => s.push_str(&format!(" {:.1} |", r.test_accuracy * 100.0)),
+                None => s.push_str(" – |"),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Generic per-run CSV (used by `table1.csv` for machine-readable output).
+pub fn runs_csv_rows(recs: &[RunRecord]) -> Vec<Vec<String>> {
+    recs.iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.tag.label().to_string(),
+                format!("{:.4}", r.test_accuracy),
+                format!("{:.4}", r.test_loss),
+                format!("{:.1}", r.seconds),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::EpochRecord;
+
+    fn rec(ds: &str, tag: ConfigTag, acc: f64) -> RunRecord {
+        RunRecord {
+            dataset: ds.into(),
+            tag,
+            curve: vec![EpochRecord { epoch: 1, train_loss: 1.0, val_accuracy: acc, seconds: 0.1 }],
+            test_accuracy: acc,
+            test_loss: 0.5,
+            seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn table1_markdown_layout() {
+        let recs = vec![rec("mnist", ConfigTag::Float, 0.974), rec("mnist", ConfigTag::Log16Lut, 0.972)];
+        let md = table1_markdown(&recs);
+        assert!(md.contains("| mnist |"));
+        assert!(md.contains("97.4"));
+        assert!(md.contains("97.2"));
+        assert!(md.contains("–"), "missing cells dashed");
+    }
+
+    #[test]
+    fn csv_written_to_disk() {
+        let dir = std::env::temp_dir().join(format!("lnsdnn-rep-{}", std::process::id()));
+        let p = dir.join("x.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig2_rows_flatten_curves() {
+        let rows = fig2_csv_rows(&[rec("mnist", ConfigTag::Lin16, 0.9)]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0][1], "lin16");
+    }
+}

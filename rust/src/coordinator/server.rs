@@ -1,0 +1,210 @@
+//! Batched inference server (std-thread implementation; tokio is not
+//! available offline).
+//!
+//! Demonstrates the deployment story: clients submit single images, a
+//! collector thread groups them into batches (up to `max_batch`, waiting
+//! at most `max_wait` for stragglers) and hands each batch to a pluggable
+//! handler — the native LNS engine or a PJRT artifact executable. This is
+//! the standard dynamic-batching pattern (vLLM-style router, scaled to
+//! this paper's workload).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A single inference request: one 784-pixel 8-bit image.
+pub struct InferRequest {
+    /// Image pixels.
+    pub image: Vec<u8>,
+    reply: mpsc::Sender<InferReply>,
+}
+
+/// Reply to one request.
+#[derive(Clone, Copy, Debug)]
+pub struct InferReply {
+    /// Predicted class.
+    pub class: usize,
+    /// End-to-end latency for this request.
+    pub latency: Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Rolling server statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// Requests served.
+    pub served: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Total request latency (for mean computation).
+    pub total_latency: Duration,
+    /// Max latency seen.
+    pub max_latency: Duration,
+}
+
+impl ServerStats {
+    /// Mean per-request latency.
+    pub fn mean_latency(&self) -> Duration {
+        if self.served == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.served as u32
+        }
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<(Instant, InferRequest)>,
+}
+
+impl Client {
+    /// Submit one image and wait for its prediction.
+    pub fn infer(&self, image: Vec<u8>) -> Option<InferReply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send((Instant::now(), InferRequest { image, reply: rtx })).ok()?;
+        rrx.recv().ok()
+    }
+}
+
+/// The batching server.
+pub struct BatchServer {
+    client_tx: mpsc::Sender<(Instant, InferRequest)>,
+    stats: Arc<Mutex<ServerStats>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchServer {
+    /// Start the collector thread. `handler` maps a batch of images
+    /// (row-major `[n × pixels]`) to `n` predicted classes.
+    pub fn start<F>(max_batch: usize, max_wait: Duration, pixels: usize, handler: F) -> Self
+    where
+        F: Fn(&[u8], usize) -> Vec<usize> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<(Instant, InferRequest)>();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats_w = stats.clone();
+        let worker = std::thread::spawn(move || {
+            loop {
+                // Block for the first request of a batch.
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break, // all clients gone → shut down
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + max_wait;
+                while batch.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // Assemble and run the batch.
+                let mut flat = Vec::with_capacity(batch.len() * pixels);
+                for (_, req) in &batch {
+                    assert_eq!(req.image.len(), pixels, "bad image size");
+                    flat.extend_from_slice(&req.image);
+                }
+                let preds = handler(&flat, batch.len());
+                assert_eq!(preds.len(), batch.len(), "handler must return one class per image");
+                let bsize = batch.len();
+                let mut st = stats_w.lock().unwrap();
+                st.batches += 1;
+                for ((t0, req), &class) in batch.into_iter().zip(&preds) {
+                    let latency = t0.elapsed();
+                    st.served += 1;
+                    st.total_latency += latency;
+                    st.max_latency = st.max_latency.max(latency);
+                    let _ = req.reply.send(InferReply { class, latency, batch_size: bsize });
+                }
+            }
+        });
+        BatchServer { client_tx: tx, stats, worker: Some(worker) }
+    }
+
+    /// A new submission handle.
+    pub fn client(&self) -> Client {
+        Client { tx: self.client_tx.clone() }
+    }
+
+    /// Snapshot of the statistics.
+    pub fn stats(&self) -> ServerStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Stop accepting and join the worker (all [`Client`] handles must be
+    /// dropped first or the worker keeps waiting for their requests).
+    pub fn shutdown(self) -> ServerStats {
+        let BatchServer { client_tx, stats, worker } = self;
+        drop(client_tx);
+        if let Some(w) = worker {
+            let _ = w.join();
+        }
+        let s = *stats.lock().unwrap();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_and_batches() {
+        let server = BatchServer::start(4, Duration::from_millis(5), 4, |flat, n| {
+            // Predict the index of the max pixel (mod 4) per image.
+            (0..n)
+                .map(|i| {
+                    let img = &flat[i * 4..(i + 1) * 4];
+                    img.iter().enumerate().max_by_key(|(_, &p)| p).unwrap().0
+                })
+                .collect()
+        });
+        let client = server.client();
+        let mut handles = Vec::new();
+        for i in 0..8usize {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut img = vec![0u8; 4];
+                img[i % 4] = 200;
+                c.infer(img).unwrap()
+            }));
+        }
+        let replies: Vec<InferReply> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, r) in replies.iter().enumerate() {
+            assert_eq!(r.class, i % 4);
+            assert!(r.batch_size >= 1);
+        }
+        let st = server.stats();
+        assert_eq!(st.served, 8);
+        assert!(st.batches <= 8);
+        assert!(st.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn single_request_completes_within_wait_window() {
+        let server = BatchServer::start(64, Duration::from_millis(10), 2, |_, n| vec![0; n]);
+        let c = server.client();
+        let t0 = Instant::now();
+        let r = c.infer(vec![1, 2]).unwrap();
+        assert_eq!(r.class, 0);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert_eq!(r.batch_size, 1);
+    }
+}

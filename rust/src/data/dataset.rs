@@ -1,0 +1,148 @@
+//! In-memory image-classification dataset with the paper's conventions:
+//! 8-bit grey images, a train/test split, and a held-back validation
+//! fraction (1:5 of train, paper §5).
+
+use crate::rng::SplitMix64;
+use crate::tensor::{Backend, Tensor};
+
+/// A labelled 8-bit image dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Dataset tag used in reports (`mnist`, `fmnist`, …).
+    pub name: String,
+    /// Number of classes.
+    pub classes: usize,
+    /// Pixels per image (784 for the paper's datasets).
+    pub pixels: usize,
+    /// Training images, row-major `[n_train × pixels]`.
+    pub train_images: Vec<u8>,
+    /// Training labels.
+    pub train_labels: Vec<u8>,
+    /// Test images.
+    pub test_images: Vec<u8>,
+    /// Test labels.
+    pub test_labels: Vec<u8>,
+}
+
+/// An index-based view of a subset of a dataset's training data.
+#[derive(Clone, Debug)]
+pub struct Split {
+    /// Indices into the training arrays.
+    pub train_idx: Vec<usize>,
+    /// Validation indices.
+    pub val_idx: Vec<usize>,
+}
+
+impl Dataset {
+    /// Number of training images.
+    pub fn train_len(&self) -> usize {
+        self.train_labels.len()
+    }
+
+    /// Number of test images.
+    pub fn test_len(&self) -> usize {
+        self.test_labels.len()
+    }
+
+    /// Hold back validation data with the paper's 1:5 ratio (seeded,
+    /// shuffled). `ratio` is the validation fraction denominator, i.e.
+    /// `5` ⇒ 1/5 validation.
+    pub fn split_validation(&self, ratio: usize, seed: u64) -> Split {
+        let mut idx: Vec<usize> = (0..self.train_len()).collect();
+        let mut rng = SplitMix64::new(seed);
+        rng.shuffle(&mut idx);
+        let n_val = idx.len() / ratio;
+        let val_idx = idx[..n_val].to_vec();
+        let train_idx = idx[n_val..].to_vec();
+        Split { train_idx, val_idx }
+    }
+
+    /// Encode images (by index) into a backend tensor: pixel `p` maps to
+    /// `p/255 ∈ [0,1]` then through the backend encoder (the paper's
+    /// offline dataset conversion, §4). Zero pixels become exact LNS zero.
+    pub fn encode_batch<B: Backend>(
+        &self,
+        backend: &B,
+        images: &[u8],
+        idx: &[usize],
+    ) -> Tensor<B::E> {
+        let mut data = Vec::with_capacity(idx.len() * self.pixels);
+        for &i in idx {
+            let img = &images[i * self.pixels..(i + 1) * self.pixels];
+            data.extend(img.iter().map(|&p| backend.encode(p as f64 / 255.0)));
+        }
+        Tensor::from_vec(idx.len(), self.pixels, data)
+    }
+
+    /// Encode the full train set in index order.
+    pub fn encode_train<B: Backend>(&self, backend: &B) -> Tensor<B::E> {
+        let idx: Vec<usize> = (0..self.train_len()).collect();
+        self.encode_batch(backend, &self.train_images, &idx)
+    }
+
+    /// Encode the full test set in index order.
+    pub fn encode_test<B: Backend>(&self, backend: &B) -> Tensor<B::E> {
+        let idx: Vec<usize> = (0..self.test_len()).collect();
+        self.encode_batch(backend, &self.test_images, &idx)
+    }
+
+    /// Labels (by index) as `usize`.
+    pub fn labels_of(&self, labels: &[u8], idx: &[usize]) -> Vec<usize> {
+        idx.iter().map(|&i| labels[i] as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatBackend;
+
+    fn toy() -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            classes: 2,
+            pixels: 4,
+            train_images: (0..40).map(|i| (i * 6) as u8).collect(),
+            train_labels: (0..10).map(|i| (i % 2) as u8).collect(),
+            test_images: vec![255; 8],
+            test_labels: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn split_ratio_respected() {
+        let d = toy();
+        let s = d.split_validation(5, 42);
+        assert_eq!(s.val_idx.len(), 2);
+        assert_eq!(s.train_idx.len(), 8);
+        // Disjoint and covering.
+        let mut all: Vec<usize> = s.train_idx.iter().chain(&s.val_idx).cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_is_seeded() {
+        let d = toy();
+        assert_eq!(d.split_validation(5, 1).val_idx, d.split_validation(5, 1).val_idx);
+        assert_ne!(d.split_validation(5, 1).val_idx, d.split_validation(5, 2).val_idx);
+    }
+
+    #[test]
+    fn encode_normalizes_to_unit_range() {
+        let d = toy();
+        let b = FloatBackend::default();
+        let t = d.encode_test(&b, );
+        assert_eq!(t.rows, 2);
+        assert_eq!(t.cols, 4);
+        assert!(t.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(t.data[0], 1.0); // pixel 255
+    }
+
+    #[test]
+    fn labels_map_to_usize() {
+        let d = toy();
+        let l = d.labels_of(&d.train_labels, &[0, 1, 2]);
+        assert_eq!(l, vec![0, 1, 0]);
+    }
+}

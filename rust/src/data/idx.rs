@@ -1,0 +1,190 @@
+//! IDX file loader (the MNIST/EMNIST container format), with transparent
+//! gzip support.
+//!
+//! When real dataset files are available (`--data-dir` on the CLI), the
+//! experiment drivers prefer them over the synthetic stand-ins. Layout
+//! expected under the directory, per dataset tag:
+//! `<tag>-train-images` / `<tag>-train-labels` / `<tag>-test-images` /
+//! `<tag>-test-labels`, each optionally with `.gz` and/or the canonical
+//! `-idx3-ubyte` suffixes.
+
+use super::dataset::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// Parse an IDX byte stream: magic `0x00 0x00 <dtype> <ndim>`, big-endian
+/// u32 dims, then raw data. Only `u8` payloads (dtype 0x08) are needed for
+/// the MNIST family.
+pub fn parse_idx(bytes: &[u8]) -> Result<(Vec<usize>, Vec<u8>)> {
+    if bytes.len() < 4 {
+        bail!("IDX stream too short");
+    }
+    if bytes[0] != 0 || bytes[1] != 0 {
+        bail!("bad IDX magic prefix {:02x}{:02x}", bytes[0], bytes[1]);
+    }
+    if bytes[2] != 0x08 {
+        bail!("unsupported IDX dtype 0x{:02x} (only u8 supported)", bytes[2]);
+    }
+    let ndim = bytes[3] as usize;
+    let header = 4 + 4 * ndim;
+    if bytes.len() < header {
+        bail!("IDX header truncated");
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for d in 0..ndim {
+        let off = 4 + 4 * d;
+        let v = u32::from_be_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+        dims.push(v as usize);
+    }
+    let expected: usize = dims.iter().product();
+    let data = &bytes[header..];
+    if data.len() != expected {
+        bail!("IDX payload size {} != expected {}", data.len(), expected);
+    }
+    Ok((dims, data.to_vec()))
+}
+
+/// Read a file, gunzipping if it ends in `.gz`.
+pub fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if path.extension().map(|e| e == "gz").unwrap_or(false) {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(&raw[..])
+            .read_to_end(&mut out)
+            .with_context(|| format!("gunzip {}", path.display()))?;
+        Ok(out)
+    } else {
+        Ok(raw)
+    }
+}
+
+/// Find the first existing variant of a dataset component file.
+fn find_component(dir: &Path, tag: &str, split: &str, kind: &str) -> Option<PathBuf> {
+    let idx_kind = if kind == "images" { "idx3" } else { "idx1" };
+    let stems = [
+        format!("{tag}-{split}-{kind}"),
+        format!("{tag}-{split}-{kind}-{idx_kind}-ubyte"),
+        // Canonical LeCun-site naming for MNIST.
+        format!("{split}-{kind}-{idx_kind}-ubyte"),
+    ];
+    for stem in &stems {
+        for ext in ["", ".gz"] {
+            let p = dir.join(format!("{stem}{ext}"));
+            if p.exists() {
+                return Some(p);
+            }
+        }
+    }
+    None
+}
+
+/// Load a real dataset from IDX files under `dir`, if all four components
+/// exist. `classes` must be supplied (IDX does not carry it).
+pub fn load_idx_dataset(dir: &Path, tag: &str, classes: usize) -> Result<Dataset> {
+    let mut parts = Vec::new();
+    for (split, kind) in
+        [("train", "images"), ("train", "labels"), ("t10k", "images"), ("t10k", "labels")]
+    {
+        let split_names: &[&str] =
+            if split == "t10k" { &["t10k", "test"] } else { &["train"] };
+        let path = split_names
+            .iter()
+            .find_map(|s| find_component(dir, tag, s, kind))
+            .with_context(|| format!("missing {tag} {split} {kind} under {}", dir.display()))?;
+        parts.push(parse_idx(&read_maybe_gz(&path)?)?);
+    }
+    let (ti_dims, train_images) = parts.remove(0);
+    let (tl_dims, train_labels) = parts.remove(0);
+    let (si_dims, test_images) = parts.remove(0);
+    let (sl_dims, test_labels) = parts.remove(0);
+    if ti_dims.len() != 3 || si_dims.len() != 3 {
+        bail!("image IDX must be rank 3");
+    }
+    let pixels = ti_dims[1] * ti_dims[2];
+    if ti_dims[0] != tl_dims[0] || si_dims[0] != sl_dims[0] {
+        bail!("image/label count mismatch");
+    }
+    Ok(Dataset {
+        name: tag.to_string(),
+        classes,
+        pixels,
+        train_images,
+        train_labels,
+        test_images,
+        test_labels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx(dims: &[u32], data: &[u8]) -> Vec<u8> {
+        let mut v = vec![0, 0, 0x08, dims.len() as u8];
+        for d in dims {
+            v.extend_from_slice(&d.to_be_bytes());
+        }
+        v.extend_from_slice(data);
+        v
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let bytes = make_idx(&[2, 3], &[1, 2, 3, 4, 5, 6]);
+        let (dims, data) = parse_idx(&bytes).unwrap();
+        assert_eq!(dims, vec![2, 3]);
+        assert_eq!(data, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_idx(&[1, 0, 8, 1, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let bytes = make_idx(&[4], &[1, 2]);
+        assert!(parse_idx(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let mut bytes = make_idx(&[1], &[1]);
+        bytes[2] = 0x0D; // float
+        assert!(parse_idx(&bytes).is_err());
+    }
+
+    #[test]
+    fn gz_roundtrip_through_tempfile() {
+        use std::io::Write;
+        let dir = std::env::temp_dir().join(format!("lnsdnn-idx-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let payload = make_idx(&[2, 2, 2], &[9, 8, 7, 6, 5, 4, 3, 2]);
+        let gz_path = dir.join("x.gz");
+        let mut enc =
+            flate2::write::GzEncoder::new(std::fs::File::create(&gz_path).unwrap(), flate2::Compression::fast());
+        enc.write_all(&payload).unwrap();
+        enc.finish().unwrap();
+        let back = read_maybe_gz(&gz_path).unwrap();
+        assert_eq!(back, payload);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_full_dataset_layout() {
+        let dir = std::env::temp_dir().join(format!("lnsdnn-idxds-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let img = |n: u32| make_idx(&[n, 2, 2], &vec![7u8; (n * 4) as usize]);
+        let lab = |n: u32| make_idx(&[n], &vec![1u8; n as usize]);
+        std::fs::write(dir.join("toy-train-images"), img(6)).unwrap();
+        std::fs::write(dir.join("toy-train-labels"), lab(6)).unwrap();
+        std::fs::write(dir.join("toy-test-images"), img(2)).unwrap();
+        std::fs::write(dir.join("toy-test-labels"), lab(2)).unwrap();
+        let d = load_idx_dataset(&dir, "toy", 2).unwrap();
+        assert_eq!(d.train_len(), 6);
+        assert_eq!(d.test_len(), 2);
+        assert_eq!(d.pixels, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

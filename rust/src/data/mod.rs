@@ -1,0 +1,61 @@
+//! Datasets: the paper's four MNIST-family benchmarks.
+//!
+//! Real MNIST/FMNIST/EMNIST files load through the [`idx`] module when a
+//! data directory is supplied. The offline reproduction default is the
+//! [`synthetic`] generator — procedurally rendered 28×28 8-bit grey
+//! glyph datasets with matched shape/statistics (DESIGN.md §6 records the
+//! substitution rationale).
+
+pub mod dataset;
+pub mod idx;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Split};
+pub use synthetic::{synth_dataset, SynthSpec};
+
+/// The paper's four benchmarks, as synthetic stand-ins (name, classes,
+/// per-class sizes mirror the originals; `scale` shrinks them uniformly
+/// for fast runs — `1.0` is full paper scale).
+pub fn paper_datasets(scale: f64, seed: u64) -> Vec<Dataset> {
+    vec![
+        synth_dataset(&SynthSpec::mnist_like(scale, seed)),
+        synth_dataset(&SynthSpec::fmnist_like(scale, seed + 1)),
+        synth_dataset(&SynthSpec::emnist_digits_like(scale, seed + 2)),
+        synth_dataset(&SynthSpec::emnist_letters_like(scale, seed + 3)),
+    ]
+}
+
+/// Look up one paper dataset by name (`mnist|fmnist|emnistd|emnistl`).
+pub fn paper_dataset(name: &str, scale: f64, seed: u64) -> Option<Dataset> {
+    let spec = match name {
+        "mnist" => SynthSpec::mnist_like(scale, seed),
+        "fmnist" => SynthSpec::fmnist_like(scale, seed + 1),
+        "emnistd" => SynthSpec::emnist_digits_like(scale, seed + 2),
+        "emnistl" => SynthSpec::emnist_letters_like(scale, seed + 3),
+        _ => return None,
+    };
+    Some(synth_dataset(&spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_datasets_have_expected_shapes() {
+        let ds = paper_datasets(0.02, 7);
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds[0].classes, 10);
+        assert_eq!(ds[3].classes, 26);
+        for d in &ds {
+            assert_eq!(d.pixels, 784);
+            assert!(d.train_len() > 0 && d.test_len() > 0);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(paper_dataset("mnist", 0.02, 1).is_some());
+        assert!(paper_dataset("nope", 0.02, 1).is_none());
+    }
+}

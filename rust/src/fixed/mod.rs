@@ -1,0 +1,201 @@
+//! Linear-domain fixed-point arithmetic (the paper's linear baseline).
+//!
+//! Two's-complement Q(`b_i`, `b_f`) words with saturating add/mul and
+//! round-to-nearest on the product shift. The paper's baselines: 16-bit
+//! (`b_f = 11`) and 12-bit (`b_f = 7`), each with 1 sign + 4 integer bits.
+
+/// Q-format configuration for the linear fixed-point baseline.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct FixedConfig {
+    /// Total word width (1 sign + `b_i` + `b_f`).
+    pub total_bits: u32,
+    /// Fractional bits `b_f`.
+    pub frac_bits: u32,
+}
+
+impl FixedConfig {
+    /// Paper's 16-bit linear baseline: `b_i = 4, b_f = 11`.
+    pub fn w16() -> Self {
+        FixedConfig { total_bits: 16, frac_bits: 11 }
+    }
+
+    /// Paper's 12-bit linear baseline: `b_i = 4, b_f = 7`.
+    pub fn w12() -> Self {
+        FixedConfig { total_bits: 12, frac_bits: 7 }
+    }
+
+    /// Largest representable code.
+    pub fn max_code(&self) -> i32 {
+        (1i32 << (self.total_bits - 1)) - 1
+    }
+
+    /// Smallest representable code (symmetric clamp: we avoid the
+    /// asymmetric extra negative code so negation is always exact).
+    pub fn min_code(&self) -> i32 {
+        -self.max_code()
+    }
+
+    /// One unit in the last place as a real value.
+    pub fn unit(&self) -> f64 {
+        1.0 / (1i64 << self.frac_bits) as f64
+    }
+}
+
+/// A linear fixed-point arithmetic system.
+#[derive(Copy, Clone, Debug)]
+pub struct FixedSystem {
+    cfg: FixedConfig,
+}
+
+/// A Q-format word (carried as `i32`; only the low `total_bits` span is
+/// ever occupied thanks to saturation).
+pub type FixedValue = i32;
+
+impl FixedSystem {
+    /// Build a system for a Q-format.
+    pub fn new(cfg: FixedConfig) -> Self {
+        FixedSystem { cfg }
+    }
+
+    /// The configuration.
+    pub fn config(&self) -> &FixedConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn sat(&self, wide: i64) -> FixedValue {
+        wide.clamp(self.cfg.min_code() as i64, self.cfg.max_code() as i64) as i32
+    }
+
+    /// Quantize a real number (round-half-away-from-zero, saturating).
+    pub fn encode_f64(&self, v: f64) -> FixedValue {
+        if v.is_nan() {
+            return 0;
+        }
+        let scaled = v * (1i64 << self.cfg.frac_bits) as f64;
+        let r = if scaled >= 0.0 {
+            (scaled + 0.5).floor()
+        } else {
+            (scaled - 0.5).ceil()
+        };
+        self.sat(r as i64)
+    }
+
+    /// Back to `f64`.
+    pub fn decode_f64(&self, x: FixedValue) -> f64 {
+        x as f64 * self.cfg.unit()
+    }
+
+    /// Saturating addition.
+    #[inline]
+    pub fn add(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.sat(a as i64 + b as i64)
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sub(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.sat(a as i64 - b as i64)
+    }
+
+    /// Saturating multiplication with round-to-nearest on the `>> b_f`
+    /// rescale (round-half-away-from-zero, matching the encoder).
+    #[inline]
+    pub fn mul(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        let p = a as i64 * b as i64;
+        let half = 1i64 << (self.cfg.frac_bits - 1);
+        let rounded = if p >= 0 {
+            (p + half) >> self.cfg.frac_bits
+        } else {
+            -((-p + half) >> self.cfg.frac_bits)
+        };
+        self.sat(rounded)
+    }
+
+    /// Multiply-accumulate `acc + a·b` (single rounding of the product,
+    /// then saturating add — the standard fixed-point MAC).
+    #[inline]
+    pub fn mac(&self, acc: FixedValue, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.add(acc, self.mul(a, b))
+    }
+
+    /// Multiplication with **stochastic rounding** of the `>> b_f` rescale:
+    /// `floor((a·b + u) / 2^{b_f})` with `u` uniform in `[0, 2^{b_f})`.
+    ///
+    /// Needed on the SGD update path: with round-to-nearest, any update
+    /// smaller than half an ulp (e.g. `lr·g` at `b_f = 7` with `lr = 0.01`)
+    /// deterministically rounds to zero and 12-bit training never moves
+    /// (Gupta et al. 2015). Stochastic rounding makes the update correct
+    /// in expectation. `u` comes from the caller so the system stays pure.
+    #[inline]
+    pub fn mul_sr(&self, a: FixedValue, b: FixedValue, u: u32) -> FixedValue {
+        let p = a as i64 * b as i64;
+        let dither = (u & ((1u32 << self.cfg.frac_bits) - 1)) as i64;
+        // Arithmetic right shift implements floor for both signs.
+        self.sat((p + dither) >> self.cfg.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s16() -> FixedSystem {
+        FixedSystem::new(FixedConfig::w16())
+    }
+
+    #[test]
+    fn encode_decode_quantization_error() {
+        let s = s16();
+        let half_ulp = s.config().unit() / 2.0 + 1e-12;
+        for v in [0.0, 1.0, -1.0, 3.999, -7.3, 0.0004] {
+            let err = (s.decode_f64(s.encode_f64(v)) - v).abs();
+            assert!(err <= half_ulp, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let s = s16();
+        assert_eq!(s.encode_f64(1e9), s.config().max_code());
+        assert_eq!(s.encode_f64(-1e9), s.config().min_code());
+        let m = s.config().max_code();
+        assert_eq!(s.add(m, m), m);
+        assert_eq!(s.sub(-m, m), -m);
+    }
+
+    #[test]
+    fn mul_rounds_to_nearest() {
+        let s = s16();
+        let a = s.encode_f64(0.5);
+        let b = s.encode_f64(0.5);
+        assert_eq!(s.decode_f64(s.mul(a, b)), 0.25);
+        // Symmetric for negatives.
+        assert_eq!(s.mul(-a, b), -s.mul(a, b));
+        assert_eq!(s.mul(-a, -b), s.mul(a, b));
+    }
+
+    #[test]
+    fn mac_matches_mul_then_add() {
+        let s = s16();
+        let (a, b, c) = (s.encode_f64(1.5), s.encode_f64(-2.25), s.encode_f64(0.75));
+        assert_eq!(s.mac(c, a, b), s.add(c, s.mul(a, b)));
+    }
+
+    #[test]
+    fn twelve_bit_is_coarser() {
+        let s12 = FixedSystem::new(FixedConfig::w12());
+        let s16 = s16();
+        assert!(s12.config().unit() > s16.config().unit());
+        assert_eq!(s12.config().max_code(), (1 << 11) - 1);
+    }
+
+    #[test]
+    fn negation_exact_with_symmetric_clamp() {
+        let s = s16();
+        for v in [0.1, 3.9, 15.9] {
+            let x = s.encode_f64(v);
+            assert_eq!(s.sub(0, x), -x);
+        }
+    }
+}

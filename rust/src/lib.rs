@@ -1,0 +1,40 @@
+//! # lnsdnn — Neural Network Training with Approximate Logarithmic Computations
+//!
+//! A three-layer reproduction of Sanyal, Beerel & Chugg (2019):
+//! end-to-end DNN training and inference in the **Logarithmic Number
+//! System (LNS)** with fixed-point words, where multiplications become
+//! integer additions and additions become `max + Δ±(|X−Y|)` with the
+//! transcendental `Δ±` terms approximated by look-up tables or bit-shifts.
+//!
+//! Layering (see `DESIGN.md`):
+//! * **L1/L2 (build-time Python)** — Pallas LNS kernels + a JAX MLP with a
+//!   manual log-domain backward pass, AOT-lowered to HLO text in
+//!   `artifacts/`.
+//! * **L3 (this crate)** — the bit-exact native LNS engine used for the
+//!   paper's experiment sweeps, the PJRT runtime that loads and executes
+//!   the AOT artifacts, and the experiment coordinator/CLI.
+//!
+//! Quick start:
+//! ```no_run
+//! use lnsdnn::lns::{LnsConfig, DeltaMode, LnsSystem};
+//! let sys = LnsSystem::new(LnsConfig::w16_lut());
+//! let a = sys.encode_f64(3.0);
+//! let b = sys.encode_f64(-1.5);
+//! let s = sys.add(a, b);
+//! assert!((sys.decode_f64(s) - 1.5).abs() < 0.02);
+//! ```
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod lns;
+pub mod nn;
+pub mod proptest_util;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

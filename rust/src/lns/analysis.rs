@@ -1,0 +1,88 @@
+//! Bit-width analysis (paper §4, Eq. 15).
+//!
+//! The paper bounds the log-domain word width needed to cover the same
+//! range and precision as a linear-domain fixed-point word with `b_i`
+//! integer and `b_f` fractional bits (plus sign):
+//!
+//! ```text
+//! W_log ≥ 1 + max(⌈log2(b_i + 1)⌉, ⌈log2 b_f⌉) + W_lin
+//! ```
+//!
+//! For the typical `W_lin = 16` (`b_i = 4`, `b_f = 11`) this gives
+//! `W_log = 21`; the paper's experiments show `W_log ≈ W_lin` suffices in
+//! practice — the `bitwidth` CLI subcommand and `table1` results exhibit
+//! exactly that gap.
+
+/// One row of the Eq.-15 bound table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitWidthRow {
+    /// Linear word width (1 sign + `b_i` + `b_f`).
+    pub w_lin: u32,
+    /// Linear integer bits.
+    pub b_i: u32,
+    /// Linear fractional bits.
+    pub b_f: u32,
+    /// Eq.-15 lower bound on the log-domain width.
+    pub w_log_bound: u32,
+}
+
+/// Eq. 15: minimum log-domain width guaranteeing the linear format's
+/// range *and* precision (worst case).
+pub fn min_log_bits(b_i: u32, b_f: u32) -> u32 {
+    assert!(b_f >= 1, "need at least one fractional bit");
+    let w_lin = 1 + b_i + b_f;
+    let ceil_log2 = |x: u32| -> u32 {
+        assert!(x >= 1);
+        32 - (x - 1).leading_zeros()
+    };
+    1 + ceil_log2(b_i + 1).max(ceil_log2(b_f)) + w_lin
+}
+
+/// The bound table for a sweep of linear widths (the `bitwidth` CLI
+/// subcommand prints this).
+pub fn bound_table(rows: &[(u32, u32)]) -> Vec<BitWidthRow> {
+    rows.iter()
+        .map(|&(b_i, b_f)| BitWidthRow {
+            w_lin: 1 + b_i + b_f,
+            b_i,
+            b_f,
+            w_log_bound: min_log_bits(b_i, b_f),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_16bit() {
+        // Paper: W_lin = 16 with b_i = 4, b_f = 11 → W_log = 21.
+        assert_eq!(min_log_bits(4, 11), 21);
+    }
+
+    #[test]
+    fn twelve_bit_case() {
+        // W_lin = 12 with b_i = 4, b_f = 7: max(⌈log2 5⌉, ⌈log2 7⌉) = 3
+        // → 1 + 3 + 12 = 16.
+        assert_eq!(min_log_bits(4, 7), 16);
+    }
+
+    #[test]
+    fn bound_grows_with_width() {
+        let mut prev = 0;
+        for bf in 2..24 {
+            let b = min_log_bits(4, bf);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = bound_table(&[(4, 7), (4, 11), (4, 19)]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[1].w_lin, 16);
+        assert_eq!(t[1].w_log_bound, 21);
+    }
+}

@@ -1,0 +1,211 @@
+//! LNS word-format and Δ-approximation configuration.
+
+/// Specification of a Δ± look-up table (paper §3, Fig. 1).
+///
+/// The dynamic range of the difference `d = |X − Y|` covered by the table
+/// is `[0, d_max)` and the resolution is `r = 2^{-log2_inv_r}` — i.e. each
+/// unit interval holds `1/r` uniformly sampled points, so the table has
+/// `d_max / r = d_max << log2_inv_r` entries. Resolutions are restricted
+/// to powers of two so indexing is a bit shift (this is the hardware
+/// motivation; the paper's chosen values `r = 1/2` and `r = 1/64` both
+/// satisfy it).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct LutSpec {
+    /// Dynamic range `d_max` (in log-domain units, i.e. the table covers
+    /// differences `d ∈ [0, d_max)`).
+    pub d_max: u32,
+    /// `log2(1/r)`: 1 ⇒ r = 1/2 (paper's MAC table), 6 ⇒ r = 1/64
+    /// (paper's soft-max table), 0 ⇒ r = 1 (the bit-shift-equivalent
+    /// resolution).
+    pub log2_inv_r: u32,
+}
+
+impl LutSpec {
+    /// Paper's MAC-path table: `d_max = 10, r = 1/2` → 20 entries.
+    pub const MAC20: LutSpec = LutSpec { d_max: 10, log2_inv_r: 1 };
+    /// Paper's soft-max table: `d_max = 10, r = 1/64` → 640 entries.
+    pub const SOFTMAX640: LutSpec = LutSpec { d_max: 10, log2_inv_r: 6 };
+
+    /// Number of entries `d_max / r`.
+    pub fn len(&self) -> usize {
+        (self.d_max as usize) << self.log2_inv_r
+    }
+
+    /// True when the table holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resolution `r` as a float (for reporting).
+    pub fn r(&self) -> f64 {
+        1.0 / (1u64 << self.log2_inv_r) as f64
+    }
+}
+
+/// How the Δ± terms of log-domain addition are approximated (paper §3).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DeltaMode {
+    /// Uniformly sampled look-up table.
+    Lut(LutSpec),
+    /// Generalized bit-shift rule of Eq. (9):
+    /// `Δ+(d) ≈ 2^{-⌊d⌋}`, `Δ−(d) ≈ −1.5·2^{-⌊d⌋}` — equivalent to a
+    /// LUT with `r = 1` and range set by the word width.
+    BitShift,
+    /// Exact transcendental evaluation (float) — not hardware-friendly;
+    /// used as the reference curve in Fig. 1 and for ablations.
+    Exact,
+}
+
+/// Full LNS word-format configuration.
+///
+/// A word has `total_bits = 2 + q_i + q_f` bits: one linear-sign bit, one
+/// sign bit for the log-magnitude itself, `q_i` integer and `q_f = frac_bits`
+/// fractional bits (paper §4, "Fixed-Point Implementation"). The paper's
+/// 16-bit setting uses `q_f = 10`; the 12-bit setting uses `q_f = 6`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct LnsConfig {
+    /// Total word width `W` in bits (including both sign bits).
+    pub total_bits: u32,
+    /// Fractional bits `q_f` of the log-magnitude.
+    pub frac_bits: u32,
+    /// Δ approximation used on the MAC path (matmul/bias/updates).
+    pub delta: DeltaMode,
+    /// Δ approximation used inside the soft-max (the paper found the
+    /// soft-max markedly more sensitive and used a finer `r = 1/64` table).
+    pub softmax_delta: DeltaMode,
+}
+
+impl LnsConfig {
+    /// Paper's 16-bit LUT configuration (`q_f = 10`, MAC LUT 20 entries,
+    /// soft-max LUT 640 entries).
+    pub fn w16_lut() -> Self {
+        LnsConfig {
+            total_bits: 16,
+            frac_bits: 10,
+            delta: DeltaMode::Lut(LutSpec::MAC20),
+            softmax_delta: DeltaMode::Lut(LutSpec::SOFTMAX640),
+        }
+    }
+
+    /// Paper's 12-bit LUT configuration (`q_f = 6`).
+    pub fn w12_lut() -> Self {
+        LnsConfig {
+            total_bits: 12,
+            frac_bits: 6,
+            delta: DeltaMode::Lut(LutSpec::MAC20),
+            softmax_delta: DeltaMode::Lut(LutSpec::SOFTMAX640),
+        }
+    }
+
+    /// Paper's 16-bit bit-shift configuration.
+    pub fn w16_bitshift() -> Self {
+        LnsConfig {
+            total_bits: 16,
+            frac_bits: 10,
+            delta: DeltaMode::BitShift,
+            // The soft-max keeps the fine LUT even in the bit-shift rows:
+            // the paper states Fig. 2/Table 1 used r=1/64 "for all
+            // operations except the soft-max" approximations being varied.
+            // We expose this choice; `examples/` ablate it.
+            softmax_delta: DeltaMode::BitShift,
+        }
+    }
+
+    /// Paper's 12-bit bit-shift configuration.
+    pub fn w12_bitshift() -> Self {
+        LnsConfig {
+            total_bits: 12,
+            frac_bits: 6,
+            delta: DeltaMode::BitShift,
+            softmax_delta: DeltaMode::BitShift,
+        }
+    }
+
+    /// Largest representable log-magnitude in fixed-point units.
+    ///
+    /// The magnitude field has `total_bits − 2` bits (one bit goes to the
+    /// linear sign, one to the magnitude's own sign), so it spans
+    /// `[-(2^{W-2}−1), 2^{W-2}−1]`; the most negative code is reserved as
+    /// the exact-zero sentinel (§DESIGN.md-5).
+    pub fn m_max(&self) -> i32 {
+        (1i32 << (self.total_bits - 2)) - 1
+    }
+
+    /// Smallest representable (non-zero) log-magnitude.
+    pub fn m_min(&self) -> i32 {
+        -self.m_max()
+    }
+
+    /// Integer bits `q_i = W − 2 − q_f`.
+    pub fn int_bits(&self) -> u32 {
+        self.total_bits - 2 - self.frac_bits
+    }
+
+    /// One fixed-point unit = `2^{-q_f}` in log-domain value.
+    pub fn unit(&self) -> f64 {
+        1.0 / (1i64 << self.frac_bits) as f64
+    }
+
+    /// Convert a real-valued log-magnitude to fixed-point units
+    /// (round-half-away-from-zero), without clamping.
+    pub fn to_units(&self, x: f64) -> i64 {
+        let scaled = x * (1i64 << self.frac_bits) as f64;
+        if scaled >= 0.0 {
+            (scaled + 0.5).floor() as i64
+        } else {
+            (scaled - 0.5).ceil() as i64
+        }
+    }
+
+    /// Convert fixed-point units back to a real log-magnitude.
+    pub fn from_units(&self, m: i32) -> f64 {
+        m as f64 * self.unit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_sizes_match_paper() {
+        assert_eq!(LutSpec::MAC20.len(), 20);
+        assert_eq!(LutSpec::SOFTMAX640.len(), 640);
+        assert!((LutSpec::MAC20.r() - 0.5).abs() < 1e-12);
+        assert!((LutSpec::SOFTMAX640.r() - 1.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn word_layout_16() {
+        let c = LnsConfig::w16_lut();
+        assert_eq!(c.int_bits(), 4); // 16 = 2 + 4 + 10
+        assert_eq!(c.m_max(), (1 << 14) - 1);
+        assert_eq!(c.m_min(), -((1 << 14) - 1));
+    }
+
+    #[test]
+    fn word_layout_12() {
+        let c = LnsConfig::w12_lut();
+        assert_eq!(c.int_bits(), 4); // 12 = 2 + 4 + 6
+        assert_eq!(c.m_max(), 1023);
+    }
+
+    #[test]
+    fn to_units_rounds_half_away() {
+        let c = LnsConfig::w16_lut(); // q_f = 10
+        assert_eq!(c.to_units(0.0), 0);
+        assert_eq!(c.to_units(1.0), 1024);
+        // 0.5 ulp rounds away from zero
+        assert_eq!(c.to_units(0.5 / 1024.0), 1);
+        assert_eq!(c.to_units(-0.5 / 1024.0), -1);
+        assert_eq!(c.to_units(0.49 / 1024.0), 0);
+    }
+
+    #[test]
+    fn units_roundtrip() {
+        let c = LnsConfig::w12_lut();
+        for m in [-500i32, -1, 0, 1, 700] {
+            assert_eq!(c.to_units(c.from_units(m)) as i32, m);
+        }
+    }
+}

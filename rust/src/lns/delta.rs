@@ -1,0 +1,397 @@
+//! The Δ± terms of log-domain addition and their approximations (paper §3).
+//!
+//! Exact:
+//! ```text
+//! Δ+(d) = log2(1 + 2^-d)   d ≥ 0
+//! Δ−(d) = log2(1 − 2^-d)   d > 0
+//! ```
+//! Approximations:
+//! * **LUT** — uniformly sampled table over `d ∈ [0, d_max)` with
+//!   power-of-two resolution `r`; lookup is **round-to-nearest sample**
+//!   `(d + bin/2) >> (q_f − log2(1/r))`. (Floor indexing systematically
+//!   overestimates the decreasing Δ+; the bias compounds over 784-term ⊞
+//!   reductions and destabilizes training — see EXPERIMENTS.md.)
+//! * **Bit-shift** (Eq. 9) — `Δ+(d) ≈ 2^{-⌊d⌋}`, `Δ−(d) ≈ −1.5·2^{-⌊d⌋}`,
+//!   i.e. a LUT with `r = 1` (floor-indexed, exactly as the shift does).
+//! * **Exact** — reference/ablation mode, materialized at the word's own
+//!   resolution.
+//!
+//! Internally every mode is materialized as a **padded direct-index
+//! table** covering the full reachable difference range `[0, 2·m_max]`,
+//! so the hot-path lookup is shift → load with no mode dispatch and no
+//! bounds branch (this is also exactly the hardware structure: an indexed
+//! ROM). All values are fixed-point units; the Rust engine and the Pallas
+//! kernels are bit-exact against each other.
+
+use super::config::{DeltaMode, LnsConfig};
+#[cfg(test)]
+use super::config::LutSpec;
+
+/// Exact `Δ+(d) = log2(1 + 2^-d)` over real-valued `d ≥ 0`.
+pub fn delta_plus_exact(d: f64) -> f64 {
+    debug_assert!(d >= 0.0);
+    (1.0 + (-d).exp2()).log2()
+}
+
+/// Exact `Δ−(d) = log2(1 − 2^-d)` over real-valued `d > 0`.
+/// Diverges to −∞ as `d → 0`.
+pub fn delta_minus_exact(d: f64) -> f64 {
+    debug_assert!(d > 0.0);
+    (1.0 - (-d).exp2()).log2()
+}
+
+/// Sentinel for "Δ− evaluated in its singular bin": the paper sets the
+/// value at 0 to the most negative representable number; callers clamp
+/// the subsequent add, so any value far below −m_max behaves identically.
+/// Kept well inside `i32` so plain 32-bit adds cannot wrap.
+const DELTA_MINUS_NEG_SAT: i32 = i32::MIN / 4;
+
+/// A Δ± approximator materialized for a specific word format.
+#[derive(Clone, Debug)]
+pub struct DeltaApprox {
+    mode: DeltaMode,
+    /// Right-shift turning a fixed-point difference into a table index.
+    index_shift: u32,
+    /// Pre-shift rounding bias: `bin/2` for nearest-sample LUTs, 0 for
+    /// the floor-indexed bit-shift/exact modes.
+    index_round: i32,
+    /// Entries of the *logical* table (before range padding) — what the
+    /// paper's hardware would store; reported by [`Self::table_len`].
+    logical_len: usize,
+    /// Δ+ entries, padded to cover every reachable `d ∈ [0, 2·m_max]`.
+    table_plus: Vec<i32>,
+    /// Δ− entries; index 0 is the singular bin (→ huge negative).
+    table_minus: Vec<i32>,
+}
+
+impl DeltaApprox {
+    /// Build the approximator for `mode` under `cfg`'s fixed-point format.
+    ///
+    /// Panics if a LUT resolution is finer than the word's fractional
+    /// resolution (`log2(1/r) > q_f`) — such a table cannot be indexed by
+    /// shifting and would be meaningless in hardware.
+    pub fn new(cfg: &LnsConfig, mode: DeltaMode) -> Self {
+        let d_reach = 2 * cfg.m_max() as i64; // max |X − Y| in units
+        match mode {
+            DeltaMode::Lut(spec) => {
+                assert!(
+                    spec.log2_inv_r <= cfg.frac_bits,
+                    "LUT resolution 2^-{} finer than word resolution 2^-{}",
+                    spec.log2_inv_r,
+                    cfg.frac_bits
+                );
+                let shift = cfg.frac_bits - spec.log2_inv_r;
+                let round = ((1i64 << shift) >> 1) as i32;
+                let n_padded = (((d_reach + round as i64) >> shift) + 1) as usize;
+                let logical = spec.len();
+                let r = spec.r();
+                let mut plus = Vec::with_capacity(n_padded);
+                let mut minus = Vec::with_capacity(n_padded);
+                for i in 0..n_padded {
+                    if i < logical {
+                        let d = i as f64 * r;
+                        plus.push(cfg.to_units(delta_plus_exact(d)) as i32);
+                        minus.push(if i == 0 {
+                            DELTA_MINUS_NEG_SAT
+                        } else {
+                            cfg.to_units(delta_minus_exact(d)) as i32
+                        });
+                    } else {
+                        plus.push(0); // beyond the dynamic range Δ± ≈ 0
+                        minus.push(0);
+                    }
+                }
+                DeltaApprox {
+                    mode,
+                    index_shift: shift,
+                    index_round: round,
+                    logical_len: logical,
+                    table_plus: plus,
+                    table_minus: minus,
+                }
+            }
+            DeltaMode::BitShift => {
+                // Equivalent LUT with r = 1, floor-indexed (that is what a
+                // shifter computes): T+[i] = 2^{q_f} >> i, T−[i] = −(1.5·
+                // 2^{q_f}) >> i. No singular bin: Δ−(0⁺) ≈ −1.5 (Eq. 9b).
+                let shift = cfg.frac_bits;
+                let n_padded = ((d_reach >> shift) + 1) as usize;
+                let base_minus = (3i64 << cfg.frac_bits) >> 1;
+                let plus: Vec<i32> = (0..n_padded)
+                    .map(|i| if i < 63 { ((1i64 << cfg.frac_bits) >> i) as i32 } else { 0 })
+                    .collect();
+                let minus: Vec<i32> =
+                    (0..n_padded).map(|i| if i < 63 { -((base_minus >> i) as i32) } else { 0 }).collect();
+                DeltaApprox {
+                    mode,
+                    index_shift: shift,
+                    index_round: 0,
+                    logical_len: 0,
+                    table_plus: plus,
+                    table_minus: minus,
+                }
+            }
+            DeltaMode::Exact => {
+                // Materialized at the word's own resolution (shift 0): the
+                // float-free equivalent of evaluating the closed form per
+                // call, used as the reference/ablation mode.
+                let n_padded = (d_reach + 1) as usize;
+                let unit = (1i64 << cfg.frac_bits) as f64;
+                let mut plus = Vec::with_capacity(n_padded);
+                let mut minus = Vec::with_capacity(n_padded);
+                for i in 0..n_padded {
+                    let d = i as f64 / unit;
+                    let p = delta_plus_exact(d) * unit;
+                    plus.push((p + 0.5).floor() as i32);
+                    if i == 0 {
+                        minus.push(DELTA_MINUS_NEG_SAT);
+                    } else {
+                        let m = delta_minus_exact(d) * unit;
+                        minus.push(if !m.is_finite() || m < DELTA_MINUS_NEG_SAT as f64 {
+                            DELTA_MINUS_NEG_SAT
+                        } else {
+                            (m - 0.5).ceil() as i32
+                        });
+                    }
+                }
+                DeltaApprox {
+                    mode,
+                    index_shift: 0,
+                    index_round: 0,
+                    logical_len: n_padded,
+                    table_plus: plus,
+                    table_minus: minus,
+                }
+            }
+        }
+    }
+
+    /// The mode this approximator was built for.
+    pub fn mode(&self) -> DeltaMode {
+        self.mode
+    }
+
+    /// Number of *logical* table entries (what the hardware would store:
+    /// 20 for the paper's MAC LUT, 640 for the soft-max LUT; 0 for the
+    /// bit-shift mode, which needs no ROM).
+    pub fn table_len(&self) -> usize {
+        self.logical_len
+    }
+
+    /// Raw Δ+ table access (kernel export / artifact cross-checks).
+    pub fn table_plus(&self) -> &[i32] {
+        &self.table_plus
+    }
+
+    /// Raw Δ− table access.
+    pub fn table_minus(&self) -> &[i32] {
+        &self.table_minus
+    }
+
+    /// `Δ+` of a fixed-point difference `d ∈ [0, 2·m_max]` (units of
+    /// `2^-q_f`), in the same units. Monotonically non-increasing.
+    #[inline(always)]
+    pub fn plus(&self, d: i64) -> i64 {
+        debug_assert!(d >= 0);
+        let idx = ((d as i32 + self.index_round) >> self.index_shift) as usize;
+        debug_assert!(idx < self.table_plus.len(), "d out of reachable range");
+        self.table_plus[idx] as i64
+    }
+
+    /// `Δ−` of a fixed-point difference `d ∈ (0, 2·m_max]`, in the same
+    /// units. Always ≤ 0; the singular bin returns a huge negative value
+    /// that callers clamp with saturating arithmetic. `d == 0` must be
+    /// handled by the caller (exact cancellation → zero).
+    #[inline(always)]
+    pub fn minus(&self, d: i64) -> i64 {
+        debug_assert!(d > 0);
+        let idx = ((d as i32 + self.index_round) >> self.index_shift) as usize;
+        debug_assert!(idx < self.table_minus.len(), "d out of reachable range");
+        self.table_minus[idx] as i64
+    }
+
+    /// 32-bit fast path of [`Self::plus`] (hot loop; values cannot wrap:
+    /// entries ≤ 2^{q_f}, differences ≤ 2·m_max).
+    #[inline(always)]
+    pub fn plus_i32(&self, d: i32) -> i32 {
+        debug_assert!(d >= 0);
+        self.table_plus[((d + self.index_round) >> self.index_shift) as usize]
+    }
+
+    /// 32-bit fast path of [`Self::minus`].
+    #[inline(always)]
+    pub fn minus_i32(&self, d: i32) -> i32 {
+        debug_assert!(d > 0);
+        self.table_minus[((d + self.index_round) >> self.index_shift) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg16() -> LnsConfig {
+        LnsConfig::w16_lut()
+    }
+
+    #[test]
+    fn exact_delta_known_values() {
+        // Δ+(0) = log2(2) = 1; Δ+(∞) → 0.
+        assert!((delta_plus_exact(0.0) - 1.0).abs() < 1e-12);
+        assert!(delta_plus_exact(40.0).abs() < 1e-9);
+        // Δ−(1) = log2(1 - 1/2) = -1.
+        assert!((delta_minus_exact(1.0) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lut_matches_exact_at_sample_points() {
+        let cfg = cfg16();
+        let ap = DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::MAC20));
+        // Sample point d = i*r: LUT is exact (up to rounding) there.
+        for i in 1..20 {
+            let d_real = i as f64 * 0.5;
+            let d_units = cfg.to_units(d_real);
+            let got = ap.plus(d_units);
+            let want = cfg.to_units(delta_plus_exact(d_real));
+            assert_eq!(got, want, "Δ+ at d={d_real}");
+            let got = ap.minus(d_units);
+            let want = cfg.to_units(delta_minus_exact(d_real));
+            assert_eq!(got, want, "Δ− at d={d_real}");
+        }
+    }
+
+    #[test]
+    fn lut_is_piecewise_constant_nearest() {
+        let cfg = cfg16();
+        let ap = DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::MAC20));
+        // Nearest-sample indexing: everything in [0.25, 0.75) maps to the
+        // d = 0.5 sample.
+        let lo = cfg.to_units(0.25);
+        let hi = cfg.to_units(0.75) - 1;
+        assert_eq!(ap.plus(lo), ap.plus(hi));
+        assert_eq!(ap.plus(lo), cfg.to_units(delta_plus_exact(0.5)));
+        // And [0, 0.25) maps to the d = 0 sample.
+        assert_eq!(ap.plus(0), cfg.to_units(delta_plus_exact(0.0)));
+        assert_eq!(ap.plus(cfg.to_units(0.25) - 1), ap.plus(0));
+    }
+
+    #[test]
+    fn beyond_range_is_zero() {
+        let cfg = cfg16();
+        let ap = DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::MAC20));
+        let d = cfg.to_units(10.0); // d_max
+        assert_eq!(ap.plus(d), 0);
+        assert_eq!(ap.minus(d), 0);
+        // Largest reachable difference stays in range.
+        let d_reach = 2 * cfg.m_max() as i64;
+        assert_eq!(ap.plus(d_reach), 0);
+        assert_eq!(ap.minus(d_reach), 0);
+    }
+
+    #[test]
+    fn minus_singular_bin_saturates() {
+        let cfg = cfg16();
+        let ap = DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::MAC20));
+        // d in (0, r/2): nearest-maps to bin 0 → huge negative.
+        assert!(ap.minus(1) < cfg.m_min() as i64 * 2);
+    }
+
+    #[test]
+    fn bitshift_matches_eq9() {
+        let cfg = cfg16();
+        let ap = DeltaApprox::new(&cfg, DeltaMode::BitShift);
+        let q = cfg.frac_bits;
+        // d = 0 → Δ+ = 1.0 (1024 units), Δ− = -1.5 (-1536 units).
+        assert_eq!(ap.plus(0), 1i64 << q);
+        // d = 1.0 → Δ+ = 0.5, Δ− = -0.75.
+        assert_eq!(ap.plus(1i64 << q), 1i64 << (q - 1));
+        assert_eq!(ap.minus(1i64 << q), -(3i64 << q) >> 2);
+        // d = 3.25 → ⌊d⌋ = 3 → Δ+ = 2^-3 (floor indexing, like a shifter).
+        assert_eq!(ap.plus((13i64 << q) / 4), (1i64 << q) >> 3);
+        // Largest reachable d → 0-ish (entry 31).
+        let d_reach = 2 * cfg.m_max() as i64;
+        assert!(ap.plus(d_reach) <= 1);
+    }
+
+    #[test]
+    fn bitshift_equals_r1_lut_shape() {
+        // Paper: the bit-shift rule is a LUT with r = 1. Verify Δ+ of the
+        // bit-shift at integer d matches 2^-d within one LUT-entry rounding.
+        let cfg = cfg16();
+        let bs = DeltaApprox::new(&cfg, DeltaMode::BitShift);
+        for d in 0..10i64 {
+            let du = d << cfg.frac_bits;
+            let want = cfg.to_units((-(d as f64)).exp2());
+            assert_eq!(bs.plus(du), want);
+        }
+    }
+
+    #[test]
+    fn plus_monotone_nonincreasing() {
+        let cfg = cfg16();
+        for mode in [
+            DeltaMode::Lut(LutSpec::MAC20),
+            DeltaMode::Lut(LutSpec::SOFTMAX640),
+            DeltaMode::BitShift,
+            DeltaMode::Exact,
+        ] {
+            let ap = DeltaApprox::new(&cfg, mode);
+            let mut prev = ap.plus(0);
+            for d in 1..(12i64 << cfg.frac_bits) {
+                let cur = ap.plus(d);
+                assert!(cur <= prev, "Δ+ not monotone at d={d} ({mode:?})");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn minus_monotone_nondecreasing() {
+        let cfg = cfg16();
+        for mode in [
+            DeltaMode::Lut(LutSpec::MAC20),
+            DeltaMode::BitShift,
+            DeltaMode::Exact,
+        ] {
+            let ap = DeltaApprox::new(&cfg, mode);
+            let mut prev = ap.minus(1);
+            for d in 2..(12i64 << cfg.frac_bits) {
+                let cur = ap.minus(d);
+                assert!(cur >= prev, "Δ− not monotone at d={d} ({mode:?})");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn exact_mode_tracks_closed_form() {
+        let cfg = cfg16();
+        let ap = DeltaApprox::new(&cfg, DeltaMode::Exact);
+        for d_real in [0.0, 0.25, 1.0, 2.5, 7.0] {
+            let d = cfg.to_units(d_real);
+            let want = cfg.to_units(delta_plus_exact(d_real));
+            assert!((ap.plus(d) - want).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn logical_len_reports_hardware_rom_size() {
+        let cfg = cfg16();
+        assert_eq!(DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::MAC20)).table_len(), 20);
+        assert_eq!(
+            DeltaApprox::new(&cfg, DeltaMode::Lut(LutSpec::SOFTMAX640)).table_len(),
+            640
+        );
+        assert_eq!(DeltaApprox::new(&cfg, DeltaMode::BitShift).table_len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finer than word resolution")]
+    fn lut_finer_than_word_panics() {
+        let cfg = LnsConfig::w12_lut(); // q_f = 6
+        let _ = DeltaApprox::new(
+            &cfg,
+            DeltaMode::Lut(LutSpec { d_max: 10, log2_inv_r: 8 }),
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! LNS → linear fixed-point conversion via a `2^f` look-up table.
+//!
+//! The log-domain soft-max (paper Eq. 14a) forms pairs whose *log-magnitude
+//! field* is the linear value `a·log2 e` of an LNS-encoded activation `a`.
+//! Producing that field requires one LNS→linear conversion: `±2^{E/2^{q_f}}`
+//! for a fixed-point exponent `E`. In hardware this is a shift plus a
+//! fractional `2^f` LUT (`f ∈ [0,1)`), exactly analogous to the Δ tables —
+//! we implement precisely that, in pure integer arithmetic, so the Rust
+//! engine and the Pallas kernels stay bit-exact.
+
+use super::config::LnsConfig;
+
+/// Fractional `2^f` table: `T[i] = round(2^{i/2^k} · 2^{q_f})` for
+/// `i ∈ [0, 2^k)`.
+#[derive(Clone, Debug)]
+pub struct Pow2Table {
+    /// log2 of the table length.
+    k: u32,
+    /// Word fractional bits (also the entry scale).
+    frac_bits: u32,
+    entries: Vec<i64>,
+}
+
+impl Pow2Table {
+    /// Build for a word format. The table resolution is
+    /// `k = min(q_f, 10)` bits — at q_f ≤ 10 the table is exact to the
+    /// word's own resolution; beyond that 1024 entries keep the entry
+    /// error below half an output ulp for the ranges the soft-max needs.
+    pub fn new(cfg: &LnsConfig) -> Self {
+        let k = cfg.frac_bits.min(10);
+        let n = 1usize << k;
+        let scale = (1i64 << cfg.frac_bits) as f64;
+        let entries = (0..n)
+            .map(|i| {
+                let f = i as f64 / n as f64;
+                (f.exp2() * scale + 0.5).floor() as i64
+            })
+            .collect();
+        Pow2Table { k, frac_bits: cfg.frac_bits, entries }
+    }
+
+    /// Table length.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the table holds no entries (never, in practice).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Raw entries (artifact export).
+    pub fn entries(&self) -> &[i64] {
+        &self.entries
+    }
+
+    /// `round(2^{e_units / 2^{q_f}})` as a plain integer, computed with a
+    /// shift and one table load. Returns a saturated `i64` (callers clamp
+    /// to their word). `e_units` is a fixed-point exponent in `2^{-q_f}`
+    /// units.
+    pub fn pow2(&self, e_units: i64) -> i64 {
+        let q = self.frac_bits;
+        // Arithmetic floor-division split: E = I·2^q + F, F ∈ [0, 2^q).
+        let i_part = e_units >> q;
+        let f_part = e_units - (i_part << q);
+        debug_assert!((0..(1i64 << q)).contains(&f_part));
+        let entry = self.entries[(f_part >> (q - self.k)) as usize]; // ≈ 2^{q+f}
+        // T = entry · 2^{I−q}, rounded.
+        let shift = i_part - q as i64;
+        if shift >= 0 {
+            if shift >= 62 - q as i64 {
+                i64::MAX / 2 // saturate far above any word's m_max
+            } else {
+                entry << shift
+            }
+        } else {
+            let s = -shift;
+            if s >= 63 {
+                0
+            } else {
+                // round-half-up on the discarded bits
+                (entry + (1i64 << (s - 1))) >> s
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg16() -> LnsConfig {
+        LnsConfig::w16_lut()
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = Pow2Table::new(&cfg16());
+        assert_eq!(t.len(), 1024);
+        assert_eq!(t.entries()[0], 1024); // 2^0 · 2^10
+        // Last entry ≈ 2^(1023/1024) · 1024 < 2048.
+        assert!(*t.entries().last().unwrap() < 2048);
+    }
+
+    #[test]
+    fn pow2_exact_on_integers() {
+        let t = Pow2Table::new(&cfg16());
+        let q = 10u32;
+        for e in 0..12i64 {
+            assert_eq!(t.pow2(e << q), 1i64 << e, "2^{e}");
+        }
+        // Negative exponents round to nearest.
+        assert_eq!(t.pow2(-1i64 << q), 1); // 2^-1 = 0.5 → rounds to 1 (half-up)
+        assert_eq!(t.pow2(-2i64 << q), 0); // 2^-2 = 0.25 → 0
+    }
+
+    #[test]
+    fn pow2_tracks_float_within_ulp() {
+        let t = Pow2Table::new(&cfg16());
+        let q = 10u32;
+        for e_units in (-(8i64 << q)..(14i64 << q)).step_by(137) {
+            let want = (e_units as f64 / (1i64 << q) as f64).exp2();
+            let got = t.pow2(e_units) as f64;
+            let tol = want * 0.002 + 0.51; // table quantization ~2^-10 + rounding
+            assert!((got - want).abs() <= tol, "e={e_units}: got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn pow2_monotone() {
+        let t = Pow2Table::new(&cfg16());
+        let mut prev = t.pow2(-(4i64 << 10));
+        for e in (-(4i64 << 10) + 1)..(14i64 << 10) {
+            let cur = t.pow2(e);
+            assert!(cur >= prev, "pow2 not monotone at {e}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn pow2_saturates_not_overflows() {
+        let t = Pow2Table::new(&cfg16());
+        assert!(t.pow2(i64::MAX / 2) > 0);
+        assert_eq!(t.pow2(-(1i64 << 40)), 0);
+    }
+
+    #[test]
+    fn coarse_word_uses_small_table() {
+        let t = Pow2Table::new(&LnsConfig::w12_lut()); // q_f = 6
+        assert_eq!(t.len(), 64);
+        assert_eq!(t.pow2(3 << 6), 8);
+    }
+}

@@ -1,0 +1,33 @@
+//! Logarithmic Number System (LNS) fixed-point arithmetic.
+//!
+//! This is the paper's core numeric substrate (Sections 2–3). A real
+//! number `v` is carried as `(m, s)` where `s` is the linear sign
+//! (`true ⇔ v > 0`, matching the paper's `sign(v)=1` convention) and `m`
+//! is the log-magnitude `X = log2|v|` in signed fixed point with
+//! `frac_bits` fractional bits.
+//!
+//! * multiplication ⊡ → integer addition of magnitudes + XNOR of signs,
+//! * addition ⊞ → `max(X,Y) + Δ±(|X−Y|)` with `Δ±` approximated by a
+//!   look-up table ([`DeltaMode::Lut`]) or bit-shifts
+//!   ([`DeltaMode::BitShift`]),
+//! * subtraction ⊟ → ⊞ with the second operand's sign flipped.
+//!
+//! The module is the **single source of truth for the integer semantics**:
+//! the Python/Pallas kernels implement exactly the same rules and the test
+//! suite cross-checks bit-exactness through the PJRT runtime.
+
+mod analysis;
+mod config;
+mod cost;
+mod delta;
+mod linconv;
+mod system;
+mod value;
+
+pub use analysis::{bound_table, min_log_bits, BitWidthRow};
+pub use cost::{area_ratio, linear_mac_cost, lns_mac_cost, MacCost};
+pub use config::{DeltaMode, LnsConfig, LutSpec};
+pub use delta::{delta_minus_exact, delta_plus_exact, DeltaApprox};
+pub use linconv::Pow2Table;
+pub use system::LnsSystem;
+pub use value::{LnsValue, ZERO_M};

@@ -1,0 +1,515 @@
+//! [`LnsSystem`]: a word format + Δ approximators, with all arithmetic.
+//!
+//! This is the object threaded through the tensor/NN layers. It owns the
+//! precomputed Δ tables so the per-MAC hot path is shift/clamp/load only.
+
+use super::config::LnsConfig;
+use super::delta::DeltaApprox;
+use super::linconv::Pow2Table;
+use super::value::LnsValue;
+
+/// A concrete LNS arithmetic system (paper §2–3).
+#[derive(Clone, Debug)]
+pub struct LnsSystem {
+    cfg: LnsConfig,
+    /// Δ approximator for the MAC path (matmul, bias, SGD updates).
+    delta: DeltaApprox,
+    /// Finer Δ approximator for the soft-max path (paper §5: the soft-max
+    /// is markedly more sensitive; Fig. 2 used r = 1/64 there).
+    softmax_delta: DeltaApprox,
+    /// Fractional `2^f` table for the one LNS→linear conversion the
+    /// soft-max needs (see `linconv`).
+    pow2: Pow2Table,
+    /// `u(log2(log2 e))`: constant folded into the soft-max conversion.
+    log2_log2e_units: i64,
+}
+
+impl LnsSystem {
+    /// Build a system, materializing the Δ tables.
+    pub fn new(cfg: LnsConfig) -> Self {
+        LnsSystem {
+            delta: DeltaApprox::new(&cfg, cfg.delta),
+            softmax_delta: DeltaApprox::new(&cfg, cfg.softmax_delta),
+            pow2: Pow2Table::new(&cfg),
+            log2_log2e_units: cfg.to_units(std::f64::consts::LOG2_E.log2()),
+            cfg,
+        }
+    }
+
+    /// The word-format configuration.
+    pub fn config(&self) -> &LnsConfig {
+        &self.cfg
+    }
+
+    /// MAC-path Δ approximator.
+    pub fn delta(&self) -> &DeltaApprox {
+        &self.delta
+    }
+
+    /// Soft-max-path Δ approximator.
+    pub fn softmax_delta(&self) -> &DeltaApprox {
+        &self.softmax_delta
+    }
+
+    // ---------------------------------------------------------------
+    // Encode / decode
+    // ---------------------------------------------------------------
+
+    /// Clamp a wide log-magnitude into the word's range.
+    #[inline]
+    fn sat(&self, m: i64) -> i32 {
+        let lo = self.cfg.m_min() as i64;
+        let hi = self.cfg.m_max() as i64;
+        m.clamp(lo, hi) as i32
+    }
+
+    /// Encode a real number (paper Eq. 1): `m = round(log2|v| · 2^{q_f})`,
+    /// clamped into the word's range; 0 and anything whose magnitude
+    /// underflows the most negative representable log-magnitude by more
+    /// than the clamp maps to the exact-zero word.
+    pub fn encode_f64(&self, v: f64) -> LnsValue {
+        if v == 0.0 || !v.is_finite() && v.is_nan() {
+            return LnsValue::ZERO;
+        }
+        let m = self.cfg.to_units(v.abs().log2());
+        LnsValue { m: self.sat(m), s: v > 0.0 }
+    }
+
+    /// Decode back to `f64`: `v = ±2^{m · 2^{-q_f}}`.
+    pub fn decode_f64(&self, x: LnsValue) -> f64 {
+        if x.is_zero() {
+            return 0.0;
+        }
+        let mag = (self.cfg.from_units(x.m)).exp2();
+        if x.s {
+            mag
+        } else {
+            -mag
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Arithmetic (paper Eqs. 2–6)
+    // ---------------------------------------------------------------
+
+    /// ⊡ multiplication (Eq. 2): add magnitudes, XNOR signs.
+    /// (32-bit: clamped magnitudes sum within ±2^15·2 ≪ i32 range.)
+    #[inline(always)]
+    pub fn mul(&self, x: LnsValue, y: LnsValue) -> LnsValue {
+        if x.is_zero() || y.is_zero() {
+            return LnsValue::ZERO;
+        }
+        LnsValue {
+            m: (x.m + y.m).clamp(self.cfg.m_min(), self.cfg.m_max()),
+            s: !(x.s ^ y.s),
+        }
+    }
+
+    /// Exact division (subtract magnitudes): the LNS bonus operation.
+    #[inline]
+    pub fn div(&self, x: LnsValue, y: LnsValue) -> LnsValue {
+        debug_assert!(!y.is_zero(), "LNS division by zero");
+        if x.is_zero() {
+            return LnsValue::ZERO;
+        }
+        LnsValue {
+            m: self.sat(x.m as i64 - y.m as i64),
+            s: !(x.s ^ y.s),
+        }
+    }
+
+    /// ⊞ addition (Eq. 3) with the MAC-path Δ approximator.
+    #[inline]
+    pub fn add(&self, x: LnsValue, y: LnsValue) -> LnsValue {
+        self.add_with(&self.delta, x, y)
+    }
+
+    /// ⊟ subtraction (Eq. 5): flip the second operand's sign and add.
+    #[inline]
+    pub fn sub(&self, x: LnsValue, y: LnsValue) -> LnsValue {
+        self.add_with(&self.delta, x, y.neg())
+    }
+
+    /// ⊞ with an explicit Δ approximator (the soft-max path passes the
+    /// finer table).
+    ///
+    /// Pure 32-bit hot path: operands are clamped words, so `|X − Y| ≤
+    /// 2·m_max` and `max + Δ±` cannot wrap an `i32` (the Δ− singular
+    /// sentinel is `i32::MIN/4`); Δ+ ≥ 0 needs only the upper clamp and
+    /// Δ− ≤ 0 only the lower one.
+    #[inline(always)]
+    pub fn add_with(&self, ap: &DeltaApprox, x: LnsValue, y: LnsValue) -> LnsValue {
+        if x.is_zero() {
+            return y;
+        }
+        if y.is_zero() {
+            return x;
+        }
+        // (max, other-sign bookkeeping). Eq. 3c: s_z = s_x if X > Y else s_y.
+        let (mmax, d, s_z) = if x.m > y.m {
+            (x.m, x.m - y.m, x.s)
+        } else {
+            (y.m, y.m - x.m, y.s)
+        };
+        if x.s == y.s {
+            LnsValue { m: (mmax + ap.plus_i32(d)).min(self.cfg.m_max()), s: s_z }
+        } else if d == 0 {
+            // Exact cancellation: +v ⊞ −v = 0.
+            LnsValue::ZERO
+        } else {
+            LnsValue { m: (mmax + ap.minus_i32(d)).max(self.cfg.m_min()), s: s_z }
+        }
+    }
+
+    /// Fused multiply-accumulate `acc ⊞ (x ⊡ y)` — the paper's MAC.
+    #[inline]
+    pub fn mac(&self, acc: LnsValue, x: LnsValue, y: LnsValue) -> LnsValue {
+        self.add(acc, self.mul(x, y))
+    }
+
+    /// Log-domain exponentiation on a positive radix (Eq. 6):
+    /// `w = x^y ↔ (y·X, 1)` where `y` is a small *linear-domain* integer.
+    pub fn powi(&self, x: LnsValue, y: i32) -> LnsValue {
+        if x.is_zero() {
+            return if y == 0 { LnsValue::ONE } else { LnsValue::ZERO };
+        }
+        debug_assert!(x.s, "Eq. 6 requires a positive radix");
+        LnsValue { m: self.sat(x.m as i64 * y as i64), s: true }
+    }
+
+    /// Magnitude comparison `|x| > |y|` (free in LNS: integer compare).
+    #[inline]
+    pub fn abs_gt(&self, x: LnsValue, y: LnsValue) -> bool {
+        if x.is_zero() {
+            false
+        } else if y.is_zero() {
+            true
+        } else {
+            x.m > y.m
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Soft-max support (paper Eq. 14)
+    // ---------------------------------------------------------------
+
+    /// The `2^f` conversion table.
+    pub fn pow2_table(&self) -> &Pow2Table {
+        &self.pow2
+    }
+
+    /// Convert an LNS activation `a` into the *log-magnitude field* of the
+    /// pair `(a·log2 e, s_a)` used by the log-domain soft-max (Eq. 14a).
+    ///
+    /// Mathematically: `round(a · log2 e · 2^{q_f})`, saturated into the
+    /// word's magnitude range. Implemented as one shift-and-LUT `2^x`
+    /// evaluation: `|a|·log2 e·2^{q_f} = 2^{(m_a + u(log2 log2 e) + q_f·2^{q_f}) / 2^{q_f}}`.
+    /// Logits outside the representable field saturate — the format's
+    /// intrinsic logit clipping (DESIGN.md §5).
+    pub fn softmax_logit_units(&self, a: LnsValue) -> i64 {
+        if a.is_zero() {
+            return 0;
+        }
+        let q = self.cfg.frac_bits as i64;
+        let e_units = a.m as i64 + self.log2_log2e_units + (q << self.cfg.frac_bits);
+        let mag = self.pow2.pow2(e_units).min(self.cfg.m_max() as i64);
+        if a.s {
+            mag
+        } else {
+            -mag
+        }
+    }
+
+    /// Full log-domain soft-max with cross-entropy gradient init
+    /// (Eq. 14a/14b): writes `δ_j = p_j ⊟ y_j` into `grad_out` and returns
+    /// `(log2 p)` of the true class in real units (for loss reporting).
+    ///
+    /// All ⊞ reductions use the finer soft-max Δ approximator. The
+    /// reduction order is fixed (ascending `j`) — the Pallas kernel
+    /// mirrors it for bit-exactness.
+    pub fn log_softmax_ce_grad(
+        &self,
+        logits: &[LnsValue],
+        label: usize,
+        grad_out: &mut [LnsValue],
+    ) -> f64 {
+        debug_assert_eq!(logits.len(), grad_out.len());
+        debug_assert!(label < logits.len());
+        // t_j = m-field of (a_j · log2 e); the pair (t_j, +) represents
+        // e^{a_j} in linear domain.
+        let mut lse = LnsValue::ZERO;
+        let mut t = vec![0i64; logits.len()];
+        for (j, &a) in logits.iter().enumerate() {
+            let tj = self.softmax_logit_units(a);
+            t[j] = tj;
+            lse = self.add_with(&self.softmax_delta, lse, LnsValue::new(tj as i32, true));
+        }
+        // log2 p_j = t_j − lse (plain saturating fixed-point subtract).
+        let lse_m = if lse.is_zero() { self.cfg.m_min() as i64 } else { lse.m as i64 };
+        let mut log2_p_label = 0.0;
+        for j in 0..logits.len() {
+            let m_p = self.sat(t[j] - lse_m);
+            let p = LnsValue::new(m_p, true);
+            if j == label {
+                log2_p_label = self.cfg.from_units(m_p);
+            }
+            // δ = p ⊟ y, y ∈ {0, 1} one-hot (Eq. 14b).
+            let y = if j == label { LnsValue::ONE } else { LnsValue::ZERO };
+            grad_out[j] = self.add_with(&self.softmax_delta, p, y.neg());
+        }
+        log2_p_label
+    }
+
+    /// Signed comparison `x > y` without decoding.
+    pub fn gt(&self, x: LnsValue, y: LnsValue) -> bool {
+        match (x.is_zero(), y.is_zero()) {
+            (true, true) => false,
+            (true, false) => !y.s,
+            (false, true) => x.s,
+            (false, false) => match (x.s, y.s) {
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => x.m > y.m,
+                (false, false) => x.m < y.m,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::config::{DeltaMode, LutSpec};
+
+    fn sys16() -> LnsSystem {
+        LnsSystem::new(LnsConfig::w16_lut())
+    }
+
+    fn sys(delta: DeltaMode) -> LnsSystem {
+        let mut cfg = LnsConfig::w16_lut();
+        cfg.delta = delta;
+        cfg.softmax_delta = delta;
+        LnsSystem::new(cfg)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_error_bounded() {
+        let s = sys16();
+        // Half-ulp in log2 domain → relative error ≤ 2^(0.5·2^-10) − 1.
+        let tol = (0.5 / 1024f64).exp2() - 1.0 + 1e-9;
+        for v in [1.0, -1.0, 3.25, -0.001, 123.456, 1e-3, -7.0, 15.9] {
+            let dec = s.decode_f64(s.encode_f64(v));
+            let rel = ((dec - v) / v).abs();
+            assert!(rel <= tol, "v={v} dec={dec} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn encode_zero_and_specials() {
+        let s = sys16();
+        assert!(s.encode_f64(0.0).is_zero());
+        assert_eq!(s.decode_f64(LnsValue::ZERO), 0.0);
+        assert_eq!(s.decode_f64(LnsValue::ONE), 1.0);
+        // Overflow saturates to the largest magnitude, keeps sign.
+        let big = s.encode_f64(1e30);
+        assert_eq!(big.m, s.config().m_max());
+        // Underflow saturates to the smallest nonzero magnitude.
+        let tiny = s.encode_f64(1e-30);
+        assert_eq!(tiny.m, s.config().m_min());
+    }
+
+    #[test]
+    fn mul_is_exact_in_log_domain() {
+        let s = sys16();
+        // 2 * 4 = 8 exactly (all powers of two).
+        let p = s.mul(s.encode_f64(2.0), s.encode_f64(4.0));
+        assert_eq!(s.decode_f64(p), 8.0);
+        // Sign rules.
+        assert!(!s.mul(s.encode_f64(2.0), s.encode_f64(-4.0)).s);
+        assert!(s.mul(s.encode_f64(-2.0), s.encode_f64(-4.0)).s);
+        // Multiplication by zero annihilates.
+        assert!(s.mul(s.encode_f64(5.0), LnsValue::ZERO).is_zero());
+    }
+
+    #[test]
+    fn div_inverts_mul() {
+        let s = sys16();
+        let x = s.encode_f64(3.7);
+        let y = s.encode_f64(-1.3);
+        let q = s.div(s.mul(x, y), y);
+        assert_eq!(q, x, "x*y/y must be bit-exact x (integer adds cancel)");
+    }
+
+    #[test]
+    fn add_same_sign_close_to_real() {
+        for mode in [DeltaMode::Lut(LutSpec::MAC20), DeltaMode::Exact] {
+            let s = sys(mode);
+            for (a, b) in [(3.0, 1.5), (0.1, 0.1), (10.0, 0.25), (-2.0, -6.0)] {
+                let z = s.decode_f64(s.add(s.encode_f64(a), s.encode_f64(b)));
+                let rel = ((z - (a + b)) / (a + b)).abs();
+                // LUT bin width 1/2 in d → worst-case Δ error ≈ 0.15 in
+                // log2 ⇒ ~11% relative; exact mode ≪ that.
+                let tol = if mode == DeltaMode::Exact { 0.002 } else { 0.12 };
+                assert!(rel < tol, "{a}+{b}: got {z} (mode {mode:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn add_opposite_sign_close_to_real() {
+        let s = sys(DeltaMode::Exact);
+        for (a, b) in [(3.0, -1.5), (-10.0, 4.0), (0.7, -0.1)] {
+            let z = s.decode_f64(s.add(s.encode_f64(a), s.encode_f64(b)));
+            let rel = ((z - (a + b)) / (a + b)).abs();
+            assert!(rel < 0.01, "{a}+{b}: got {z}");
+        }
+    }
+
+    #[test]
+    fn add_exact_cancellation_is_zero() {
+        let s = sys16();
+        let x = s.encode_f64(2.75);
+        assert!(s.add(x, x.neg()).is_zero());
+        assert!(s.sub(x, x).is_zero());
+    }
+
+    #[test]
+    fn add_zero_identity() {
+        let s = sys16();
+        let x = s.encode_f64(-0.4);
+        assert_eq!(s.add(x, LnsValue::ZERO), x);
+        assert_eq!(s.add(LnsValue::ZERO, x), x);
+    }
+
+    #[test]
+    fn add_commutative() {
+        // ⊞ is commutative by construction (max/|d| are symmetric; the
+        // tie sign rule picks s_y, and at a tie both operands have equal
+        // magnitude — same-sign ties give the shared sign, opposite-sign
+        // ties give zero — so the result is symmetric).
+        let s = sys16();
+        for (a, b) in [(1.0, 2.0), (-3.0, 0.5), (4.0, -4.0), (-1.0, -9.0)] {
+            let x = s.encode_f64(a);
+            let y = s.encode_f64(b);
+            assert_eq!(s.add(x, y), s.add(y, x), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn near_cancellation_saturates_small() {
+        let s = sys16();
+        // 1.0 ⊞ (−(1+ε)): d falls in the singular LUT bin → result is the
+        // smallest magnitude (not zero, not garbage).
+        let x = LnsValue::new(0, true);
+        let y = LnsValue::new(1, false);
+        let z = s.add(x, y);
+        assert!(!z.is_zero());
+        assert_eq!(z.m, s.config().m_min());
+        assert!(!z.s, "sign of larger magnitude (y)");
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        let s = sys16();
+        let x = s.encode_f64(1.7);
+        let mut acc = LnsValue::ONE;
+        for _ in 0..3 {
+            acc = s.mul(acc, x);
+        }
+        assert_eq!(s.powi(x, 3), acc);
+        assert_eq!(s.powi(x, 0), LnsValue::ONE);
+    }
+
+    #[test]
+    fn gt_total_order_consistent_with_decode() {
+        let s = sys16();
+        let vals = [-5.0, -0.2, 0.0, 0.3, 7.0];
+        for &a in &vals {
+            for &b in &vals {
+                let x = s.encode_f64(a);
+                let y = s.encode_f64(b);
+                assert_eq!(s.gt(x, y), a > b, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_on_mul_overflow() {
+        let s = sys16();
+        let big = s.encode_f64(1e4);
+        let p = s.mul(big, big);
+        assert_eq!(p.m, s.config().m_max());
+        let tiny = s.encode_f64(1e-4);
+        let q = s.mul(tiny, tiny);
+        assert_eq!(q.m, s.config().m_min());
+    }
+
+    #[test]
+    fn softmax_delta_is_finer() {
+        let s = sys16();
+        assert_eq!(s.delta().table_len(), 20);
+        assert_eq!(s.softmax_delta().table_len(), 640);
+    }
+
+    #[test]
+    fn softmax_logit_units_tracks_float() {
+        let s = sys16();
+        for a in [-4.0, -0.5, 0.0, 0.3, 2.0, 5.5] {
+            let t = s.softmax_logit_units(s.encode_f64(a)) as f64;
+            let want = a * std::f64::consts::LOG2_E * 1024.0;
+            let tol = (want.abs() * 0.004).max(2.0);
+            assert!((t - want).abs() <= tol, "a={a}: t={t} want={want}");
+        }
+    }
+
+    #[test]
+    fn softmax_probs_close_to_float() {
+        let s = sys16();
+        let logits_f = [1.0, -0.5, 0.25, 2.0];
+        let logits: Vec<LnsValue> = logits_f.iter().map(|&v| s.encode_f64(v)).collect();
+        let mut grad = vec![LnsValue::ZERO; 4];
+        let label = 3usize;
+        let log2_p = s.log_softmax_ce_grad(&logits, label, &mut grad);
+
+        // Float reference.
+        let exps: Vec<f64> = logits_f.iter().map(|&v| v.exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let p: Vec<f64> = exps.iter().map(|&e| e / z).collect();
+        assert!(
+            (log2_p - p[label].log2()).abs() < 0.05,
+            "log2 p: {log2_p} vs {}",
+            p[label].log2()
+        );
+        for j in 0..4 {
+            let want = p[j] - if j == label { 1.0 } else { 0.0 };
+            let got = s.decode_f64(grad[j]);
+            assert!((got - want).abs() < 0.03, "δ[{j}]: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn softmax_grad_sums_near_zero() {
+        // Σ_j δ_j = Σ p − 1 ≈ 0: a good end-to-end consistency probe of
+        // the approximate pipeline.
+        let s = sys16();
+        let logits: Vec<LnsValue> =
+            [-1.0, 0.0, 1.0, 0.5, -2.0].iter().map(|&v| s.encode_f64(v)).collect();
+        let mut grad = vec![LnsValue::ZERO; 5];
+        s.log_softmax_ce_grad(&logits, 2, &mut grad);
+        let total: f64 = grad.iter().map(|&g| s.decode_f64(g)).sum();
+        assert!(total.abs() < 0.05, "Σδ = {total}");
+    }
+
+    #[test]
+    fn softmax_extreme_logits_saturate_gracefully() {
+        let s = sys16();
+        let logits: Vec<LnsValue> =
+            [30.0, -30.0, 0.0].iter().map(|&v| s.encode_f64(v)).collect();
+        let mut grad = vec![LnsValue::ZERO; 3];
+        s.log_softmax_ce_grad(&logits, 0, &mut grad);
+        // True class dominates: δ_0 ≈ 0, δ_1 ≈ 0, δ_2 ≈ 0 after clipping.
+        for (j, g) in grad.iter().enumerate() {
+            assert!(s.decode_f64(*g).abs() < 0.2, "δ[{j}] = {:?}", g);
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! The LNS word: a `(log-magnitude, sign)` pair.
+
+/// Sentinel log-magnitude encoding exact zero (`log2 0 = −∞`).
+///
+/// The most negative `i32` is never produced by clamped arithmetic (word
+/// formats clamp to `±(2^{W−2}−1)`), so it is safe as an in-band sentinel;
+/// real hardware would reserve the most negative code of the word.
+pub const ZERO_M: i32 = i32::MIN;
+
+/// A fixed-point LNS value `v ↔ (m, s)` (paper Eq. 1):
+/// `m = log2|v|` in units of `2^{-q_f}`, `s = sign(v)` with the paper's
+/// convention `s = 1 ⇔ v > 0` (represented as `true`).
+///
+/// `LnsValue` is a plain data carrier; all arithmetic lives on
+/// [`super::LnsSystem`], which knows the word format and Δ approximations.
+#[derive(Copy, Clone, PartialEq, Eq, Hash)]
+pub struct LnsValue {
+    /// Log-magnitude in fixed-point units, or [`ZERO_M`] for exact zero.
+    pub m: i32,
+    /// Linear-domain sign: `true ⇔ v > 0`. Meaningless when `m == ZERO_M`.
+    pub s: bool,
+}
+
+impl LnsValue {
+    /// The exact-zero word.
+    pub const ZERO: LnsValue = LnsValue { m: ZERO_M, s: true };
+    /// The exact-one word (`log2 1 = 0`, positive).
+    pub const ONE: LnsValue = LnsValue { m: 0, s: true };
+
+    /// Construct from raw parts.
+    #[inline]
+    pub fn new(m: i32, s: bool) -> Self {
+        LnsValue { m, s }
+    }
+
+    /// Is this the exact-zero word?
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.m == ZERO_M
+    }
+
+    /// Same magnitude, flipped linear sign (linear negation — exact in LNS).
+    #[inline]
+    pub fn neg(self) -> Self {
+        if self.is_zero() {
+            self
+        } else {
+            LnsValue { m: self.m, s: !self.s }
+        }
+    }
+
+    /// Same magnitude, positive sign (absolute value — exact in LNS).
+    #[inline]
+    pub fn abs(self) -> Self {
+        LnsValue { m: self.m, s: true }
+    }
+}
+
+impl std::fmt::Debug for LnsValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_zero() {
+            write!(f, "LNS(0)")
+        } else {
+            write!(f, "LNS(m={}, {})", self.m, if self.s { '+' } else { '-' })
+        }
+    }
+}
+
+impl Default for LnsValue {
+    fn default() -> Self {
+        LnsValue::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_properties() {
+        assert!(LnsValue::ZERO.is_zero());
+        assert!(!LnsValue::ONE.is_zero());
+        assert_eq!(LnsValue::ZERO.neg(), LnsValue::ZERO);
+    }
+
+    #[test]
+    fn neg_involution() {
+        let v = LnsValue::new(123, true);
+        assert_eq!(v.neg().neg(), v);
+        assert_eq!(v.neg().m, v.m);
+        assert!(!v.neg().s);
+    }
+
+    #[test]
+    fn abs_positive() {
+        assert!(LnsValue::new(5, false).abs().s);
+        assert_eq!(LnsValue::new(5, false).abs().m, 5);
+    }
+}

@@ -1,0 +1,313 @@
+//! `lnsdnn` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands regenerate the paper's evaluation artifacts:
+//! * `fig1` — Δ± approximation curves → `results/fig1_delta.csv`
+//! * `fig2` — learning curves → `results/fig2_<dataset>.csv`
+//! * `table1` — the accuracy table → `results/table1.{md,csv}`
+//! * `bitwidth` — the Eq. 15 bound table
+//! * `train` — one (dataset × config) run with full logging
+//! * `artifacts` — list/verify the AOT bundle via the PJRT runtime
+//!
+//! Argument parsing is hand-rolled (`clap` is unavailable offline); every
+//! flag is `--key value`.
+
+use anyhow::{bail, Context, Result};
+use lnsdnn::coordinator::experiments::ConfigTag;
+use lnsdnn::coordinator::{experiments, report};
+use lnsdnn::data;
+use lnsdnn::lns;
+use lnsdnn::runtime::{ArtifactRegistry, Runtime};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` flags after the subcommand.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            if !k.starts_with("--") {
+                bail!("expected --flag, got '{k}'");
+            }
+            let v = args.get(i + 1).with_context(|| format!("missing value for {k}"))?;
+            m.insert(k[2..].to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Flags(m))
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(|s| s.as_str())
+    }
+
+    fn f64(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("--{k} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("--{k} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn u64(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("--{k} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+const USAGE: &str = "lnsdnn — LNS DNN training (paper reproduction)
+
+USAGE: lnsdnn <command> [--flag value ...]
+
+COMMANDS
+  fig1      [--dmax 11] [--samples 441] [--out results]
+  fig2      [--dataset mnist] [--epochs 20] [--scale 0.1] [--hidden 100]
+            [--seed 7] [--threads N] [--out results] [--data-dir DIR]
+  table1    [--epochs 20] [--scale 0.1] [--hidden 100] [--seed 7]
+            [--threads N] [--out results] [--data-dir DIR] [--datasets a,b]
+  bitwidth  (prints the Eq. 15 bound table)
+  cost      (first-order MAC gate counts: LNS vs linear, per config)
+  train     --config log16-lut [--dataset mnist] [--epochs 20]
+            [--scale 0.1] [--hidden 100] [--lr 0.01] [--wd 0.0001]
+            [--batch 5] [--seed 7] [--data-dir DIR]
+  artifacts [--dir artifacts] (list and smoke-compile the AOT bundle)
+
+CONFIG TAGS
+  float lin12 lin16 log12-lut log16-lut log12-bs log16-bs log16-exact
+
+Datasets default to the synthetic paper stand-ins; pass --data-dir with
+real IDX files (mnist/fmnist/emnistd/emnistl tags) to use them instead.
+--scale shrinks the synthetic datasets (1.0 = full paper scale).";
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "fig1" => cmd_fig1(&flags),
+        "fig2" => cmd_fig2(&flags),
+        "table1" => cmd_table1(&flags),
+        "bitwidth" => cmd_bitwidth(),
+        "cost" => cmd_cost(),
+        "train" => cmd_train(&flags),
+        "artifacts" => cmd_artifacts(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn out_dir(flags: &Flags) -> PathBuf {
+    PathBuf::from(flags.get("out").unwrap_or("results"))
+}
+
+fn load_dataset(flags: &Flags, name: &str) -> Result<data::Dataset> {
+    let scale = flags.f64("scale", 0.1)?;
+    let seed = flags.u64("seed", 7)?;
+    if let Some(dir) = flags.get("data-dir") {
+        let classes = match name {
+            "emnistl" => 26,
+            _ => 10,
+        };
+        match data::idx::load_idx_dataset(std::path::Path::new(dir), name, classes) {
+            Ok(ds) => {
+                eprintln!("loaded real {name} from {dir}");
+                return Ok(ds);
+            }
+            Err(e) => eprintln!("real {name} unavailable ({e:#}); using synthetic"),
+        }
+    }
+    data::paper_dataset(name, scale, seed)
+        .with_context(|| format!("unknown dataset '{name}' (mnist|fmnist|emnistd|emnistl)"))
+}
+
+fn cmd_fig1(flags: &Flags) -> Result<()> {
+    let dmax = flags.f64("dmax", 11.0)?;
+    let samples = flags.usize("samples", 441)?;
+    let rows = experiments::fig1_rows(dmax, samples);
+    let path = out_dir(flags).join("fig1_delta.csv");
+    report::write_csv(
+        &path,
+        &["d", "exact_plus", "lut_plus", "bs_plus", "exact_minus", "lut_minus", "bs_minus"],
+        &report::fig1_csv_rows(&rows),
+    )?;
+    println!("Fig. 1 data → {} ({} samples, d ∈ [0, {dmax}])", path.display(), rows.len());
+    println!("  Δ+(0): exact=1.0 lut={:.4} bs={:.4}", rows[0].lut_plus, rows[0].bs_plus);
+    Ok(())
+}
+
+fn cmd_fig2(flags: &Flags) -> Result<()> {
+    let name = flags.get("dataset").unwrap_or("mnist");
+    let ds = load_dataset(flags, name)?;
+    let epochs = flags.usize("epochs", 20)?;
+    let hidden = flags.usize("hidden", 100)?;
+    let seed = flags.u64("seed", 7)?;
+    let threads = flags.usize("threads", default_threads())?;
+    let recs = experiments::fig2(&ds, epochs, hidden, seed, threads);
+    let path = out_dir(flags).join(format!("fig2_{name}.csv"));
+    report::write_csv(
+        &path,
+        &["dataset", "config", "epoch", "train_loss", "val_accuracy", "seconds"],
+        &report::fig2_csv_rows(&recs),
+    )?;
+    println!("Fig. 2 curves → {}", path.display());
+    for r in &recs {
+        println!(
+            "  {:<10} final val acc {:.3} (test {:.3})",
+            r.tag.label(),
+            r.curve.last().map(|e| e.val_accuracy).unwrap_or(0.0),
+            r.test_accuracy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(flags: &Flags) -> Result<()> {
+    let epochs = flags.usize("epochs", 20)?;
+    let hidden = flags.usize("hidden", 100)?;
+    let seed = flags.u64("seed", 7)?;
+    let threads = flags.usize("threads", default_threads())?;
+    let names: Vec<&str> = flags
+        .get("datasets")
+        .map(|s| s.split(',').collect())
+        .unwrap_or_else(|| vec!["mnist", "fmnist", "emnistd", "emnistl"]);
+    let datasets: Vec<data::Dataset> =
+        names.iter().map(|n| load_dataset(flags, n)).collect::<Result<_>>()?;
+    let recs = experiments::table1(&datasets, epochs, hidden, seed, threads);
+    let md = report::table1_markdown(&recs);
+    let dir = out_dir(flags);
+    report::write_markdown(&dir.join("table1.md"), &md)?;
+    report::write_csv(
+        &dir.join("table1.csv"),
+        &["dataset", "config", "test_accuracy", "test_loss", "seconds"],
+        &report::runs_csv_rows(&recs),
+    )?;
+    println!("{md}");
+    println!("Table 1 → {}/table1.{{md,csv}}", dir.display());
+    Ok(())
+}
+
+fn cmd_bitwidth() -> Result<()> {
+    println!("Eq. 15: W_log ≥ 1 + max(⌈log2(b_i+1)⌉, ⌈log2 b_f⌉) + W_lin\n");
+    println!("{:>6} {:>5} {:>5} {:>10}", "W_lin", "b_i", "b_f", "W_log_bnd");
+    for row in lns::bound_table(&[(4, 3), (4, 7), (4, 11), (4, 15), (4, 19), (4, 27)]) {
+        println!("{:>6} {:>5} {:>5} {:>10}", row.w_lin, row.b_i, row.b_f, row.w_log_bound);
+    }
+    println!("\nPaper: W_lin=16 (b_i=4, b_f=11) → bound 21; experiments show");
+    println!("W_log ≈ W_lin suffices in practice (run `table1`).");
+    Ok(())
+}
+
+fn cmd_cost() -> Result<()> {
+    use lnsdnn::lns::{area_ratio, linear_mac_cost, lns_mac_cost, LnsConfig};
+    println!("First-order MAC gate model (NAND2-equivalents; lns::cost):\n");
+    println!(
+        "{:<14} {:>8} {:>10} {:>8} {:>8} {:>8} {:>9}",
+        "datapath", "adder", "multiplier", "cmp/sel", "ROM", "shifter", "total"
+    );
+    let rows = [
+        lnsdnn::lns::linear_mac_cost(12),
+        linear_mac_cost(16),
+        lns_mac_cost(&LnsConfig::w12_lut()),
+        lns_mac_cost(&LnsConfig::w16_lut()),
+        lns_mac_cost(&LnsConfig::w12_bitshift()),
+        lns_mac_cost(&LnsConfig::w16_bitshift()),
+    ];
+    for c in &rows {
+        println!(
+            "{:<14} {:>8.0} {:>10.0} {:>8.0} {:>8.0} {:>8.0} {:>9.0}",
+            c.label, c.adder, c.multiplier, c.compare_select, c.rom, c.shifter,
+            c.total()
+        );
+    }
+    println!(
+        "\narea ratio lin16 / lns16-lut : {:.1}×  (paper's cited motivation: ~3.2× area-delay)",
+        area_ratio(&LnsConfig::w16_lut())
+    );
+    println!(
+        "area ratio lin16 / lns16-bs  : {:.1}×",
+        area_ratio(&LnsConfig::w16_bitshift())
+    );
+    println!("\nSweep table shapes against accuracy: `cargo bench --bench ablation_lut`.");
+    Ok(())
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let tag_s = flags.get("config").unwrap_or("log16-lut");
+    let tag = ConfigTag::parse(tag_s).with_context(|| format!("bad --config '{tag_s}'"))?;
+    let name = flags.get("dataset").unwrap_or("mnist");
+    let ds = load_dataset(flags, name)?;
+    let epochs = flags.usize("epochs", 20)?;
+    let hidden = flags.usize("hidden", 100)?;
+    let seed = flags.u64("seed", 7)?;
+    let mut cfg = experiments::paper_config(&ds, tag, epochs, hidden, seed);
+    cfg.sgd.lr = flags.f64("lr", cfg.sgd.lr)?;
+    cfg.sgd.weight_decay = flags.f64("wd", cfg.sgd.weight_decay)?;
+    cfg.batch_size = flags.usize("batch", cfg.batch_size)?;
+    println!(
+        "training {} on {} ({} train / {} test, {} classes), {} epochs",
+        tag.label(),
+        ds.name,
+        ds.train_len(),
+        ds.test_len(),
+        ds.classes,
+        epochs
+    );
+    let rec = experiments::run_one(&ds, tag, &cfg);
+    for e in &rec.curve {
+        println!(
+            "  epoch {:>3}: loss {:.4}  val acc {:.4}  ({:.1}s)",
+            e.epoch, e.train_loss, e.val_accuracy, e.seconds
+        );
+    }
+    println!(
+        "test accuracy {:.4}  loss {:.4}  total {:.1}s",
+        rec.test_accuracy, rec.test_loss, rec.seconds
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(flags: &Flags) -> Result<()> {
+    let dir = PathBuf::from(flags.get("dir").unwrap_or("artifacts"));
+    let mut reg = ArtifactRegistry::open(&dir)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {} ({} device(s))", rt.platform(), rt.device_count());
+    for name in reg.names() {
+        let meta = reg.meta(&name).unwrap().clone();
+        print!(
+            "  {:<28} kind={:<11} bits={:<2} delta={:<3} dims={:?} batch={} ... ",
+            meta.name, meta.kind, meta.bits, meta.delta, meta.dims, meta.batch
+        );
+        match reg.load(&rt, &name) {
+            Ok(_) => println!("compiles OK"),
+            Err(e) => println!("FAILED: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

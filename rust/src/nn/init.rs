@@ -1,0 +1,92 @@
+//! Weight initialization (paper §4, "Weight Initialization", Eq. 12).
+//!
+//! Weights are drawn from a conventional symmetric distribution (we use
+//! He-normal, matching the paper's He et al. citation) and encoded into
+//! the target number system. For symmetric `f_w`, the log-domain sign is
+//! Bernoulli(½) and the log-magnitude density is
+//! `f_W(y) = 2^{y+1} ln(2) f_w(2^y)` — [`log_domain_init`] samples that
+//! density directly (via inverse-CDF of `|w|` then `log2`), demonstrating
+//! the paper's "initialize the log-domain weights accordingly" path; the
+//! two routes agree in distribution (see tests).
+
+use crate::rng::SplitMix64;
+
+/// Which initialization route to use.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum InitScheme {
+    /// Sample float, encode into the backend (reference route).
+    HeNormal,
+    /// Sample the log-domain density of Eq. 12 directly (LNS-native route;
+    /// distributionally identical for symmetric `f_w`).
+    LogDomain,
+}
+
+/// He-normal sample stream: `w ~ N(0, 2/fan_in)`.
+pub fn he_normal_init(rng: &mut SplitMix64, fan_in: usize, n: usize) -> Vec<f64> {
+    let std = (2.0 / fan_in as f64).sqrt();
+    (0..n).map(|_| rng.normal_ms(0.0, std)).collect()
+}
+
+/// Eq.-12 route: sample `(Y = log2|w|, s)` directly. For `w ~ N(0, σ²)`,
+/// `|w| = σ·|z|` with `z` standard normal, so `Y = log2 σ + log2|z|` — we
+/// sample `z` and transform, which *is* inverse-CDF sampling of `f_W`;
+/// the sign is an independent fair Bernoulli, exactly as the paper notes.
+pub fn log_domain_init(rng: &mut SplitMix64, fan_in: usize, n: usize) -> Vec<(f64, bool)> {
+    let sigma = (2.0 / fan_in as f64).sqrt();
+    (0..n)
+        .map(|_| {
+            let z = rng.normal().abs().max(f64::MIN_POSITIVE);
+            let y = sigma.log2() + z.log2();
+            let s = rng.next_u64() & 1 == 1;
+            (y, s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn he_normal_variance() {
+        let mut r = SplitMix64::new(5);
+        let v = he_normal_init(&mut r, 100, 100_000);
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.002);
+        assert!((var - 0.02).abs() < 0.001, "var={var}");
+    }
+
+    #[test]
+    fn log_domain_matches_float_route_in_distribution() {
+        // Compare quantiles of log2|w| from both routes.
+        let mut r1 = SplitMix64::new(9);
+        let mut r2 = SplitMix64::new(10);
+        let n = 100_000;
+        let mut a: Vec<f64> = he_normal_init(&mut r1, 784, n)
+            .into_iter()
+            .map(|w| w.abs().max(f64::MIN_POSITIVE).log2())
+            .collect();
+        let mut b: Vec<f64> = log_domain_init(&mut r2, 784, n).into_iter().map(|(y, _)| y).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9] {
+            let i = (q * n as f64) as usize;
+            assert!(
+                (a[i] - b[i]).abs() < 0.06,
+                "quantile {q}: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn log_domain_signs_balanced() {
+        let mut r = SplitMix64::new(77);
+        let v = log_domain_init(&mut r, 10, 50_000);
+        let pos = v.iter().filter(|(_, s)| *s).count();
+        let frac = pos as f64 / v.len() as f64;
+        assert!((frac - 0.5).abs() < 0.01, "sign fraction {frac}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Neural-network substrate: dense MLPs, weight init, SGD — all generic
+//! over the arithmetic [`Backend`](crate::tensor::Backend) so the same
+//! model definition trains in float, linear fixed point, or LNS.
+
+pub mod init;
+pub mod mlp;
+pub mod sgd;
+
+pub use init::{he_normal_init, log_domain_init, InitScheme};
+pub use mlp::{Gradients, Mlp, StepStats};
+pub use sgd::SgdConfig;

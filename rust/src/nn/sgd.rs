@@ -1,0 +1,108 @@
+//! Stochastic gradient descent with weight decay, in the backend domain.
+//!
+//! The update is carried out entirely with backend ops (paper §4):
+//! `g' = g ⊞ (λ ⊡ w)` then `w ← w ⊟ (η ⊡ g')` — in LNS both scalings are
+//! single fixed-point adds to the magnitude, so the optimizer is
+//! multiplier-free too.
+
+use super::mlp::{Gradients, Mlp};
+use crate::tensor::Backend;
+
+/// SGD hyper-parameters (paper §5: lr = 0.01, mini-batch 5, per-dataset
+/// weight decay).
+#[derive(Copy, Clone, Debug)]
+pub struct SgdConfig {
+    /// Learning rate η.
+    pub lr: f64,
+    /// L2 weight-decay coefficient λ (applied to weights, not biases —
+    /// standard practice).
+    pub weight_decay: f64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 0.01, weight_decay: 0.0 }
+    }
+}
+
+impl SgdConfig {
+    /// Apply one update in-place.
+    pub fn apply<B: Backend>(&self, backend: &B, mlp: &mut Mlp<B::E>, grads: &Gradients<B::E>) {
+        let lr = backend.encode(self.lr);
+        let wd = backend.encode(self.weight_decay);
+        let use_wd = self.weight_decay != 0.0;
+        for (layer, (dw, db)) in mlp.layers.iter_mut().zip(grads.dw.iter().zip(&grads.db)) {
+            debug_assert_eq!(layer.w.len(), dw.len());
+            for (w, &g) in layer.w.data.iter_mut().zip(&dw.data) {
+                let g = if use_wd { backend.add(g, backend.mul(wd, *w)) } else { g };
+                *w = backend.sub(*w, backend.mul_update(lr, g));
+            }
+            for (b, &g) in layer.b.iter_mut().zip(db) {
+                *b = backend.sub(*b, backend.mul_update(lr, g));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::InitScheme;
+    use crate::rng::SplitMix64;
+    use crate::tensor::{FloatBackend, Tensor};
+
+    #[test]
+    fn sgd_matches_closed_form_float() {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(8);
+        let mut mlp = crate::nn::Mlp::init(&b, &[2, 3, 2], InitScheme::HeNormal, &mut rng);
+        let w_before = mlp.layers[0].w.data.clone();
+        let x = Tensor::from_vec(1, 2, vec![0.5f32, -0.25]);
+        let (g, _) = mlp.backprop(&b, &x, &[1]);
+        let cfg = SgdConfig { lr: 0.1, weight_decay: 0.01 };
+        cfg.apply(&b, &mut mlp, &g);
+        for i in 0..w_before.len() {
+            let want = w_before[i] - 0.1 * (g.dw[0].data[i] + 0.01 * w_before[i]);
+            assert!((mlp.layers[0].w.data[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn loss_decreases_over_steps_float() {
+        // A few SGD steps on a fixed batch must reduce the loss.
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(21);
+        let mut mlp = crate::nn::Mlp::init(&b, &[4, 8, 3], InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(
+            6,
+            4,
+            (0..24).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let labels = vec![0, 1, 2, 0, 1, 2];
+        let cfg = SgdConfig { lr: 0.1, weight_decay: 0.0 };
+        let (_, s0) = mlp.backprop(&b, &x, &labels);
+        for _ in 0..100 {
+            let (g, _) = mlp.backprop(&b, &x, &labels);
+            cfg.apply(&b, &mut mlp, &g);
+        }
+        let (_, s1) = mlp.backprop(&b, &x, &labels);
+        assert!(
+            s1.loss < s0.loss * 0.5,
+            "loss should halve: {} → {}",
+            s0.loss,
+            s1.loss
+        );
+    }
+
+    #[test]
+    fn zero_lr_is_noop() {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(3);
+        let mut mlp = crate::nn::Mlp::init(&b, &[2, 2, 2], InitScheme::HeNormal, &mut rng);
+        let snapshot = mlp.layers[0].w.data.clone();
+        let x = Tensor::from_vec(1, 2, vec![1.0f32, 1.0]);
+        let (g, _) = mlp.backprop(&b, &x, &[0]);
+        SgdConfig { lr: 0.0, weight_decay: 0.0 }.apply(&b, &mut mlp, &g);
+        assert_eq!(mlp.layers[0].w.data, snapshot);
+    }
+}

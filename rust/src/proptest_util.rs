@@ -1,0 +1,76 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! [`run_prop`] drives a seeded generator through many cases and, on
+//! failure, reports the failing case index and seed so the case can be
+//! replayed deterministically. Generators are plain closures over
+//! [`SplitMix64`].
+
+use crate::rng::SplitMix64;
+
+/// Number of cases per property (mirrors proptest's default).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` generated inputs. `gen` receives a fresh,
+/// per-case RNG stream; `prop` returns `Err(msg)` to fail. Panics with a
+/// replayable seed on the first failure.
+pub fn run_prop<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut master = SplitMix64::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed {case_seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert an approximate equality inside a property.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol}", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", 1, 50, |r| r.next_u64(), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad' failed")]
+    fn failing_property_panics_with_seed() {
+        run_prop("bad", 2, 10, |r| r.next_below(100), |&v| {
+            if v < 1000 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.005, 0.01).is_ok());
+        assert!(close(1.0, 2.0, 0.01).is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them from Rust.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto` — jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`). Python never
+//! runs at request time: `make artifacts` is the only compile step.
+
+mod executable;
+mod registry;
+
+pub use executable::ArtifactExecutable;
+pub use registry::{ArtifactMeta, ArtifactRegistry};
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client. One per process; executables borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Bring up the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Device count.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<ArtifactExecutable> {
+        ArtifactExecutable::load(&self.client, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,151 @@
+//! Artifact registry: discovery + metadata for the AOT bundle.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.tsv` — one row per
+//! artifact: `name, file, kind, bits, delta, dims, batch` (tab-separated;
+//! a deliberately dependency-free format). The registry parses it and
+//! lazily loads/compiles executables on first use.
+
+use super::{ArtifactExecutable, Runtime};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one artifact row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Registry key, e.g. `lns_fwd_w16_lut`.
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Kind tag: `fwd`, `train_step`, `float_fwd`, …
+    pub kind: String,
+    /// Word width (0 for float artifacts).
+    pub bits: u32,
+    /// Delta mode tag (`lut`, `bs`, `-` for float).
+    pub delta: String,
+    /// Model layer dims, e.g. `784x100x10`.
+    pub dims: Vec<usize>,
+    /// Compiled batch size.
+    pub batch: usize,
+}
+
+/// Registry over an artifact directory.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    loaded: HashMap<String, ArtifactExecutable>,
+}
+
+impl ArtifactRegistry {
+    /// Parse `manifest.tsv` under `dir`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let mut metas = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let meta = Self::parse_row(line)
+                .with_context(|| format!("manifest.tsv line {}", lineno + 1))?;
+            metas.insert(meta.name.clone(), meta);
+        }
+        if metas.is_empty() {
+            bail!("manifest.tsv has no artifact rows");
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), metas, loaded: HashMap::new() })
+    }
+
+    fn parse_row(line: &str) -> Result<ArtifactMeta> {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() != 7 {
+            bail!("expected 7 tab-separated fields, got {}", f.len());
+        }
+        let dims = f[5]
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: f[0].to_string(),
+            file: f[1].to_string(),
+            kind: f[2].to_string(),
+            bits: f[3].parse().context("bad bits")?,
+            delta: f[4].to_string(),
+            dims,
+            batch: f[6].parse().context("bad batch")?,
+        })
+    }
+
+    /// All known artifact names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.metas.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Metadata lookup.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// Load (compile) an artifact by name, caching the executable.
+    pub fn load(&mut self, rt: &Runtime, name: &str) -> Result<&ArtifactExecutable> {
+        if !self.loaded.contains_key(name) {
+            let meta = self
+                .metas
+                .get(name)
+                .with_context(|| format!("unknown artifact '{name}'"))?;
+            let exe = rt.load_hlo_text(&self.dir.join(&meta.file))?;
+            self.loaded.insert(name.to_string(), exe);
+        }
+        Ok(&self.loaded[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_row_roundtrip() {
+        let m = ArtifactRegistry::parse_row(
+            "lns_fwd_w16_lut\tlns_fwd_w16_lut.hlo.txt\tfwd\t16\tlut\t784x100x10\t5",
+        )
+        .unwrap();
+        assert_eq!(m.name, "lns_fwd_w16_lut");
+        assert_eq!(m.dims, vec![784, 100, 10]);
+        assert_eq!(m.batch, 5);
+        assert_eq!(m.bits, 16);
+    }
+
+    #[test]
+    fn parse_rejects_short_rows() {
+        assert!(ArtifactRegistry::parse_row("a\tb\tc").is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_fails_helpfully() {
+        let err = match ArtifactRegistry::open(Path::new("/definitely/not/here")) {
+            Err(e) => e,
+            Ok(_) => panic!("open should fail on a missing directory"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn open_parses_manifest_file() {
+        let dir = std::env::temp_dir().join(format!("lnsdnn-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# comment\nfoo\tfoo.hlo.txt\tfwd\t16\tlut\t4x3x2\t1\n",
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["foo"]);
+        assert_eq!(reg.meta("foo").unwrap().dims, vec![4, 3, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,494 @@
+//! The arithmetic backend abstraction.
+//!
+//! A [`Backend`] supplies every numeric operation the training engine
+//! needs, over an opaque element type. Three implementations cover the
+//! paper's comparison axes:
+//!
+//! | Backend | Domain | Paper column |
+//! |---------|--------|--------------|
+//! | [`FloatBackend`] | `f32` | "Float" |
+//! | [`FixedBackend`] | linear Q-format | "Linear-domain fixed-point" (12b/16b) |
+//! | [`LnsBackend`] | log-domain fixed point | "Log-domain fixed-point" (LUT / bit-shift, 12b/16b) |
+//!
+//! The activation (leaky-ReLU vs llReLU, Eq. 11) and the soft-max +
+//! cross-entropy gradient (Eq. 13 vs Eq. 14) are backend methods because
+//! their *implementations* are domain-specific even though their
+//! mathematical role is identical.
+
+use crate::fixed::{FixedSystem, FixedValue};
+use crate::lns::{LnsSystem, LnsValue};
+
+/// Everything the generic NN/training engine needs from a number system.
+pub trait Backend: Send + Sync {
+    /// Element (word) type.
+    type E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static;
+
+    /// Additive identity.
+    fn zero(&self) -> Self::E;
+    /// Multiplicative identity.
+    fn one(&self) -> Self::E;
+    /// Quantize/encode a real number.
+    fn encode(&self, v: f64) -> Self::E;
+    /// Decode back to a real number (metrics/reporting only — never on
+    /// the arithmetic path).
+    fn decode(&self, e: Self::E) -> f64;
+
+    /// Domain addition.
+    fn add(&self, a: Self::E, b: Self::E) -> Self::E;
+    /// Domain subtraction.
+    fn sub(&self, a: Self::E, b: Self::E) -> Self::E;
+    /// Domain multiplication.
+    fn mul(&self, a: Self::E, b: Self::E) -> Self::E;
+    /// Multiply-accumulate `acc + a·b` — the inner-loop operation.
+    #[inline]
+    fn mac(&self, acc: Self::E, a: Self::E, b: Self::E) -> Self::E {
+        self.add(acc, self.mul(a, b))
+    }
+
+    /// Multiplication on the **SGD update path** (`η ⊡ g`). Defaults to
+    /// [`Backend::mul`]; the linear fixed-point backend overrides it with
+    /// stochastic rounding — deterministic round-to-nearest annihilates
+    /// sub-half-ulp updates and freezes 12-bit training (Gupta et al.
+    /// 2015; DESIGN.md §6).
+    #[inline]
+    fn mul_update(&self, a: Self::E, b: Self::E) -> Self::E {
+        self.mul(a, b)
+    }
+
+    /// Leaky-ReLU (slope fixed at construction; the paper's llReLU β in
+    /// the log domain).
+    fn leaky_relu(&self, x: Self::E) -> Self::E;
+    /// Backprop through leaky-ReLU: `upstream · act'(preact)`.
+    fn leaky_relu_bwd(&self, preact: Self::E, upstream: Self::E) -> Self::E;
+
+    /// Soft-max + cross-entropy gradient init: writes `δ_j = p_j − y_j`
+    /// and returns `ln p_label` (natural-log loss contribution, reporting
+    /// only).
+    fn softmax_ce_grad(&self, logits: &[Self::E], label: usize, grad: &mut [Self::E]) -> f64;
+
+    /// Is `e` the exact additive identity? Lets the matmuls skip inner
+    /// loops over zero operands (`acc ⊞ (0 ⊡ w) = acc` exactly, in every
+    /// backend) — a large win on sparse image data.
+    fn is_zero(&self, e: Self::E) -> bool;
+
+    /// `a > b` in the linear ordering (argmax for accuracy metrics).
+    fn gt(&self, a: Self::E, b: Self::E) -> bool;
+
+    /// Human-readable backend tag for reports (e.g. `log16-lut`).
+    fn tag(&self) -> String;
+}
+
+// ---------------------------------------------------------------------
+// Float
+// ---------------------------------------------------------------------
+
+/// IEEE-754 `f32` backend — the paper's floating-point baseline.
+#[derive(Clone, Debug)]
+pub struct FloatBackend {
+    /// Leaky-ReLU negative slope (paper uses 0.01).
+    pub slope: f32,
+}
+
+impl Default for FloatBackend {
+    fn default() -> Self {
+        FloatBackend { slope: 0.01 }
+    }
+}
+
+impl Backend for FloatBackend {
+    type E = f32;
+
+    fn zero(&self) -> f32 {
+        0.0
+    }
+    fn one(&self) -> f32 {
+        1.0
+    }
+    fn encode(&self, v: f64) -> f32 {
+        v as f32
+    }
+    fn decode(&self, e: f32) -> f64 {
+        e as f64
+    }
+    #[inline]
+    fn add(&self, a: f32, b: f32) -> f32 {
+        a + b
+    }
+    #[inline]
+    fn sub(&self, a: f32, b: f32) -> f32 {
+        a - b
+    }
+    #[inline]
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        a * b
+    }
+    fn leaky_relu(&self, x: f32) -> f32 {
+        if x > 0.0 {
+            x
+        } else {
+            self.slope * x
+        }
+    }
+    fn leaky_relu_bwd(&self, preact: f32, upstream: f32) -> f32 {
+        if preact > 0.0 {
+            upstream
+        } else {
+            self.slope * upstream
+        }
+    }
+    fn softmax_ce_grad(&self, logits: &[f32], label: usize, grad: &mut [f32]) -> f64 {
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (g, &l) in grad.iter_mut().zip(logits) {
+            *g = (l - max).exp();
+            z += *g;
+        }
+        let mut ln_p = 0.0;
+        for (j, g) in grad.iter_mut().enumerate() {
+            let p = *g / z;
+            if j == label {
+                ln_p = (p.max(1e-30) as f64).ln();
+            }
+            *g = p - if j == label { 1.0 } else { 0.0 };
+        }
+        ln_p
+    }
+    fn is_zero(&self, e: f32) -> bool {
+        e == 0.0
+    }
+    fn gt(&self, a: f32, b: f32) -> bool {
+        a > b
+    }
+    fn tag(&self) -> String {
+        "float32".into()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Linear fixed point
+// ---------------------------------------------------------------------
+
+/// Linear-domain Q-format backend — the paper's fixed-point baseline.
+///
+/// The soft-max is evaluated by dequantize → float soft-max → requantize:
+/// the measured quantity in the paper's linear columns is the fixed-point
+/// *MAC pipeline* (matmul/activation/update); its soft-max treatment is
+/// unspecified. This substitution is recorded in DESIGN.md §6.
+#[derive(Debug)]
+pub struct FixedBackend {
+    sys: FixedSystem,
+    slope: f64,
+    slope_q: FixedValue,
+    /// Counter for the stochastic-rounding dither sequence (see
+    /// [`Backend::mul_update`]); SplitMix64-hashed so the stream is
+    /// uniform yet fully deterministic per backend instance.
+    sr_counter: std::sync::atomic::AtomicU64,
+}
+
+impl Clone for FixedBackend {
+    fn clone(&self) -> Self {
+        FixedBackend {
+            sys: self.sys,
+            slope: self.slope,
+            slope_q: self.slope_q,
+            sr_counter: std::sync::atomic::AtomicU64::new(
+                self.sr_counter.load(std::sync::atomic::Ordering::Relaxed),
+            ),
+        }
+    }
+}
+
+impl FixedBackend {
+    /// Build from a fixed-point system with the given leaky slope.
+    pub fn new(sys: FixedSystem, slope: f64) -> Self {
+        FixedBackend {
+            slope_q: sys.encode_f64(slope),
+            sys,
+            slope,
+            sr_counter: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Next dither word (SplitMix64 output of an incrementing counter).
+    fn next_dither(&self) -> u32 {
+        let c = self.sr_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut z = c.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) as u32
+    }
+
+    /// The underlying Q-format system.
+    pub fn system(&self) -> &FixedSystem {
+        &self.sys
+    }
+
+    /// The leaky-ReLU slope.
+    pub fn slope(&self) -> f64 {
+        self.slope
+    }
+}
+
+impl Backend for FixedBackend {
+    type E = FixedValue;
+
+    fn zero(&self) -> FixedValue {
+        0
+    }
+    fn one(&self) -> FixedValue {
+        self.sys.encode_f64(1.0)
+    }
+    fn encode(&self, v: f64) -> FixedValue {
+        self.sys.encode_f64(v)
+    }
+    fn decode(&self, e: FixedValue) -> f64 {
+        self.sys.decode_f64(e)
+    }
+    #[inline]
+    fn add(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.sys.add(a, b)
+    }
+    #[inline]
+    fn sub(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.sys.sub(a, b)
+    }
+    #[inline]
+    fn mul(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.sys.mul(a, b)
+    }
+    /// Stochastic rounding on the update scaling (see trait docs).
+    fn mul_update(&self, a: FixedValue, b: FixedValue) -> FixedValue {
+        self.sys.mul_sr(a, b, self.next_dither())
+    }
+    fn leaky_relu(&self, x: FixedValue) -> FixedValue {
+        if x > 0 {
+            x
+        } else {
+            self.sys.mul(self.slope_q, x)
+        }
+    }
+    fn leaky_relu_bwd(&self, preact: FixedValue, upstream: FixedValue) -> FixedValue {
+        if preact > 0 {
+            upstream
+        } else {
+            self.sys.mul(self.slope_q, upstream)
+        }
+    }
+    fn softmax_ce_grad(&self, logits: &[FixedValue], label: usize, grad: &mut [FixedValue]) -> f64 {
+        let f: Vec<f64> = logits.iter().map(|&l| self.sys.decode_f64(l)).collect();
+        let max = f.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = f.iter().map(|&v| (v - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let mut ln_p = 0.0;
+        for j in 0..grad.len() {
+            let p = exps[j] / z;
+            if j == label {
+                ln_p = p.max(1e-30).ln();
+            }
+            grad[j] = self.sys.encode_f64(p - if j == label { 1.0 } else { 0.0 });
+        }
+        ln_p
+    }
+    fn is_zero(&self, e: FixedValue) -> bool {
+        e == 0
+    }
+    fn gt(&self, a: FixedValue, b: FixedValue) -> bool {
+        a > b
+    }
+    fn tag(&self) -> String {
+        format!("lin{}", self.sys.config().total_bits)
+    }
+}
+
+// ---------------------------------------------------------------------
+// LNS
+// ---------------------------------------------------------------------
+
+/// Log-domain fixed-point backend — the paper's contribution.
+#[derive(Clone, Debug)]
+pub struct LnsBackend {
+    sys: LnsSystem,
+    /// llReLU β offset in magnitude units: `u(log2 slope)` (Eq. 11).
+    beta_units: i32,
+}
+
+impl LnsBackend {
+    /// Build from an LNS system with the given leaky slope (β = log2 slope).
+    pub fn new(sys: LnsSystem, slope: f64) -> Self {
+        let beta_units = sys.config().to_units(slope.log2()) as i32;
+        LnsBackend { sys, beta_units }
+    }
+
+    /// The underlying LNS system.
+    pub fn system(&self) -> &LnsSystem {
+        &self.sys
+    }
+
+    /// The llReLU β in magnitude units.
+    pub fn beta_units(&self) -> i32 {
+        self.beta_units
+    }
+}
+
+impl Backend for LnsBackend {
+    type E = LnsValue;
+
+    fn zero(&self) -> LnsValue {
+        LnsValue::ZERO
+    }
+    fn one(&self) -> LnsValue {
+        LnsValue::ONE
+    }
+    fn encode(&self, v: f64) -> LnsValue {
+        self.sys.encode_f64(v)
+    }
+    fn decode(&self, e: LnsValue) -> f64 {
+        self.sys.decode_f64(e)
+    }
+    #[inline]
+    fn add(&self, a: LnsValue, b: LnsValue) -> LnsValue {
+        self.sys.add(a, b)
+    }
+    #[inline]
+    fn sub(&self, a: LnsValue, b: LnsValue) -> LnsValue {
+        self.sys.sub(a, b)
+    }
+    #[inline]
+    fn mul(&self, a: LnsValue, b: LnsValue) -> LnsValue {
+        self.sys.mul(a, b)
+    }
+    /// llReLU (Eq. 11): positive values pass; negative values get β added
+    /// to the log-magnitude — a single fixed-point add, no multiplier.
+    fn leaky_relu(&self, x: LnsValue) -> LnsValue {
+        if x.is_zero() || x.s {
+            x
+        } else {
+            let m = (x.m as i64 + self.beta_units as i64)
+                .clamp(self.sys.config().m_min() as i64, self.sys.config().m_max() as i64);
+            LnsValue::new(m as i32, x.s)
+        }
+    }
+    /// llReLU backprop: the derivative is 1 (pass) or the slope (β shift
+    /// of the upstream magnitude) — again multiplier-free.
+    fn leaky_relu_bwd(&self, preact: LnsValue, upstream: LnsValue) -> LnsValue {
+        if preact.is_zero() || preact.s {
+            upstream
+        } else if upstream.is_zero() {
+            upstream
+        } else {
+            let m = (upstream.m as i64 + self.beta_units as i64)
+                .clamp(self.sys.config().m_min() as i64, self.sys.config().m_max() as i64);
+            LnsValue::new(m as i32, upstream.s)
+        }
+    }
+    fn softmax_ce_grad(&self, logits: &[LnsValue], label: usize, grad: &mut [LnsValue]) -> f64 {
+        let log2_p = self.sys.log_softmax_ce_grad(logits, label, grad);
+        log2_p * std::f64::consts::LN_2 // ln p = log2 p · ln 2
+    }
+    fn is_zero(&self, e: LnsValue) -> bool {
+        e.is_zero()
+    }
+    fn gt(&self, a: LnsValue, b: LnsValue) -> bool {
+        self.sys.gt(a, b)
+    }
+    fn tag(&self) -> String {
+        let cfg = self.sys.config();
+        let d = match cfg.delta {
+            crate::lns::DeltaMode::Lut(_) => "lut",
+            crate::lns::DeltaMode::BitShift => "bs",
+            crate::lns::DeltaMode::Exact => "exact",
+        };
+        format!("log{}-{}", cfg.total_bits, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedConfig;
+    use crate::lns::LnsConfig;
+
+    fn backends_agree_on<F: Fn(&dyn Fn(f64) -> f64) -> (f64, f64)>(_f: F) {}
+
+    #[test]
+    fn float_backend_basics() {
+        let b = FloatBackend::default();
+        assert_eq!(b.mac(1.0, 2.0, 3.0), 7.0);
+        assert_eq!(b.leaky_relu(-2.0), -0.02);
+        assert_eq!(b.leaky_relu(2.0), 2.0);
+        assert_eq!(b.tag(), "float32");
+    }
+
+    #[test]
+    fn fixed_backend_tracks_float() {
+        let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let x = b.encode(1.5);
+        let y = b.encode(-0.75);
+        assert!((b.decode(b.mul(x, y)) + 1.125).abs() < 2.0 * b.system().config().unit());
+        assert!((b.decode(b.leaky_relu(y)) + 0.0075).abs() < 2.0 * b.system().config().unit());
+        assert_eq!(b.tag(), "lin16");
+    }
+
+    #[test]
+    fn lns_backend_llrelu_is_magnitude_shift() {
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let x = b.encode(-2.0);
+        let y = b.leaky_relu(x);
+        assert_eq!(y.m, x.m + b.beta_units());
+        assert!(!y.s);
+        assert!((b.decode(y) + 0.02).abs() < 0.001);
+        // Positive passes untouched.
+        let p = b.encode(3.0);
+        assert_eq!(b.leaky_relu(p), p);
+    }
+
+    #[test]
+    fn lns_llrelu_bwd_consistent_with_derivative() {
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let up = b.encode(0.5);
+        // preact > 0 → pass
+        assert_eq!(b.leaky_relu_bwd(b.encode(1.0), up), up);
+        // preact < 0 → scaled by slope
+        let got = b.decode(b.leaky_relu_bwd(b.encode(-1.0), up));
+        assert!((got - 0.005).abs() < 0.0005, "{got}");
+    }
+
+    #[test]
+    fn softmax_grads_agree_across_backends() {
+        let fb = FloatBackend::default();
+        let xb = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let lb = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+
+        let logits = [0.5f64, -1.0, 2.0, 0.0];
+        let label = 2;
+
+        let lf: Vec<f32> = logits.iter().map(|&v| fb.encode(v)).collect();
+        let mut gf = vec![0f32; 4];
+        let loss_f = fb.softmax_ce_grad(&lf, label, &mut gf);
+
+        let lx: Vec<i32> = logits.iter().map(|&v| xb.encode(v)).collect();
+        let mut gx = vec![0i32; 4];
+        let loss_x = xb.softmax_ce_grad(&lx, label, &mut gx);
+
+        let ll: Vec<LnsValue> = logits.iter().map(|&v| lb.encode(v)).collect();
+        let mut gl = vec![LnsValue::ZERO; 4];
+        let loss_l = lb.softmax_ce_grad(&ll, label, &mut gl);
+
+        assert!((loss_f - loss_x).abs() < 0.01);
+        assert!((loss_f - loss_l).abs() < 0.08, "{loss_f} vs {loss_l}");
+        for j in 0..4 {
+            let f = fb.decode(gf[j]);
+            assert!((f - xb.decode(gx[j])).abs() < 0.01, "fixed δ[{j}]");
+            assert!((f - lb.decode(gl[j])).abs() < 0.05, "lns δ[{j}]");
+        }
+        backends_agree_on(|_| (0.0, 0.0));
+    }
+
+    #[test]
+    fn tags_distinguish_configs() {
+        let a = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w12_bitshift()), 0.01);
+        assert_eq!(a.tag(), "log16-lut");
+        assert_eq!(b.tag(), "log12-bs");
+    }
+}

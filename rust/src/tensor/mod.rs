@@ -1,0 +1,126 @@
+//! Minimal 2-D tensor substrate, generic over the arithmetic backend.
+//!
+//! The paper's workloads are MLPs: everything is dense row-major matrices.
+//! Elements are opaque to `Tensor` — all arithmetic goes through a
+//! [`backend::Backend`], which is what lets one training engine run in
+//! float, linear fixed-point, or LNS (with any Δ approximation) and makes
+//! the numeric format a first-class, swappable component.
+
+pub mod backend;
+pub mod ops;
+
+pub use backend::{Backend, FixedBackend, FloatBackend, LnsBackend};
+
+/// Dense row-major matrix of backend elements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<E> {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `rows · cols` elements.
+    pub data: Vec<E>,
+}
+
+impl<E: Copy> Tensor<E> {
+    /// A `rows × cols` tensor filled with `fill`.
+    pub fn full(rows: usize, cols: usize, fill: E) -> Self {
+        Tensor { rows, cols, data: vec![fill; rows * cols] }
+    }
+
+    /// Build from row-major data (length must be `rows·cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<E>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable element access.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> E {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut E {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// A row as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[E] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// A row as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [E] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor<E> {
+        let mut out = Vec::with_capacity(self.len());
+        for c in 0..self.cols {
+            for r in 0..self.rows {
+                out.push(self.at(r, c));
+            }
+        }
+        Tensor::from_vec(self.cols, self.rows, out)
+    }
+
+    /// Map every element.
+    pub fn map<F: Fn(E) -> E>(&self, f: F) -> Tensor<E> {
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&e| f(e)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.at(0, 0), 1);
+        assert_eq!(t.at(1, 2), 6);
+        assert_eq!(t.row(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        let _ = Tensor::from_vec(2, 2, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let tt = t.transpose();
+        assert_eq!(tt.rows, 3);
+        assert_eq!(tt.at(2, 1), 6);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn map_applies() {
+        let t = Tensor::from_vec(1, 3, vec![1, 2, 3]).map(|x| x * 10);
+        assert_eq!(t.data, vec![10, 20, 30]);
+    }
+}

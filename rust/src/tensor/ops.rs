@@ -1,0 +1,241 @@
+//! Backend-generic tensor operations (paper Eq. 10 and friends).
+//!
+//! Reduction order is **fixed and documented** everywhere: LNS addition is
+//! approximate and non-associative, so "same order" is part of the numeric
+//! spec — the Pallas kernels reduce in the identical order, which is what
+//! makes bit-exact cross-checking possible.
+
+use super::{Backend, Tensor};
+
+/// `C = A·B` (`[m,k]·[k,n] → [m,n]`), accumulating **sequentially over k
+/// ascending** from the backend zero (Eq. 10's ⊞ chain).
+pub fn matmul<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let mut out = Tensor::full(m, n, b.zero());
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for p in 0..k {
+            let av = arow[p];
+            // Zero operand ⇒ the whole inner row is `acc ⊞ 0 = acc`: skip.
+            // Exact in every backend; large win on sparse image data.
+            if b.is_zero(av) {
+                continue;
+            }
+            let wrow = w.row(p);
+            for j in 0..n {
+                orow[j] = b.mac(orow[j], av, wrow[j]);
+            }
+        }
+    }
+    out
+}
+
+/// `C = A·Bᵀ` without materializing the transpose (`[m,k]·[n,k] → [m,n]`).
+pub fn matmul_bt<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, w.rows);
+    let mut out = Tensor::full(m, n, b.zero());
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let wrow = w.row(j);
+            let mut acc = b.zero();
+            for p in 0..k {
+                if b.is_zero(arow[p]) {
+                    continue; // acc ⊞ (0 ⊡ w) = acc exactly
+                }
+                acc = b.mac(acc, arow[p], wrow[p]);
+            }
+            *out.at_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+/// `C = Aᵀ·B` (`[k,m]·[k,n] → [m,n]`): the gradient outer-product shape.
+/// Accumulates over k ascending.
+pub fn matmul_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
+    let (k, m, n) = (a.rows, a.cols, w.cols);
+    let mut out = Tensor::full(m, n, b.zero());
+    for p in 0..k {
+        let arow = a.row(p);
+        let wrow = w.row(p);
+        for i in 0..m {
+            let av = arow[i];
+            if b.is_zero(av) {
+                continue; // acc ⊞ (0 ⊡ w) = acc exactly
+            }
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = b.mac(orow[j], av, wrow[j]);
+            }
+        }
+    }
+    out
+}
+
+/// Row-broadcast add: `out[i,j] = x[i,j] + bias[j]`.
+pub fn add_bias<B: Backend>(b: &B, x: &mut Tensor<B::E>, bias: &[B::E]) {
+    assert_eq!(x.cols, bias.len(), "bias length mismatch");
+    for i in 0..x.rows {
+        let row = x.row_mut(i);
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v = b.add(*v, bv);
+        }
+    }
+}
+
+/// Column sums (`[m,n] → [n]`), reducing over rows ascending — the bias
+/// gradient.
+pub fn col_sum<B: Backend>(b: &B, x: &Tensor<B::E>) -> Vec<B::E> {
+    let mut out = vec![b.zero(); x.cols];
+    for i in 0..x.rows {
+        for (o, &v) in out.iter_mut().zip(x.row(i)) {
+            *o = b.add(*o, v);
+        }
+    }
+    out
+}
+
+/// Elementwise map through the backend activation.
+pub fn leaky_relu<B: Backend>(b: &B, x: &Tensor<B::E>) -> Tensor<B::E> {
+    Tensor {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| b.leaky_relu(v)).collect(),
+    }
+}
+
+/// Elementwise activation backprop: `out = upstream ⊙ act'(preact)`.
+pub fn leaky_relu_bwd<B: Backend>(
+    b: &B,
+    preact: &Tensor<B::E>,
+    upstream: &Tensor<B::E>,
+) -> Tensor<B::E> {
+    assert_eq!(preact.rows, upstream.rows);
+    assert_eq!(preact.cols, upstream.cols);
+    Tensor {
+        rows: preact.rows,
+        cols: preact.cols,
+        data: preact
+            .data
+            .iter()
+            .zip(&upstream.data)
+            .map(|(&p, &u)| b.leaky_relu_bwd(p, u))
+            .collect(),
+    }
+}
+
+/// Scale every element by a real constant (encoded once).
+pub fn scale<B: Backend>(b: &B, x: &mut Tensor<B::E>, c: f64) {
+    let ce = b.encode(c);
+    for v in x.data.iter_mut() {
+        *v = b.mul(*v, ce);
+    }
+}
+
+/// Index of the row maximum under the backend's linear order (argmax for
+/// classification metrics — needs no decode).
+pub fn argmax_row<B: Backend>(b: &B, row: &[B::E]) -> usize {
+    let mut best = 0;
+    for j in 1..row.len() {
+        if b.gt(row[j], row[best]) {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatBackend;
+
+    fn fb() -> FloatBackend {
+        FloatBackend::default()
+    }
+
+    fn t(rows: usize, cols: usize, v: &[f32]) -> Tensor<f32> {
+        Tensor::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_known() {
+        let b = fb();
+        let a = t(2, 2, &[1., 2., 3., 4.]);
+        let w = t(2, 2, &[5., 6., 7., 8.]);
+        let c = matmul(&b, &a, &w);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let b = fb();
+        let a = t(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let w = t(4, 3, &[1., 0., 1., 0., 1., 0., 1., 1., 1., 2., 0., -1.]);
+        let direct = matmul_bt(&b, &a, &w);
+        let via_t = matmul(&b, &a, &w.transpose());
+        assert_eq!(direct.rows, via_t.rows);
+        for (x, y) in direct.data.iter().zip(&via_t.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_at_matches_explicit_transpose() {
+        let b = fb();
+        let a = t(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let w = t(3, 4, &[1., 0., 1., 0., 0., 1., 0., 1., 1., 1., 2., 0.]);
+        let direct = matmul_at(&b, &a, &w);
+        let via_t = matmul(&b, &a.transpose(), &w);
+        for (x, y) in direct.data.iter().zip(&via_t.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_and_colsum_roundtrip() {
+        let b = fb();
+        let mut x = t(2, 3, &[0., 0., 0., 0., 0., 0.]);
+        add_bias(&b, &mut x, &[1., 2., 3.]);
+        assert_eq!(col_sum(&b, &x), vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn activation_roundtrip() {
+        let b = fb();
+        let x = t(1, 4, &[-2., -0.5, 0.5, 2.]);
+        let y = leaky_relu(&b, &x);
+        assert_eq!(y.data, vec![-0.02, -0.005, 0.5, 2.]);
+        let up = t(1, 4, &[1., 1., 1., 1.]);
+        let g = leaky_relu_bwd(&b, &x, &up);
+        assert_eq!(g.data, vec![0.01, 0.01, 1., 1.]);
+    }
+
+    #[test]
+    fn scale_applies() {
+        let b = fb();
+        let mut x = t(1, 3, &[2., 4., 6.]);
+        scale(&b, &mut x, 0.5);
+        assert_eq!(x.data, vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        let b = fb();
+        assert_eq!(argmax_row(&b, &[0.1f32, -3.0, 7.0, 2.0]), 2);
+        assert_eq!(argmax_row(&b, &[-1.0f32, -0.5]), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner-dim mismatch")]
+    fn shape_mismatch_panics() {
+        let b = fb();
+        let a = t(2, 3, &[0.; 6]);
+        let w = t(2, 2, &[0.; 4]);
+        let _ = matmul(&b, &a, &w);
+    }
+}

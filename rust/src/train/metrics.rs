@@ -1,0 +1,122 @@
+//! Evaluation metrics.
+
+use crate::nn::Mlp;
+use crate::tensor::{ops, Backend, Tensor};
+
+/// Accuracy/loss summary over a dataset slice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    /// Fraction of correct argmax predictions.
+    pub accuracy: f64,
+    /// Mean natural-log cross-entropy.
+    pub loss: f64,
+    /// Number of examples evaluated.
+    pub n: usize,
+}
+
+/// Evaluate a model: forward pass + argmax in the backend's own domain
+/// (no decode on the prediction path — argmax uses the backend's order).
+pub fn evaluate<B: Backend>(
+    backend: &B,
+    model: &Mlp<B::E>,
+    x: &Tensor<B::E>,
+    labels: &[usize],
+) -> EvalResult {
+    assert_eq!(x.rows, labels.len());
+    if labels.is_empty() {
+        return EvalResult::default();
+    }
+    // Evaluate in modest chunks to bound peak memory on large test sets.
+    const CHUNK: usize = 256;
+    let mut correct = 0usize;
+    let mut loss = 0.0f64;
+    let classes = model.dims[model.dims.len() - 1];
+    let mut grad_scratch = vec![backend.zero(); classes];
+    for start in (0..x.rows).step_by(CHUNK) {
+        let end = (start + CHUNK).min(x.rows);
+        let view = Tensor::from_vec(
+            end - start,
+            x.cols,
+            x.data[start * x.cols..end * x.cols].to_vec(),
+        );
+        let logits = model.logits(backend, &view);
+        for i in 0..logits.rows {
+            let row = logits.row(i);
+            if ops::argmax_row(backend, row) == labels[start + i] {
+                correct += 1;
+            }
+            loss -= backend.softmax_ce_grad(row, labels[start + i], &mut grad_scratch);
+        }
+    }
+    EvalResult {
+        accuracy: correct as f64 / labels.len() as f64,
+        loss: loss / labels.len() as f64,
+        n: labels.len(),
+    }
+}
+
+/// Confusion matrix (`classes × classes`, rows = truth, cols = predicted).
+pub fn confusion<B: Backend>(
+    backend: &B,
+    model: &Mlp<B::E>,
+    x: &Tensor<B::E>,
+    labels: &[usize],
+    classes: usize,
+) -> Vec<Vec<usize>> {
+    let preds = model.predict(backend, x);
+    let mut m = vec![vec![0usize; classes]; classes];
+    for (&p, &t) in preds.iter().zip(labels) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::InitScheme;
+    use crate::rng::SplitMix64;
+    use crate::tensor::FloatBackend;
+
+    #[test]
+    fn evaluate_counts_correctly() {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(1);
+        let model = Mlp::init(&b, &[2, 4, 2], InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(4, 2, vec![1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0, -1.0, -1.0]);
+        let preds = model.predict(&b, &x);
+        let r = evaluate(&b, &model, &x, &preds);
+        assert_eq!(r.accuracy, 1.0, "evaluating against own predictions");
+        assert_eq!(r.n, 4);
+        let wrong: Vec<usize> = preds.iter().map(|&p| 1 - p).collect();
+        let r2 = evaluate(&b, &model, &x, &wrong);
+        assert_eq!(r2.accuracy, 0.0);
+    }
+
+    #[test]
+    fn confusion_diagonal_for_perfect_predictions() {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(2);
+        let model = Mlp::init(&b, &[2, 4, 3], InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(3, 2, vec![0.5f32, -0.5, 1.0, 1.0, -1.0, 0.25]);
+        let preds = model.predict(&b, &x);
+        let m = confusion(&b, &model, &x, &preds, 3);
+        let off_diag: usize = (0..3)
+            .flat_map(|i| (0..3).filter(move |&j| j != i).map(move |j| (i, j)))
+            .map(|(i, j)| m[i][j])
+            .sum();
+        assert_eq!(off_diag, 0);
+        let diag: usize = (0..3).map(|i| m[i][i]).sum();
+        assert_eq!(diag, 3);
+    }
+
+    #[test]
+    fn empty_eval_is_default() {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(3);
+        let model = Mlp::init(&b, &[2, 2, 2], InitScheme::HeNormal, &mut rng);
+        let x = Tensor::full(0, 2, 0.0f32);
+        let r = evaluate(&b, &model, &x, &[]);
+        assert_eq!(r.n, 0);
+    }
+}

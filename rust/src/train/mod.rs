@@ -1,0 +1,236 @@
+//! The training engine: epoch loop, mini-batching, validation curves.
+//!
+//! Matches the paper's protocol (§5): SGD, mini-batch 5, lr 0.01,
+//! per-dataset weight decay, 1:5 validation hold-back, 20 epochs,
+//! validation accuracy recorded per epoch (Fig. 2) and test accuracy at
+//! the end (Table 1).
+
+pub mod metrics;
+
+pub use metrics::{evaluate, EvalResult};
+
+use crate::data::Dataset;
+use crate::nn::{InitScheme, Mlp, SgdConfig};
+use crate::rng::SplitMix64;
+use crate::tensor::{Backend, Tensor};
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Layer sizes including input/output, e.g. `[784, 100, 10]`.
+    pub dims: Vec<usize>,
+    /// Epochs (paper: 20).
+    pub epochs: usize,
+    /// Mini-batch size (paper: 5).
+    pub batch_size: usize,
+    /// SGD settings (paper: lr = 0.01, per-dataset weight decay).
+    pub sgd: SgdConfig,
+    /// Validation hold-back denominator (paper: 5 ⇒ 1:5).
+    pub val_ratio: usize,
+    /// Weight-init scheme.
+    pub init: InitScheme,
+    /// Master seed (init, shuffles, split).
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// The paper's §5 protocol for a dataset with `classes` outputs.
+    pub fn paper(classes: usize) -> Self {
+        TrainConfig {
+            dims: vec![784, 100, classes],
+            epochs: 20,
+            batch_size: 5,
+            sgd: SgdConfig { lr: 0.01, weight_decay: 1e-4 },
+            val_ratio: 5,
+            init: InitScheme::HeNormal,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// One epoch's record in a learning curve.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochRecord {
+    /// Epoch index (1-based, 0 = before training).
+    pub epoch: usize,
+    /// Mean training loss over the epoch's batches (natural-log CE).
+    pub train_loss: f64,
+    /// Validation accuracy after the epoch.
+    pub val_accuracy: f64,
+    /// Wall-clock seconds spent in the epoch's training steps.
+    pub seconds: f64,
+}
+
+/// Result of a full training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult<E> {
+    /// The trained model.
+    pub model: Mlp<E>,
+    /// Per-epoch learning curve (Fig. 2's series).
+    pub curve: Vec<EpochRecord>,
+    /// Final test-set evaluation (Table 1's cell).
+    pub test: EvalResult,
+}
+
+/// Train an MLP on a dataset with the given backend. The entire arithmetic
+/// path — forward, softmax+CE gradient, backprop, updates — runs in the
+/// backend's number system; floats appear only in reporting.
+pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainResult<B::E> {
+    assert_eq!(cfg.dims[0], ds.pixels, "model input must match dataset pixels");
+    assert_eq!(
+        *cfg.dims.last().unwrap(),
+        ds.classes,
+        "model head must match dataset classes"
+    );
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut model = Mlp::init(backend, &cfg.dims, cfg.init, &mut rng);
+
+    let split = ds.split_validation(cfg.val_ratio, cfg.seed ^ 0xA11CE);
+    // Encode everything once: conversion is the paper's offline
+    // pre-processing step and must not be timed inside the epochs.
+    let train_x = ds.encode_batch(backend, &ds.train_images, &split.train_idx);
+    let train_y = ds.labels_of(&ds.train_labels, &split.train_idx);
+    let val_x = ds.encode_batch(backend, &ds.train_images, &split.val_idx);
+    let val_y = ds.labels_of(&ds.train_labels, &split.val_idx);
+    let test_x = ds.encode_test(backend);
+    let test_y: Vec<usize> = ds.test_labels.iter().map(|&l| l as usize).collect();
+
+    let n = train_y.len();
+    let bs = cfg.batch_size;
+    let mut curve = Vec::with_capacity(cfg.epochs);
+    let mut order: Vec<usize> = (0..n).collect();
+
+    for epoch in 1..=cfg.epochs {
+        rng.shuffle(&mut order);
+        let start = std::time::Instant::now();
+        let mut loss_sum = 0.0;
+        let mut batches = 0usize;
+        let mut chunk = Vec::with_capacity(bs);
+        for batch_start in (0..n).step_by(bs) {
+            let end = (batch_start + bs).min(n);
+            chunk.clear();
+            chunk.extend_from_slice(&order[batch_start..end]);
+            let (bx, by) = gather_batch(backend, &train_x, &train_y, &chunk);
+            let (grads, stats) = model.backprop(backend, &bx, &by);
+            cfg.sgd.apply(backend, &mut model, &grads);
+            loss_sum += stats.loss;
+            batches += 1;
+        }
+        let seconds = start.elapsed().as_secs_f64();
+        let val = evaluate(backend, &model, &val_x, &val_y);
+        curve.push(EpochRecord {
+            epoch,
+            train_loss: loss_sum / batches.max(1) as f64,
+            val_accuracy: val.accuracy,
+            seconds,
+        });
+    }
+
+    let test = evaluate(backend, &model, &test_x, &test_y);
+    TrainResult { model, curve, test }
+}
+
+/// Gather a batch by row indices from a pre-encoded tensor.
+fn gather_batch<B: Backend>(
+    backend: &B,
+    x: &Tensor<B::E>,
+    y: &[usize],
+    idx: &[usize],
+) -> (Tensor<B::E>, Vec<usize>) {
+    let mut data = Vec::with_capacity(idx.len() * x.cols);
+    let mut labels = Vec::with_capacity(idx.len());
+    for &i in idx {
+        data.extend_from_slice(x.row(i));
+        labels.push(y[i]);
+    }
+    let _ = backend;
+    (Tensor::from_vec(idx.len(), x.cols, data), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_dataset, SynthSpec};
+    use crate::fixed::{FixedConfig, FixedSystem};
+    use crate::lns::{LnsConfig, LnsSystem};
+    use crate::tensor::{FixedBackend, FloatBackend, LnsBackend};
+
+    fn tiny_ds() -> Dataset {
+        synth_dataset(&SynthSpec {
+            name: "tiny".into(),
+            classes: 3,
+            train_per_class: 40,
+            test_per_class: 10,
+            strokes: 4,
+            jitter_px: 1.5,
+            jitter_rot: 0.15,
+            noise: 0.04,
+            seed: 99,
+        })
+    }
+
+    fn tiny_cfg(classes: usize, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            dims: vec![784, 16, classes],
+            epochs,
+            batch_size: 5,
+            sgd: SgdConfig { lr: 0.02, weight_decay: 0.0 },
+            val_ratio: 5,
+            init: InitScheme::HeNormal,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn float_training_learns_tiny_task() {
+        let ds = tiny_ds();
+        let r = train(&FloatBackend::default(), &ds, &tiny_cfg(3, 6));
+        assert_eq!(r.curve.len(), 6);
+        assert!(
+            r.test.accuracy > 0.8,
+            "float should learn the tiny task: acc={}",
+            r.test.accuracy
+        );
+        assert!(r.curve.last().unwrap().train_loss < r.curve[0].train_loss);
+    }
+
+    #[test]
+    fn lns16_training_tracks_float() {
+        let ds = tiny_ds();
+        let float_acc = train(&FloatBackend::default(), &ds, &tiny_cfg(3, 6)).test.accuracy;
+        let lns = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let lns_acc = train(&lns, &ds, &tiny_cfg(3, 6)).test.accuracy;
+        assert!(
+            lns_acc > float_acc - 0.12,
+            "16-bit LNS should track float: {lns_acc} vs {float_acc}"
+        );
+    }
+
+    #[test]
+    fn fixed16_training_tracks_float() {
+        let ds = tiny_ds();
+        let float_acc = train(&FloatBackend::default(), &ds, &tiny_cfg(3, 6)).test.accuracy;
+        let fx = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let fx_acc = train(&fx, &ds, &tiny_cfg(3, 6)).test.accuracy;
+        assert!(
+            fx_acc > float_acc - 0.12,
+            "16-bit fixed should track float: {fx_acc} vs {float_acc}"
+        );
+    }
+
+    #[test]
+    fn training_is_deterministic_in_seed() {
+        let ds = tiny_ds();
+        let a = train(&FloatBackend::default(), &ds, &tiny_cfg(3, 2));
+        let b = train(&FloatBackend::default(), &ds, &tiny_cfg(3, 2));
+        assert_eq!(a.test.accuracy, b.test.accuracy);
+        assert_eq!(a.model.layers[0].w.data, b.model.layers[0].w.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "model head must match")]
+    fn wrong_head_panics() {
+        let ds = tiny_ds();
+        let _ = train(&FloatBackend::default(), &ds, &tiny_cfg(5, 1));
+    }
+}

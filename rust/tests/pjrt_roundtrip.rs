@@ -1,0 +1,216 @@
+//! End-to-end L1/L2/L3 composition: load the AOT artifacts through the
+//! PJRT runtime and verify they are **bit-exact** against the native Rust
+//! LNS engine on identical parameters and inputs.
+//!
+//! This is the proof that the three layers implement one numeric spec:
+//! Pallas kernel (L1) → JAX model (L2) → HLO text → xla/PJRT (runtime) →
+//! matches `lnsdnn::nn::Mlp` over `LnsBackend` (L3's native engine).
+//!
+//! Requires `make artifacts`; tests skip with a notice otherwise.
+
+use lnsdnn::lns::{LnsConfig, LnsSystem, LnsValue, ZERO_M};
+use lnsdnn::nn::{Mlp, SgdConfig};
+use lnsdnn::nn::mlp::Dense;
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::runtime::{ArtifactExecutable, ArtifactRegistry, Runtime};
+use lnsdnn::tensor::{LnsBackend, Tensor};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+const DIMS: [usize; 3] = [12, 8, 4];
+const BATCH: usize = 3;
+
+/// Random valid LNS planes (m, s) as i32 vectors.
+fn random_planes(rng: &mut SplitMix64, sys: &LnsSystem, n: usize, zero_frac: f64) -> (Vec<i32>, Vec<i32>) {
+    let (lo, hi) = (sys.config().m_min() as i64, sys.config().m_max() as i64);
+    let mut m = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.next_f64() < zero_frac {
+            m.push(ZERO_M);
+            s.push(1);
+        } else {
+            m.push((lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32);
+            s.push(rng.next_below(2) as i32);
+        }
+    }
+    (m, s)
+}
+
+/// Build the native MLP from raw planes (the artifact's parameter layout:
+/// per layer W(m,s) then b(m,s)).
+fn mlp_from_planes(params: &[(Vec<i32>, Vec<i32>)]) -> Mlp<LnsValue> {
+    let mut layers = Vec::new();
+    for l in 0..DIMS.len() - 1 {
+        let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+        let (wm, ws) = &params[2 * l];
+        let (bm, bs) = &params[2 * l + 1];
+        let w: Vec<LnsValue> =
+            wm.iter().zip(ws).map(|(&m, &s)| LnsValue::new(m, s == 1)).collect();
+        let b: Vec<LnsValue> =
+            bm.iter().zip(bs).map(|(&m, &s)| LnsValue::new(m, s == 1)).collect();
+        layers.push(Dense { w: Tensor::from_vec(fi, fo, w), b });
+    }
+    Mlp { dims: DIMS.to_vec(), layers }
+}
+
+fn to_lit(m: &[i32], s: &[i32], dims: &[i64]) -> (xla::Literal, xla::Literal) {
+    (
+        ArtifactExecutable::lit_i32(m, dims).unwrap(),
+        ArtifactExecutable::lit_i32(s, dims).unwrap(),
+    )
+}
+
+struct Setup {
+    backend: LnsBackend,
+    /// Parameter planes in artifact order: w0, b0, w1, b1 (each (m, s)).
+    params: Vec<(Vec<i32>, Vec<i32>)>,
+    /// Input planes.
+    x: (Vec<i32>, Vec<i32>),
+}
+
+fn setup(seed: u64) -> Setup {
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    let mut rng = SplitMix64::new(seed);
+    let mut params = Vec::new();
+    for l in 0..DIMS.len() - 1 {
+        let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+        params.push(random_planes(&mut rng, &sys, fi * fo, 0.05));
+        params.push(random_planes(&mut rng, &sys, fo, 0.2));
+    }
+    let x = random_planes(&mut rng, &sys, BATCH * DIMS[0], 0.3);
+    Setup { backend: LnsBackend::new(sys, 0.01), params, x }
+}
+
+fn param_literals(s: &Setup) -> Vec<xla::Literal> {
+    let mut lits = Vec::new();
+    for l in 0..DIMS.len() - 1 {
+        let (fi, fo) = (DIMS[l] as i64, DIMS[l + 1] as i64);
+        let (wm, ws) = &s.params[2 * l];
+        let (bm, bs) = &s.params[2 * l + 1];
+        let (a, b) = to_lit(wm, ws, &[fi, fo]);
+        lits.push(a);
+        lits.push(b);
+        let (a, b) = to_lit(bm, bs, &[fo]);
+        lits.push(a);
+        lits.push(b);
+    }
+    lits
+}
+
+fn native_input_tensor(s: &Setup) -> Tensor<LnsValue> {
+    let vals: Vec<LnsValue> =
+        s.x.0.iter().zip(&s.x.1).map(|(&m, &sg)| LnsValue::new(m, sg == 1)).collect();
+    Tensor::from_vec(BATCH, DIMS[0], vals)
+}
+
+#[test]
+fn forward_artifact_bitexact_vs_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let s = setup(42);
+    let rt = Runtime::cpu().unwrap();
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let exe = reg.load(&rt, "lns_fwd_w16_lut_small").unwrap();
+
+    let mut inputs = param_literals(&s);
+    let (xm, xs) = to_lit(&s.x.0, &s.x.1, &[BATCH as i64, DIMS[0] as i64]);
+    inputs.push(xm);
+    inputs.push(xs);
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 2, "fwd artifact returns (m, s)");
+    let got_m: Vec<i32> = out[0].to_vec().unwrap();
+    let got_s: Vec<i32> = out[1].to_vec().unwrap();
+
+    let mlp = mlp_from_planes(&s.params);
+    let logits = mlp.logits(&s.backend, &native_input_tensor(&s));
+    assert_eq!(logits.len(), got_m.len());
+    for i in 0..got_m.len() {
+        let native = logits.data[i];
+        assert_eq!(native.m, got_m[i], "logit[{i}] magnitude");
+        if !native.is_zero() {
+            assert_eq!(native.s as i32, got_s[i], "logit[{i}] sign");
+        }
+    }
+}
+
+#[test]
+fn train_step_artifact_bitexact_vs_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let s = setup(1234);
+    let rt = Runtime::cpu().unwrap();
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let exe = reg.load(&rt, "lns_train_w16_lut_small").unwrap();
+
+    let labels: Vec<i32> = vec![0, 1, 3];
+    let mut inputs = param_literals(&s);
+    let (xm, xs) = to_lit(&s.x.0, &s.x.1, &[BATCH as i64, DIMS[0] as i64]);
+    inputs.push(xm);
+    inputs.push(xs);
+    inputs.push(ArtifactExecutable::lit_i32(&labels, &[BATCH as i64]).unwrap());
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 9, "train artifact returns 8 params + log2p");
+
+    // Native: one backprop + SGD step, spec lr/wd (LnsModelSpec defaults).
+    let mut mlp = mlp_from_planes(&s.params);
+    let x = native_input_tensor(&s);
+    let lbl: Vec<usize> = labels.iter().map(|&l| l as usize).collect();
+    let (grads, _) = mlp.backprop(&s.backend, &x, &lbl);
+    SgdConfig { lr: 0.01, weight_decay: 1e-4 }.apply(&s.backend, &mut mlp, &grads);
+
+    for l in 0..DIMS.len() - 1 {
+        let wm: Vec<i32> = out[4 * l].to_vec().unwrap();
+        let ws: Vec<i32> = out[4 * l + 1].to_vec().unwrap();
+        let bm: Vec<i32> = out[4 * l + 2].to_vec().unwrap();
+        let bs: Vec<i32> = out[4 * l + 3].to_vec().unwrap();
+        for (i, v) in mlp.layers[l].w.data.iter().enumerate() {
+            assert_eq!(v.m, wm[i], "layer {l} w[{i}] m");
+            if !v.is_zero() {
+                assert_eq!(v.s as i32, ws[i], "layer {l} w[{i}] s");
+            }
+        }
+        for (i, v) in mlp.layers[l].b.iter().enumerate() {
+            assert_eq!(v.m, bm[i], "layer {l} b[{i}] m");
+            if !v.is_zero() {
+                assert_eq!(v.s as i32, bs[i], "layer {l} b[{i}] s");
+            }
+        }
+    }
+}
+
+#[test]
+fn float_artifacts_compile_and_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let meta = reg.meta("float_fwd_paper").cloned();
+    let Some(meta) = meta else {
+        eprintln!("SKIP: float artifacts not in bundle");
+        return;
+    };
+    let exe = reg.load(&rt, "float_fwd_paper").unwrap();
+    let mut rng = SplitMix64::new(5);
+    let mut inputs = Vec::new();
+    for l in 0..meta.dims.len() - 1 {
+        let (fi, fo) = (meta.dims[l], meta.dims[l + 1]);
+        let w: Vec<f32> = (0..fi * fo).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+        inputs.push(ArtifactExecutable::lit_f32(&w, &[fi as i64, fo as i64]).unwrap());
+        inputs.push(ArtifactExecutable::lit_f32(&vec![0.0; fo], &[fo as i64]).unwrap());
+    }
+    let x: Vec<f32> = (0..meta.batch * meta.dims[0]).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    inputs.push(
+        ArtifactExecutable::lit_f32(&x, &[meta.batch as i64, meta.dims[0] as i64]).unwrap(),
+    );
+    let out = exe.run(&inputs).unwrap();
+    let logits: Vec<f32> = out[0].to_vec().unwrap();
+    assert_eq!(logits.len(), meta.batch * meta.dims[meta.dims.len() - 1]);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}

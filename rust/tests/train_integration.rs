@@ -1,0 +1,306 @@
+//! Integration tests over the full native training stack: dataset →
+//! encode → train → evaluate, across number systems, plus property tests
+//! on the arithmetic invariants (proptest-style via `proptest_util`).
+
+use lnsdnn::data::{synth_dataset, SynthSpec};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{DeltaMode, LnsConfig, LnsSystem, LnsValue};
+use lnsdnn::nn::{InitScheme, SgdConfig};
+use lnsdnn::proptest_util::{run_prop, DEFAULT_CASES};
+use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend};
+use lnsdnn::train::{train, TrainConfig};
+
+fn tiny_ds(seed: u64) -> lnsdnn::data::Dataset {
+    synth_dataset(&SynthSpec {
+        name: "tiny".into(),
+        classes: 4,
+        train_per_class: 50,
+        test_per_class: 12,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.05,
+        seed,
+    })
+}
+
+fn cfg(classes: usize) -> TrainConfig {
+    TrainConfig {
+        dims: vec![784, 24, classes],
+        epochs: 8,
+        batch_size: 5,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 11,
+    }
+}
+
+/// Paper's central claim, miniaturized: 16-bit LNS training lands within
+/// a small gap of float, and the orderings float ≥ log16-lut ≥ log16-bs
+/// and log16 ≥ log12 hold (up to small-task noise).
+#[test]
+fn accuracy_ordering_matches_paper_shape() {
+    let ds = tiny_ds(3);
+    let c = cfg(4);
+    let float = train(&FloatBackend::default(), &ds, &c).test.accuracy;
+    let log16 = train(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    let log12 = train(&LnsBackend::new(LnsSystem::new(LnsConfig::w12_lut()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    let bs16 = train(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    eprintln!("float={float:.3} log16={log16:.3} log12={log12:.3} bs16={bs16:.3}");
+    assert!(float > 0.7, "float must learn: {float}");
+    assert!(log16 > float - 0.10, "16-bit LUT within ~paper gap: {log16} vs {float}");
+    assert!(log12 > float - 0.30, "12-bit learns, degraded: {log12}");
+    assert!(bs16 > float - 0.20, "bit-shift learns: {bs16}");
+}
+
+#[test]
+fn fixed_baselines_learn() {
+    let ds = tiny_ds(4);
+    let c = cfg(4);
+    let f16 = train(&FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    let f12 = train(&FixedBackend::new(FixedSystem::new(FixedConfig::w12()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    eprintln!("lin16={f16:.3} lin12={f12:.3}");
+    assert!(f16 > 0.6, "lin16: {f16}");
+    assert!(f12 > 0.35, "lin12 learns at all: {f12}");
+}
+
+#[test]
+fn exact_delta_ablation_at_least_as_good_as_lut() {
+    let ds = tiny_ds(5);
+    let c = cfg(4);
+    let lut = train(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    let exact_cfg = LnsConfig {
+        delta: DeltaMode::Exact,
+        softmax_delta: DeltaMode::Exact,
+        ..LnsConfig::w16_lut()
+    };
+    let exact = train(&LnsBackend::new(LnsSystem::new(exact_cfg), 0.01), &ds, &c).test.accuracy;
+    eprintln!("lut={lut:.3} exact={exact:.3}");
+    assert!(exact > lut - 0.08, "exact Δ shouldn't be (much) worse: {exact} vs {lut}");
+}
+
+// ---------------------------------------------------------------------
+// Property tests (the paper's §2 algebra, over random valid words)
+// ---------------------------------------------------------------------
+
+fn arb_value(rng: &mut lnsdnn::rng::SplitMix64, sys: &LnsSystem) -> LnsValue {
+    if rng.next_f64() < 0.08 {
+        return LnsValue::ZERO;
+    }
+    let span = (sys.config().m_max() as i64 - sys.config().m_min() as i64 + 1) as u64;
+    LnsValue::new(
+        (sys.config().m_min() as i64 + rng.next_below(span) as i64) as i32,
+        rng.next_below(2) == 1,
+    )
+}
+
+#[test]
+fn prop_add_commutative_all_configs() {
+    for cfg in [
+        LnsConfig::w16_lut(),
+        LnsConfig::w12_lut(),
+        LnsConfig::w16_bitshift(),
+        LnsConfig::w12_bitshift(),
+    ] {
+        let sys = LnsSystem::new(cfg);
+        run_prop(
+            "⊞ commutative",
+            0xC0FFEE ^ cfg.total_bits as u64,
+            DEFAULT_CASES,
+            |rng| (arb_value(rng, &sys), arb_value(rng, &sys)),
+            |&(x, y)| {
+                let a = sys.add(x, y);
+                let b = sys.add(y, x);
+                if a == b || (a.is_zero() && b.is_zero()) {
+                    Ok(())
+                } else {
+                    Err(format!("{a:?} != {b:?}"))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_mul_exact_group_laws() {
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    run_prop(
+        "⊡ commutative + identity + zero",
+        7,
+        DEFAULT_CASES,
+        |rng| (arb_value(rng, &sys), arb_value(rng, &sys)),
+        |&(x, y)| {
+            if sys.mul(x, y) != sys.mul(y, x) {
+                return Err("⊡ not commutative".into());
+            }
+            if sys.mul(x, LnsValue::ONE) != x && !x.is_zero() {
+                return Err("1 not identity".into());
+            }
+            if !sys.mul(x, LnsValue::ZERO).is_zero() {
+                return Err("0 not annihilating".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_add_monotone_in_magnitude_same_sign() {
+    // For positive x, y, z with |y| ≤ |z|: x ⊞ y ≤ x ⊞ z (approximations
+    // are monotone — LUT entries and shifts are non-increasing in d).
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    run_prop(
+        "⊞ monotone",
+        13,
+        DEFAULT_CASES,
+        |rng| {
+            let mut v = [0i32; 3];
+            for x in v.iter_mut() {
+                *x = (sys.config().m_min() as i64
+                    + rng.next_below(
+                        (sys.config().m_max() as i64 - sys.config().m_min() as i64) as u64,
+                    ) as i64) as i32;
+            }
+            v
+        },
+        |&[mx, my, mz]| {
+            let (lo, hi) = if my <= mz { (my, mz) } else { (mz, my) };
+            let x = LnsValue::new(mx, true);
+            let a = sys.add(x, LnsValue::new(lo, true));
+            let b = sys.add(x, LnsValue::new(hi, true));
+            if a.m <= b.m {
+                Ok(())
+            } else {
+                Err(format!("x⊞lo (m={}) > x⊞hi (m={})", a.m, b.m))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sub_self_is_zero() {
+    let sys = LnsSystem::new(LnsConfig::w12_lut());
+    run_prop(
+        "x ⊟ x = 0",
+        17,
+        DEFAULT_CASES,
+        |rng| arb_value(rng, &sys),
+        |&x| {
+            if sys.sub(x, x).is_zero() {
+                Ok(())
+            } else {
+                Err(format!("{:?} ⊟ itself = {:?}", x, sys.sub(x, x)))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_encode_decode_relative_error_bound() {
+    let sys = LnsSystem::new(LnsConfig::w16_lut());
+    let tol = (0.5f64 / 1024.0).exp2() - 1.0 + 1e-12;
+    run_prop(
+        "encode/decode error",
+        23,
+        DEFAULT_CASES,
+        |rng| {
+            // Values well inside the representable range: |log2|v|| < 14.
+            let e = rng.uniform(-13.9, 13.9);
+            let sign = if rng.next_below(2) == 1 { 1.0 } else { -1.0 };
+            sign * e.exp2()
+        },
+        |&v| {
+            let dec = sys.decode_f64(sys.encode_f64(v));
+            let rel = ((dec - v) / v).abs();
+            if rel <= tol {
+                Ok(())
+            } else {
+                Err(format!("rel err {rel} > {tol} for {v}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_fixed_mul_round_symmetric() {
+    let sys = FixedSystem::new(FixedConfig::w16());
+    run_prop(
+        "Q-format mul sign symmetry",
+        29,
+        DEFAULT_CASES,
+        |rng| {
+            (
+                (rng.next_below(2 * 32767) as i64 - 32767) as i32,
+                (rng.next_below(2 * 32767) as i64 - 32767) as i32,
+            )
+        },
+        |&(a, b)| {
+            if sys.mul(-a, b) == -sys.mul(a, b) && sys.mul(a, -b) == -sys.mul(a, b) {
+                Ok(())
+            } else {
+                Err(format!("mul({a},{b}) asymmetric under negation"))
+            }
+        },
+    );
+}
+
+/// Backend-level determinism: two identical runs produce identical models.
+#[test]
+fn lns_training_deterministic() {
+    let ds = tiny_ds(9);
+    let mut c = cfg(4);
+    c.epochs = 2;
+    let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let r1 = train(&b, &ds, &c);
+    let r2 = train(&b, &ds, &c);
+    assert_eq!(r1.model.layers[0].w.data, r2.model.layers[0].w.data);
+    assert_eq!(r1.test.accuracy, r2.test.accuracy);
+}
+
+/// Failure injection: a dataset whose labels are shuffled noise should
+/// train to ~chance and not crash any number system.
+#[test]
+fn random_labels_degrade_gracefully() {
+    let mut ds = tiny_ds(10);
+    let mut rng = lnsdnn::rng::SplitMix64::new(99);
+    for l in ds.train_labels.iter_mut() {
+        *l = rng.next_below(4) as u8;
+    }
+    let mut c = cfg(4);
+    c.epochs = 3;
+    let acc = train(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01), &ds, &c)
+        .test
+        .accuracy;
+    assert!(acc < 0.6, "random labels can't be learned: {acc}");
+}
+
+#[test]
+fn backend_encode_decode_agree_on_grid() {
+    // The three backends must agree (to their own precision) on a value
+    // grid — guards against systematic scale errors between domains.
+    let fb = FloatBackend::default();
+    let xb = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+    let lb = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    for i in -40..=40 {
+        let v = i as f64 * 0.1;
+        let f = fb.decode(fb.encode(v));
+        let x = xb.decode(xb.encode(v));
+        let l = lb.decode(lb.encode(v));
+        assert!((f - v).abs() < 1e-6);
+        assert!((x - v).abs() < 5e-4, "fixed at {v}: {x}");
+        assert!((l - v).abs() < 2e-3 * v.abs().max(0.05), "lns at {v}: {l}");
+    }
+}
