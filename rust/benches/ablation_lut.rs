@@ -31,7 +31,8 @@ fn main() {
         (10, 3), // r = 1/8  (80 entries)
         (10, 6), // r = 1/64 (640 entries, the paper's softmax table)
     ];
-    let rows = lut_sweep(&ds, &shapes, 6, 48, 7);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let rows = lut_sweep(&ds, &shapes, 6, 48, 7, threads);
 
     let csv: Vec<Vec<String>> = rows
         .iter()

@@ -3,7 +3,10 @@
 //! Measures MAC throughput per number system (the paper's claim is that
 //! LNS MACs need no multiplier; in software the LUT ⊞ costs a few integer
 //! ops + a load — this bench quantifies that overhead against linear
-//! fixed-point and float MACs) plus the Δ/softmax primitives.
+//! fixed-point and float MACs) plus the Δ/softmax primitives, and — the
+//! headline — serial vs rayon row-parallel matmul throughput per backend
+//! (MAC/s and rows/s), so the parallel engine's speedup is measured, not
+//! asserted.
 
 use lnsdnn::bench_util::{bench, black_box};
 use lnsdnn::fixed::{FixedConfig, FixedSystem};
@@ -134,4 +137,90 @@ fn main() {
             black_box(fb.softmax_ce_grad(r, 3, &mut fgrad));
         }
     });
+
+    // Serial vs rayon row-parallel matmul: the tentpole measurement.
+    // Throughput column is MAC/s; the summary line adds rows/s and the
+    // serial→parallel speedup on this machine.
+    let threads = rayon::current_num_threads();
+    println!("\n-- matmul 256×256×256, serial vs parallel ({threads} threads) --");
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let macs = (m * k * n) as f64;
+    {
+        let b = FloatBackend::default();
+        let (a, w) = float_mats(m, k, n, 8);
+        bench_pair("matmul256/float32", macs, m,
+            || black_box(ops::matmul_serial(&b, &a, &w)).len(),
+            || black_box(ops::matmul_par(&b, &a, &w)).len());
+    }
+    {
+        let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let (a, w) = encoded_mats(&b, m, k, n, 9);
+        bench_pair("matmul256/lin16", macs, m,
+            || black_box(ops::matmul_serial(&b, &a, &w)).len(),
+            || black_box(ops::matmul_par(&b, &a, &w)).len());
+    }
+    for (label, cfg) in [
+        ("log16-lut", LnsConfig::w16_lut()),
+        ("log16-bs", LnsConfig::w16_bitshift()),
+    ] {
+        let b = LnsBackend::new(LnsSystem::new(cfg), 0.01);
+        let (a, w) = encoded_mats(&b, m, k, n, 10);
+        bench_pair(&format!("matmul256/{label}"), macs, m,
+            || black_box(ops::matmul_serial(&b, &a, &w)).len(),
+            || black_box(ops::matmul_par(&b, &a, &w)).len());
+    }
+    // The backward shapes for the LNS hot path.
+    {
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let (a, w) = encoded_mats(&b, m, k, n, 11);
+        let wt = w.transpose(); // [n,k] operand, materialized once
+        bench_pair("matmul256_bt/log16-lut", macs, m,
+            || black_box(ops::matmul_bt_serial(&b, &a, &wt)).len(),
+            || black_box(ops::matmul_bt_par(&b, &a, &wt)).len());
+    }
+}
+
+/// Random float operand pair `[m,k]·[k,n]`.
+fn float_mats(m: usize, k: usize, n: usize, seed: u64) -> (Tensor<f32>, Tensor<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let a = Tensor::from_vec(m, k, (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect());
+    let w = Tensor::from_vec(k, n, (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect());
+    (a, w)
+}
+
+/// Random encoded operand pair `[m,k]·[k,n]` for any backend.
+fn encoded_mats<B: Backend>(
+    b: &B,
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> (Tensor<B::E>, Tensor<B::E>) {
+    let mut rng = SplitMix64::new(seed);
+    let a = Tensor::from_vec(m, k, (0..m * k).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+    let w = Tensor::from_vec(k, n, (0..k * n).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+    (a, w)
+}
+
+/// Bench the serial and parallel variants of one case and print the
+/// speedup + rows/s summary line.
+fn bench_pair<FS: FnMut() -> usize, FP: FnMut() -> usize>(
+    label: &str,
+    macs: f64,
+    rows: usize,
+    mut serial: FS,
+    mut parallel: FP,
+) {
+    let s = lnsdnn::bench_util::bench(&format!("{label} serial"), Some(macs), || {
+        black_box(serial());
+    });
+    let p = lnsdnn::bench_util::bench(&format!("{label} parallel"), Some(macs), || {
+        black_box(parallel());
+    });
+    let speedup = s.median_ns / p.median_ns;
+    println!(
+        "    ↳ speedup {speedup:.2}×   rows/s {:.0} → {:.0}",
+        rows as f64 / (s.median_ns * 1e-9),
+        rows as f64 / (p.median_ns * 1e-9)
+    );
 }

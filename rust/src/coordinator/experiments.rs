@@ -11,6 +11,8 @@ use crate::fixed::{FixedConfig, FixedSystem};
 use crate::lns::{DeltaApprox, DeltaMode, LnsConfig, LnsSystem, LutSpec};
 use crate::tensor::{FixedBackend, FloatBackend, LnsBackend};
 use crate::train::{train, EpochRecord, TrainConfig};
+use rayon::prelude::*;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The leaky/llReLU slope used everywhere (paper's leaky-ReLU).
 pub const SLOPE: f64 = 0.01;
@@ -175,8 +177,14 @@ pub fn paper_config(ds: &Dataset, tag: ConfigTag, epochs: usize, hidden: usize, 
     cfg
 }
 
-/// Fan a set of (dataset × config) runs across OS threads (the runs are
-/// independent; this is the coordinator's parallelism, not the math's).
+/// Fan a set of (dataset × config) runs across a dedicated rayon pool.
+///
+/// The runs are independent; this is the coordinator's parallelism on top
+/// of the math's. The pool is sized by `threads`, and the per-run tensor
+/// ops spawned inside it share the same pool via rayon's work stealing,
+/// so total CPU use stays bounded by `threads` no matter how the inner
+/// matmuls fan out. Results come back in job order (dataset-major, then
+/// tag), independent of completion order.
 pub fn run_grid(
     datasets: &[Dataset],
     tags: &[ConfigTag],
@@ -188,35 +196,34 @@ pub fn run_grid(
     let jobs: Vec<(usize, ConfigTag)> = (0..datasets.len())
         .flat_map(|d| tags.iter().map(move |&t| (d, t)))
         .collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<RunRecord>>> =
-        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads.max(1).min(jobs.len().max(1)) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let (d, tag) = jobs[i];
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads.clamp(1, jobs.len()))
+        .thread_name(|i| format!("sweep-{i}"))
+        .build()
+        .expect("building the sweep thread pool");
+    let done = AtomicUsize::new(0);
+    pool.install(|| {
+        jobs.par_iter()
+            .map(|&(d, tag)| {
                 let ds = &datasets[d];
                 let cfg = paper_config(ds, tag, epochs, hidden, seed);
                 let rec = run_one(ds, tag, &cfg);
+                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
-                    "[{}/{}] {} × {:<10} acc={:.3} ({:.1}s)",
-                    i + 1,
+                    "[{finished}/{} done] {} × {:<10} acc={:.3} ({:.1}s)",
                     jobs.len(),
                     rec.dataset,
                     tag.label(),
                     rec.test_accuracy,
                     rec.seconds
                 );
-                *results[i].lock().unwrap() = Some(rec);
-            });
-        }
-    });
-    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+                rec
+            })
+            .collect()
+    })
 }
 
 /// Table 1: all seven columns over the given datasets.
@@ -255,44 +262,57 @@ pub struct LutSweepRow {
 /// Sweep MAC-LUT shapes (the soft-max table stays at the paper's
 /// r = 1/64): train one model per (d_max, r) and report the
 /// accuracy/size/area trade-off — the paper's named future work.
+///
+/// The sweep configurations are independent and train concurrently on a
+/// dedicated pool of `threads` workers (like [`run_grid`], this bounds
+/// peak memory and CPU: each in-flight configuration holds its own model
+/// and Δ± tables). Rows come back in `shapes` order.
 pub fn lut_sweep(
     ds: &Dataset,
     shapes: &[(u32, u32)],
     epochs: usize,
     hidden: usize,
     seed: u64,
+    threads: usize,
 ) -> Vec<LutSweepRow> {
-    shapes
-        .iter()
-        .map(|&(d_max, log2_inv_r)| {
-            let spec = LutSpec { d_max, log2_inv_r };
-            let cfg = LnsConfig {
-                delta: DeltaMode::Lut(spec),
-                ..LnsConfig::w16_lut()
-            };
-            let backend = LnsBackend::new(LnsSystem::new(cfg), SLOPE);
-            let mut tc = TrainConfig::paper(ds.classes);
-            tc.dims = vec![ds.pixels, hidden, ds.classes];
-            tc.epochs = epochs;
-            tc.seed = seed;
-            let acc = train(&backend, ds, &tc).test.accuracy;
-            let row = LutSweepRow {
-                d_max,
-                log2_inv_r,
-                table_len: spec.len(),
-                gates: crate::lns::lns_mac_cost(&cfg).total(),
-                test_accuracy: acc,
-            };
-            eprintln!(
-                "  lut(d_max={d_max}, r=1/{}) → {} entries, {:.0} gates, acc {:.3}",
-                1 << log2_inv_r,
-                row.table_len,
-                row.gates,
-                acc
-            );
-            row
-        })
-        .collect()
+    if shapes.is_empty() {
+        return Vec::new();
+    }
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads.clamp(1, shapes.len()))
+        .thread_name(|i| format!("lut-sweep-{i}"))
+        .build()
+        .expect("building the LUT-sweep thread pool");
+    pool.install(|| {
+        shapes
+            .par_iter()
+            .map(|&(d_max, log2_inv_r)| {
+                let spec = LutSpec { d_max, log2_inv_r };
+                let cfg = LnsConfig { delta: DeltaMode::Lut(spec), ..LnsConfig::w16_lut() };
+                let backend = LnsBackend::new(LnsSystem::new(cfg), SLOPE);
+                let mut tc = TrainConfig::paper(ds.classes);
+                tc.dims = vec![ds.pixels, hidden, ds.classes];
+                tc.epochs = epochs;
+                tc.seed = seed;
+                let acc = train(&backend, ds, &tc).test.accuracy;
+                let row = LutSweepRow {
+                    d_max,
+                    log2_inv_r,
+                    table_len: spec.len(),
+                    gates: crate::lns::lns_mac_cost(&cfg).total(),
+                    test_accuracy: acc,
+                };
+                eprintln!(
+                    "  lut(d_max={d_max}, r=1/{}) → {} entries, {:.0} gates, acc {:.3}",
+                    1 << log2_inv_r,
+                    row.table_len,
+                    row.gates,
+                    acc
+                );
+                row
+            })
+            .collect()
+    })
 }
 
 /// One Fig.-1 row: Δ approximations at difference `d`.

@@ -8,6 +8,28 @@ use super::delta::DeltaApprox;
 use super::linconv::Pow2Table;
 use super::value::LnsValue;
 
+/// The non-zero ⊞ core (Eq. 3) over a pre-hoisted Δ± approximator and
+/// clamp bounds. Both operands must be non-zero words — zero handling
+/// stays with the callers, which is what lets the slice kernels skip it
+/// per shape. This is the **single copy** of the max/Δ±/tie logic that
+/// [`LnsSystem::add_with`], [`LnsSystem::mac_row`] and
+/// [`LnsSystem::add_slice`] all share, so the bit-exactness contract
+/// between the scalar and vectorized paths holds by construction.
+#[inline(always)]
+fn add_nonzero(ap: &DeltaApprox, m_min: i32, m_max: i32, x: LnsValue, y: LnsValue) -> LnsValue {
+    debug_assert!(!x.is_zero() && !y.is_zero());
+    // (max, other-sign bookkeeping). Eq. 3c: s_z = s_x if X > Y else s_y.
+    let (mmax, d, s_z) = if x.m > y.m { (x.m, x.m - y.m, x.s) } else { (y.m, y.m - x.m, y.s) };
+    if x.s == y.s {
+        LnsValue { m: (mmax + ap.plus_i32(d)).min(m_max), s: s_z }
+    } else if d == 0 {
+        // Exact cancellation: +v ⊞ −v = 0.
+        LnsValue::ZERO
+    } else {
+        LnsValue { m: (mmax + ap.minus_i32(d)).max(m_min), s: s_z }
+    }
+}
+
 /// A concrete LNS arithmetic system (paper §2–3).
 #[derive(Clone, Debug)]
 pub struct LnsSystem {
@@ -145,26 +167,65 @@ impl LnsSystem {
         if y.is_zero() {
             return x;
         }
-        // (max, other-sign bookkeeping). Eq. 3c: s_z = s_x if X > Y else s_y.
-        let (mmax, d, s_z) = if x.m > y.m {
-            (x.m, x.m - y.m, x.s)
-        } else {
-            (y.m, y.m - x.m, y.s)
-        };
-        if x.s == y.s {
-            LnsValue { m: (mmax + ap.plus_i32(d)).min(self.cfg.m_max()), s: s_z }
-        } else if d == 0 {
-            // Exact cancellation: +v ⊞ −v = 0.
-            LnsValue::ZERO
-        } else {
-            LnsValue { m: (mmax + ap.minus_i32(d)).max(self.cfg.m_min()), s: s_z }
-        }
+        add_nonzero(ap, self.cfg.m_min(), self.cfg.m_max(), x, y)
     }
 
     /// Fused multiply-accumulate `acc ⊞ (x ⊡ y)` — the paper's MAC.
     #[inline]
     pub fn mac(&self, acc: LnsValue, x: LnsValue, y: LnsValue) -> LnsValue {
         self.add(acc, self.mul(x, y))
+    }
+
+    /// Row-vectorized MAC: `acc[j] = acc[j] ⊞ (a ⊡ w[j])` for every `j`.
+    ///
+    /// The slice-level twin of [`LnsSystem::mac`], written so everything
+    /// loop-invariant is hoisted out of the inner loop: the Δ± approximator
+    /// reference (and through it the LUT base pointers), the word-format
+    /// clamp bounds, and the multiplier's `(m, s)` split. The loop body is
+    /// then integer add → clamp → compare → shift-indexed table load, with
+    /// no per-element re-derivation of any of those.
+    ///
+    /// **Bit-exactness contract:** identical results, element by element,
+    /// to `acc[j] = self.mac(acc[j], a, w[j])`. The parallel tensor ops
+    /// and the Pallas cross-checks both rely on this.
+    pub fn mac_row(&self, acc: &mut [LnsValue], a: LnsValue, w: &[LnsValue]) {
+        debug_assert_eq!(acc.len(), w.len());
+        // a = 0 ⇒ every product is the exact zero word ⇒ acc unchanged.
+        if a.is_zero() {
+            return;
+        }
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        let (a_m, a_s) = (a.m, a.s);
+        for (acc_j, &wv) in acc.iter_mut().zip(w.iter()) {
+            // ⊡ (Eq. 2): magnitudes add, signs XNOR; zero annihilates.
+            if wv.is_zero() {
+                continue; // acc ⊞ 0 = acc exactly
+            }
+            let p = LnsValue { m: (a_m + wv.m).clamp(m_min, m_max), s: !(a_s ^ wv.s) };
+            let x = *acc_j;
+            *acc_j = if x.is_zero() { p } else { add_nonzero(ap, m_min, m_max, x, p) };
+        }
+    }
+
+    /// Element-wise slice accumulation `acc[j] = acc[j] ⊞ x[j]` with the
+    /// same hoisting (and the same bit-exactness contract vs
+    /// [`LnsSystem::add`]) as [`LnsSystem::mac_row`].
+    pub fn add_slice(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
+        debug_assert_eq!(acc.len(), x.len());
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        for (a, &y) in acc.iter_mut().zip(x.iter()) {
+            let xv = *a;
+            if xv.is_zero() {
+                *a = y;
+                continue;
+            }
+            if y.is_zero() {
+                continue;
+            }
+            *a = add_nonzero(ap, m_min, m_max, xv, y);
+        }
     }
 
     /// Log-domain exponentiation on a positive radix (Eq. 6):
@@ -498,6 +559,69 @@ mod tests {
         s.log_softmax_ce_grad(&logits, 2, &mut grad);
         let total: f64 = grad.iter().map(|&g| s.decode_f64(g)).sum();
         assert!(total.abs() < 0.05, "Σδ = {total}");
+    }
+
+    /// Random valid word (including the exact-zero sentinel) for the
+    /// vectorized-kernel equivalence probes.
+    fn arb(rng: &mut crate::rng::SplitMix64, s: &LnsSystem) -> LnsValue {
+        if rng.next_f64() < 0.15 {
+            return LnsValue::ZERO;
+        }
+        let span = (s.config().m_max() as i64 - s.config().m_min() as i64 + 1) as u64;
+        LnsValue::new(
+            (s.config().m_min() as i64 + rng.next_below(span) as i64) as i32,
+            rng.next_below(2) == 1,
+        )
+    }
+
+    #[test]
+    fn mac_row_bitexact_vs_scalar_mac() {
+        for (tag, cfg) in [
+            ("w16_lut", LnsConfig::w16_lut()),
+            ("w12_lut", LnsConfig::w12_lut()),
+            ("w16_bs", {
+                let mut c = LnsConfig::w16_lut();
+                c.delta = DeltaMode::BitShift;
+                c
+            }),
+            ("w16_exact", {
+                let mut c = LnsConfig::w16_lut();
+                c.delta = DeltaMode::Exact;
+                c
+            }),
+        ] {
+            let s = LnsSystem::new(cfg);
+            let mut rng = crate::rng::SplitMix64::new(0xACC0 ^ tag.len() as u64);
+            for case in 0..200 {
+                let n = 1 + rng.next_below(48) as usize;
+                let a = arb(&mut rng, &s);
+                let acc: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let w: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let mut fast = acc.clone();
+                s.mac_row(&mut fast, a, &w);
+                let slow: Vec<LnsValue> =
+                    acc.iter().zip(&w).map(|(&o, &wv)| s.mac(o, a, wv)).collect();
+                assert_eq!(fast, slow, "{tag} case {case}: mac_row diverged from mac");
+            }
+        }
+    }
+
+    #[test]
+    fn add_slice_bitexact_vs_scalar_add() {
+        for cfg in [LnsConfig::w16_lut(), LnsConfig::w12_bitshift()] {
+            let s = LnsSystem::new(cfg);
+            let mut rng = crate::rng::SplitMix64::new(0xADD5 ^ cfg.total_bits as u64);
+            for case in 0..200 {
+                let n = 1 + rng.next_below(48) as usize;
+                let acc: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let x: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let mut fast = acc.clone();
+                s.add_slice(&mut fast, &x);
+                let slow: Vec<LnsValue> =
+                    acc.iter().zip(&x).map(|(&o, &v)| s.add(o, v)).collect();
+                assert_eq!(fast, slow, "case {case}: add_slice diverged from add");
+            }
+        }
     }
 
     #[test]

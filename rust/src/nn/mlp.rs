@@ -6,10 +6,17 @@
 //! out (exactly as the paper does) in terms of backend ⊞/⊡ — the float
 //! backend recovers textbook backprop, which the tests exploit as a
 //! gradient oracle.
+//!
+//! Forward and backward run on the row-parallel tensor engine
+//! ([`crate::tensor::ops`]): large batches fan their matmuls and the
+//! soft-max/CE head across the rayon pool while keeping every reduction
+//! bit-identical to the serial reference, so training stays exactly
+//! deterministic in the seed.
 
 use super::init::{he_normal_init, log_domain_init, InitScheme};
 use crate::rng::SplitMix64;
 use crate::tensor::{ops, Backend, Tensor};
+use rayon::prelude::*;
 
 /// One dense layer's parameters.
 #[derive(Clone, Debug)]
@@ -141,14 +148,36 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         let logits = acts.last().unwrap();
         let classes = self.dims[self.dims.len() - 1];
 
-        // δ_head = p − y (per row), plus loss/accuracy bookkeeping.
+        // δ_head = p − y (per row), plus loss/accuracy bookkeeping. Rows
+        // are independent; large (eval-sized) batches fan out across the
+        // rayon pool, with the scalar reduction done afterwards in row
+        // order so both paths produce identical numbers.
         let mut delta = Tensor::full(batch, classes, backend.zero());
+        let per_row: Vec<(f64, bool)> = if ops::par_rows_worthwhile(batch) && classes > 0 {
+            delta
+                .data
+                .par_chunks_mut(classes)
+                .enumerate()
+                .map(|(i, grow)| {
+                    let row = logits.row(i);
+                    let ln_p = backend.softmax_ce_grad(row, labels[i], grow);
+                    (ln_p, ops::argmax_row(backend, row) == labels[i])
+                })
+                .collect()
+        } else {
+            (0..batch)
+                .map(|i| {
+                    let ln_p =
+                        backend.softmax_ce_grad(logits.row(i), labels[i], delta.row_mut(i));
+                    (ln_p, ops::argmax_row(backend, logits.row(i)) == labels[i])
+                })
+                .collect()
+        };
         let mut loss = 0.0;
         let mut correct = 0usize;
-        for i in 0..batch {
-            let ln_p = backend.softmax_ce_grad(logits.row(i), labels[i], delta.row_mut(i));
+        for &(ln_p, ok) in &per_row {
             loss -= ln_p;
-            if ops::argmax_row(backend, logits.row(i)) == labels[i] {
+            if ok {
                 correct += 1;
             }
         }

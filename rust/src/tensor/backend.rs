@@ -45,6 +45,39 @@ pub trait Backend: Send + Sync {
         self.add(acc, self.mul(a, b))
     }
 
+    /// Row-vectorized MAC: `acc[j] = acc[j] ⊞ (a ⊡ w[j])` for every `j`.
+    ///
+    /// This is the matmul inner loop lifted to slice level so backends can
+    /// hoist per-call setup (Δ± LUT base pointers, word-format bounds,
+    /// the multiplier's sign/magnitude split) out of it — see the
+    /// [`LnsBackend`] override. Implementations **must** stay bit-exact
+    /// with the default element-by-element definition: the documented
+    /// sequential-over-`k` reduction order of the tensor ops (and thus
+    /// bit-exactness with the Pallas kernels) depends on it.
+    #[inline]
+    fn mac_row(&self, acc: &mut [Self::E], a: Self::E, w: &[Self::E]) {
+        debug_assert_eq!(acc.len(), w.len());
+        // Zero multiplier ⇒ every `acc ⊞ (0 ⊡ w)` is exactly `acc`.
+        if self.is_zero(a) {
+            return;
+        }
+        for (acc_j, &wv) in acc.iter_mut().zip(w.iter()) {
+            *acc_j = self.mac(*acc_j, a, wv);
+        }
+    }
+
+    /// Element-wise slice accumulation: `acc[j] = acc[j] ⊞ x[j]`.
+    ///
+    /// Same contract as [`Backend::mac_row`]: overrides may hoist setup
+    /// but must keep the scalar [`Backend::add`] semantics bit-exact.
+    #[inline]
+    fn add_slice(&self, acc: &mut [Self::E], x: &[Self::E]) {
+        debug_assert_eq!(acc.len(), x.len());
+        for (a, &v) in acc.iter_mut().zip(x.iter()) {
+            *a = self.add(*a, v);
+        }
+    }
+
     /// Multiplication on the **SGD update path** (`η ⊡ g`). Defaults to
     /// [`Backend::mul`]; the linear fixed-point backend overrides it with
     /// stochastic rounding — deterministic round-to-nearest annihilates
@@ -356,6 +389,17 @@ impl Backend for LnsBackend {
     #[inline]
     fn mul(&self, a: LnsValue, b: LnsValue) -> LnsValue {
         self.sys.mul(a, b)
+    }
+    /// Vectorized override: one Δ±-LUT/bounds hoist per row instead of
+    /// per MAC (see [`LnsSystem::mac_row`]). Bit-exact with the default.
+    #[inline]
+    fn mac_row(&self, acc: &mut [LnsValue], a: LnsValue, w: &[LnsValue]) {
+        self.sys.mac_row(acc, a, w);
+    }
+    /// Vectorized override of the slice accumulation (same hoisting).
+    #[inline]
+    fn add_slice(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
+        self.sys.add_slice(acc, x);
     }
     /// llReLU (Eq. 11): positive values pass; negative values get β added
     /// to the log-magnitude — a single fixed-point add, no multiplier.

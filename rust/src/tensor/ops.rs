@@ -4,59 +4,191 @@
 //! approximate and non-associative, so "same order" is part of the numeric
 //! spec — the Pallas kernels reduce in the identical order, which is what
 //! makes bit-exact cross-checking possible.
+//!
+//! # Parallel execution
+//!
+//! Every matmul comes in three flavours:
+//!
+//! * `*_serial` — the reference single-thread implementation,
+//! * `*_par` — rayon row-parallel: the **output rows** (the `m`
+//!   dimension) are partitioned across threads while each row keeps the
+//!   exact sequential-over-`k`-ascending reduction, so results are
+//!   **bit-identical** to the serial versions in every backend (see
+//!   `tests/parallel_determinism.rs`),
+//! * the undecorated name — dispatches to the parallel path when the
+//!   problem is big enough to amortize the fork/join overhead.
+//!
+//! Both paths drive the backend through the slice-level
+//! [`Backend::mac_row`] / [`Backend::add_slice`] hooks, which lets LNS
+//! hoist its Δ± LUT pointers and sign handling out of the inner loop.
 
 use super::{Backend, Tensor};
+use rayon::prelude::*;
+
+/// Minimum total work (MACs for matmuls, elements for maps) before an op
+/// takes the parallel path. Below this the fork/join overhead outweighs
+/// the win; above it the parallel and serial paths are interchangeable
+/// because they are bit-identical.
+const PAR_MIN_WORK: usize = 1 << 15;
+
+/// Take the parallel path for an op with `rows` independent output rows
+/// and `work` total inner operations?
+#[inline]
+fn parallel_worthwhile(rows: usize, work: usize) -> bool {
+    rows > 1 && work >= PAR_MIN_WORK && rayon::current_num_threads() > 1
+}
+
+/// Row count above which per-row *bookkeeping* loops (the soft-max/CE
+/// head in `nn::mlp`, the metric loop in `train::metrics`) fan out.
+const PAR_MIN_ROWS: usize = 64;
+
+/// Dispatch predicate for those per-row bookkeeping loops — one shared
+/// definition so the training and evaluation paths cannot silently
+/// diverge on threshold or thread-count handling.
+#[inline]
+pub(crate) fn par_rows_worthwhile(rows: usize) -> bool {
+    rows >= PAR_MIN_ROWS && rayon::current_num_threads() > 1
+}
+
+// ---------------------------------------------------------------------
+// C = A·B
+// ---------------------------------------------------------------------
+
+/// One output row of `A·B`: `out[j] = Σ_p arow[p] ⊡ w[p][j]`, accumulating
+/// sequentially over `p` ascending from the caller-initialized zeros.
+/// Shared verbatim by the serial and parallel drivers — bit-exactness of
+/// the two is by construction.
+#[inline]
+fn matmul_row<B: Backend>(b: &B, arow: &[B::E], w: &Tensor<B::E>, orow: &mut [B::E]) {
+    for (p, &av) in arow.iter().enumerate() {
+        // Zero operand ⇒ the whole inner row is `acc ⊞ 0 = acc`: skip.
+        // Exact in every backend; large win on sparse image data.
+        if b.is_zero(av) {
+            continue;
+        }
+        b.mac_row(orow, av, w.row(p));
+    }
+}
 
 /// `C = A·B` (`[m,k]·[k,n] → [m,n]`), accumulating **sequentially over k
-/// ascending** from the backend zero (Eq. 10's ⊞ chain).
+/// ascending** from the backend zero (Eq. 10's ⊞ chain). Dispatches to
+/// the rayon row-parallel path when the problem is large enough.
 pub fn matmul<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    if parallel_worthwhile(a.rows, a.rows * a.cols * w.cols) {
+        matmul_par(b, a, w)
+    } else {
+        matmul_serial(b, a, w)
+    }
+}
+
+/// Single-thread reference implementation of [`matmul`].
+pub fn matmul_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
-    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let (m, n) = (a.rows, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     for i in 0..m {
-        let arow = a.row(i);
-        let orow = out.row_mut(i);
-        for p in 0..k {
-            let av = arow[p];
-            // Zero operand ⇒ the whole inner row is `acc ⊞ 0 = acc`: skip.
-            // Exact in every backend; large win on sparse image data.
-            if b.is_zero(av) {
-                continue;
-            }
-            let wrow = w.row(p);
-            for j in 0..n {
-                orow[j] = b.mac(orow[j], av, wrow[j]);
-            }
-        }
+        matmul_row(b, a.row(i), w, out.row_mut(i));
     }
     out
+}
+
+/// Rayon row-parallel [`matmul`]: output rows are distributed across the
+/// pool; each row's reduction order is unchanged, so the result is
+/// bit-identical to [`matmul_serial`].
+pub fn matmul_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
+    let (m, n) = (a.rows, w.cols);
+    let mut out = Tensor::full(m, n, b.zero());
+    if n == 0 {
+        return out;
+    }
+    out.data
+        .par_chunks_mut(n)
+        .enumerate()
+        .for_each(|(i, orow)| matmul_row(b, a.row(i), w, orow));
+    out
+}
+
+// ---------------------------------------------------------------------
+// C = A·Bᵀ
+// ---------------------------------------------------------------------
+
+/// Zero-skipping dot product, accumulating over the index ascending.
+#[inline]
+fn dot_skip_zero<B: Backend>(b: &B, a: &[B::E], w: &[B::E]) -> B::E {
+    let mut acc = b.zero();
+    for (&av, &wv) in a.iter().zip(w.iter()) {
+        if b.is_zero(av) {
+            continue; // acc ⊞ (0 ⊡ w) = acc exactly
+        }
+        acc = b.mac(acc, av, wv);
+    }
+    acc
+}
+
+/// One output row of `A·Bᵀ`.
+#[inline]
+fn matmul_bt_row<B: Backend>(b: &B, arow: &[B::E], w: &Tensor<B::E>, orow: &mut [B::E]) {
+    for (j, o) in orow.iter_mut().enumerate() {
+        *o = dot_skip_zero(b, arow, w.row(j));
+    }
 }
 
 /// `C = A·Bᵀ` without materializing the transpose (`[m,k]·[n,k] → [m,n]`).
+/// Dispatches to the rayon row-parallel path on large problems.
 pub fn matmul_bt<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    if parallel_worthwhile(a.rows, a.rows * a.cols * w.rows) {
+        matmul_bt_par(b, a, w)
+    } else {
+        matmul_bt_serial(b, a, w)
+    }
+}
+
+/// Single-thread reference implementation of [`matmul_bt`].
+pub fn matmul_bt_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
-    let (m, k, n) = (a.rows, a.cols, w.rows);
+    let (m, n) = (a.rows, w.rows);
     let mut out = Tensor::full(m, n, b.zero());
     for i in 0..m {
-        let arow = a.row(i);
-        for j in 0..n {
-            let wrow = w.row(j);
-            let mut acc = b.zero();
-            for p in 0..k {
-                if b.is_zero(arow[p]) {
-                    continue; // acc ⊞ (0 ⊡ w) = acc exactly
-                }
-                acc = b.mac(acc, arow[p], wrow[p]);
-            }
-            *out.at_mut(i, j) = acc;
-        }
+        matmul_bt_row(b, a.row(i), w, out.row_mut(i));
     }
     out
 }
 
+/// Rayon row-parallel [`matmul_bt`], bit-identical to the serial path.
+pub fn matmul_bt_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
+    let (m, n) = (a.rows, w.rows);
+    let mut out = Tensor::full(m, n, b.zero());
+    if n == 0 {
+        return out;
+    }
+    out.data
+        .par_chunks_mut(n)
+        .enumerate()
+        .for_each(|(i, orow)| matmul_bt_row(b, a.row(i), w, orow));
+    out
+}
+
+// ---------------------------------------------------------------------
+// C = Aᵀ·B
+// ---------------------------------------------------------------------
+
 /// `C = Aᵀ·B` (`[k,m]·[k,n] → [m,n]`): the gradient outer-product shape.
-/// Accumulates over k ascending.
+/// Accumulates over k ascending. Dispatches to the row-parallel path on
+/// large problems.
 pub fn matmul_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    if parallel_worthwhile(a.cols, a.rows * a.cols * w.cols) {
+        matmul_at_par(b, a, w)
+    } else {
+        matmul_at_serial(b, a, w)
+    }
+}
+
+/// Single-thread reference implementation of [`matmul_at`]. Keeps the
+/// seed's cache-friendly `k`-outer loop order; every output element still
+/// accumulates over `k` ascending, which is all the numeric spec fixes.
+pub fn matmul_at_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
     let (k, m, n) = (a.rows, a.cols, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
@@ -68,45 +200,73 @@ pub fn matmul_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tenso
             if b.is_zero(av) {
                 continue; // acc ⊞ (0 ⊡ w) = acc exactly
             }
-            let orow = out.row_mut(i);
-            for j in 0..n {
-                orow[j] = b.mac(orow[j], av, wrow[j]);
-            }
+            b.mac_row(out.row_mut(i), av, wrow);
         }
     }
     out
 }
 
-/// Row-broadcast add: `out[i,j] = x[i,j] + bias[j]`.
+/// Rayon row-parallel [`matmul_at`]: each task owns one output row `i`
+/// (one column of `A`) and walks `k` ascending — the per-element
+/// reduction order is identical to the serial `k`-outer loop, so results
+/// are bit-identical.
+pub fn matmul_at_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
+    let (k, m, n) = (a.rows, a.cols, w.cols);
+    let mut out = Tensor::full(m, n, b.zero());
+    if n == 0 {
+        return out;
+    }
+    out.data.par_chunks_mut(n).enumerate().for_each(|(i, orow)| {
+        for p in 0..k {
+            let av = a.row(p)[i];
+            if b.is_zero(av) {
+                continue;
+            }
+            b.mac_row(orow, av, w.row(p));
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// Elementwise / broadcast ops
+// ---------------------------------------------------------------------
+
+/// Row-broadcast add: `out[i,j] = x[i,j] + bias[j]` (row-parallel on
+/// large tensors; rows are independent, so order is preserved trivially).
 pub fn add_bias<B: Backend>(b: &B, x: &mut Tensor<B::E>, bias: &[B::E]) {
     assert_eq!(x.cols, bias.len(), "bias length mismatch");
-    for i in 0..x.rows {
-        let row = x.row_mut(i);
-        for (v, &bv) in row.iter_mut().zip(bias) {
-            *v = b.add(*v, bv);
+    let n = x.cols;
+    if n > 0 && parallel_worthwhile(x.rows, x.rows * n) {
+        x.data.par_chunks_mut(n).for_each(|row| b.add_slice(row, bias));
+    } else {
+        for i in 0..x.rows {
+            b.add_slice(x.row_mut(i), bias);
         }
     }
 }
 
 /// Column sums (`[m,n] → [n]`), reducing over rows ascending — the bias
-/// gradient.
+/// gradient. Kept serial: the row-ascending reduction order is part of
+/// the numeric spec and the op is a vanishing fraction of a step.
 pub fn col_sum<B: Backend>(b: &B, x: &Tensor<B::E>) -> Vec<B::E> {
     let mut out = vec![b.zero(); x.cols];
     for i in 0..x.rows {
-        for (o, &v) in out.iter_mut().zip(x.row(i)) {
-            *o = b.add(*o, v);
-        }
+        b.add_slice(&mut out, x.row(i));
     }
     out
 }
 
-/// Elementwise map through the backend activation.
+/// Elementwise map through the backend activation (parallel on large
+/// tensors; elementwise ops are order-free so results are unchanged).
 pub fn leaky_relu<B: Backend>(b: &B, x: &Tensor<B::E>) -> Tensor<B::E> {
-    Tensor {
-        rows: x.rows,
-        cols: x.cols,
-        data: x.data.iter().map(|&v| b.leaky_relu(v)).collect(),
-    }
+    let data = if parallel_worthwhile(x.len(), x.len()) {
+        x.data.par_iter().map(|&v| b.leaky_relu(v)).collect()
+    } else {
+        x.data.iter().map(|&v| b.leaky_relu(v)).collect()
+    };
+    Tensor { rows: x.rows, cols: x.cols, data }
 }
 
 /// Elementwise activation backprop: `out = upstream ⊙ act'(preact)`.
@@ -117,23 +277,33 @@ pub fn leaky_relu_bwd<B: Backend>(
 ) -> Tensor<B::E> {
     assert_eq!(preact.rows, upstream.rows);
     assert_eq!(preact.cols, upstream.cols);
-    Tensor {
-        rows: preact.rows,
-        cols: preact.cols,
-        data: preact
+    let data = if parallel_worthwhile(preact.len(), preact.len()) {
+        preact
+            .data
+            .par_iter()
+            .zip(&upstream.data)
+            .map(|(&p, &u)| b.leaky_relu_bwd(p, u))
+            .collect()
+    } else {
+        preact
             .data
             .iter()
             .zip(&upstream.data)
             .map(|(&p, &u)| b.leaky_relu_bwd(p, u))
-            .collect(),
-    }
+            .collect()
+    };
+    Tensor { rows: preact.rows, cols: preact.cols, data }
 }
 
 /// Scale every element by a real constant (encoded once).
 pub fn scale<B: Backend>(b: &B, x: &mut Tensor<B::E>, c: f64) {
     let ce = b.encode(c);
-    for v in x.data.iter_mut() {
-        *v = b.mul(*v, ce);
+    if parallel_worthwhile(x.len(), x.len()) {
+        x.data.par_iter_mut().for_each(|v| *v = b.mul(*v, ce));
+    } else {
+        for v in x.data.iter_mut() {
+            *v = b.mul(*v, ce);
+        }
     }
 }
 
@@ -169,6 +339,9 @@ mod tests {
         let w = t(2, 2, &[5., 6., 7., 8.]);
         let c = matmul(&b, &a, &w);
         assert_eq!(c.data, vec![19., 22., 43., 50.]);
+        // All three entry points agree on the small case.
+        assert_eq!(matmul_serial(&b, &a, &w).data, c.data);
+        assert_eq!(matmul_par(&b, &a, &w).data, c.data);
     }
 
     #[test]
@@ -182,6 +355,7 @@ mod tests {
         for (x, y) in direct.data.iter().zip(&via_t.data) {
             assert!((x - y).abs() < 1e-5);
         }
+        assert_eq!(matmul_bt_par(&b, &a, &w).data, direct.data);
     }
 
     #[test]
@@ -194,6 +368,34 @@ mod tests {
         for (x, y) in direct.data.iter().zip(&via_t.data) {
             assert!((x - y).abs() < 1e-5);
         }
+        assert_eq!(matmul_at_par(&b, &a, &w).data, direct.data);
+    }
+
+    #[test]
+    fn parallel_paths_handle_degenerate_shapes() {
+        let b = fb();
+        // Zero-width outputs and single rows must not panic on the
+        // explicit parallel entry points either.
+        let a = t(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let w0 = Tensor::full(2, 0, 0.0f32);
+        assert_eq!(matmul_par(&b, &a, &w0).len(), 0);
+        let w1 = t(1, 2, &[1., 1.]);
+        assert_eq!(matmul_bt_par(&b, &a, &w1).data, vec![3., 7., 11.]);
+        let one = t(1, 2, &[2., 3.]);
+        let w = t(2, 2, &[1., 0., 0., 1.]);
+        assert_eq!(matmul_par(&b, &one, &w).data, vec![2., 3.]);
+    }
+
+    #[test]
+    fn dispatch_crosses_threshold_consistently() {
+        // Big enough to take the parallel path via the public name: the
+        // result must equal the serial reference exactly.
+        let b = fb();
+        let mut rng = crate::rng::SplitMix64::new(5);
+        let (m, k, n) = (48, 32, 32);
+        let a = Tensor::from_vec(m, k, (0..m * k).map(|_| rng.uniform(-1., 1.) as f32).collect());
+        let w = Tensor::from_vec(k, n, (0..k * n).map(|_| rng.uniform(-1., 1.) as f32).collect());
+        assert_eq!(matmul(&b, &a, &w).data, matmul_serial(&b, &a, &w).data);
     }
 
     #[test]
@@ -237,5 +439,14 @@ mod tests {
         let a = t(2, 3, &[0.; 6]);
         let w = t(2, 2, &[0.; 4]);
         let _ = matmul(&b, &a, &w);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner-dim mismatch")]
+    fn shape_mismatch_panics_parallel() {
+        let b = fb();
+        let a = t(2, 3, &[0.; 6]);
+        let w = t(2, 2, &[0.; 4]);
+        let _ = matmul_par(&b, &a, &w);
     }
 }

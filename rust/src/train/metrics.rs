@@ -1,7 +1,14 @@
 //! Evaluation metrics.
+//!
+//! Evaluation is the batched hot path at serving scale: the forward pass
+//! runs on the row-parallel tensor engine, and the per-row soft-max/
+//! argmax bookkeeping fans out across the rayon pool for large chunks.
+//! Loss/accuracy are reduced in row order afterwards, so parallel and
+//! serial evaluation report identical numbers.
 
 use crate::nn::Mlp;
 use crate::tensor::{ops, Backend, Tensor};
+use rayon::prelude::*;
 
 /// Accuracy/loss summary over a dataset slice.
 #[derive(Clone, Copy, Debug, Default)]
@@ -40,12 +47,36 @@ pub fn evaluate<B: Backend>(
             x.data[start * x.cols..end * x.cols].to_vec(),
         );
         let logits = model.logits(backend, &view);
-        for i in 0..logits.rows {
-            let row = logits.row(i);
-            if ops::argmax_row(backend, row) == labels[start + i] {
+        let per_row: Vec<(bool, f64)> = if ops::par_rows_worthwhile(logits.rows) {
+            // `map_init` gives each worker one reusable scratch gradient
+            // buffer (mirroring the serial branch's single buffer) instead
+            // of allocating per row.
+            (0..logits.rows)
+                .into_par_iter()
+                .map_init(
+                    || vec![backend.zero(); classes],
+                    |scratch, i| {
+                        let row = logits.row(i);
+                        let ln_p = backend.softmax_ce_grad(row, labels[start + i], scratch);
+                        (ops::argmax_row(backend, row) == labels[start + i], ln_p)
+                    },
+                )
+                .collect()
+        } else {
+            (0..logits.rows)
+                .map(|i| {
+                    let row = logits.row(i);
+                    let ln_p =
+                        backend.softmax_ce_grad(row, labels[start + i], &mut grad_scratch);
+                    (ops::argmax_row(backend, row) == labels[start + i], ln_p)
+                })
+                .collect()
+        };
+        for &(ok, ln_p) in &per_row {
+            if ok {
                 correct += 1;
             }
-            loss -= backend.softmax_ce_grad(row, labels[start + i], &mut grad_scratch);
+            loss -= ln_p;
         }
     }
     EvalResult {

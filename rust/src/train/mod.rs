@@ -4,6 +4,12 @@
 //! per-dataset weight decay, 1:5 validation hold-back, 20 epochs,
 //! validation accuracy recorded per epoch (Fig. 2) and test accuracy at
 //! the end (Table 1).
+//!
+//! All tensor work inside a step runs on the row-parallel engine in
+//! [`crate::tensor::ops`]; because the parallel paths are bit-identical
+//! to the serial references, training remains exactly deterministic in
+//! the seed regardless of thread count (see
+//! `tests/parallel_determinism.rs`).
 
 pub mod metrics;
 

@@ -1,0 +1,175 @@
+//! Parallel determinism: the rayon row-parallel matmuls must be
+//! **bit-identical** to the serial references for every backend.
+//!
+//! This is the contract that lets the engine switch freely between the
+//! serial and parallel paths (and size its thread pool to the machine)
+//! without perturbing a single training run: the parallel drivers only
+//! partition *output rows* across threads, and each row keeps the
+//! documented sequential-over-`k`-ascending reduction — the same order
+//! the Pallas kernels use, so cross-language bit-exactness is preserved
+//! transitively.
+//!
+//! Shapes are randomized (including degenerate one-row/one-col cases and
+//! shapes straddling the parallel-dispatch threshold) and operands carry
+//! random sparsity so the exact-zero skip paths are exercised too.
+
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::tensor::{ops, Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
+
+/// Random tensor with `zero_frac` exact-zero entries (the zero word is
+/// backend-specific, so it goes through `Backend::zero`).
+fn random_tensor<B: Backend>(
+    b: &B,
+    rng: &mut SplitMix64,
+    rows: usize,
+    cols: usize,
+    zero_frac: f64,
+) -> Tensor<B::E> {
+    let data = (0..rows * cols)
+        .map(|_| {
+            if rng.next_f64() < zero_frac {
+                b.zero()
+            } else {
+                b.encode(rng.uniform(-4.0, 4.0))
+            }
+        })
+        .collect();
+    Tensor::from_vec(rows, cols, data)
+}
+
+/// Assert serial ≡ parallel, element-bit-identical, for all three matmul
+/// shapes plus the auto-dispatching entry points, over randomized shapes.
+fn check_backend<B: Backend>(b: &B, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    // Fixed shapes bracketing the dispatch threshold, then randomized.
+    let mut shapes = vec![(1, 1, 1), (1, 7, 5), (2, 3, 4), (33, 48, 40), (5, 784, 100)];
+    for _ in 0..8 {
+        shapes.push((
+            1 + rng.next_below(48) as usize,
+            1 + rng.next_below(48) as usize,
+            1 + rng.next_below(48) as usize,
+        ));
+    }
+    for (m, k, n) in shapes {
+        let zf = rng.next_f64() * 0.4;
+        let tag = b.tag();
+
+        // C = A·B over [m,k]·[k,n].
+        let a = random_tensor(b, &mut rng, m, k, zf);
+        let w = random_tensor(b, &mut rng, k, n, zf);
+        let serial = ops::matmul_serial(b, &a, &w);
+        let par = ops::matmul_par(b, &a, &w);
+        assert!(serial.data == par.data, "{tag}: matmul serial≠parallel at {m}×{k}×{n}");
+        let auto = ops::matmul(b, &a, &w);
+        assert!(auto.data == serial.data, "{tag}: matmul dispatch diverged at {m}×{k}×{n}");
+
+        // C = A·Bᵀ over [m,k]·[n,k].
+        let wt = random_tensor(b, &mut rng, n, k, zf);
+        let serial = ops::matmul_bt_serial(b, &a, &wt);
+        let par = ops::matmul_bt_par(b, &a, &wt);
+        assert!(serial.data == par.data, "{tag}: matmul_bt serial≠parallel at {m}×{k}×{n}");
+        let auto = ops::matmul_bt(b, &a, &wt);
+        assert!(auto.data == serial.data, "{tag}: matmul_bt dispatch diverged at {m}×{k}×{n}");
+
+        // C = Aᵀ·B over [k,m]·[k,n] (the gradient outer-product shape).
+        let at = random_tensor(b, &mut rng, k, m, zf);
+        let wn = random_tensor(b, &mut rng, k, n, zf);
+        let serial = ops::matmul_at_serial(b, &at, &wn);
+        let par = ops::matmul_at_par(b, &at, &wn);
+        assert!(serial.data == par.data, "{tag}: matmul_at serial≠parallel at {m}×{k}×{n}");
+        let auto = ops::matmul_at(b, &at, &wn);
+        assert!(auto.data == serial.data, "{tag}: matmul_at dispatch diverged at {m}×{k}×{n}");
+    }
+}
+
+#[test]
+fn float_parallel_matches_serial() {
+    check_backend(&FloatBackend::default(), 0xF10A7);
+}
+
+#[test]
+fn fixed_parallel_matches_serial() {
+    check_backend(&FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01), 0xF16);
+    check_backend(&FixedBackend::new(FixedSystem::new(FixedConfig::w12()), 0.01), 0xF12);
+}
+
+#[test]
+fn lns_lut_parallel_matches_serial() {
+    check_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01), 0x106_16);
+    check_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w12_lut()), 0.01), 0x106_12);
+}
+
+#[test]
+fn lns_bitshift_parallel_matches_serial() {
+    check_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01), 0xB5_16);
+    check_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w12_bitshift()), 0.01), 0xB5_12);
+}
+
+/// The elementwise/broadcast ops must also be invariant under the
+/// parallel dispatch (they are order-free per element, but this pins it).
+#[test]
+fn elementwise_ops_invariant_under_size() {
+    let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let mut rng = SplitMix64::new(0xE1E);
+    // Large enough that leaky_relu/scale take the parallel path.
+    let x = random_tensor(&b, &mut rng, 300, 200, 0.2);
+    let y = ops::leaky_relu(&b, &x);
+    // Reference: scalar map in plain iteration order.
+    let want: Vec<_> = x.data.iter().map(|&v| b.leaky_relu(v)).collect();
+    assert!(y.data == want, "parallel leaky_relu diverged from scalar map");
+
+    let up = random_tensor(&b, &mut rng, 300, 200, 0.2);
+    let g = ops::leaky_relu_bwd(&b, &x, &up);
+    let want: Vec<_> =
+        x.data.iter().zip(&up.data).map(|(&p, &u)| b.leaky_relu_bwd(p, u)).collect();
+    assert!(g.data == want, "parallel leaky_relu_bwd diverged from scalar map");
+
+    let mut s = x.clone();
+    ops::scale(&b, &mut s, 0.125);
+    let ce = b.encode(0.125);
+    let want: Vec<_> = x.data.iter().map(|&v| b.mul(v, ce)).collect();
+    assert!(s.data == want, "parallel scale diverged from scalar map");
+}
+
+/// End-to-end determinism across the whole training stack with the
+/// parallel engine active: two identical runs must produce bit-identical
+/// models (this subsumes per-op determinism under rayon's nondeterministic
+/// scheduling).
+#[test]
+fn training_bitexact_across_runs_with_parallel_engine() {
+    use lnsdnn::data::{synth_dataset, SynthSpec};
+    use lnsdnn::nn::{InitScheme, SgdConfig};
+    use lnsdnn::train::{train, TrainConfig};
+
+    let ds = synth_dataset(&SynthSpec {
+        name: "det".into(),
+        classes: 3,
+        train_per_class: 40,
+        test_per_class: 10,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.04,
+        seed: 31,
+    });
+    let cfg = TrainConfig {
+        dims: vec![784, 16, 3],
+        epochs: 2,
+        batch_size: 5,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 7,
+    };
+    let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let r1 = train(&b, &ds, &cfg);
+    let r2 = train(&b, &ds, &cfg);
+    for l in 0..r1.model.layers.len() {
+        assert_eq!(r1.model.layers[l].w.data, r2.model.layers[l].w.data, "layer {l} weights");
+        assert_eq!(r1.model.layers[l].b, r2.model.layers[l].b, "layer {l} biases");
+    }
+    assert_eq!(r1.test.accuracy, r2.test.accuracy);
+    assert_eq!(r1.test.loss, r2.test.loss);
+}
