@@ -18,18 +18,21 @@ fn main() {
     // Encoding: v ↔ (log2|v| in fixed point, sign).
     for v in [3.0, -0.5, 1024.0, 0.01] {
         let x = sys.encode_f64(v);
-        println!("  encode({v:>8}) = (m={:>6}, s={})   decode → {:.6}", x.m, x.s as u8, sys.decode_f64(x));
+        let dec = sys.decode_f64(x);
+        println!("  encode({v:>8}) = (m={:>6}, s={})   decode → {dec:.6}", x.m, x.s as u8);
     }
 
     // Multiplication is exact (integer add of magnitudes).
     let a = sys.encode_f64(6.25);
     let b = sys.encode_f64(-0.8);
-    println!("\n  6.25 ⊡ -0.8  = {:.6}   (exact in log domain: adds magnitudes)", sys.decode_f64(sys.mul(a, b)));
+    let prod = sys.decode_f64(sys.mul(a, b));
+    println!("\n  6.25 ⊡ -0.8  = {prod:.6}   (exact in log domain: adds magnitudes)");
     println!("  6.25 ÷ -0.8  = {:.6}   (division equally exact)", sys.decode_f64(sys.div(a, b)));
 
     // Addition is approximate: max + Δ±(d).
     println!("\n  Δ approximations at d = 1.0:");
-    println!("    exact   Δ+ = {:+.4}   Δ− = {:+.4}", delta_plus_exact(1.0), delta_minus_exact(1.0));
+    let (dp, dm) = (delta_plus_exact(1.0), delta_minus_exact(1.0));
+    println!("    exact   Δ+ = {dp:+.4}   Δ− = {dm:+.4}");
     let cfg = sys.config();
     let d = cfg.to_units(1.0);
     println!(

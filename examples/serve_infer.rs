@@ -121,10 +121,11 @@ fn main() {
             (0..n)
                 .map(|i| {
                     let mut best = 0usize;
+                    let val = |j: usize| {
+                        lnsdnn::lns::LnsValue::new(lm[i * classes + j], ls[i * classes + j] == 1)
+                    };
                     for j in 1..classes {
-                        let a = lnsdnn::lns::LnsValue::new(lm[i * classes + j], ls[i * classes + j] == 1);
-                        let b = lnsdnn::lns::LnsValue::new(lm[i * classes + best], ls[i * classes + best] == 1);
-                        if sys_h.gt(a, b) {
+                        if sys_h.gt(val(j), val(best)) {
                             best = j;
                         }
                     }
@@ -135,7 +136,9 @@ fn main() {
     };
 
     // 4. Serve concurrent clients; measure.
-    println!("serving {n_requests} requests from {n_clients} clients (batch ≤ {art_batch}, wait 2ms)…");
+    println!(
+        "serving {n_requests} requests from {n_clients} clients (batch ≤ {art_batch}, wait 2ms)…"
+    );
     let server = BatchServer::start(art_batch, Duration::from_millis(2), 784, handler);
     let t0 = Instant::now();
     let mut handles = Vec::new();

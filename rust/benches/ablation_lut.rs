@@ -55,7 +55,9 @@ fn main() {
     println!("→ results/ablation_lut.csv");
 
     // Shape assertions: the paper's point is on the knee.
-    let acc = |d: u32, l: u32| rows.iter().find(|r| r.d_max == d && r.log2_inv_r == l).unwrap().test_accuracy;
+    let acc = |d: u32, l: u32| {
+        rows.iter().find(|r| r.d_max == d && r.log2_inv_r == l).unwrap().test_accuracy
+    };
     let paper = acc(10, 1);
     assert!(
         paper > acc(2, 1) - 0.02,

@@ -1,0 +1,73 @@
+//! Conv-subsystem microbenchmarks: im2col-lowered conv2d MAC/s per number
+//! system, serial vs rayon row-parallel (forward and backward), plus
+//! pooling throughput — the conv twin of `benches/ops.rs`, so the
+//! speedups the lowering inherits from the row-parallel matmul engine are
+//! measured, not asserted.
+
+use lnsdnn::bench_util::{bench, black_box};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::{Conv2d, InitScheme, Pool2d};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::tensor::{Backend, ConvShape, FixedBackend, FloatBackend, LnsBackend, Tensor};
+
+/// Bench one backend's conv forward+backward, serial vs parallel.
+fn conv_case<B: Backend>(label: &str, backend: &B) {
+    // A LeNet-middle-layer shape: batch 32, 16×16×4 → 8 channels, 5×5
+    // kernels, shape-preserving padding.
+    let (batch, side, in_c, out_c) = (32usize, 16usize, 4usize, 8usize);
+    let shape = ConvShape::square(in_c, side, 5, 1, 2);
+    let mut rng = SplitMix64::new(11);
+    let layer = Conv2d::init(backend, shape, out_c, InitScheme::HeNormal, &mut rng);
+    let x = Tensor::from_vec(
+        batch,
+        shape.in_len(),
+        (0..batch * shape.in_len()).map(|_| backend.encode(rng.uniform(-1.0, 1.0))).collect(),
+    );
+    // Forward MACs: one per (patch entry × output channel × patch).
+    let macs = (batch * shape.patches_per_image() * shape.patch_len() * out_c) as f64;
+    let s = bench(&format!("conv2d_fwd/{label} serial"), Some(macs), || {
+        black_box(layer.forward_serial(backend, &x));
+    });
+    let p = bench(&format!("conv2d_fwd/{label} parallel"), Some(macs), || {
+        black_box(layer.forward_par(backend, &x));
+    });
+    println!("    ↳ fwd speedup {:.2}×", s.median_ns / p.median_ns);
+
+    // Backward (dW + dX lowered matmuls ≈ 2× forward MACs).
+    let (cols, y) = layer.forward(backend, &x);
+    let s = bench(&format!("conv2d_bwd/{label} serial"), Some(2.0 * macs), || {
+        black_box(layer.backward_serial(backend, &cols, &y, true));
+    });
+    let p = bench(&format!("conv2d_bwd/{label} parallel"), Some(2.0 * macs), || {
+        black_box(layer.backward_par(backend, &cols, &y, true));
+    });
+    println!("    ↳ bwd speedup {:.2}×", s.median_ns / p.median_ns);
+}
+
+fn main() {
+    let threads = rayon::current_num_threads();
+    println!("== conv subsystem microbenchmarks ({threads} threads) ==\n");
+    conv_case("float32", &FloatBackend::default());
+    conv_case("lin16", &FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01));
+    conv_case("log16-lut", &LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01));
+    conv_case("log16-bs", &LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01));
+
+    // Pooling: the log-domain compare path (integer compares in LNS).
+    println!("\n-- pooling 64×(8ch 16×16), 2×2 --");
+    let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let mut rng = SplitMix64::new(5);
+    let pool = Pool2d::max(8, 16, 16, 2);
+    let x = Tensor::from_vec(
+        64,
+        pool.in_len(),
+        (0..64 * pool.in_len()).map(|_| b.encode(rng.uniform(-2.0, 2.0))).collect(),
+    );
+    bench("maxpool2x2/log16-lut", Some((64 * pool.out_len() * 4) as f64), || {
+        black_box(pool.forward(&b, &x));
+    });
+    let avg = Pool2d::avg(8, 16, 16, 2);
+    bench("avgpool2x2/log16-lut", Some((64 * avg.out_len() * 4) as f64), || {
+        black_box(avg.forward(&b, &x));
+    });
+}

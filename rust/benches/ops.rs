@@ -55,7 +55,9 @@ fn main() {
         let sys = FixedSystem::new(FixedConfig::w16());
         let mut rng = SplitMix64::new(2);
         let pairs: Vec<(i32, i32)> = (0..N)
-            .map(|_| (sys.encode_f64(rng.uniform(-3.0, 3.0)), sys.encode_f64(rng.uniform(-3.0, 3.0))))
+            .map(|_| {
+                (sys.encode_f64(rng.uniform(-3.0, 3.0)), sys.encode_f64(rng.uniform(-3.0, 3.0)))
+            })
             .collect();
         bench("mac/lin16 Q-format", Some(N as f64), || {
             let mut acc = 0i32;
@@ -84,18 +86,14 @@ fn main() {
     let dims = (32usize, 784usize, 100usize);
     {
         let b = FloatBackend::default();
-        let mut rng = SplitMix64::new(4);
-        let a = Tensor::from_vec(dims.0, dims.1, (0..dims.0 * dims.1).map(|_| rng.uniform(-1.0, 1.0) as f32).collect());
-        let w = Tensor::from_vec(dims.1, dims.2, (0..dims.1 * dims.2).map(|_| rng.uniform(-1.0, 1.0) as f32).collect());
+        let (a, w) = float_mats(dims.0, dims.1, dims.2, 4);
         bench("matmul/float32", Some((dims.0 * dims.1 * dims.2) as f64), || {
             black_box(ops::matmul(&b, &a, &w));
         });
     }
     {
         let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
-        let mut rng = SplitMix64::new(5);
-        let a = Tensor::from_vec(dims.0, dims.1, (0..dims.0 * dims.1).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
-        let w = Tensor::from_vec(dims.1, dims.2, (0..dims.1 * dims.2).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+        let (a, w) = encoded_mats(&b, dims.0, dims.1, dims.2, 5);
         bench("matmul/lin16", Some((dims.0 * dims.1 * dims.2) as f64), || {
             black_box(ops::matmul(&b, &a, &w));
         });
@@ -105,9 +103,7 @@ fn main() {
         ("log16-bs", LnsConfig::w16_bitshift()),
     ] {
         let b = LnsBackend::new(LnsSystem::new(cfg), 0.01);
-        let mut rng = SplitMix64::new(6);
-        let a = Tensor::from_vec(dims.0, dims.1, (0..dims.0 * dims.1).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
-        let w = Tensor::from_vec(dims.1, dims.2, (0..dims.1 * dims.2).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+        let (a, w) = encoded_mats(&b, dims.0, dims.1, dims.2, 6);
         bench(&format!("matmul/{label}"), Some((dims.0 * dims.1 * dims.2) as f64), || {
             black_box(ops::matmul(&b, &a, &w));
         });
@@ -148,16 +144,24 @@ fn main() {
     {
         let b = FloatBackend::default();
         let (a, w) = float_mats(m, k, n, 8);
-        bench_pair("matmul256/float32", macs, m,
+        bench_pair(
+            "matmul256/float32",
+            macs,
+            m,
             || black_box(ops::matmul_serial(&b, &a, &w)).len(),
-            || black_box(ops::matmul_par(&b, &a, &w)).len());
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+        );
     }
     {
         let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
         let (a, w) = encoded_mats(&b, m, k, n, 9);
-        bench_pair("matmul256/lin16", macs, m,
+        bench_pair(
+            "matmul256/lin16",
+            macs,
+            m,
             || black_box(ops::matmul_serial(&b, &a, &w)).len(),
-            || black_box(ops::matmul_par(&b, &a, &w)).len());
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+        );
     }
     for (label, cfg) in [
         ("log16-lut", LnsConfig::w16_lut()),
@@ -165,18 +169,26 @@ fn main() {
     ] {
         let b = LnsBackend::new(LnsSystem::new(cfg), 0.01);
         let (a, w) = encoded_mats(&b, m, k, n, 10);
-        bench_pair(&format!("matmul256/{label}"), macs, m,
+        bench_pair(
+            &format!("matmul256/{label}"),
+            macs,
+            m,
             || black_box(ops::matmul_serial(&b, &a, &w)).len(),
-            || black_box(ops::matmul_par(&b, &a, &w)).len());
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+        );
     }
     // The backward shapes for the LNS hot path.
     {
         let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
         let (a, w) = encoded_mats(&b, m, k, n, 11);
         let wt = w.transpose(); // [n,k] operand, materialized once
-        bench_pair("matmul256_bt/log16-lut", macs, m,
+        bench_pair(
+            "matmul256_bt/log16-lut",
+            macs,
+            m,
             || black_box(ops::matmul_bt_serial(&b, &a, &wt)).len(),
-            || black_box(ops::matmul_bt_par(&b, &a, &wt)).len());
+            || black_box(ops::matmul_bt_par(&b, &a, &wt)).len(),
+        );
     }
 }
 

@@ -22,7 +22,8 @@ fn random_planes(rng: &mut SplitMix64, sys: &LnsSystem, n: usize) -> (Vec<i32>, 
             if rng.next_f64() < 0.1 {
                 (ZERO_M, 1)
             } else {
-                ((lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32, rng.next_below(2) as i32)
+                let m = (lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32;
+                (m, rng.next_below(2) as i32)
             }
         })
         .unzip()

@@ -12,7 +12,13 @@ fn main() {
     let datasets = paper_datasets(0.015, 7);
     println!("Table 1 (bench scale 0.015, 6 epochs, hidden 48):");
     for d in &datasets {
-        println!("  {}: {} train / {} test, {} classes", d.name, d.train_len(), d.test_len(), d.classes);
+        println!(
+            "  {}: {} train / {} test, {} classes",
+            d.name,
+            d.train_len(),
+            d.test_len(),
+            d.classes
+        );
     }
     let t0 = std::time::Instant::now();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);

@@ -10,7 +10,7 @@ use crate::data::Dataset;
 use crate::fixed::{FixedConfig, FixedSystem};
 use crate::lns::{DeltaApprox, DeltaMode, LnsConfig, LnsSystem, LutSpec};
 use crate::tensor::{FixedBackend, FloatBackend, LnsBackend};
-use crate::train::{train, EpochRecord, TrainConfig};
+use crate::train::{train, train_cnn, CnnTrainConfig, EpochRecord, TrainConfig};
 use rayon::prelude::*;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -168,7 +168,13 @@ pub fn run_one(ds: &Dataset, tag: ConfigTag, cfg: &TrainConfig) -> RunRecord {
 }
 
 /// Paper training protocol for a dataset, with the tag's weight decay.
-pub fn paper_config(ds: &Dataset, tag: ConfigTag, epochs: usize, hidden: usize, seed: u64) -> TrainConfig {
+pub fn paper_config(
+    ds: &Dataset,
+    tag: ConfigTag,
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+) -> TrainConfig {
     let mut cfg = TrainConfig::paper(ds.classes);
     cfg.dims = vec![ds.pixels, hidden, ds.classes];
     cfg.epochs = epochs;
@@ -227,12 +233,24 @@ pub fn run_grid(
 }
 
 /// Table 1: all seven columns over the given datasets.
-pub fn table1(datasets: &[Dataset], epochs: usize, hidden: usize, seed: u64, threads: usize) -> Vec<RunRecord> {
+pub fn table1(
+    datasets: &[Dataset],
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<RunRecord> {
     run_grid(datasets, &ConfigTag::table1_columns(), epochs, hidden, seed, threads)
 }
 
 /// Fig. 2: the four learning-curve series for one dataset.
-pub fn fig2(ds: &Dataset, epochs: usize, hidden: usize, seed: u64, threads: usize) -> Vec<RunRecord> {
+pub fn fig2(
+    ds: &Dataset,
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<RunRecord> {
     run_grid(
         std::slice::from_ref(ds),
         &ConfigTag::fig2_series(),
@@ -241,6 +259,91 @@ pub fn fig2(ds: &Dataset, epochs: usize, hidden: usize, seed: u64, threads: usiz
         seed,
         threads,
     )
+}
+
+/// CNN training protocol for a dataset of square images: LeNet-style
+/// architecture sized from the dataset, the tag's weight decay, paper
+/// epochs/batching.
+pub fn cnn_config(ds: &Dataset, tag: ConfigTag, epochs: usize, seed: u64) -> CnnTrainConfig {
+    let side = (ds.pixels as f64).sqrt().round() as usize;
+    assert_eq!(side * side, ds.pixels, "CNN workload needs square images");
+    let mut cfg = CnnTrainConfig::lenet(side, ds.classes);
+    cfg.epochs = epochs;
+    cfg.sgd.weight_decay = tag.default_weight_decay();
+    cfg.seed = seed;
+    cfg
+}
+
+/// Train one (dataset × config) CNN cell — the conv-workload twin of
+/// [`run_one`].
+pub fn run_one_cnn(ds: &Dataset, tag: ConfigTag, cfg: &CnnTrainConfig) -> RunRecord {
+    let t0 = std::time::Instant::now();
+    let (curve, test) = match tag {
+        ConfigTag::Float => {
+            let r = train_cnn(&FloatBackend { slope: SLOPE as f32 }, ds, cfg);
+            (r.curve, r.test)
+        }
+        ConfigTag::Lin12 | ConfigTag::Lin16 => {
+            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+            let r = train_cnn(&FixedBackend::new(FixedSystem::new(fc), SLOPE), ds, cfg);
+            (r.curve, r.test)
+        }
+        _ => {
+            let lc = lns_config_for(tag).expect("log tag");
+            let r = train_cnn(&LnsBackend::new(LnsSystem::new(lc), SLOPE), ds, cfg);
+            (r.curve, r.test)
+        }
+    };
+    RunRecord {
+        dataset: ds.name.clone(),
+        tag,
+        curve,
+        test_accuracy: test.accuracy,
+        test_loss: test.loss,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Fan one CNN run per config tag across a dedicated rayon pool (same
+/// pooling/work-stealing story as [`run_grid`]). Results come back in
+/// `tags` order. Unlike [`run_grid`] the pool is **not** clamped to the
+/// job count: there are typically only a handful of tags, and the conv
+/// runs' nested row-parallel matmuls fill the remaining threads via
+/// work stealing.
+pub fn cnn_grid(
+    ds: &Dataset,
+    tags: &[ConfigTag],
+    epochs: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<RunRecord> {
+    if tags.is_empty() {
+        return Vec::new();
+    }
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads.max(1))
+        .thread_name(|i| format!("cnn-sweep-{i}"))
+        .build()
+        .expect("building the CNN-sweep thread pool");
+    let done = AtomicUsize::new(0);
+    pool.install(|| {
+        tags.par_iter()
+            .map(|&tag| {
+                let cfg = cnn_config(ds, tag, epochs, seed);
+                let rec = run_one_cnn(ds, tag, &cfg);
+                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                eprintln!(
+                    "[{finished}/{} done] cnn {} × {:<10} acc={:.3} ({:.1}s)",
+                    tags.len(),
+                    rec.dataset,
+                    tag.label(),
+                    rec.test_accuracy,
+                    rec.seconds
+                );
+                rec
+            })
+            .collect()
+    })
 }
 
 /// One row of the Δ-LUT co-optimization sweep (paper §6 future work):
@@ -350,8 +453,16 @@ pub fn fig1_rows(d_end: f64, samples: usize) -> Vec<Fig1Row> {
                 exact_plus: crate::lns::delta_plus_exact(d),
                 lut_plus: to_f(lut.plus(du)),
                 bs_plus: to_f(bs.plus(du)),
-                exact_minus: if d > 0.0 { crate::lns::delta_minus_exact(d) } else { f64::NEG_INFINITY },
-                lut_minus: if du > 0 { to_f(lut.minus(du).max(-(1 << 20))) } else { f64::NEG_INFINITY },
+                exact_minus: if d > 0.0 {
+                    crate::lns::delta_minus_exact(d)
+                } else {
+                    f64::NEG_INFINITY
+                },
+                lut_minus: if du > 0 {
+                    to_f(lut.minus(du).max(-(1 << 20)))
+                } else {
+                    f64::NEG_INFINITY
+                },
                 bs_minus: if du > 0 { to_f(bs.minus(du)) } else { f64::NEG_INFINITY },
             }
         })
@@ -416,5 +527,21 @@ mod tests {
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
         assert_eq!(recs[1].tag, ConfigTag::Lin16);
+    }
+
+    #[test]
+    fn cnn_grid_runs_tags_in_order() {
+        use crate::data::{stripes_dataset, StripeSpec};
+        let ds = stripes_dataset(&StripeSpec {
+            train_per_class: 10,
+            test_per_class: 4,
+            ..StripeSpec::cnn_default(1.0, 5)
+        });
+        let recs = cnn_grid(&ds, &[ConfigTag::Float, ConfigTag::Log16Lut], 1, 3, 2);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].tag, ConfigTag::Float);
+        assert_eq!(recs[1].tag, ConfigTag::Log16Lut);
+        assert_eq!(recs[0].curve.len(), 1);
+        assert_eq!(recs[0].dataset, "stripes");
     }
 }

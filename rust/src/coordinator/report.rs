@@ -124,7 +124,8 @@ mod tests {
 
     #[test]
     fn table1_markdown_layout() {
-        let recs = vec![rec("mnist", ConfigTag::Float, 0.974), rec("mnist", ConfigTag::Log16Lut, 0.972)];
+        let recs =
+            vec![rec("mnist", ConfigTag::Float, 0.974), rec("mnist", ConfigTag::Log16Lut, 0.972)];
         let md = table1_markdown(&recs);
         assert!(md.contains("| mnist |"));
         assert!(md.contains("97.4"));

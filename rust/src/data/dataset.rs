@@ -132,7 +132,7 @@ mod tests {
     fn encode_normalizes_to_unit_range() {
         let d = toy();
         let b = FloatBackend::default();
-        let t = d.encode_test(&b, );
+        let t = d.encode_test(&b);
         assert_eq!(t.rows, 2);
         assert_eq!(t.cols, 4);
         assert!(t.data.iter().all(|&v| (0.0..=1.0).contains(&v)));

@@ -1,16 +1,17 @@
-//! IDX file loader (the MNIST/EMNIST container format), with transparent
-//! gzip support.
+//! IDX file loader (the MNIST/EMNIST container format).
 //!
 //! When real dataset files are available (`--data-dir` on the CLI), the
 //! experiment drivers prefer them over the synthetic stand-ins. Layout
 //! expected under the directory, per dataset tag:
 //! `<tag>-train-images` / `<tag>-train-labels` / `<tag>-test-images` /
-//! `<tag>-test-labels`, each optionally with `.gz` and/or the canonical
-//! `-idx3-ubyte` suffixes.
+//! `<tag>-test-labels`, optionally with the canonical `-idx3-ubyte`
+//! suffixes. Gzipped files are recognized but rejected with a descriptive
+//! error: the hermetic build carries no gzip dependency (`flate2` is not
+//! available offline), so distribute pre-gunzipped copies next to the
+//! originals.
 
 use super::dataset::Dataset;
 use anyhow::{bail, Context, Result};
-use std::io::Read;
 use std::path::{Path, PathBuf};
 
 /// Parse an IDX byte stream: magic `0x00 0x00 <dtype> <ndim>`, big-endian
@@ -45,18 +46,19 @@ pub fn parse_idx(bytes: &[u8]) -> Result<(Vec<usize>, Vec<u8>)> {
     Ok((dims, data.to_vec()))
 }
 
-/// Read a file, gunzipping if it ends in `.gz`.
+/// Read a raw IDX file. `.gz` paths are rejected with guidance (see the
+/// module docs): the offline build deliberately carries no gzip decoder,
+/// and silently mis-parsing compressed bytes would be worse than asking
+/// for a gunzipped copy.
 pub fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
-    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     if path.extension().map(|e| e == "gz").unwrap_or(false) {
-        let mut out = Vec::new();
-        flate2::read::GzDecoder::new(&raw[..])
-            .read_to_end(&mut out)
-            .with_context(|| format!("gunzip {}", path.display()))?;
-        Ok(out)
-    } else {
-        Ok(raw)
+        bail!(
+            "{} is gzip-compressed; the hermetic build has no gzip decoder — \
+             gunzip it alongside the original and retry",
+            path.display()
+        );
     }
+    std::fs::read(path).with_context(|| format!("reading {}", path.display()))
 }
 
 /// Find the first existing variant of a dataset component file.
@@ -156,18 +158,19 @@ mod tests {
     }
 
     #[test]
-    fn gz_roundtrip_through_tempfile() {
-        use std::io::Write;
+    fn plain_file_roundtrip_and_gz_guidance() {
         let dir = std::env::temp_dir().join(format!("lnsdnn-idx-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let payload = make_idx(&[2, 2, 2], &[9, 8, 7, 6, 5, 4, 3, 2]);
+        let plain = dir.join("x-train-images");
+        std::fs::write(&plain, &payload).unwrap();
+        assert_eq!(read_maybe_gz(&plain).unwrap(), payload);
+        // Compressed files are rejected with actionable guidance rather
+        // than mis-parsed (no gzip decoder in the hermetic build).
         let gz_path = dir.join("x.gz");
-        let mut enc =
-            flate2::write::GzEncoder::new(std::fs::File::create(&gz_path).unwrap(), flate2::Compression::fast());
-        enc.write_all(&payload).unwrap();
-        enc.finish().unwrap();
-        let back = read_maybe_gz(&gz_path).unwrap();
-        assert_eq!(back, payload);
+        std::fs::write(&gz_path, [0x1f, 0x8b, 0x08, 0x00]).unwrap();
+        let err = read_maybe_gz(&gz_path).unwrap_err().to_string();
+        assert!(err.contains("gunzip"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -11,7 +11,7 @@ pub mod idx;
 pub mod synthetic;
 
 pub use dataset::{Dataset, Split};
-pub use synthetic::{synth_dataset, SynthSpec};
+pub use synthetic::{stripes_dataset, synth_dataset, StripeSpec, SynthSpec};
 
 /// The paper's four benchmarks, as synthetic stand-ins (name, classes,
 /// per-class sizes mirror the originals; `scale` shrinks them uniformly

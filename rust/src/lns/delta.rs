@@ -120,8 +120,9 @@ impl DeltaApprox {
                 let plus: Vec<i32> = (0..n_padded)
                     .map(|i| if i < 63 { ((1i64 << cfg.frac_bits) >> i) as i32 } else { 0 })
                     .collect();
-                let minus: Vec<i32> =
-                    (0..n_padded).map(|i| if i < 63 { -((base_minus >> i) as i32) } else { 0 }).collect();
+                let minus: Vec<i32> = (0..n_padded)
+                    .map(|i| if i < 63 { -((base_minus >> i) as i32) } else { 0 })
+                    .collect();
                 DeltaApprox {
                     mode,
                     index_shift: shift,

@@ -150,4 +150,72 @@ mod tests {
         assert_eq!(t.len(), 64);
         assert_eq!(t.pow2(3 << 6), 8);
     }
+
+    /// A word with q_f > 10 must clamp the table to 1024 entries (k = 10)
+    /// while still indexing and shifting correctly against the wider
+    /// fractional field.
+    #[test]
+    fn fine_word_clamps_table_resolution() {
+        use crate::lns::config::{DeltaMode, LutSpec};
+        let cfg = LnsConfig {
+            total_bits: 20,
+            frac_bits: 12,
+            delta: DeltaMode::Lut(LutSpec::MAC20),
+            softmax_delta: DeltaMode::Lut(LutSpec::SOFTMAX640),
+        };
+        let t = Pow2Table::new(&cfg);
+        assert_eq!(t.len(), 1024, "k = min(q_f, 10) caps the table");
+        assert_eq!(t.entries()[0], 4096, "entries scale by 2^q_f, not 2^k");
+        // Integer exponents stay exact through the k < q_f indexing path.
+        let q = 12u32;
+        for e in 0..10i64 {
+            assert_eq!(t.pow2(e << q), 1i64 << e, "2^{e} at q_f=12");
+        }
+        // Fractional exponents track float within the 2^-10 table grid.
+        for e_units in (-(6i64 << q)..(10i64 << q)).step_by(389) {
+            let want = (e_units as f64 / (1i64 << q) as f64).exp2();
+            let got = t.pow2(e_units) as f64;
+            let tol = want * 0.002 + 0.51;
+            assert!((got - want).abs() <= tol, "q12 e={e_units}: got {got}, want {want}");
+        }
+    }
+
+    /// The floor-division split must place boundary fractional parts in
+    /// the first/last table bins, not wrap or off-by-one them.
+    #[test]
+    fn boundary_fractional_indices() {
+        let t = Pow2Table::new(&cfg16());
+        let q = 10i64;
+        // f = 0 exactly (first entry) on both sides of zero.
+        assert_eq!(t.pow2(0), 1);
+        assert_eq!(t.pow2(1 << q), 2);
+        // f = 2^q − 1 (last entry): 2^(1023/1024) ≈ 1.99932 rounds to 2,
+        // and one unit below an integer exponent stays monotone with it.
+        assert_eq!(t.pow2((1 << q) - 1), 2);
+        assert!(t.pow2((4 << q) - 1) <= t.pow2(4 << q));
+        assert_eq!(t.pow2((4 << q) - 1), 16, "2^(4 − 1/1024) ≈ 15.99 rounds to 16");
+    }
+
+    /// Negative exponents exercise the arithmetic-shift split: `i_part`
+    /// floors (not truncates) and `f_part` stays in [0, 2^q).
+    #[test]
+    fn negative_exponent_floor_split() {
+        let t = Pow2Table::new(&cfg16());
+        let q = 10i64;
+        // Just below zero: E = −1 → I = −1, F = 1023 → ≈ 2^(−1/1024) ≈
+        // 0.99932 → rounds to 1 (not 0, which truncation toward zero
+        // would produce via I = 0, F = −1 indexing garbage).
+        assert_eq!(t.pow2(-1), 1);
+        // Deeply negative integer exponents halve cleanly until the
+        // round-to-nearest floor: 2^-1 → 1 (half-up), 2^-2 → 0.
+        assert_eq!(t.pow2(-(1 << q)), 1);
+        assert_eq!(t.pow2(-(2 << q)), 0);
+        // Monotone through the negative range (no seam at unit steps).
+        let mut prev = t.pow2(-(6 << q));
+        for e in (-(6 << q) + 1)..=0 {
+            let cur = t.pow2(e);
+            assert!(cur >= prev, "negative-range monotonicity broke at {e}");
+            prev = cur;
+        }
+    }
 }

@@ -87,6 +87,9 @@ COMMANDS
   train     --config log16-lut [--dataset mnist] [--epochs 20]
             [--scale 0.1] [--hidden 100] [--lr 0.01] [--wd 0.0001]
             [--batch 5] [--seed 7] [--data-dir DIR]
+  cnn       [--dataset stripes] [--configs float,log16-lut,log16-bs]
+            [--epochs 8] [--scale 1.0] [--seed 7] [--threads N]
+            [--out results] (LeNet-style conv workload sweep)
   artifacts [--dir artifacts] (list and smoke-compile the AOT bundle)
 
 CONFIG TAGS
@@ -110,6 +113,7 @@ fn run() -> Result<()> {
         "bitwidth" => cmd_bitwidth(),
         "cost" => cmd_cost(),
         "train" => cmd_train(&flags),
+        "cnn" => cmd_cnn(&flags),
         "artifacts" => cmd_artifacts(&flags),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -286,6 +290,53 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         "test accuracy {:.4}  loss {:.4}  total {:.1}s",
         rec.test_accuracy, rec.test_loss, rec.seconds
     );
+    Ok(())
+}
+
+fn cmd_cnn(flags: &Flags) -> Result<()> {
+    let name = flags.get("dataset").unwrap_or("stripes");
+    let seed = flags.u64("seed", 7)?;
+    let ds = if name == "stripes" {
+        let scale = flags.f64("scale", 1.0)?;
+        data::stripes_dataset(&data::StripeSpec::cnn_default(scale, seed))
+    } else {
+        load_dataset(flags, name)?
+    };
+    let epochs = flags.usize("epochs", 8)?;
+    let threads = flags.usize("threads", default_threads())?;
+    let tags: Vec<ConfigTag> = match flags.get("configs") {
+        Some(s) => s
+            .split(',')
+            .map(|t| ConfigTag::parse(t).with_context(|| format!("bad config tag '{t}'")))
+            .collect::<Result<_>>()?,
+        None => vec![ConfigTag::Float, ConfigTag::Log16Lut, ConfigTag::Log16Bs],
+    };
+    println!(
+        "CNN sweep on {} ({} train / {} test, {} classes), {} epochs, {} configs",
+        ds.name,
+        ds.train_len(),
+        ds.test_len(),
+        ds.classes,
+        epochs,
+        tags.len()
+    );
+    let recs = experiments::cnn_grid(&ds, &tags, epochs, seed, threads);
+    let dir = out_dir(flags);
+    report::write_csv(
+        &dir.join(format!("cnn_{name}.csv")),
+        &["dataset", "config", "test_accuracy", "test_loss", "seconds"],
+        &report::runs_csv_rows(&recs),
+    )?;
+    for r in &recs {
+        println!(
+            "  {:<10} test acc {:.4}  loss {:.4}  ({:.1}s)",
+            r.tag.label(),
+            r.test_accuracy,
+            r.test_loss,
+            r.seconds
+        );
+    }
+    println!("CNN results → {}/cnn_{name}.csv", dir.display());
     Ok(())
 }
 

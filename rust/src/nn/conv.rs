@@ -1,0 +1,1006 @@
+//! Backend-generic 2-D convolution and pooling with manual backprop,
+//! plus a LeNet-style CNN workload.
+//!
+//! Convolution forward/backward lower onto the row-parallel matmul engine
+//! via im2col/col2im ([`crate::tensor::im2col`]), exactly the route
+//! Miyashita et al. and the approximate-tensor-ops line of work take: the
+//! receptive-field patches become matmul rows, so every number system the
+//! engine supports (float, linear fixed point, LNS LUT/bit-shift) gets
+//! convolution — with rayon parallelism and serial↔parallel bit-exactness
+//! — without a single new arithmetic primitive. Pooling is the one place
+//! convolution needs an op matmul doesn't: the *log-domain compare* of
+//! [`crate::tensor::Backend::gt`], which in LNS is a free integer compare
+//! (max pooling) paired with a single ⊡ rescale (average pooling).
+//!
+//! As with the MLP, autodiff is impossible through the discrete LNS ops,
+//! so the backward pass is written out in backend ⊞/⊡: the float backend
+//! recovers textbook conv backprop, which the tests exploit as a gradient
+//! oracle.
+
+use super::init::InitScheme;
+use super::mlp::{Dense, Gradients, StepStats};
+use crate::rng::SplitMix64;
+use crate::tensor::im2col::{self, ConvShape};
+use crate::tensor::{ops, Backend, Tensor};
+
+/// Which engine path a conv op runs on. `Auto` lets each lowered matmul
+/// dispatch on problem size; `Serial`/`Par` force one path end to end.
+/// All three produce bit-identical results (see
+/// `tests/parallel_determinism.rs`), so the explicit modes exist for
+/// benchmarking and for proving exactly that.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum Mode {
+    Serial,
+    Par,
+    Auto,
+}
+
+/// Mode-dispatched `C = A·B`.
+fn mm<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>, mode: Mode) -> Tensor<B::E> {
+    match mode {
+        Mode::Serial => ops::matmul_serial(b, a, w),
+        Mode::Par => ops::matmul_par(b, a, w),
+        Mode::Auto => ops::matmul(b, a, w),
+    }
+}
+
+/// Mode-dispatched `C = Aᵀ·B` (gradient outer product).
+fn mm_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>, mode: Mode) -> Tensor<B::E> {
+    match mode {
+        Mode::Serial => ops::matmul_at_serial(b, a, w),
+        Mode::Par => ops::matmul_at_par(b, a, w),
+        Mode::Auto => ops::matmul_at(b, a, w),
+    }
+}
+
+/// Mode-dispatched `C = A·Bᵀ` (delta back-propagation).
+fn mm_bt<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>, mode: Mode) -> Tensor<B::E> {
+    match mode {
+        Mode::Serial => ops::matmul_bt_serial(b, a, w),
+        Mode::Par => ops::matmul_bt_par(b, a, w),
+        Mode::Auto => ops::matmul_bt(b, a, w),
+    }
+}
+
+/// Permute matmul output `[batch·OH·OW, C]` (patch-major) into CHW image
+/// rows `[batch, C·OH·OW]`. Pure data movement — no arithmetic.
+fn patch_rows_to_images<B: Backend>(
+    backend: &B,
+    y_cols: &Tensor<B::E>,
+    batch: usize,
+    oh: usize,
+    ow: usize,
+    c: usize,
+) -> Tensor<B::E> {
+    let hw = oh * ow;
+    debug_assert_eq!(y_cols.rows, batch * hw);
+    debug_assert_eq!(y_cols.cols, c);
+    let mut out = Tensor::full(batch, c * hw, backend.zero());
+    for s in 0..batch {
+        let orow = out.row_mut(s);
+        for p in 0..hw {
+            for (ch, &v) in y_cols.row(s * hw + p).iter().enumerate() {
+                orow[ch * hw + p] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Inverse permutation of [`patch_rows_to_images`]: CHW image rows
+/// `[batch, C·OH·OW]` into patch-major `[batch·OH·OW, C]`.
+fn images_to_patch_rows<B: Backend>(
+    backend: &B,
+    y: &Tensor<B::E>,
+    oh: usize,
+    ow: usize,
+    c: usize,
+) -> Tensor<B::E> {
+    let hw = oh * ow;
+    debug_assert_eq!(y.cols, c * hw);
+    let batch = y.rows;
+    let mut out = Tensor::full(batch * hw, c, backend.zero());
+    for s in 0..batch {
+        let yrow = y.row(s);
+        for p in 0..hw {
+            let orow = out.row_mut(s * hw + p);
+            for (ch, o) in orow.iter_mut().enumerate() {
+                *o = yrow[ch * hw + p];
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Conv2d
+// ---------------------------------------------------------------------
+
+/// One 2-D convolution layer's parameters, stored in im2col layout so
+/// forward is a single matmul.
+#[derive(Clone, Debug)]
+pub struct Conv2d<E> {
+    /// Input geometry + kernel/stride/padding.
+    pub shape: ConvShape,
+    /// Output channels.
+    pub out_c: usize,
+    /// `[patch_len, out_c]` kernel matrix; row `(c·k_h + ky)·k_w + kx`
+    /// holds that tap across all output channels.
+    pub w: Tensor<E>,
+    /// `[out_c]` bias.
+    pub b: Vec<E>,
+}
+
+impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
+    /// Initialize with the given scheme; fan-in is the receptive-field
+    /// size `C·k_h·k_w`, exactly as for a dense layer of that width.
+    pub fn init<B: Backend<E = E>>(
+        backend: &B,
+        shape: ConvShape,
+        out_c: usize,
+        scheme: InitScheme,
+        rng: &mut SplitMix64,
+    ) -> Self {
+        let d = Dense::init(backend, shape.patch_len(), out_c, scheme, rng);
+        Conv2d { shape, out_c, w: d.w, b: d.b }
+    }
+
+    /// Number of scalar parameters.
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn forward_mode<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        mode: Mode,
+    ) -> (Tensor<E>, Tensor<E>) {
+        assert_eq!(x.cols, self.shape.in_len(), "conv input width mismatch");
+        let cols = match mode {
+            Mode::Serial => im2col::im2col_serial(backend, x, &self.shape),
+            Mode::Par => im2col::im2col_par(backend, x, &self.shape),
+            Mode::Auto => im2col::im2col(backend, x, &self.shape),
+        };
+        let mut y_cols = mm(backend, &cols, &self.w, mode);
+        // Row-broadcast bias: bit-identical on either engine path.
+        ops::add_bias(backend, &mut y_cols, &self.b);
+        let y = patch_rows_to_images(
+            backend,
+            &y_cols,
+            x.rows,
+            self.shape.out_h(),
+            self.shape.out_w(),
+            self.out_c,
+        );
+        (cols, y)
+    }
+
+    /// Forward pass: returns `(cols, y)` where `cols` is the im2col patch
+    /// matrix (cached for backward) and `y` is the `[batch, out_c·OH·OW]`
+    /// pre-activation in CHW layout. Auto-dispatches each lowered matmul.
+    pub fn forward<B: Backend<E = E>>(&self, backend: &B, x: &Tensor<E>) -> (Tensor<E>, Tensor<E>) {
+        self.forward_mode(backend, x, Mode::Auto)
+    }
+
+    /// [`Conv2d::forward`] forced onto the serial engine path.
+    pub fn forward_serial<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+    ) -> (Tensor<E>, Tensor<E>) {
+        self.forward_mode(backend, x, Mode::Serial)
+    }
+
+    /// [`Conv2d::forward`] forced onto the rayon-parallel engine path.
+    pub fn forward_par<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+    ) -> (Tensor<E>, Tensor<E>) {
+        self.forward_mode(backend, x, Mode::Par)
+    }
+
+    fn backward_mode<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        cols: &Tensor<E>,
+        upstream: &Tensor<E>,
+        need_dx: bool,
+        mode: Mode,
+    ) -> (Tensor<E>, Vec<E>, Option<Tensor<E>>) {
+        let batch = upstream.rows;
+        assert_eq!(upstream.cols, self.shape.out_len(self.out_c), "conv upstream width mismatch");
+        assert_eq!(cols.rows, batch * self.shape.patches_per_image(), "conv cache row mismatch");
+        let d_cols = images_to_patch_rows(
+            backend,
+            upstream,
+            self.shape.out_h(),
+            self.shape.out_w(),
+            self.out_c,
+        );
+        // dW = colsᵀ·δ — the gradient outer product over all patches.
+        let dw = mm_at(backend, cols, &d_cols, mode);
+        // db = Σ_patches δ (row-ascending reduction, part of the spec).
+        let db = ops::col_sum(backend, &d_cols);
+        // dX = col2im(δ·Wᵀ): route each patch gradient back through the
+        // receptive field it came from.
+        let dx = if need_dx {
+            let d_patches = mm_bt(backend, &d_cols, &self.w, mode);
+            Some(match mode {
+                Mode::Serial => im2col::col2im_serial(backend, &d_patches, &self.shape, batch),
+                Mode::Par => im2col::col2im_par(backend, &d_patches, &self.shape, batch),
+                Mode::Auto => im2col::col2im(backend, &d_patches, &self.shape, batch),
+            })
+        } else {
+            None
+        };
+        (dw, db, dx)
+    }
+
+    /// Backward pass from the cached patch matrix and the upstream
+    /// gradient (CHW layout, same shape as the forward output). Returns
+    /// `(dW, db, dX)` as **raw sums over the batch** — averaging is the
+    /// model's job, mirroring the MLP. `dX` is skipped (None) when
+    /// `need_dx` is false (first layer).
+    pub fn backward<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        cols: &Tensor<E>,
+        upstream: &Tensor<E>,
+        need_dx: bool,
+    ) -> (Tensor<E>, Vec<E>, Option<Tensor<E>>) {
+        self.backward_mode(backend, cols, upstream, need_dx, Mode::Auto)
+    }
+
+    /// [`Conv2d::backward`] forced onto the serial engine path.
+    pub fn backward_serial<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        cols: &Tensor<E>,
+        upstream: &Tensor<E>,
+        need_dx: bool,
+    ) -> (Tensor<E>, Vec<E>, Option<Tensor<E>>) {
+        self.backward_mode(backend, cols, upstream, need_dx, Mode::Serial)
+    }
+
+    /// [`Conv2d::backward`] forced onto the rayon-parallel engine path.
+    pub fn backward_par<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        cols: &Tensor<E>,
+        upstream: &Tensor<E>,
+        need_dx: bool,
+    ) -> (Tensor<E>, Vec<E>, Option<Tensor<E>>) {
+        self.backward_mode(backend, cols, upstream, need_dx, Mode::Par)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pooling
+// ---------------------------------------------------------------------
+
+/// Pooling flavour.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Window maximum under the backend's signed order
+    /// ([`Backend::gt`] — a free integer compare in LNS).
+    Max,
+    /// Window mean: ⊞-sum then one ⊡ by the encoded `1/k²`.
+    Avg,
+}
+
+/// A 2-D pooling layer (square window, per-channel, CHW layout). Kept
+/// serial: pooling is a vanishing fraction of a step next to the lowered
+/// matmuls, and a fixed scan order keeps it trivially deterministic.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Pool2d {
+    /// Channels (pooled independently).
+    pub channels: usize,
+    /// Input height.
+    pub in_h: usize,
+    /// Input width.
+    pub in_w: usize,
+    /// Window side length.
+    pub k: usize,
+    /// Stride (defaults to `k` via the constructors: non-overlapping).
+    pub stride: usize,
+    /// Max or average.
+    pub kind: PoolKind,
+}
+
+impl Pool2d {
+    /// Non-overlapping max pool with a `k×k` window.
+    pub fn max(channels: usize, in_h: usize, in_w: usize, k: usize) -> Self {
+        Pool2d { channels, in_h, in_w, k, stride: k, kind: PoolKind::Max }
+    }
+
+    /// Non-overlapping average pool with a `k×k` window.
+    pub fn avg(channels: usize, in_h: usize, in_w: usize, k: usize) -> Self {
+        Pool2d { channels, in_h, in_w, k, stride: k, kind: PoolKind::Avg }
+    }
+
+    /// Output height `(H − k)/s + 1` (rows the windows don't reach are
+    /// dropped, and correspondingly receive zero gradient). Panics with
+    /// the geometry error — not a usize underflow — when the window
+    /// exceeds the input, which otherwise surfaces as a far-away
+    /// capacity panic from `CnnArch::flat_len` on too-small archs.
+    pub fn out_h(&self) -> usize {
+        assert!(
+            self.k >= 1 && self.stride >= 1 && self.k <= self.in_h,
+            "pool window {} exceeds input height {}",
+            self.k,
+            self.in_h
+        );
+        (self.in_h - self.k) / self.stride + 1
+    }
+
+    /// Output width `(W − k)/s + 1` (same guard as [`Pool2d::out_h`]).
+    pub fn out_w(&self) -> usize {
+        assert!(
+            self.k >= 1 && self.stride >= 1 && self.k <= self.in_w,
+            "pool window {} exceeds input width {}",
+            self.k,
+            self.in_w
+        );
+        (self.in_w - self.k) / self.stride + 1
+    }
+
+    /// Flattened input row width.
+    pub fn in_len(&self) -> usize {
+        self.channels * self.in_h * self.in_w
+    }
+
+    /// Flattened output row width.
+    pub fn out_len(&self) -> usize {
+        self.channels * self.out_h() * self.out_w()
+    }
+
+    /// Forward pass over `[batch, C·H·W]` rows. Returns the pooled
+    /// `[batch, C·OH·OW]` tensor and, for Max, the per-output flat input
+    /// index that won each window (first maximum on ties — fixed scan
+    /// order) — the backward routing table. Empty for Avg.
+    pub fn forward<B: Backend>(&self, backend: &B, x: &Tensor<B::E>) -> (Tensor<B::E>, Vec<usize>) {
+        assert_eq!(x.cols, self.in_len(), "pool input width mismatch");
+        assert!(self.k >= 1 && self.stride >= 1 && self.k <= self.in_h && self.k <= self.in_w);
+        let (oh, ow) = (self.out_h(), self.out_w());
+        let out_len = self.out_len();
+        let mut out = Tensor::full(x.rows, out_len, backend.zero());
+        let mut route =
+            if self.kind == PoolKind::Max { vec![0usize; x.rows * out_len] } else { Vec::new() };
+        let inv = backend.encode(1.0 / (self.k * self.k) as f64);
+        for s in 0..x.rows {
+            let xrow = x.row(s);
+            let orow = out.row_mut(s);
+            for c in 0..self.channels {
+                let base = c * self.in_h * self.in_w;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let o = (c * oh + oy) * ow + ox;
+                        let top = base + oy * self.stride * self.in_w + ox * self.stride;
+                        match self.kind {
+                            PoolKind::Max => {
+                                let mut best_idx = top;
+                                let mut best = xrow[top];
+                                for ky in 0..self.k {
+                                    for kx in 0..self.k {
+                                        let idx = top + ky * self.in_w + kx;
+                                        if backend.gt(xrow[idx], best) {
+                                            best = xrow[idx];
+                                            best_idx = idx;
+                                        }
+                                    }
+                                }
+                                orow[o] = best;
+                                route[s * out_len + o] = best_idx;
+                            }
+                            PoolKind::Avg => {
+                                let mut acc = backend.zero();
+                                for ky in 0..self.k {
+                                    for kx in 0..self.k {
+                                        acc = backend.add(acc, xrow[top + ky * self.in_w + kx]);
+                                    }
+                                }
+                                orow[o] = backend.mul(acc, inv);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (out, route)
+    }
+
+    /// Backward pass: Max routes each upstream gradient to its recorded
+    /// argmax cell; Avg spreads `upstream ⊡ 1/k²` over the window. Both
+    /// ⊞-accumulate in the forward scan order.
+    pub fn backward<B: Backend>(
+        &self,
+        backend: &B,
+        route: &[usize],
+        upstream: &Tensor<B::E>,
+    ) -> Tensor<B::E> {
+        let out_len = self.out_len();
+        assert_eq!(upstream.cols, out_len, "pool upstream width mismatch");
+        if self.kind == PoolKind::Max {
+            assert_eq!(route.len(), upstream.rows * out_len, "pool route length mismatch");
+        }
+        let (oh, ow) = (self.out_h(), self.out_w());
+        let mut dx = Tensor::full(upstream.rows, self.in_len(), backend.zero());
+        let inv = backend.encode(1.0 / (self.k * self.k) as f64);
+        for s in 0..upstream.rows {
+            let urow = upstream.row(s);
+            let drow = dx.row_mut(s);
+            match self.kind {
+                PoolKind::Max => {
+                    for (o, &u) in urow.iter().enumerate() {
+                        let t = route[s * out_len + o];
+                        drow[t] = backend.add(drow[t], u);
+                    }
+                }
+                PoolKind::Avg => {
+                    for c in 0..self.channels {
+                        let base = c * self.in_h * self.in_w;
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let o = (c * oh + oy) * ow + ox;
+                                let g = backend.mul(urow[o], inv);
+                                let top = base + oy * self.stride * self.in_w + ox * self.stride;
+                                for ky in 0..self.k {
+                                    for kx in 0..self.k {
+                                        let idx = top + ky * self.in_w + kx;
+                                        drow[idx] = backend.add(drow[idx], g);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+}
+
+// ---------------------------------------------------------------------
+// LeNet-style CNN
+// ---------------------------------------------------------------------
+
+/// Architecture of the conv–pool–conv–pool–dense–dense CNN.
+#[derive(Clone, Debug)]
+pub struct CnnArch {
+    /// Input channels.
+    pub in_c: usize,
+    /// Input height.
+    pub in_h: usize,
+    /// Input width.
+    pub in_w: usize,
+    /// Conv-1 output channels.
+    pub c1: usize,
+    /// Conv-2 output channels.
+    pub c2: usize,
+    /// Conv kernel side (both layers, stride 1).
+    pub k: usize,
+    /// Conv zero padding (both layers).
+    pub pad: usize,
+    /// Pool window = stride (both layers).
+    pub pool: usize,
+    /// Pooling flavour (Max for the workload; Avg is smooth everywhere,
+    /// which the finite-difference gradient oracle exploits).
+    pub pool_kind: PoolKind,
+    /// Hidden dense width.
+    pub hidden: usize,
+    /// Output classes.
+    pub classes: usize,
+}
+
+impl CnnArch {
+    /// LeNet-style defaults for square single-channel `side×side` inputs:
+    /// 5×5 kernels with pad 2 (shape-preserving), 2×2 max pools.
+    pub fn lenet(side: usize, classes: usize) -> Self {
+        CnnArch {
+            in_c: 1,
+            in_h: side,
+            in_w: side,
+            c1: 6,
+            c2: 12,
+            k: 5,
+            pad: 2,
+            pool: 2,
+            pool_kind: PoolKind::Max,
+            hidden: 64,
+            classes,
+        }
+    }
+
+    /// Flattened input width `C·H·W`.
+    pub fn input_len(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    /// Conv-1 geometry.
+    pub fn conv1_shape(&self) -> ConvShape {
+        ConvShape {
+            in_c: self.in_c,
+            in_h: self.in_h,
+            in_w: self.in_w,
+            k_h: self.k,
+            k_w: self.k,
+            stride: 1,
+            pad: self.pad,
+        }
+    }
+
+    /// Pool-1 geometry (over conv-1's output map).
+    pub fn pool1(&self) -> Pool2d {
+        let s = self.conv1_shape();
+        Pool2d {
+            channels: self.c1,
+            in_h: s.out_h(),
+            in_w: s.out_w(),
+            k: self.pool,
+            stride: self.pool,
+            kind: self.pool_kind,
+        }
+    }
+
+    /// Conv-2 geometry (over pool-1's output map).
+    pub fn conv2_shape(&self) -> ConvShape {
+        let p = self.pool1();
+        ConvShape {
+            in_c: self.c1,
+            in_h: p.out_h(),
+            in_w: p.out_w(),
+            k_h: self.k,
+            k_w: self.k,
+            stride: 1,
+            pad: self.pad,
+        }
+    }
+
+    /// Pool-2 geometry (over conv-2's output map).
+    pub fn pool2(&self) -> Pool2d {
+        let s = self.conv2_shape();
+        Pool2d {
+            channels: self.c2,
+            in_h: s.out_h(),
+            in_w: s.out_w(),
+            k: self.pool,
+            stride: self.pool,
+            kind: self.pool_kind,
+        }
+    }
+
+    /// Flattened width entering the dense head.
+    pub fn flat_len(&self) -> usize {
+        self.pool2().out_len()
+    }
+}
+
+/// Intermediate activations of one CNN forward pass (backprop inputs).
+#[derive(Clone, Debug)]
+pub struct CnnCache<E> {
+    /// Conv-1 im2col patches.
+    pub cols1: Tensor<E>,
+    /// Conv-1 pre-activation.
+    pub z1: Tensor<E>,
+    /// Pool-1 output (conv-1 activation, pooled).
+    pub p1: Tensor<E>,
+    /// Pool-1 max routing.
+    pub route1: Vec<usize>,
+    /// Conv-2 im2col patches.
+    pub cols2: Tensor<E>,
+    /// Conv-2 pre-activation.
+    pub z2: Tensor<E>,
+    /// Pool-2 output — the flattened dense-head input.
+    pub p2: Tensor<E>,
+    /// Pool-2 max routing.
+    pub route2: Vec<usize>,
+    /// Dense hidden pre-activation.
+    pub zf: Tensor<E>,
+    /// Dense hidden activation.
+    pub af: Tensor<E>,
+    /// Head logits.
+    pub logits: Tensor<E>,
+}
+
+/// The LeNet-style CNN: conv–pool–conv–pool–dense–dense, llReLU hidden
+/// activations, linear head feeding the backend's log-domain soft-max/CE.
+#[derive(Clone, Debug)]
+pub struct Cnn<E> {
+    /// Architecture (fixes every derived geometry).
+    pub arch: CnnArch,
+    /// First convolution.
+    pub conv1: Conv2d<E>,
+    /// Second convolution.
+    pub conv2: Conv2d<E>,
+    /// Hidden dense layer.
+    pub fc1: Dense<E>,
+    /// Classifier head.
+    pub fc2: Dense<E>,
+}
+
+impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
+    /// Initialize all four layers with the given scheme.
+    pub fn init<B: Backend<E = E>>(
+        backend: &B,
+        arch: &CnnArch,
+        scheme: InitScheme,
+        rng: &mut SplitMix64,
+    ) -> Self {
+        let conv1 = Conv2d::init(backend, arch.conv1_shape(), arch.c1, scheme, rng);
+        let conv2 = Conv2d::init(backend, arch.conv2_shape(), arch.c2, scheme, rng);
+        let fc1 = Dense::init(backend, arch.flat_len(), arch.hidden, scheme, rng);
+        let fc2 = Dense::init(backend, arch.hidden, arch.classes, scheme, rng);
+        Cnn { arch: arch.clone(), conv1, conv2, fc1, fc2 }
+    }
+
+    /// Number of scalar parameters.
+    pub fn param_count(&self) -> usize {
+        self.conv1.param_count()
+            + self.conv2.param_count()
+            + self.fc1.w.len()
+            + self.fc1.b.len()
+            + self.fc2.w.len()
+            + self.fc2.b.len()
+    }
+
+    fn forward_mode<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        mode: Mode,
+    ) -> CnnCache<E> {
+        assert_eq!(x.cols, self.arch.input_len(), "CNN input width mismatch");
+        let (cols1, z1) = self.conv1.forward_mode(backend, x, mode);
+        let a1 = ops::leaky_relu(backend, &z1);
+        let (p1, route1) = self.arch.pool1().forward(backend, &a1);
+        let (cols2, z2) = self.conv2.forward_mode(backend, &p1, mode);
+        let a2 = ops::leaky_relu(backend, &z2);
+        let (p2, route2) = self.arch.pool2().forward(backend, &a2);
+        let mut zf = mm(backend, &p2, &self.fc1.w, mode);
+        ops::add_bias(backend, &mut zf, &self.fc1.b);
+        let af = ops::leaky_relu(backend, &zf);
+        let mut logits = mm(backend, &af, &self.fc2.w, mode);
+        ops::add_bias(backend, &mut logits, &self.fc2.b);
+        CnnCache { cols1, z1, p1, route1, cols2, z2, p2, route2, zf, af, logits }
+    }
+
+    /// Full forward pass with caches for backprop.
+    pub fn forward<B: Backend<E = E>>(&self, backend: &B, x: &Tensor<E>) -> CnnCache<E> {
+        self.forward_mode(backend, x, Mode::Auto)
+    }
+
+    /// Logits only (inference path).
+    pub fn logits<B: Backend<E = E>>(&self, backend: &B, x: &Tensor<E>) -> Tensor<E> {
+        self.forward(backend, x).logits
+    }
+
+    /// Predicted class per row.
+    pub fn predict<B: Backend<E = E>>(&self, backend: &B, x: &Tensor<E>) -> Vec<usize> {
+        let logits = self.logits(backend, x);
+        (0..logits.rows).map(|i| ops::argmax_row(backend, logits.row(i))).collect()
+    }
+
+    /// Full training-step math: forward, soft-max CE gradient init
+    /// (Eq. 13/14), manual backprop through dense, pool and conv layers,
+    /// gradient averaging over the batch. Gradient layer order:
+    /// `[conv1, conv2, fc1, fc2]`. Does **not** update parameters — that
+    /// is [`super::SgdConfig::apply_cnn`].
+    pub fn backprop<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        labels: &[usize],
+    ) -> (Gradients<E>, StepStats) {
+        let batch = x.rows;
+        assert_eq!(labels.len(), batch);
+        let cache = self.forward(backend, x);
+        let classes = self.arch.classes;
+
+        // δ_head = p − y per row, plus loss/accuracy bookkeeping. Serial:
+        // training batches are the paper's mini-batches (≈5 rows);
+        // batched evaluation goes through `train::metrics` instead.
+        let mut delta = Tensor::full(batch, classes, backend.zero());
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = cache.logits.row(i);
+            loss -= backend.softmax_ce_grad(row, labels[i], delta.row_mut(i));
+            if ops::argmax_row(backend, row) == labels[i] {
+                correct += 1;
+            }
+        }
+        let inv_b = 1.0 / batch as f64;
+
+        // Head: dW = afᵀ·δ, db = Σ δ, δ ← (δ·W₂ᵀ) ⊙ act'(zf).
+        let mut dw_fc2 = ops::matmul_at(backend, &cache.af, &delta);
+        ops::scale(backend, &mut dw_fc2, inv_b);
+        let mut db_fc2 = Tensor::from_vec(1, classes, ops::col_sum(backend, &delta));
+        ops::scale(backend, &mut db_fc2, inv_b);
+        let back = ops::matmul_bt(backend, &delta, &self.fc2.w);
+        let d_hidden = ops::leaky_relu_bwd(backend, &cache.zf, &back);
+
+        // Hidden dense: dW = p₂ᵀ·δ, then δ leaves the dense head as the
+        // flattened pool-2 gradient.
+        let mut dw_fc1 = ops::matmul_at(backend, &cache.p2, &d_hidden);
+        ops::scale(backend, &mut dw_fc1, inv_b);
+        let mut db_fc1 = Tensor::from_vec(1, self.arch.hidden, ops::col_sum(backend, &d_hidden));
+        ops::scale(backend, &mut db_fc1, inv_b);
+        let d_p2 = ops::matmul_bt(backend, &d_hidden, &self.fc1.w);
+
+        // Pool-2 → llReLU → conv-2.
+        let d_a2 = self.arch.pool2().backward(backend, &cache.route2, &d_p2);
+        let d_z2 = ops::leaky_relu_bwd(backend, &cache.z2, &d_a2);
+        let (mut dw2, db2, d_p1) = self.conv2.backward(backend, &cache.cols2, &d_z2, true);
+        ops::scale(backend, &mut dw2, inv_b);
+        let mut db2 = Tensor::from_vec(1, self.arch.c2, db2);
+        ops::scale(backend, &mut db2, inv_b);
+        let d_p1 = d_p1.expect("conv2 backward with need_dx");
+
+        // Pool-1 → llReLU → conv-1 (input gradient not needed).
+        let d_a1 = self.arch.pool1().backward(backend, &cache.route1, &d_p1);
+        let d_z1 = ops::leaky_relu_bwd(backend, &cache.z1, &d_a1);
+        let (mut dw1, db1, _) = self.conv1.backward(backend, &cache.cols1, &d_z1, false);
+        ops::scale(backend, &mut dw1, inv_b);
+        let mut db1 = Tensor::from_vec(1, self.arch.c1, db1);
+        ops::scale(backend, &mut db1, inv_b);
+
+        (
+            Gradients {
+                dw: vec![dw1, dw2, dw_fc1, dw_fc2],
+                db: vec![db1.data, db2.data, db_fc1.data, db_fc2.data],
+            },
+            StepStats { loss: loss * inv_b, accuracy: correct as f64 * inv_b },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatBackend;
+
+    fn fb() -> FloatBackend {
+        FloatBackend::default()
+    }
+
+    /// Naive direct convolution in f32, same CHW/kernel layout as the
+    /// im2col lowering — the correctness reference.
+    fn conv_naive(x: &Tensor<f32>, layer: &Conv2d<f32>) -> Tensor<f32> {
+        let s = &layer.shape;
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let mut out = Tensor::full(x.rows, s.out_len(layer.out_c), 0.0f32);
+        for smp in 0..x.rows {
+            for co in 0..layer.out_c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = layer.b[co];
+                        for c in 0..s.in_c {
+                            for ky in 0..s.k_h {
+                                for kx in 0..s.k_w {
+                                    let y = (oy * s.stride + ky) as isize - s.pad as isize;
+                                    let xx = (ox * s.stride + kx) as isize - s.pad as isize;
+                                    if y >= 0
+                                        && (y as usize) < s.in_h
+                                        && xx >= 0
+                                        && (xx as usize) < s.in_w
+                                    {
+                                        let xi = (c * s.in_h + y as usize) * s.in_w + xx as usize;
+                                        let wi = (c * s.k_h + ky) * s.k_w + kx;
+                                        acc += x.at(smp, xi) * layer.w.at(wi, co);
+                                    }
+                                }
+                            }
+                        }
+                        *out.at_mut(smp, (co * oh + oy) * ow + ox) = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_forward_matches_naive_reference() {
+        let b = fb();
+        let mut rng = SplitMix64::new(42);
+        let cases = [(1usize, 5usize, 3usize, 1usize, 2usize), (2, 6, 3, 0, 3), (3, 4, 1, 0, 4)];
+        for (in_c, side, k, pad, out_c) in cases {
+            let shape = ConvShape::square(in_c, side, k, 1, pad);
+            let layer = Conv2d::init(&b, shape, out_c, InitScheme::HeNormal, &mut rng);
+            let x = Tensor::from_vec(
+                3,
+                shape.in_len(),
+                (0..3 * shape.in_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+            );
+            let (_, y) = layer.forward(&b, &x);
+            let want = conv_naive(&x, &layer);
+            assert_eq!(y.rows, want.rows);
+            assert_eq!(y.cols, want.cols);
+            for (a, w) in y.data.iter().zip(&want.data) {
+                assert!((a - w).abs() < 1e-4, "conv {in_c}x{side} k{k}: {a} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_backward_is_exact_for_linear_loss() {
+        // Conv output is linear in W, b and x, so with upstream ≡ 1 the
+        // analytic gradients equal finite differences up to float
+        // rounding — an exact oracle for the im2col/col2im plumbing.
+        let b = fb();
+        let mut rng = SplitMix64::new(7);
+        let shape = ConvShape::square(2, 5, 3, 1, 1);
+        let mut layer = Conv2d::init(&b, shape, 3, InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(
+            2,
+            shape.in_len(),
+            (0..2 * shape.in_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let ones = Tensor::full(2, shape.out_len(3), 1.0f32);
+        let (cols, _) = layer.forward(&b, &x);
+        let (dw, db, dx) = layer.backward(&b, &cols, &ones, true);
+        let dx = dx.unwrap();
+        let loss = |layer: &Conv2d<f32>, x: &Tensor<f32>| -> f64 {
+            let (_, y) = layer.forward(&b, x);
+            y.data.iter().map(|&v| v as f64).sum()
+        };
+        let eps = 1e-2f32;
+        for wi in [0usize, 7, 25, dw.len() - 1] {
+            let orig = layer.w.data[wi];
+            layer.w.data[wi] = orig + eps;
+            let lp = loss(&layer, &x);
+            layer.w.data[wi] = orig - eps;
+            let lm = loss(&layer, &x);
+            layer.w.data[wi] = orig;
+            let num = (lp - lm) / (2.0 * eps as f64);
+            let ana = dw.data[wi] as f64;
+            assert!((num - ana).abs() < 1e-2 * (1.0 + num.abs()), "dW[{wi}]: {num} vs {ana}");
+        }
+        // Bias gradient: every output position contributes 1.
+        let patches = 2.0 * shape.patches_per_image() as f64;
+        for &g in &db {
+            assert!((g as f64 - patches).abs() < 1e-2, "db: {g} vs {patches}");
+        }
+        // Input gradient via finite differences on x.
+        let mut xp = x.clone();
+        for xi in [0usize, 13, shape.in_len() - 1] {
+            let orig = xp.data[xi];
+            xp.data[xi] = orig + eps;
+            let lp = loss(&layer, &xp);
+            xp.data[xi] = orig - eps;
+            let lm = loss(&layer, &xp);
+            xp.data[xi] = orig;
+            let num = (lp - lm) / (2.0 * eps as f64);
+            let ana = dx.data[xi] as f64;
+            assert!((num - ana).abs() < 1e-2 * (1.0 + num.abs()), "dX[{xi}]: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn maxpool_forward_and_routing() {
+        let b = fb();
+        let pool = Pool2d::max(1, 4, 4, 2);
+        #[rustfmt::skip]
+        let x = Tensor::from_vec(1, 16, vec![
+            1.0f32, 2.0, 0.0, 0.0,
+            3.0, 4.0, 0.0, 5.0,
+            0.0, 0.0, -1.0, -2.0,
+            0.0, 0.0, -3.0, -4.0,
+        ]);
+        let (y, route) = pool.forward(&b, &x);
+        assert_eq!(y.data, vec![4.0, 5.0, 0.0, -1.0]);
+        assert_eq!(route, vec![5, 7, 8, 10]);
+        // Backward routes upstream to the argmax cells only.
+        let up = Tensor::from_vec(1, 4, vec![1.0f32, 2.0, 3.0, 4.0]);
+        let dx = pool.backward(&b, &route, &up);
+        let mut want = vec![0.0f32; 16];
+        want[5] = 1.0;
+        want[7] = 2.0;
+        want[8] = 3.0;
+        want[10] = 4.0;
+        assert_eq!(dx.data, want);
+    }
+
+    #[test]
+    fn maxpool_ties_take_first_in_scan_order() {
+        let b = fb();
+        let pool = Pool2d::max(1, 2, 2, 2);
+        let x = Tensor::from_vec(1, 4, vec![7.0f32, 7.0, 7.0, 7.0]);
+        let (y, route) = pool.forward(&b, &x);
+        assert_eq!(y.data, vec![7.0]);
+        assert_eq!(route, vec![0], "strict gt keeps the first maximum");
+    }
+
+    #[test]
+    fn avgpool_forward_and_conservation() {
+        let b = fb();
+        let pool = Pool2d::avg(2, 4, 4, 2);
+        let mut rng = SplitMix64::new(9);
+        let x = Tensor::from_vec(
+            3,
+            pool.in_len(),
+            (0..3 * pool.in_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let (y, route) = pool.forward(&b, &x);
+        assert!(route.is_empty());
+        // Each output is the window mean.
+        let mean00 = (x.at(0, 0) + x.at(0, 1) + x.at(0, 4) + x.at(0, 5)) / 4.0;
+        assert!((y.at(0, 0) - mean00).abs() < 1e-6);
+        // Backward conserves mass: Σ dx = Σ upstream (k²·(1/k²) = 1).
+        let up = Tensor::from_vec(
+            3,
+            pool.out_len(),
+            (0..3 * pool.out_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let dx = pool.backward(&b, &route, &up);
+        let su: f64 = up.data.iter().map(|&v| v as f64).sum();
+        let sd: f64 = dx.data.iter().map(|&v| v as f64).sum();
+        assert!((su - sd).abs() < 1e-4, "{su} vs {sd}");
+    }
+
+    #[test]
+    #[should_panic(expected = "pool window")]
+    fn undersized_pool_panics_with_geometry_error() {
+        let _ = Pool2d::max(1, 1, 1, 2).out_h();
+    }
+
+    #[test]
+    fn arch_geometry_chains() {
+        let arch = CnnArch::lenet(28, 10);
+        assert_eq!(arch.conv1_shape().out_h(), 28);
+        assert_eq!(arch.pool1().out_h(), 14);
+        assert_eq!(arch.conv2_shape().out_h(), 14);
+        assert_eq!(arch.pool2().out_h(), 7);
+        assert_eq!(arch.flat_len(), 12 * 49);
+        let small = CnnArch { in_h: 12, in_w: 12, ..CnnArch::lenet(12, 4) };
+        assert_eq!(small.flat_len(), 12 * 9);
+    }
+
+    #[test]
+    fn cnn_forward_shapes_and_backprop_runs() {
+        let b = fb();
+        let mut rng = SplitMix64::new(4);
+        let arch = CnnArch {
+            c1: 3,
+            c2: 4,
+            k: 3,
+            pad: 1,
+            hidden: 10,
+            ..CnnArch::lenet(8, 3)
+        };
+        let cnn = Cnn::init(&b, &arch, InitScheme::HeNormal, &mut rng);
+        let x =
+            Tensor::from_vec(5, 64, (0..5 * 64).map(|_| rng.uniform(0.0, 1.0) as f32).collect());
+        let cache = cnn.forward(&b, &x);
+        assert_eq!(cache.z1.cols, 3 * 64);
+        assert_eq!(cache.p1.cols, 3 * 16);
+        assert_eq!(cache.p2.cols, arch.flat_len());
+        assert_eq!(cache.logits.rows, 5);
+        assert_eq!(cache.logits.cols, 3);
+        let (g, s) = cnn.backprop(&b, &x, &[0, 1, 2, 0, 1]);
+        assert_eq!(g.dw.len(), 4);
+        assert_eq!(g.dw[0].rows, 9);
+        assert_eq!(g.dw[0].cols, 3);
+        assert_eq!(g.db[1].len(), 4);
+        assert!(s.loss > 0.0);
+        assert!(cnn.param_count() > 0);
+    }
+
+    #[test]
+    fn permutations_roundtrip() {
+        let b = fb();
+        let mut rng = SplitMix64::new(6);
+        let (batch, oh, ow, c) = (3usize, 4usize, 5usize, 2usize);
+        let y = Tensor::from_vec(
+            batch,
+            c * oh * ow,
+            (0..batch * c * oh * ow).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let rows = images_to_patch_rows(&b, &y, oh, ow, c);
+        assert_eq!(rows.rows, batch * oh * ow);
+        let back = patch_rows_to_images(&b, &rows, batch, oh, ow, c);
+        assert_eq!(back.data, y.data);
+    }
+}

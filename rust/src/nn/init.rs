@@ -67,7 +67,8 @@ mod tests {
             .into_iter()
             .map(|w| w.abs().max(f64::MIN_POSITIVE).log2())
             .collect();
-        let mut b: Vec<f64> = log_domain_init(&mut r2, 784, n).into_iter().map(|(y, _)| y).collect();
+        let mut b: Vec<f64> =
+            log_domain_init(&mut r2, 784, n).into_iter().map(|(y, _)| y).collect();
         a.sort_by(|x, y| x.partial_cmp(y).unwrap());
         b.sort_by(|x, y| x.partial_cmp(y).unwrap());
         for q in [0.1, 0.25, 0.5, 0.75, 0.9] {

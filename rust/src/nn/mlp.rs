@@ -27,6 +27,37 @@ pub struct Dense<E> {
     pub b: Vec<E>,
 }
 
+impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Dense<E> {
+    /// Initialize one dense layer with the given scheme (bias starts at
+    /// zero). Shared by the MLP and the conv subsystem, which reuses it
+    /// for both its `[patch_len, out_c]` kernels and its fully-connected
+    /// head.
+    pub fn init<B: Backend<E = E>>(
+        backend: &B,
+        fan_in: usize,
+        fan_out: usize,
+        scheme: InitScheme,
+        rng: &mut SplitMix64,
+    ) -> Self {
+        let n = fan_in * fan_out;
+        let data: Vec<E> = match scheme {
+            InitScheme::HeNormal => he_normal_init(rng, fan_in, n)
+                .into_iter()
+                .map(|v| backend.encode(v))
+                .collect(),
+            InitScheme::LogDomain => log_domain_init(rng, fan_in, n)
+                .into_iter()
+                .map(|(y, s)| {
+                    // Encode from the log-domain sample: v = ±2^y.
+                    let mag = y.exp2();
+                    backend.encode(if s { mag } else { -mag })
+                })
+                .collect(),
+        };
+        Dense { w: Tensor::from_vec(fan_in, fan_out, data), b: vec![backend.zero(); fan_out] }
+    }
+}
+
 /// An MLP: hidden layers with leaky-ReLU/llReLU, linear head + soft-max.
 #[derive(Clone, Debug)]
 pub struct Mlp<E> {
@@ -66,26 +97,9 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         assert!(dims.len() >= 2, "need at least input and output dims");
         let mut layers = Vec::with_capacity(dims.len() - 1);
         for l in 0..dims.len() - 1 {
-            let (fan_in, fan_out) = (dims[l], dims[l + 1]);
-            let n = fan_in * fan_out;
-            let data: Vec<E> = match scheme {
-                InitScheme::HeNormal => he_normal_init(rng, fan_in, n)
-                    .into_iter()
-                    .map(|v| backend.encode(v))
-                    .collect(),
-                InitScheme::LogDomain => log_domain_init(rng, fan_in, n)
-                    .into_iter()
-                    .map(|(y, s)| {
-                        // Encode from the log-domain sample: v = ±2^y.
-                        let mag = y.exp2();
-                        backend.encode(if s { mag } else { -mag })
-                    })
-                    .collect(),
-            };
-            layers.push(Dense {
-                w: Tensor::from_vec(fan_in, fan_out, data),
-                b: vec![backend.zero(); fan_out],
-            });
+            // Same per-layer RNG consumption as the seed: one init stream
+            // draw per weight, in layer order.
+            layers.push(Dense::init(backend, dims[l], dims[l + 1], scheme, rng));
         }
         Mlp { dims: dims.to_vec(), layers }
     }

@@ -1,11 +1,14 @@
-//! Neural-network substrate: dense MLPs, weight init, SGD — all generic
-//! over the arithmetic [`Backend`](crate::tensor::Backend) so the same
-//! model definition trains in float, linear fixed point, or LNS.
+//! Neural-network substrate: dense MLPs, the conv/pool subsystem and its
+//! LeNet-style CNN, weight init, SGD — all generic over the arithmetic
+//! [`Backend`](crate::tensor::Backend) so the same model definition
+//! trains in float, linear fixed point, or LNS.
 
+pub mod conv;
 pub mod init;
 pub mod mlp;
 pub mod sgd;
 
+pub use conv::{Cnn, CnnArch, CnnCache, Conv2d, Pool2d, PoolKind};
 pub use init::{he_normal_init, log_domain_init, InitScheme};
-pub use mlp::{Gradients, Mlp, StepStats};
+pub use mlp::{Dense, Gradients, Mlp, StepStats};
 pub use sgd::SgdConfig;

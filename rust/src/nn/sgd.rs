@@ -5,8 +5,9 @@
 //! single fixed-point adds to the magnitude, so the optimizer is
 //! multiplier-free too.
 
+use super::conv::Cnn;
 use super::mlp::{Gradients, Mlp};
-use crate::tensor::Backend;
+use crate::tensor::{Backend, Tensor};
 
 /// SGD hyper-parameters (paper §5: lr = 0.01, mini-batch 5, per-dataset
 /// weight decay).
@@ -26,21 +27,45 @@ impl Default for SgdConfig {
 }
 
 impl SgdConfig {
-    /// Apply one update in-place.
-    pub fn apply<B: Backend>(&self, backend: &B, mlp: &mut Mlp<B::E>, grads: &Gradients<B::E>) {
+    /// The single-layer update shared by every model: `w ← w ⊟ η(g ⊞ λw)`
+    /// for weights, `b ← b ⊟ ηg` for biases (no decay on biases).
+    fn update_layer<B: Backend>(
+        &self,
+        backend: &B,
+        w: &mut Tensor<B::E>,
+        b: &mut [B::E],
+        dw: &Tensor<B::E>,
+        db: &[B::E],
+    ) {
+        debug_assert_eq!(w.len(), dw.len());
+        debug_assert_eq!(b.len(), db.len());
         let lr = backend.encode(self.lr);
         let wd = backend.encode(self.weight_decay);
         let use_wd = self.weight_decay != 0.0;
-        for (layer, (dw, db)) in mlp.layers.iter_mut().zip(grads.dw.iter().zip(&grads.db)) {
-            debug_assert_eq!(layer.w.len(), dw.len());
-            for (w, &g) in layer.w.data.iter_mut().zip(&dw.data) {
-                let g = if use_wd { backend.add(g, backend.mul(wd, *w)) } else { g };
-                *w = backend.sub(*w, backend.mul_update(lr, g));
-            }
-            for (b, &g) in layer.b.iter_mut().zip(db) {
-                *b = backend.sub(*b, backend.mul_update(lr, g));
-            }
+        for (w, &g) in w.data.iter_mut().zip(&dw.data) {
+            let g = if use_wd { backend.add(g, backend.mul(wd, *w)) } else { g };
+            *w = backend.sub(*w, backend.mul_update(lr, g));
         }
+        for (b, &g) in b.iter_mut().zip(db) {
+            *b = backend.sub(*b, backend.mul_update(lr, g));
+        }
+    }
+
+    /// Apply one update in-place.
+    pub fn apply<B: Backend>(&self, backend: &B, mlp: &mut Mlp<B::E>, grads: &Gradients<B::E>) {
+        for (layer, (dw, db)) in mlp.layers.iter_mut().zip(grads.dw.iter().zip(&grads.db)) {
+            self.update_layer(backend, &mut layer.w, &mut layer.b, dw, db);
+        }
+    }
+
+    /// Apply one update to a CNN, matching the gradient layer order of
+    /// [`Cnn::backprop`]: `[conv1, conv2, fc1, fc2]`.
+    pub fn apply_cnn<B: Backend>(&self, backend: &B, cnn: &mut Cnn<B::E>, grads: &Gradients<B::E>) {
+        assert_eq!(grads.dw.len(), 4, "CNN gradients carry four layers");
+        self.update_layer(backend, &mut cnn.conv1.w, &mut cnn.conv1.b, &grads.dw[0], &grads.db[0]);
+        self.update_layer(backend, &mut cnn.conv2.w, &mut cnn.conv2.b, &grads.dw[1], &grads.db[1]);
+        self.update_layer(backend, &mut cnn.fc1.w, &mut cnn.fc1.b, &grads.dw[2], &grads.db[2]);
+        self.update_layer(backend, &mut cnn.fc2.w, &mut cnn.fc2.b, &grads.dw[3], &grads.db[3]);
     }
 }
 

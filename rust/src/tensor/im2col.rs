@@ -1,0 +1,376 @@
+//! im2col/col2im: lowering 2-D convolution onto the matmul engine.
+//!
+//! `im2col` gathers every receptive-field patch of a CHW image batch into
+//! one row of a patch matrix, so conv forward becomes a single
+//! `patches · weights` matmul on the row-parallel engine — rayon
+//! parallelism and the serial↔parallel bit-exactness contract of
+//! [`super::ops`] carry over to convolution for free, in every backend.
+//! `col2im` is the transpose scatter (patch rows ⊞-accumulated back into
+//! image rows), which is exactly the input-gradient lowering.
+//!
+//! Layout conventions (fixed; the conv layers and the naive references in
+//! the tests all share them):
+//!
+//! * image rows are channel-major CHW: pixel `(c, y, x)` lives at column
+//!   `(c·H + y)·W + x`,
+//! * patch rows are `(c, ky, kx)` lexicographic: entry `(c, ky, kx)` lives
+//!   at column `(c·k_h + ky)·k_w + kx`,
+//! * patch row `r` of the output covers sample `r / (OH·OW)`, output pixel
+//!   `((r mod OH·OW) / OW, (r mod OH·OW) mod OW)`.
+//!
+//! `im2col` is a pure gather (padding reads the backend zero word) and
+//! `col2im` accumulates every target cell in patch-ascending, then
+//! entry-ascending order — both are bit-identical between the serial and
+//! rayon paths by construction, because the parallel drivers only
+//! partition *output rows* (patches / samples) across threads.
+
+use super::ops::par_rows_worthwhile;
+use super::{Backend, Tensor};
+use rayon::prelude::*;
+
+/// Geometry of one 2-D convolution lowering.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input channels.
+    pub in_c: usize,
+    /// Input height.
+    pub in_h: usize,
+    /// Input width.
+    pub in_w: usize,
+    /// Kernel height.
+    pub k_h: usize,
+    /// Kernel width.
+    pub k_w: usize,
+    /// Stride (both axes).
+    pub stride: usize,
+    /// Zero padding (both axes, both sides).
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Square-input, square-kernel shape.
+    pub fn square(in_c: usize, side: usize, k: usize, stride: usize, pad: usize) -> Self {
+        ConvShape { in_c, in_h: side, in_w: side, k_h: k, k_w: k, stride, pad }
+    }
+
+    /// Output height `(H + 2p − k_h)/s + 1`.
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k_h) / self.stride + 1
+    }
+
+    /// Output width `(W + 2p − k_w)/s + 1`.
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k_w) / self.stride + 1
+    }
+
+    /// Patch length `C·k_h·k_w` — the matmul inner dimension.
+    pub fn patch_len(&self) -> usize {
+        self.in_c * self.k_h * self.k_w
+    }
+
+    /// Flattened input row width `C·H·W`.
+    pub fn in_len(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    /// Flattened output row width `out_c·OH·OW` for `out_c` channels.
+    pub fn out_len(&self, out_c: usize) -> usize {
+        out_c * self.out_h() * self.out_w()
+    }
+
+    /// Patches per image `OH·OW` — patch-matrix rows per sample.
+    pub fn patches_per_image(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Panic early on geometries the formulas above would silently
+    /// mangle (kernel larger than the padded input, zero stride).
+    fn validate(&self) {
+        assert!(self.stride >= 1, "conv stride must be ≥ 1");
+        assert!(self.in_c >= 1 && self.k_h >= 1 && self.k_w >= 1, "conv dims must be ≥ 1");
+        assert!(
+            self.in_h + 2 * self.pad >= self.k_h && self.in_w + 2 * self.pad >= self.k_w,
+            "conv kernel exceeds padded input"
+        );
+    }
+}
+
+/// Fill one patch row: the `(oy, ox)` receptive field of `xrow`, with
+/// out-of-bounds (padding) entries set to the backend zero word.
+#[inline]
+fn fill_patch<B: Backend>(
+    b: &B,
+    xrow: &[B::E],
+    s: &ConvShape,
+    oy: usize,
+    ox: usize,
+    out: &mut [B::E],
+) {
+    let (ih, iw) = (s.in_h as isize, s.in_w as isize);
+    let mut idx = 0;
+    for c in 0..s.in_c {
+        let base = c * s.in_h * s.in_w;
+        for ky in 0..s.k_h {
+            let y = (oy * s.stride + ky) as isize - s.pad as isize;
+            for kx in 0..s.k_w {
+                let x = (ox * s.stride + kx) as isize - s.pad as isize;
+                out[idx] = if y >= 0 && y < ih && x >= 0 && x < iw {
+                    xrow[base + y as usize * s.in_w + x as usize]
+                } else {
+                    b.zero()
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Gather a `[batch, C·H·W]` image batch into the `[batch·OH·OW,
+/// patch_len]` patch matrix. Dispatches to the rayon patch-row-parallel
+/// path on large problems; both paths are pure gathers and bit-identical.
+pub fn im2col<B: Backend>(b: &B, x: &Tensor<B::E>, s: &ConvShape) -> Tensor<B::E> {
+    if par_rows_worthwhile(x.rows * s.patches_per_image()) {
+        im2col_par(b, x, s)
+    } else {
+        im2col_serial(b, x, s)
+    }
+}
+
+/// Single-thread reference implementation of [`im2col`].
+pub fn im2col_serial<B: Backend>(b: &B, x: &Tensor<B::E>, s: &ConvShape) -> Tensor<B::E> {
+    s.validate();
+    assert_eq!(x.cols, s.in_len(), "im2col input width mismatch");
+    let ppi = s.patches_per_image();
+    let ow = s.out_w();
+    let mut out = Tensor::full(x.rows * ppi, s.patch_len(), b.zero());
+    for r in 0..out.rows {
+        let (sample, p) = (r / ppi, r % ppi);
+        fill_patch(b, x.row(sample), s, p / ow, p % ow, out.row_mut(r));
+    }
+    out
+}
+
+/// Rayon patch-row-parallel [`im2col`], bit-identical to the serial path
+/// (each output row is an independent gather).
+pub fn im2col_par<B: Backend>(b: &B, x: &Tensor<B::E>, s: &ConvShape) -> Tensor<B::E> {
+    s.validate();
+    assert_eq!(x.cols, s.in_len(), "im2col input width mismatch");
+    let ppi = s.patches_per_image();
+    let ow = s.out_w();
+    let plen = s.patch_len();
+    let mut out = Tensor::full(x.rows * ppi, plen, b.zero());
+    out.data.par_chunks_mut(plen).enumerate().for_each(|(r, orow)| {
+        let (sample, p) = (r / ppi, r % ppi);
+        fill_patch(b, x.row(sample), s, p / ow, p % ow, orow);
+    });
+    out
+}
+
+/// ⊞-scatter one sample's patch rows back into its image row. Fixed
+/// reduction order: patches ascending, then patch entries ascending —
+/// every target cell sees the same ⊞ sequence on every path.
+#[inline]
+fn scatter_sample<B: Backend>(
+    b: &B,
+    cols: &Tensor<B::E>,
+    s: &ConvShape,
+    sample: usize,
+    orow: &mut [B::E],
+) {
+    let ppi = s.patches_per_image();
+    let ow = s.out_w();
+    let (ih, iw) = (s.in_h as isize, s.in_w as isize);
+    for p in 0..ppi {
+        let prow = cols.row(sample * ppi + p);
+        let (oy, ox) = (p / ow, p % ow);
+        let mut idx = 0;
+        for c in 0..s.in_c {
+            let base = c * s.in_h * s.in_w;
+            for ky in 0..s.k_h {
+                let y = (oy * s.stride + ky) as isize - s.pad as isize;
+                for kx in 0..s.k_w {
+                    let x = (ox * s.stride + kx) as isize - s.pad as isize;
+                    if y >= 0 && y < ih && x >= 0 && x < iw {
+                        let t = base + y as usize * s.in_w + x as usize;
+                        orow[t] = b.add(orow[t], prow[idx]);
+                    }
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Transpose of [`im2col`]: ⊞-accumulate a `[batch·OH·OW, patch_len]`
+/// patch-gradient matrix back into `[batch, C·H·W]` image rows (the conv
+/// input gradient). Dispatches to the rayon sample-parallel path on large
+/// problems; per-sample scatter order is fixed, so results are
+/// bit-identical.
+pub fn col2im<B: Backend>(b: &B, cols: &Tensor<B::E>, s: &ConvShape, batch: usize) -> Tensor<B::E> {
+    if par_rows_worthwhile(batch) {
+        col2im_par(b, cols, s, batch)
+    } else {
+        col2im_serial(b, cols, s, batch)
+    }
+}
+
+/// Single-thread reference implementation of [`col2im`].
+pub fn col2im_serial<B: Backend>(
+    b: &B,
+    cols: &Tensor<B::E>,
+    s: &ConvShape,
+    batch: usize,
+) -> Tensor<B::E> {
+    s.validate();
+    assert_eq!(cols.rows, batch * s.patches_per_image(), "col2im row-count mismatch");
+    assert_eq!(cols.cols, s.patch_len(), "col2im patch-length mismatch");
+    let mut out = Tensor::full(batch, s.in_len(), b.zero());
+    for sample in 0..batch {
+        scatter_sample(b, cols, s, sample, out.row_mut(sample));
+    }
+    out
+}
+
+/// Rayon sample-parallel [`col2im`]: each task owns one image row and
+/// replays the identical per-sample scatter order, so the result is
+/// bit-identical to [`col2im_serial`].
+pub fn col2im_par<B: Backend>(
+    b: &B,
+    cols: &Tensor<B::E>,
+    s: &ConvShape,
+    batch: usize,
+) -> Tensor<B::E> {
+    s.validate();
+    assert_eq!(cols.rows, batch * s.patches_per_image(), "col2im row-count mismatch");
+    assert_eq!(cols.cols, s.patch_len(), "col2im patch-length mismatch");
+    let in_len = s.in_len();
+    let mut out = Tensor::full(batch, in_len, b.zero());
+    if in_len == 0 {
+        return out;
+    }
+    out.data.par_chunks_mut(in_len).enumerate().for_each(|(sample, orow)| {
+        scatter_sample(b, cols, s, sample, orow);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatBackend;
+
+    fn fb() -> FloatBackend {
+        FloatBackend::default()
+    }
+
+    #[test]
+    fn shape_arithmetic() {
+        let s = ConvShape::square(3, 12, 5, 1, 2);
+        assert_eq!(s.out_h(), 12);
+        assert_eq!(s.out_w(), 12);
+        assert_eq!(s.patch_len(), 75);
+        assert_eq!(s.in_len(), 432);
+        assert_eq!(s.out_len(8), 8 * 144);
+        let strided = ConvShape::square(1, 8, 3, 2, 0);
+        assert_eq!(strided.out_h(), 3);
+        assert_eq!(strided.patches_per_image(), 9);
+    }
+
+    #[test]
+    fn identity_kernel_extracts_pixels() {
+        // 1×1 kernel, stride 1, no pad: each patch row is one pixel, in
+        // scan order.
+        let b = fb();
+        let s = ConvShape::square(1, 2, 1, 1, 0);
+        let x = Tensor::from_vec(2, 4, vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let cols = im2col(&b, &x, &s);
+        assert_eq!(cols.rows, 8);
+        assert_eq!(cols.cols, 1);
+        assert_eq!(cols.data, x.data);
+    }
+
+    #[test]
+    fn known_patch_with_padding() {
+        // 3×3 input, 2×2 kernel, pad 1 → 4×4 patches; the top-left patch
+        // sees three padding zeros and the (0,0) pixel.
+        let b = fb();
+        let s = ConvShape::square(1, 3, 2, 1, 1);
+        let x = Tensor::from_vec(1, 9, (1..=9).map(|v| v as f32).collect());
+        let cols = im2col(&b, &x, &s);
+        assert_eq!(cols.rows, 16);
+        assert_eq!(cols.row(0), &[0.0, 0.0, 0.0, 1.0]);
+        // An interior patch (oy=1, ox=1) covers pixels (0,0)..(1,1).
+        assert_eq!(cols.row(5), &[1.0, 2.0, 4.0, 5.0]);
+        // The bottom-right patch sees pixel 9 and three zeros.
+        assert_eq!(cols.row(15), &[9.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn channel_major_patch_layout() {
+        // Two channels: the patch is (c, ky, kx) lexicographic.
+        let b = fb();
+        let s = ConvShape::square(2, 2, 2, 1, 0);
+        #[rustfmt::skip]
+        let x = Tensor::from_vec(1, 8, vec![
+            1.0f32, 2.0, 3.0, 4.0, // channel 0
+            10.0, 20.0, 30.0, 40.0, // channel 1
+        ]);
+        let cols = im2col(&b, &x, &s);
+        assert_eq!(cols.rows, 1);
+        assert_eq!(cols.row(0), &[1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn serial_parallel_bit_identical() {
+        let b = fb();
+        let s = ConvShape::square(2, 9, 3, 2, 1);
+        let mut rng = crate::rng::SplitMix64::new(3);
+        let x = Tensor::from_vec(
+            7,
+            s.in_len(),
+            (0..7 * s.in_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let a = im2col_serial(&b, &x, &s);
+        let p = im2col_par(&b, &x, &s);
+        assert_eq!(a.data, p.data);
+        let ys = col2im_serial(&b, &a, &s, 7);
+        let yp = col2im_par(&b, &a, &s, 7);
+        assert_eq!(ys.data, yp.data);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // ⟨im2col(x), y⟩ = ⟨x, col2im(y)⟩ for the float backend — the
+        // linear-algebra identity that makes col2im the correct input
+        // gradient.
+        let b = fb();
+        let s = ConvShape::square(2, 6, 3, 1, 1);
+        let mut rng = crate::rng::SplitMix64::new(11);
+        let batch = 3;
+        let x = Tensor::from_vec(
+            batch,
+            s.in_len(),
+            (0..batch * s.in_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let rows = batch * s.patches_per_image();
+        let y = Tensor::from_vec(
+            rows,
+            s.patch_len(),
+            (0..rows * s.patch_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let cols = im2col(&b, &x, &s);
+        let back = col2im(&b, &y, &s, batch);
+        let lhs: f64 = cols.data.iter().zip(&y.data).map(|(&a, &c)| (a * c) as f64).sum();
+        let rhs: f64 = x.data.iter().zip(&back.data).map(|(&a, &c)| (a * c) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel exceeds padded input")]
+    fn oversized_kernel_panics() {
+        let b = fb();
+        let s = ConvShape::square(1, 2, 5, 1, 0);
+        let x = Tensor::full(1, 4, 0.0f32);
+        let _ = im2col(&b, &x, &s);
+    }
+}

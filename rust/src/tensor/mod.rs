@@ -7,9 +7,11 @@
 //! the numeric format a first-class, swappable component.
 
 pub mod backend;
+pub mod im2col;
 pub mod ops;
 
 pub use backend::{Backend, FixedBackend, FloatBackend, LnsBackend};
+pub use im2col::ConvShape;
 
 /// Dense row-major matrix of backend elements.
 #[derive(Clone, Debug, PartialEq)]

@@ -29,6 +29,24 @@ pub fn evaluate<B: Backend>(
     x: &Tensor<B::E>,
     labels: &[usize],
 ) -> EvalResult {
+    let classes = model.dims[model.dims.len() - 1];
+    evaluate_with(backend, classes, |view| model.logits(backend, view), x, labels)
+}
+
+/// Model-agnostic evaluation core: `logits_of` maps an input chunk to its
+/// logits (the MLP and CNN both plug in here). Chunking, the parallel
+/// per-row bookkeeping, and the row-order reductions are identical to the
+/// seed's MLP path, so `evaluate` reports unchanged numbers.
+pub fn evaluate_with<B: Backend, F>(
+    backend: &B,
+    classes: usize,
+    logits_of: F,
+    x: &Tensor<B::E>,
+    labels: &[usize],
+) -> EvalResult
+where
+    F: Fn(&Tensor<B::E>) -> Tensor<B::E>,
+{
     assert_eq!(x.rows, labels.len());
     if labels.is_empty() {
         return EvalResult::default();
@@ -37,7 +55,6 @@ pub fn evaluate<B: Backend>(
     const CHUNK: usize = 256;
     let mut correct = 0usize;
     let mut loss = 0.0f64;
-    let classes = model.dims[model.dims.len() - 1];
     let mut grad_scratch = vec![backend.zero(); classes];
     for start in (0..x.rows).step_by(CHUNK) {
         let end = (start + CHUNK).min(x.rows);
@@ -46,7 +63,7 @@ pub fn evaluate<B: Backend>(
             x.cols,
             x.data[start * x.cols..end * x.cols].to_vec(),
         );
-        let logits = model.logits(backend, &view);
+        let logits = logits_of(&view);
         let per_row: Vec<(bool, f64)> = if ops::par_rows_worthwhile(logits.rows) {
             // `map_init` gives each worker one reusable scratch gradient
             // buffer (mirroring the serial branch's single buffer) instead

@@ -13,10 +13,10 @@
 
 pub mod metrics;
 
-pub use metrics::{evaluate, EvalResult};
+pub use metrics::{evaluate, evaluate_with, EvalResult};
 
 use crate::data::Dataset;
-use crate::nn::{InitScheme, Mlp, SgdConfig};
+use crate::nn::{Cnn, CnnArch, InitScheme, Mlp, SgdConfig};
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, Tensor};
 
@@ -67,11 +67,12 @@ pub struct EpochRecord {
     pub seconds: f64,
 }
 
-/// Result of a full training run.
+/// Result of a full training run, generic over the trained model type
+/// ([`Mlp`] for [`train`], [`Cnn`] for [`train_cnn`]).
 #[derive(Clone, Debug)]
-pub struct TrainResult<E> {
+pub struct TrainResult<M> {
     /// The trained model.
-    pub model: Mlp<E>,
+    pub model: M,
     /// Per-epoch learning curve (Fig. 2's series).
     pub curve: Vec<EpochRecord>,
     /// Final test-set evaluation (Table 1's cell).
@@ -81,7 +82,7 @@ pub struct TrainResult<E> {
 /// Train an MLP on a dataset with the given backend. The entire arithmetic
 /// path — forward, softmax+CE gradient, backprop, updates — runs in the
 /// backend's number system; floats appear only in reporting.
-pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainResult<B::E> {
+pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainResult<Mlp<B::E>> {
     assert_eq!(cfg.dims[0], ds.pixels, "model input must match dataset pixels");
     assert_eq!(
         *cfg.dims.last().unwrap(),
@@ -133,6 +134,100 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
     }
 
     let test = evaluate(backend, &model, &test_x, &test_y);
+    TrainResult { model, curve, test }
+}
+
+/// Training hyper-parameters for the CNN workload.
+#[derive(Clone, Debug)]
+pub struct CnnTrainConfig {
+    /// Model architecture (conv–pool–conv–pool–dense–dense).
+    pub arch: CnnArch,
+    /// Epochs.
+    pub epochs: usize,
+    /// Mini-batch size (paper protocol: 5).
+    pub batch_size: usize,
+    /// SGD settings.
+    pub sgd: SgdConfig,
+    /// Validation hold-back denominator (paper: 5 ⇒ 1:5).
+    pub val_ratio: usize,
+    /// Weight-init scheme.
+    pub init: InitScheme,
+    /// Master seed (init, shuffles, split).
+    pub seed: u64,
+}
+
+impl CnnTrainConfig {
+    /// The paper's §5 protocol around a LeNet-style architecture for
+    /// square `side×side` single-channel images.
+    pub fn lenet(side: usize, classes: usize) -> Self {
+        CnnTrainConfig {
+            arch: CnnArch::lenet(side, classes),
+            epochs: 10,
+            batch_size: 5,
+            sgd: SgdConfig { lr: 0.01, weight_decay: 1e-4 },
+            val_ratio: 5,
+            init: InitScheme::HeNormal,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Train the LeNet-style CNN on a dataset with the given backend — the
+/// same epoch/mini-batch/validation protocol as [`train`], with the conv
+/// subsystem's backprop and [`SgdConfig::apply_cnn`] updates. Everything
+/// arithmetic runs in the backend's number system.
+pub fn train_cnn<B: Backend>(
+    backend: &B,
+    ds: &Dataset,
+    cfg: &CnnTrainConfig,
+) -> TrainResult<Cnn<B::E>> {
+    assert_eq!(cfg.arch.input_len(), ds.pixels, "CNN input must match dataset pixels");
+    assert_eq!(cfg.arch.classes, ds.classes, "CNN head must match dataset classes");
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut model = Cnn::init(backend, &cfg.arch, cfg.init, &mut rng);
+
+    let split = ds.split_validation(cfg.val_ratio, cfg.seed ^ 0xA11CE);
+    let train_x = ds.encode_batch(backend, &ds.train_images, &split.train_idx);
+    let train_y = ds.labels_of(&ds.train_labels, &split.train_idx);
+    let val_x = ds.encode_batch(backend, &ds.train_images, &split.val_idx);
+    let val_y = ds.labels_of(&ds.train_labels, &split.val_idx);
+    let test_x = ds.encode_test(backend);
+    let test_y: Vec<usize> = ds.test_labels.iter().map(|&l| l as usize).collect();
+
+    let n = train_y.len();
+    let bs = cfg.batch_size;
+    let classes = cfg.arch.classes;
+    let mut curve = Vec::with_capacity(cfg.epochs);
+    let mut order: Vec<usize> = (0..n).collect();
+
+    for epoch in 1..=cfg.epochs {
+        rng.shuffle(&mut order);
+        let start = std::time::Instant::now();
+        let mut loss_sum = 0.0;
+        let mut batches = 0usize;
+        let mut chunk = Vec::with_capacity(bs);
+        for batch_start in (0..n).step_by(bs) {
+            let end = (batch_start + bs).min(n);
+            chunk.clear();
+            chunk.extend_from_slice(&order[batch_start..end]);
+            let (bx, by) = gather_batch(backend, &train_x, &train_y, &chunk);
+            let (grads, stats) = model.backprop(backend, &bx, &by);
+            cfg.sgd.apply_cnn(backend, &mut model, &grads);
+            loss_sum += stats.loss;
+            batches += 1;
+        }
+        let seconds = start.elapsed().as_secs_f64();
+        let val =
+            evaluate_with(backend, classes, |v| model.logits(backend, v), &val_x, &val_y);
+        curve.push(EpochRecord {
+            epoch,
+            train_loss: loss_sum / batches.max(1) as f64,
+            val_accuracy: val.accuracy,
+            seconds,
+        });
+    }
+
+    let test = evaluate_with(backend, classes, |v| model.logits(backend, v), &test_x, &test_y);
     TrainResult { model, curve, test }
 }
 
@@ -238,5 +333,44 @@ mod tests {
     fn wrong_head_panics() {
         let ds = tiny_ds();
         let _ = train(&FloatBackend::default(), &ds, &tiny_cfg(5, 1));
+    }
+
+    #[test]
+    fn cnn_float_training_learns_stripes() {
+        use crate::data::{stripes_dataset, StripeSpec};
+        let ds = stripes_dataset(&StripeSpec {
+            name: "stripes".into(),
+            side: 12,
+            classes: 4,
+            train_per_class: 60,
+            test_per_class: 15,
+            wavelength: 4.0,
+            jitter_rot: 0.08,
+            noise: 0.02,
+            seed: 5,
+        });
+        let mut cfg = CnnTrainConfig::lenet(12, 4);
+        cfg.arch.c1 = 4;
+        cfg.arch.c2 = 8;
+        cfg.arch.hidden = 32;
+        cfg.epochs = 5;
+        cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+        cfg.seed = 9;
+        let r = train_cnn(&FloatBackend::default(), &ds, &cfg);
+        assert_eq!(r.curve.len(), 5);
+        assert!(
+            r.test.accuracy > 0.8,
+            "float CNN should learn oriented stripes: acc={}",
+            r.test.accuracy
+        );
+        assert!(r.curve.last().unwrap().train_loss < r.curve[0].train_loss);
+    }
+
+    #[test]
+    #[should_panic(expected = "CNN head must match")]
+    fn cnn_wrong_head_panics() {
+        let ds = tiny_ds();
+        let cfg = CnnTrainConfig::lenet(28, 5);
+        let _ = train_cnn(&FloatBackend::default(), &ds, &cfg);
     }
 }

@@ -122,8 +122,10 @@ fn golden_ops_match_bit_exactly() {
             "softmax_grad" => {
                 // label, 5×(lm, ls), 5×(dm, ds), lp
                 let label = p[0] as usize;
-                let logits: Vec<LnsValue> = (0..5).map(|j| val(p[1 + 2 * j], p[2 + 2 * j])).collect();
-                let want: Vec<LnsValue> = (0..5).map(|j| val(p[11 + 2 * j], p[12 + 2 * j])).collect();
+                let logits: Vec<LnsValue> =
+                    (0..5).map(|j| val(p[1 + 2 * j], p[2 + 2 * j])).collect();
+                let want: Vec<LnsValue> =
+                    (0..5).map(|j| val(p[11 + 2 * j], p[12 + 2 * j])).collect();
                 let want_lp = p[21];
                 let mut grad = vec![LnsValue::ZERO; 5];
                 let log2p = sys.log_softmax_ce_grad(&logits, label, &mut grad);

@@ -15,8 +15,9 @@
 
 use lnsdnn::fixed::{FixedConfig, FixedSystem};
 use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::{Conv2d, InitScheme};
 use lnsdnn::rng::SplitMix64;
-use lnsdnn::tensor::{ops, Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
+use lnsdnn::tensor::{ops, Backend, ConvShape, FixedBackend, FloatBackend, LnsBackend, Tensor};
 
 /// Random tensor with `zero_frac` exact-zero entries (the zero word is
 /// backend-specific, so it goes through `Backend::zero`).
@@ -105,6 +106,105 @@ fn lns_lut_parallel_matches_serial() {
 fn lns_bitshift_parallel_matches_serial() {
     check_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01), 0xB5_16);
     check_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w12_bitshift()), 0.01), 0xB5_12);
+}
+
+/// Conv forward/backward must be bit-identical between the serial and
+/// rayon engine paths: the lowering only ever touches im2col (pure
+/// gather), the matmuls (row-partitioned, order-preserving) and col2im
+/// (sample-partitioned, fixed scatter order), so the guarantee is
+/// inherited — this pins it per backend, including the auto dispatch.
+fn check_conv_backend<B: Backend>(b: &B, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    // Shapes straddling the dispatch thresholds: a tiny map, a padded
+    // LeNet-ish layer, and a batch big enough to fan out.
+    let cases = [
+        (2usize, 6usize, 1usize, 3usize, 3usize, 1usize),
+        (5, 12, 2, 4, 5, 2),
+        (40, 8, 3, 8, 3, 0),
+    ];
+    for (batch, side, in_c, out_c, k, pad) in cases {
+        let shape = ConvShape::square(in_c, side, k, 1, pad);
+        let layer = Conv2d::init(b, shape, out_c, InitScheme::HeNormal, &mut rng);
+        let x = random_tensor(b, &mut rng, batch, shape.in_len(), 0.3);
+        let tag = b.tag();
+
+        let (cols_s, y_s) = layer.forward_serial(b, &x);
+        let (cols_p, y_p) = layer.forward_par(b, &x);
+        assert!(cols_s.data == cols_p.data, "{tag}: im2col serial≠parallel at {side}/{k}/{pad}");
+        assert!(y_s.data == y_p.data, "{tag}: conv fwd serial≠parallel at {side}/{k}/{pad}");
+        let (cols_a, y_a) = layer.forward(b, &x);
+        assert!(
+            cols_a.data == cols_s.data && y_a.data == y_s.data,
+            "{tag}: conv fwd dispatch diverged at {side}/{k}/{pad}"
+        );
+
+        let up = random_tensor(b, &mut rng, batch, shape.out_len(out_c), 0.2);
+        let (dw_s, db_s, dx_s) = layer.backward_serial(b, &cols_s, &up, true);
+        let (dw_p, db_p, dx_p) = layer.backward_par(b, &cols_s, &up, true);
+        assert!(dw_s.data == dw_p.data, "{tag}: conv dW serial≠parallel at {side}/{k}/{pad}");
+        assert!(db_s == db_p, "{tag}: conv db serial≠parallel at {side}/{k}/{pad}");
+        assert!(
+            dx_s.unwrap().data == dx_p.unwrap().data,
+            "{tag}: col2im serial≠parallel at {side}/{k}/{pad}"
+        );
+        let (dw_a, db_a, dx_a) = layer.backward(b, &cols_s, &up, true);
+        assert!(
+            dw_a.data == dw_s.data && db_a == db_s && dx_a.is_some(),
+            "{tag}: conv bwd dispatch diverged at {side}/{k}/{pad}"
+        );
+    }
+}
+
+#[test]
+fn conv_float_parallel_matches_serial() {
+    check_conv_backend(&FloatBackend::default(), 0xC0F107);
+}
+
+#[test]
+fn conv_fixed_parallel_matches_serial() {
+    check_conv_backend(&FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01), 0xC0F16);
+    check_conv_backend(&FixedBackend::new(FixedSystem::new(FixedConfig::w12()), 0.01), 0xC0F12);
+}
+
+#[test]
+fn conv_lns_lut_parallel_matches_serial() {
+    check_conv_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01), 0xC0_1616);
+    check_conv_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w12_lut()), 0.01), 0xC0_1612);
+}
+
+#[test]
+fn conv_lns_bitshift_parallel_matches_serial() {
+    check_conv_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01), 0xC0B516);
+    check_conv_backend(&LnsBackend::new(LnsSystem::new(LnsConfig::w12_bitshift()), 0.01), 0xC0B512);
+}
+
+/// End-to-end CNN determinism with the parallel engine active: two
+/// identical training runs produce bit-identical models.
+#[test]
+fn cnn_training_bitexact_across_runs() {
+    use lnsdnn::data::{stripes_dataset, StripeSpec};
+    use lnsdnn::train::{train_cnn, CnnTrainConfig};
+
+    let ds = stripes_dataset(&StripeSpec {
+        train_per_class: 15,
+        test_per_class: 5,
+        ..StripeSpec::cnn_default(1.0, 31)
+    });
+    let mut cfg = CnnTrainConfig::lenet(12, 4);
+    cfg.arch.c1 = 3;
+    cfg.arch.c2 = 6;
+    cfg.arch.hidden = 16;
+    cfg.epochs = 2;
+    cfg.seed = 7;
+    let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let r1 = train_cnn(&b, &ds, &cfg);
+    let r2 = train_cnn(&b, &ds, &cfg);
+    assert_eq!(r1.model.conv1.w.data, r2.model.conv1.w.data);
+    assert_eq!(r1.model.conv2.w.data, r2.model.conv2.w.data);
+    assert_eq!(r1.model.fc1.w.data, r2.model.fc1.w.data);
+    assert_eq!(r1.model.fc2.b, r2.model.fc2.b);
+    assert_eq!(r1.test.accuracy, r2.test.accuracy);
+    assert_eq!(r1.test.loss, r2.test.loss);
 }
 
 /// The elementwise/broadcast ops must also be invariant under the

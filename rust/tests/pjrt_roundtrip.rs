@@ -30,7 +30,12 @@ const DIMS: [usize; 3] = [12, 8, 4];
 const BATCH: usize = 3;
 
 /// Random valid LNS planes (m, s) as i32 vectors.
-fn random_planes(rng: &mut SplitMix64, sys: &LnsSystem, n: usize, zero_frac: f64) -> (Vec<i32>, Vec<i32>) {
+fn random_planes(
+    rng: &mut SplitMix64,
+    sys: &LnsSystem,
+    n: usize,
+    zero_frac: f64,
+) -> (Vec<i32>, Vec<i32>) {
     let (lo, hi) = (sys.config().m_min() as i64, sys.config().m_max() as i64);
     let mut m = Vec::with_capacity(n);
     let mut s = Vec::with_capacity(n);
@@ -205,7 +210,8 @@ fn float_artifacts_compile_and_run() {
         inputs.push(ArtifactExecutable::lit_f32(&w, &[fi as i64, fo as i64]).unwrap());
         inputs.push(ArtifactExecutable::lit_f32(&vec![0.0; fo], &[fo as i64]).unwrap());
     }
-    let x: Vec<f32> = (0..meta.batch * meta.dims[0]).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let x: Vec<f32> =
+        (0..meta.batch * meta.dims[0]).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
     inputs.push(
         ArtifactExecutable::lit_f32(&x, &[meta.batch as i64, meta.dims[0] as i64]).unwrap(),
     );

@@ -2,13 +2,13 @@
 //! encode → train → evaluate, across number systems, plus property tests
 //! on the arithmetic invariants (proptest-style via `proptest_util`).
 
-use lnsdnn::data::{synth_dataset, SynthSpec};
+use lnsdnn::data::{stripes_dataset, synth_dataset, StripeSpec, SynthSpec};
 use lnsdnn::fixed::{FixedConfig, FixedSystem};
 use lnsdnn::lns::{DeltaMode, LnsConfig, LnsSystem, LnsValue};
-use lnsdnn::nn::{InitScheme, SgdConfig};
+use lnsdnn::nn::{Cnn, CnnArch, InitScheme, PoolKind, SgdConfig};
 use lnsdnn::proptest_util::{run_prop, DEFAULT_CASES};
-use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend};
-use lnsdnn::train::{train, TrainConfig};
+use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
+use lnsdnn::train::{train, train_cnn, CnnTrainConfig, TrainConfig};
 
 fn tiny_ds(seed: u64) -> lnsdnn::data::Dataset {
     synth_dataset(&SynthSpec {
@@ -90,6 +90,112 @@ fn exact_delta_ablation_at_least_as_good_as_lut() {
     let exact = train(&LnsBackend::new(LnsSystem::new(exact_cfg), 0.01), &ds, &c).test.accuracy;
     eprintln!("lut={lut:.3} exact={exact:.3}");
     assert!(exact > lut - 0.08, "exact Δ shouldn't be (much) worse: {exact} vs {lut}");
+}
+
+// ---------------------------------------------------------------------
+// Conv workload: gradient oracle + the paper-shaped accuracy claim
+// ---------------------------------------------------------------------
+
+/// Float-backend gradient oracle for the conv subsystem, mirroring the
+/// MLP oracle: finite differences of the CE loss against the manual
+/// backprop, through conv → pool → conv → pool → dense → dense. Average
+/// pooling keeps the loss smooth everywhere the llReLU is (max pooling's
+/// routing is pinned exactly by its own unit tests in `nn::conv`).
+#[test]
+fn cnn_gradcheck_float() {
+    let b = FloatBackend::default();
+    let mut rng = lnsdnn::rng::SplitMix64::new(17);
+    let arch = CnnArch {
+        c1: 3,
+        c2: 4,
+        k: 3,
+        pad: 1,
+        hidden: 10,
+        pool_kind: PoolKind::Avg,
+        ..CnnArch::lenet(8, 3)
+    };
+    let mut cnn = Cnn::init(&b, &arch, InitScheme::HeNormal, &mut rng);
+    let x = Tensor::from_vec(
+        4,
+        arch.input_len(),
+        (0..4 * arch.input_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+    );
+    let labels = vec![0usize, 2, 1, 2];
+
+    // One mutable handle per perturbation, in the Gradients layer order
+    // (conv1, conv2, fc1, fc2).
+    fn layer_w(cnn: &mut Cnn<f32>, l: usize) -> &mut [f32] {
+        match l {
+            0 => &mut cnn.conv1.w.data,
+            1 => &mut cnn.conv2.w.data,
+            2 => &mut cnn.fc1.w.data,
+            _ => &mut cnn.fc2.w.data,
+        }
+    }
+    fn layer_b(cnn: &mut Cnn<f32>, l: usize) -> &mut [f32] {
+        match l {
+            0 => &mut cnn.conv1.b,
+            1 => &mut cnn.conv2.b,
+            2 => &mut cnn.fc1.b,
+            _ => &mut cnn.fc2.b,
+        }
+    }
+
+    let loss_of = |m: &Cnn<f32>| -> f64 { m.backprop(&b, &x, &labels).1.loss };
+    let (grads, _) = cnn.backprop(&b, &x, &labels);
+    let eps = 1e-3f32;
+
+    // A scatter of weight and bias coords in all four layers.
+    let w_coords = [(0usize, 5usize), (0, 20), (1, 3), (1, 77), (2, 11), (2, 100), (3, 0), (3, 25)];
+    let b_coords = [(0usize, 1usize), (1, 2), (2, 4), (3, 1)];
+    for (weights, coords) in [(true, &w_coords[..]), (false, &b_coords[..])] {
+        for &(l, idx) in coords {
+            let select = if weights { layer_w } else { layer_b };
+            let orig = select(&mut cnn, l)[idx];
+            select(&mut cnn, l)[idx] = orig + eps;
+            let lp = loss_of(&cnn);
+            select(&mut cnn, l)[idx] = orig - eps;
+            let lm = loss_of(&cnn);
+            select(&mut cnn, l)[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps as f64);
+            let ana = f64::from(if weights { grads.dw[l].data[idx] } else { grads.db[l][idx] });
+            assert!(
+                (num - ana).abs() < 1e-2 * (1.0 + num.abs()),
+                "{} layer {l} idx {idx}: numeric {num} vs analytic {ana}",
+                if weights { "weight" } else { "bias" }
+            );
+        }
+    }
+}
+
+/// The acceptance claim for the conv workload: the CNN learns the
+/// oriented-stripes task on both the float and the 16-bit LNS-LUT
+/// backends, with the LNS final accuracy within 2% of the float baseline.
+#[test]
+fn cnn_stripes_float_and_lns_within_two_percent() {
+    let ds = stripes_dataset(&StripeSpec {
+        train_per_class: 100,
+        test_per_class: 25,
+        jitter_rot: 0.08,
+        noise: 0.02,
+        ..StripeSpec::cnn_default(1.0, 21)
+    });
+    let mut cfg = CnnTrainConfig::lenet(12, 4);
+    cfg.arch.c1 = 4;
+    cfg.arch.c2 = 8;
+    cfg.arch.hidden = 32;
+    cfg.epochs = 6;
+    cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+    cfg.seed = 11;
+    let float_acc = train_cnn(&FloatBackend::default(), &ds, &cfg).test.accuracy;
+    let lns = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let lns_acc = train_cnn(&lns, &ds, &cfg).test.accuracy;
+    eprintln!("cnn stripes: float={float_acc:.3} log16-lut={lns_acc:.3}");
+    assert!(float_acc > 0.9, "float CNN must learn stripes: {float_acc}");
+    assert!(
+        lns_acc >= float_acc - 0.02,
+        "16-bit LNS CNN within 2% of float: {lns_acc} vs {float_acc}"
+    );
 }
 
 // ---------------------------------------------------------------------
