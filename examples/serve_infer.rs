@@ -44,6 +44,7 @@ fn main() {
         val_ratio: 5,
         init: lnsdnn::nn::InitScheme::HeNormal,
         seed: 42,
+        shard: Default::default(),
     };
     println!("training serving model natively (log16-lut)…");
     let result = train(&backend, &ds, &cfg);

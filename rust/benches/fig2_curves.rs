@@ -17,7 +17,7 @@ fn main() {
         ds.test_len()
     );
     let t0 = std::time::Instant::now();
-    let recs = fig2(&ds, 8, 100, 7, 4);
+    let recs = fig2(&ds, 8, 100, 7, 4, 1);
     let wall = t0.elapsed().as_secs_f64();
 
     report::write_csv(

@@ -1,0 +1,124 @@
+//! Shard-scaling throughput: training samples/s vs worker count for the
+//! MLP and CNN workloads, per number system. The trained weights are
+//! bit-identical at every shard count (tests/shard_determinism.rs), so
+//! this bench measures the *only* thing the `shards` axis is allowed to
+//! move: wall-clock.
+//!
+//! Timing uses the epoch records' step seconds (training steps only —
+//! evaluation and encoding are excluded), mirroring how the paper-scale
+//! sweeps report throughput.
+
+use lnsdnn::data::{stripes_dataset, synth_dataset, StripeSpec, SynthSpec};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::SgdConfig;
+use lnsdnn::tensor::{Backend, FloatBackend, LnsBackend};
+use lnsdnn::train::{train, train_cnn, CnnTrainConfig, ShardConfig, TrainConfig};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Samples that actually enter training steps (after the 1:val_ratio
+/// validation hold-back).
+fn trained_samples(total: usize, val_ratio: usize, epochs: usize) -> f64 {
+    ((total - total / val_ratio) * epochs) as f64
+}
+
+/// Run a measurement with exactly `workers` threads available: sharded
+/// runs bring their own `n_shards`-thread pool, while the `n = 1`
+/// baseline is pinned to a 1-thread pool so the global rayon pool cannot
+/// quietly parallelize it — "x vs serial" then honestly compares
+/// N workers against one.
+fn with_workers<R, F>(workers: usize, f: F) -> R
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    if workers == 1 {
+        let one = rayon::ThreadPoolBuilder::new()
+            .num_threads(1)
+            .build()
+            .expect("building the 1-thread baseline pool");
+        one.install(f)
+    } else {
+        f()
+    }
+}
+
+fn mlp_case<B: Backend>(label: &str, backend: &B) {
+    let ds = synth_dataset(&SynthSpec {
+        name: "bench".into(),
+        classes: 4,
+        train_per_class: 60,
+        test_per_class: 10,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.04,
+        seed: 7,
+    });
+    let mut base = 0.0f64;
+    for n in SHARD_COUNTS {
+        let cfg = TrainConfig {
+            dims: vec![784, 64, 4],
+            epochs: 2,
+            batch_size: 32,
+            sgd: SgdConfig { lr: 0.02, weight_decay: 0.0 },
+            val_ratio: 5,
+            init: lnsdnn::nn::InitScheme::HeNormal,
+            seed: 5,
+            shard: ShardConfig::with_shards(n),
+        };
+        let r = with_workers(n, || train(backend, &ds, &cfg));
+        let secs: f64 = r.curve.iter().map(|e| e.seconds).sum();
+        let sps = trained_samples(ds.train_len(), cfg.val_ratio, cfg.epochs) / secs;
+        if n == 1 {
+            base = sps;
+        }
+        println!(
+            "mlp/{label:<10} shards={n}  {sps:>10.0} samples/s  ({:.2}x vs serial)",
+            sps / base
+        );
+    }
+}
+
+fn cnn_case<B: Backend>(label: &str, backend: &B) {
+    let ds = stripes_dataset(&StripeSpec {
+        train_per_class: 40,
+        test_per_class: 8,
+        ..StripeSpec::cnn_default(1.0, 7)
+    });
+    let mut base = 0.0f64;
+    for n in SHARD_COUNTS {
+        let mut cfg = CnnTrainConfig::lenet(12, 4);
+        cfg.arch.c1 = 4;
+        cfg.arch.c2 = 8;
+        cfg.arch.hidden = 32;
+        cfg.epochs = 1;
+        cfg.batch_size = 32;
+        cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+        cfg.seed = 5;
+        cfg.shard = ShardConfig::with_shards(n);
+        let r = with_workers(n, || train_cnn(backend, &ds, &cfg));
+        let secs: f64 = r.curve.iter().map(|e| e.seconds).sum();
+        let sps = trained_samples(ds.train_len(), cfg.val_ratio, cfg.epochs) / secs;
+        if n == 1 {
+            base = sps;
+        }
+        println!(
+            "cnn/{label:<10} shards={n}  {sps:>10.0} samples/s  ({:.2}x vs serial)",
+            sps / base
+        );
+    }
+}
+
+fn main() {
+    println!(
+        "== shard scaling (host parallelism {}) ==\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    mlp_case("float32", &FloatBackend::default());
+    mlp_case("log16-lut", &LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01));
+    println!();
+    cnn_case("float32", &FloatBackend::default());
+    cnn_case("log16-lut", &LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01));
+    println!("\nweights are bit-identical across shard counts; only wall-clock moves.");
+}

@@ -22,7 +22,7 @@ fn main() {
     }
     let t0 = std::time::Instant::now();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let recs = table1(&datasets, 6, 48, 7, threads);
+    let recs = table1(&datasets, 6, 48, 7, threads, 1);
     let wall = t0.elapsed().as_secs_f64();
 
     let md = report::table1_markdown(&recs);

@@ -9,8 +9,9 @@
 use crate::data::Dataset;
 use crate::fixed::{FixedConfig, FixedSystem};
 use crate::lns::{DeltaApprox, DeltaMode, LnsConfig, LnsSystem, LutSpec};
+use crate::nn::{CnnArch, CnnVariant};
 use crate::tensor::{FixedBackend, FloatBackend, LnsBackend};
-use crate::train::{train, train_cnn, CnnTrainConfig, EpochRecord, TrainConfig};
+use crate::train::{train, train_cnn, CnnTrainConfig, EpochRecord, ShardConfig, TrainConfig};
 use rayon::prelude::*;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -191,6 +192,13 @@ pub fn paper_config(
 /// so total CPU use stays bounded by `threads` no matter how the inner
 /// matmuls fan out. Results come back in job order (dataset-major, then
 /// tag), independent of completion order.
+///
+/// `shards` sets each run's data-parallel worker count
+/// ([`ShardConfig`]); accuracies are shard-count-invariant, so the axis
+/// only moves wall-clock. Each sharded run owns an `n_shards`-thread
+/// pool, so the sweep pool is sized to `threads / shards` concurrent
+/// jobs — total active workers stay ≈ `threads` instead of
+/// multiplying out to `threads × shards`.
 pub fn run_grid(
     datasets: &[Dataset],
     tags: &[ConfigTag],
@@ -198,15 +206,21 @@ pub fn run_grid(
     hidden: usize,
     seed: u64,
     threads: usize,
+    shards: usize,
 ) -> Vec<RunRecord> {
+    // Fail fast on invalid shard counts, before any pool spins up (the
+    // per-job `ShardConfig` below would otherwise panic mid-sweep inside
+    // a rayon worker).
+    let shard_cfg = ShardConfig::with_shards(shards);
     let jobs: Vec<(usize, ConfigTag)> = (0..datasets.len())
         .flat_map(|d| tags.iter().map(move |&t| (d, t)))
         .collect();
     if jobs.is_empty() {
         return Vec::new();
     }
+    let concurrent = (threads / shards).max(1);
     let pool = rayon::ThreadPoolBuilder::new()
-        .num_threads(threads.clamp(1, jobs.len()))
+        .num_threads(concurrent.clamp(1, jobs.len()))
         .thread_name(|i| format!("sweep-{i}"))
         .build()
         .expect("building the sweep thread pool");
@@ -215,7 +229,8 @@ pub fn run_grid(
         jobs.par_iter()
             .map(|&(d, tag)| {
                 let ds = &datasets[d];
-                let cfg = paper_config(ds, tag, epochs, hidden, seed);
+                let mut cfg = paper_config(ds, tag, epochs, hidden, seed);
+                cfg.shard = shard_cfg;
                 let rec = run_one(ds, tag, &cfg);
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
@@ -239,8 +254,9 @@ pub fn table1(
     hidden: usize,
     seed: u64,
     threads: usize,
+    shards: usize,
 ) -> Vec<RunRecord> {
-    run_grid(datasets, &ConfigTag::table1_columns(), epochs, hidden, seed, threads)
+    run_grid(datasets, &ConfigTag::table1_columns(), epochs, hidden, seed, threads, shards)
 }
 
 /// Fig. 2: the four learning-curve series for one dataset.
@@ -250,6 +266,7 @@ pub fn fig2(
     hidden: usize,
     seed: u64,
     threads: usize,
+    shards: usize,
 ) -> Vec<RunRecord> {
     run_grid(
         std::slice::from_ref(ds),
@@ -258,19 +275,32 @@ pub fn fig2(
         hidden,
         seed,
         threads,
+        shards,
     )
 }
 
-/// CNN training protocol for a dataset of square images: LeNet-style
-/// architecture sized from the dataset, the tag's weight decay, paper
-/// epochs/batching.
-pub fn cnn_config(ds: &Dataset, tag: ConfigTag, epochs: usize, seed: u64) -> CnnTrainConfig {
+/// CNN training protocol for a dataset of square images: the requested
+/// architecture variant (pooled LeNet or stride-2 convs) sized from the
+/// dataset, the tag's weight decay, paper epochs/batching, and the
+/// sweep's shard count.
+pub fn cnn_config(
+    ds: &Dataset,
+    tag: ConfigTag,
+    epochs: usize,
+    seed: u64,
+    variant: CnnVariant,
+    shards: usize,
+) -> CnnTrainConfig {
     let side = (ds.pixels as f64).sqrt().round() as usize;
     assert_eq!(side * side, ds.pixels, "CNN workload needs square images");
     let mut cfg = CnnTrainConfig::lenet(side, ds.classes);
+    if variant == CnnVariant::StridedV1 {
+        cfg.arch = CnnArch::strided_v1(side, ds.classes);
+    }
     cfg.epochs = epochs;
     cfg.sgd.weight_decay = tag.default_weight_decay();
     cfg.seed = seed;
+    cfg.shard = ShardConfig::with_shards(shards);
     cfg
 }
 
@@ -305,23 +335,28 @@ pub fn run_one_cnn(ds: &Dataset, tag: ConfigTag, cfg: &CnnTrainConfig) -> RunRec
 }
 
 /// Fan one CNN run per config tag across a dedicated rayon pool (same
-/// pooling/work-stealing story as [`run_grid`]). Results come back in
-/// `tags` order. Unlike [`run_grid`] the pool is **not** clamped to the
-/// job count: there are typically only a handful of tags, and the conv
-/// runs' nested row-parallel matmuls fill the remaining threads via
-/// work stealing.
+/// pooling/work-stealing story as [`run_grid`], including the
+/// `threads / shards` sizing when each run brings its own shard pool).
+/// Results come back in `tags` order. Unlike [`run_grid`] the pool is
+/// **not** clamped to the job count: there are typically only a handful
+/// of tags, and the conv runs' nested row-parallel matmuls fill the
+/// remaining threads via work stealing.
 pub fn cnn_grid(
     ds: &Dataset,
     tags: &[ConfigTag],
     epochs: usize,
     seed: u64,
     threads: usize,
+    variant: CnnVariant,
+    shards: usize,
 ) -> Vec<RunRecord> {
     if tags.is_empty() {
         return Vec::new();
     }
+    // Fail fast on invalid shard counts (same rationale as `run_grid`).
+    ShardConfig::with_shards(shards);
     let pool = rayon::ThreadPoolBuilder::new()
-        .num_threads(threads.max(1))
+        .num_threads((threads / shards).max(1))
         .thread_name(|i| format!("cnn-sweep-{i}"))
         .build()
         .expect("building the CNN-sweep thread pool");
@@ -329,12 +364,13 @@ pub fn cnn_grid(
     pool.install(|| {
         tags.par_iter()
             .map(|&tag| {
-                let cfg = cnn_config(ds, tag, epochs, seed);
+                let cfg = cnn_config(ds, tag, epochs, seed, variant, shards);
                 let rec = run_one_cnn(ds, tag, &cfg);
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
-                    "[{finished}/{} done] cnn {} × {:<10} acc={:.3} ({:.1}s)",
+                    "[{finished}/{} done] cnn/{} {} × {:<10} acc={:.3} ({:.1}s)",
                     tags.len(),
+                    variant.label(),
                     rec.dataset,
                     tag.label(),
                     rec.test_accuracy,
@@ -523,10 +559,20 @@ mod tests {
     #[test]
     fn grid_runs_all_cells_in_parallel() {
         let ds = vec![tiny()];
-        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin16], 1, 8, 3, 2);
+        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin16], 1, 8, 3, 2, 1);
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
         assert_eq!(recs[1].tag, ConfigTag::Lin16);
+    }
+
+    #[test]
+    fn sharded_grid_reproduces_serial_grid() {
+        // The shards axis moves wall-clock only: identical accuracies.
+        let ds = vec![tiny()];
+        let a = run_grid(&ds, &[ConfigTag::Float], 1, 8, 3, 2, 1);
+        let b = run_grid(&ds, &[ConfigTag::Float], 1, 8, 3, 2, 2);
+        assert_eq!(a[0].test_accuracy, b[0].test_accuracy);
+        assert_eq!(a[0].test_loss, b[0].test_loss);
     }
 
     #[test]
@@ -537,11 +583,25 @@ mod tests {
             test_per_class: 4,
             ..StripeSpec::cnn_default(1.0, 5)
         });
-        let recs = cnn_grid(&ds, &[ConfigTag::Float, ConfigTag::Log16Lut], 1, 3, 2);
+        let recs =
+            cnn_grid(&ds, &[ConfigTag::Float, ConfigTag::Log16Lut], 1, 3, 2, CnnVariant::Pooled, 1);
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
         assert_eq!(recs[1].tag, ConfigTag::Log16Lut);
         assert_eq!(recs[0].curve.len(), 1);
         assert_eq!(recs[0].dataset, "stripes");
+    }
+
+    #[test]
+    fn cnn_grid_strided_variant_trains() {
+        use crate::data::{stripes_dataset, StripeSpec};
+        let ds = stripes_dataset(&StripeSpec {
+            train_per_class: 10,
+            test_per_class: 4,
+            ..StripeSpec::cnn_default(1.0, 6)
+        });
+        let recs = cnn_grid(&ds, &[ConfigTag::Float], 1, 3, 2, CnnVariant::StridedV1, 2);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].curve.len(), 1);
     }
 }

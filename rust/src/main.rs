@@ -79,17 +79,20 @@ USAGE: lnsdnn <command> [--flag value ...]
 COMMANDS
   fig1      [--dmax 11] [--samples 441] [--out results]
   fig2      [--dataset mnist] [--epochs 20] [--scale 0.1] [--hidden 100]
-            [--seed 7] [--threads N] [--out results] [--data-dir DIR]
+            [--seed 7] [--threads N] [--shards 1] [--out results]
+            [--data-dir DIR]
   table1    [--epochs 20] [--scale 0.1] [--hidden 100] [--seed 7]
-            [--threads N] [--out results] [--data-dir DIR] [--datasets a,b]
+            [--threads N] [--shards 1] [--out results] [--data-dir DIR]
+            [--datasets a,b]
   bitwidth  (prints the Eq. 15 bound table)
   cost      (first-order MAC gate counts: LNS vs linear, per config)
   train     --config log16-lut [--dataset mnist] [--epochs 20]
             [--scale 0.1] [--hidden 100] [--lr 0.01] [--wd 0.0001]
-            [--batch 5] [--seed 7] [--data-dir DIR]
+            [--batch 5] [--seed 7] [--shards 1] [--data-dir DIR]
   cnn       [--dataset stripes] [--configs float,log16-lut,log16-bs]
-            [--epochs 8] [--scale 1.0] [--seed 7] [--threads N]
-            [--out results] (LeNet-style conv workload sweep)
+            [--arch lenet|strided-v1] [--epochs 8] [--scale 1.0]
+            [--seed 7] [--threads N] [--shards 1] [--out results]
+            (conv workload sweep)
   artifacts [--dir artifacts] (list and smoke-compile the AOT bundle)
 
 CONFIG TAGS
@@ -97,7 +100,9 @@ CONFIG TAGS
 
 Datasets default to the synthetic paper stand-ins; pass --data-dir with
 real IDX files (mnist/fmnist/emnistd/emnistl tags) to use them instead.
---scale shrinks the synthetic datasets (1.0 = full paper scale).";
+--scale shrinks the synthetic datasets (1.0 = full paper scale).
+--shards N runs each training job data-parallel over N workers; trained
+weights are bit-identical for every N (see README \"Sharded training\").";
 
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -125,6 +130,17 @@ fn run() -> Result<()> {
 
 fn out_dir(flags: &Flags) -> PathBuf {
     PathBuf::from(flags.get("out").unwrap_or("results"))
+}
+
+/// Parse and range-check `--shards` so bad values surface as a CLI error
+/// (like every other flag) instead of a panic — the bound itself lives
+/// in [`lnsdnn::train::ShardConfig::try_with_shards`], the single source
+/// of truth.
+fn shards_flag(flags: &Flags) -> Result<usize> {
+    let n = flags.usize("shards", 1)?;
+    lnsdnn::train::ShardConfig::try_with_shards(n)
+        .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
+    Ok(n)
 }
 
 fn load_dataset(flags: &Flags, name: &str) -> Result<data::Dataset> {
@@ -169,7 +185,8 @@ fn cmd_fig2(flags: &Flags) -> Result<()> {
     let hidden = flags.usize("hidden", 100)?;
     let seed = flags.u64("seed", 7)?;
     let threads = flags.usize("threads", default_threads())?;
-    let recs = experiments::fig2(&ds, epochs, hidden, seed, threads);
+    let shards = shards_flag(flags)?;
+    let recs = experiments::fig2(&ds, epochs, hidden, seed, threads, shards);
     let path = out_dir(flags).join(format!("fig2_{name}.csv"));
     report::write_csv(
         &path,
@@ -199,7 +216,8 @@ fn cmd_table1(flags: &Flags) -> Result<()> {
         .unwrap_or_else(|| vec!["mnist", "fmnist", "emnistd", "emnistl"]);
     let datasets: Vec<data::Dataset> =
         names.iter().map(|n| load_dataset(flags, n)).collect::<Result<_>>()?;
-    let recs = experiments::table1(&datasets, epochs, hidden, seed, threads);
+    let shards = shards_flag(flags)?;
+    let recs = experiments::table1(&datasets, epochs, hidden, seed, threads, shards);
     let md = report::table1_markdown(&recs);
     let dir = out_dir(flags);
     report::write_markdown(&dir.join("table1.md"), &md)?;
@@ -270,6 +288,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     cfg.sgd.lr = flags.f64("lr", cfg.sgd.lr)?;
     cfg.sgd.weight_decay = flags.f64("wd", cfg.sgd.weight_decay)?;
     cfg.batch_size = flags.usize("batch", cfg.batch_size)?;
+    cfg.shard = lnsdnn::train::ShardConfig::with_shards(shards_flag(flags)?);
     println!(
         "training {} on {} ({} train / {} test, {} classes), {} epochs",
         tag.label(),
@@ -304,6 +323,10 @@ fn cmd_cnn(flags: &Flags) -> Result<()> {
     };
     let epochs = flags.usize("epochs", 8)?;
     let threads = flags.usize("threads", default_threads())?;
+    let shards = shards_flag(flags)?;
+    let arch_s = flags.get("arch").unwrap_or("lenet");
+    let variant = lnsdnn::nn::CnnVariant::parse(arch_s)
+        .with_context(|| format!("bad --arch '{arch_s}' (lenet|strided-v1)"))?;
     let tags: Vec<ConfigTag> = match flags.get("configs") {
         Some(s) => s
             .split(',')
@@ -312,18 +335,25 @@ fn cmd_cnn(flags: &Flags) -> Result<()> {
         None => vec![ConfigTag::Float, ConfigTag::Log16Lut, ConfigTag::Log16Bs],
     };
     println!(
-        "CNN sweep on {} ({} train / {} test, {} classes), {} epochs, {} configs",
+        "CNN sweep ({}) on {} ({} train / {} test, {} classes), {} epochs, {} configs, {} shard(s)",
+        variant.label(),
         ds.name,
         ds.train_len(),
         ds.test_len(),
         ds.classes,
         epochs,
-        tags.len()
+        tags.len(),
+        shards
     );
-    let recs = experiments::cnn_grid(&ds, &tags, epochs, seed, threads);
+    let recs = experiments::cnn_grid(&ds, &tags, epochs, seed, threads, variant, shards);
     let dir = out_dir(flags);
+    // Keep the historical filename for the default arch; suffix variants.
+    let stem = match variant {
+        lnsdnn::nn::CnnVariant::Pooled => format!("cnn_{name}"),
+        lnsdnn::nn::CnnVariant::StridedV1 => format!("cnn_{name}_strided_v1"),
+    };
     report::write_csv(
-        &dir.join(format!("cnn_{name}.csv")),
+        &dir.join(format!("{stem}.csv")),
         &["dataset", "config", "test_accuracy", "test_loss", "seconds"],
         &report::runs_csv_rows(&recs),
     )?;
@@ -336,7 +366,7 @@ fn cmd_cnn(flags: &Flags) -> Result<()> {
             r.seconds
         );
     }
-    println!("CNN results → {}/cnn_{name}.csv", dir.display());
+    println!("CNN results → {}/{stem}.csv", dir.display());
     Ok(())
 }
 

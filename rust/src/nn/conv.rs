@@ -17,6 +17,7 @@
 //! recovers textbook conv backprop, which the tests exploit as a gradient
 //! oracle.
 
+use super::grad::{GradStore, RawStepStats};
 use super::init::InitScheme;
 use super::mlp::{Dense, Gradients, StepStats};
 use crate::rng::SplitMix64;
@@ -466,6 +467,37 @@ impl Pool2d {
 // LeNet-style CNN
 // ---------------------------------------------------------------------
 
+/// How the CNN downsamples between its two conv stages.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum CnnVariant {
+    /// Classic LeNet shape: stride-1 convs, each followed by a pool.
+    Pooled,
+    /// Strided workload: the pools are dropped and both convs run at
+    /// stride 2, so downsampling is *learned* — this exercises the
+    /// `ConvShape` stride support end to end (forward, im2col/col2im
+    /// backward, training).
+    StridedV1,
+}
+
+impl CnnVariant {
+    /// Parse a CLI tag (`lenet` / `strided-v1`).
+    pub fn parse(s: &str) -> Option<CnnVariant> {
+        Some(match s {
+            "lenet" | "pooled" => CnnVariant::Pooled,
+            "strided-v1" => CnnVariant::StridedV1,
+            _ => return None,
+        })
+    }
+
+    /// Report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CnnVariant::Pooled => "lenet",
+            CnnVariant::StridedV1 => "strided-v1",
+        }
+    }
+}
+
 /// Architecture of the conv–pool–conv–pool–dense–dense CNN.
 #[derive(Clone, Debug)]
 pub struct CnnArch {
@@ -492,6 +524,8 @@ pub struct CnnArch {
     pub hidden: usize,
     /// Output classes.
     pub classes: usize,
+    /// Downsampling scheme (pooled LeNet vs stride-2 convs).
+    pub variant: CnnVariant,
 }
 
 impl CnnArch {
@@ -510,6 +544,21 @@ impl CnnArch {
             pool_kind: PoolKind::Max,
             hidden: 64,
             classes,
+            variant: CnnVariant::Pooled,
+        }
+    }
+
+    /// The stride-2 workload: [`CnnArch::lenet`] with the pools replaced
+    /// by stride-2 convolutions (`pool`/`pool_kind` become inert).
+    pub fn strided_v1(side: usize, classes: usize) -> Self {
+        CnnArch { variant: CnnVariant::StridedV1, ..Self::lenet(side, classes) }
+    }
+
+    /// Conv stride implied by the variant.
+    fn conv_stride(&self) -> usize {
+        match self.variant {
+            CnnVariant::Pooled => 1,
+            CnnVariant::StridedV1 => 2,
         }
     }
 
@@ -526,12 +575,13 @@ impl CnnArch {
             in_w: self.in_w,
             k_h: self.k,
             k_w: self.k,
-            stride: 1,
+            stride: self.conv_stride(),
             pad: self.pad,
         }
     }
 
-    /// Pool-1 geometry (over conv-1's output map).
+    /// Pool-1 geometry (over conv-1's output map). Only meaningful for
+    /// [`CnnVariant::Pooled`] — the strided variant has no pools.
     pub fn pool1(&self) -> Pool2d {
         let s = self.conv1_shape();
         Pool2d {
@@ -544,21 +594,32 @@ impl CnnArch {
         }
     }
 
-    /// Conv-2 geometry (over pool-1's output map).
+    /// Conv-2 geometry (over the conv-2 input map: pool-1's output when
+    /// pooled, conv-1's activation map when strided).
     pub fn conv2_shape(&self) -> ConvShape {
-        let p = self.pool1();
+        let (in_h, in_w) = match self.variant {
+            CnnVariant::Pooled => {
+                let p = self.pool1();
+                (p.out_h(), p.out_w())
+            }
+            CnnVariant::StridedV1 => {
+                let s = self.conv1_shape();
+                (s.out_h(), s.out_w())
+            }
+        };
         ConvShape {
             in_c: self.c1,
-            in_h: p.out_h(),
-            in_w: p.out_w(),
+            in_h,
+            in_w,
             k_h: self.k,
             k_w: self.k,
-            stride: 1,
+            stride: self.conv_stride(),
             pad: self.pad,
         }
     }
 
-    /// Pool-2 geometry (over conv-2's output map).
+    /// Pool-2 geometry (over conv-2's output map). Only meaningful for
+    /// [`CnnVariant::Pooled`].
     pub fn pool2(&self) -> Pool2d {
         let s = self.conv2_shape();
         Pool2d {
@@ -573,7 +634,10 @@ impl CnnArch {
 
     /// Flattened width entering the dense head.
     pub fn flat_len(&self) -> usize {
-        self.pool2().out_len()
+        match self.variant {
+            CnnVariant::Pooled => self.pool2().out_len(),
+            CnnVariant::StridedV1 => self.conv2_shape().out_len(self.c2),
+        }
     }
 }
 
@@ -584,17 +648,21 @@ pub struct CnnCache<E> {
     pub cols1: Tensor<E>,
     /// Conv-1 pre-activation.
     pub z1: Tensor<E>,
-    /// Pool-1 output (conv-1 activation, pooled).
+    /// Conv-2 input: pool-1 output when pooled, the conv-1 activation
+    /// map when strided.
     pub p1: Tensor<E>,
-    /// Pool-1 max routing.
+    /// Pool-1 max routing (empty for avg pooling and for the strided
+    /// variant).
     pub route1: Vec<usize>,
     /// Conv-2 im2col patches.
     pub cols2: Tensor<E>,
     /// Conv-2 pre-activation.
     pub z2: Tensor<E>,
-    /// Pool-2 output — the flattened dense-head input.
+    /// Flattened dense-head input: pool-2 output when pooled, the conv-2
+    /// activation map when strided.
     pub p2: Tensor<E>,
-    /// Pool-2 max routing.
+    /// Pool-2 max routing (empty for avg pooling and for the strided
+    /// variant).
     pub route2: Vec<usize>,
     /// Dense hidden pre-activation.
     pub zf: Tensor<E>,
@@ -652,12 +720,23 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         mode: Mode,
     ) -> CnnCache<E> {
         assert_eq!(x.cols, self.arch.input_len(), "CNN input width mismatch");
+        let pooled = self.arch.variant == CnnVariant::Pooled;
         let (cols1, z1) = self.conv1.forward_mode(backend, x, mode);
         let a1 = ops::leaky_relu(backend, &z1);
-        let (p1, route1) = self.arch.pool1().forward(backend, &a1);
+        // Strided variant: the activation map feeds conv-2 directly
+        // (`p1 = a1`, empty routing) — downsampling happened in the conv.
+        let (p1, route1) = if pooled {
+            self.arch.pool1().forward(backend, &a1)
+        } else {
+            (a1, Vec::new())
+        };
         let (cols2, z2) = self.conv2.forward_mode(backend, &p1, mode);
         let a2 = ops::leaky_relu(backend, &z2);
-        let (p2, route2) = self.arch.pool2().forward(backend, &a2);
+        let (p2, route2) = if pooled {
+            self.arch.pool2().forward(backend, &a2)
+        } else {
+            (a2, Vec::new())
+        };
         let mut zf = mm(backend, &p2, &self.fc1.w, mode);
         ops::add_bias(backend, &mut zf, &self.fc1.b);
         let af = ops::leaky_relu(backend, &zf);
@@ -693,65 +772,75 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         x: &Tensor<E>,
         labels: &[usize],
     ) -> (Gradients<E>, StepStats) {
+        let (mut grads, raw) = self.backprop_sums(backend, x, labels);
+        grads.scale(backend, 1.0 / raw.n as f64);
+        (grads, raw.finish())
+    }
+
+    /// [`Cnn::backprop`] without the `1/B` averaging: gradients come back
+    /// as **raw ⊞-sums over the batch** ([`RawStepStats`] likewise) — the
+    /// shard-mergeable form consumed by [`crate::train::shard`]. Unlike
+    /// the MLP, a CNN sample contributes `OH·OW` ⊞ terms per conv-kernel
+    /// gradient element (one per patch), so per-sample shards are
+    /// *subtrees* of the reduction rather than single terms — see the
+    /// shard module docs for what that means for the canonical order.
+    pub fn backprop_sums<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        labels: &[usize],
+    ) -> (Gradients<E>, RawStepStats) {
         let batch = x.rows;
         assert_eq!(labels.len(), batch);
         let cache = self.forward(backend, x);
         let classes = self.arch.classes;
+        let pooled = self.arch.variant == CnnVariant::Pooled;
 
-        // δ_head = p − y per row, plus loss/accuracy bookkeeping. Serial:
-        // training batches are the paper's mini-batches (≈5 rows);
-        // batched evaluation goes through `train::metrics` instead.
+        // δ_head = p − y per row, plus loss/accuracy bookkeeping — the
+        // same shared [`ops::softmax_ce_head`] the MLP uses, so the CNN
+        // head fans eval-sized batches across the rayon pool too (ROADMAP
+        // follow-up) without a second copy of the reduction code.
         let mut delta = Tensor::full(batch, classes, backend.zero());
-        let mut loss = 0.0;
-        let mut correct = 0usize;
-        for i in 0..batch {
-            let row = cache.logits.row(i);
-            loss -= backend.softmax_ce_grad(row, labels[i], delta.row_mut(i));
-            if ops::argmax_row(backend, row) == labels[i] {
-                correct += 1;
-            }
-        }
-        let inv_b = 1.0 / batch as f64;
+        let (loss, correct) = ops::softmax_ce_head(backend, &cache.logits, labels, &mut delta);
 
         // Head: dW = afᵀ·δ, db = Σ δ, δ ← (δ·W₂ᵀ) ⊙ act'(zf).
-        let mut dw_fc2 = ops::matmul_at(backend, &cache.af, &delta);
-        ops::scale(backend, &mut dw_fc2, inv_b);
-        let mut db_fc2 = Tensor::from_vec(1, classes, ops::col_sum(backend, &delta));
-        ops::scale(backend, &mut db_fc2, inv_b);
+        let dw_fc2 = ops::matmul_at(backend, &cache.af, &delta);
+        let db_fc2 = ops::col_sum(backend, &delta);
         let back = ops::matmul_bt(backend, &delta, &self.fc2.w);
         let d_hidden = ops::leaky_relu_bwd(backend, &cache.zf, &back);
 
         // Hidden dense: dW = p₂ᵀ·δ, then δ leaves the dense head as the
-        // flattened pool-2 gradient.
-        let mut dw_fc1 = ops::matmul_at(backend, &cache.p2, &d_hidden);
-        ops::scale(backend, &mut dw_fc1, inv_b);
-        let mut db_fc1 = Tensor::from_vec(1, self.arch.hidden, ops::col_sum(backend, &d_hidden));
-        ops::scale(backend, &mut db_fc1, inv_b);
+        // flattened pool-2 (or conv-2 activation) gradient.
+        let dw_fc1 = ops::matmul_at(backend, &cache.p2, &d_hidden);
+        let db_fc1 = ops::col_sum(backend, &d_hidden);
         let d_p2 = ops::matmul_bt(backend, &d_hidden, &self.fc1.w);
 
-        // Pool-2 → llReLU → conv-2.
-        let d_a2 = self.arch.pool2().backward(backend, &cache.route2, &d_p2);
+        // Pool-2 (identity when strided) → llReLU → conv-2.
+        let d_a2 = if pooled {
+            self.arch.pool2().backward(backend, &cache.route2, &d_p2)
+        } else {
+            d_p2
+        };
         let d_z2 = ops::leaky_relu_bwd(backend, &cache.z2, &d_a2);
-        let (mut dw2, db2, d_p1) = self.conv2.backward(backend, &cache.cols2, &d_z2, true);
-        ops::scale(backend, &mut dw2, inv_b);
-        let mut db2 = Tensor::from_vec(1, self.arch.c2, db2);
-        ops::scale(backend, &mut db2, inv_b);
+        let (dw2, db2, d_p1) = self.conv2.backward(backend, &cache.cols2, &d_z2, true);
         let d_p1 = d_p1.expect("conv2 backward with need_dx");
 
-        // Pool-1 → llReLU → conv-1 (input gradient not needed).
-        let d_a1 = self.arch.pool1().backward(backend, &cache.route1, &d_p1);
+        // Pool-1 (identity when strided) → llReLU → conv-1 (input
+        // gradient not needed).
+        let d_a1 = if pooled {
+            self.arch.pool1().backward(backend, &cache.route1, &d_p1)
+        } else {
+            d_p1
+        };
         let d_z1 = ops::leaky_relu_bwd(backend, &cache.z1, &d_a1);
-        let (mut dw1, db1, _) = self.conv1.backward(backend, &cache.cols1, &d_z1, false);
-        ops::scale(backend, &mut dw1, inv_b);
-        let mut db1 = Tensor::from_vec(1, self.arch.c1, db1);
-        ops::scale(backend, &mut db1, inv_b);
+        let (dw1, db1, _) = self.conv1.backward(backend, &cache.cols1, &d_z1, false);
 
         (
             Gradients {
                 dw: vec![dw1, dw2, dw_fc1, dw_fc2],
-                db: vec![db1.data, db2.data, db_fc1.data, db_fc2.data],
+                db: vec![db1, db2, db_fc1, db_fc2],
             },
-            StepStats { loss: loss * inv_b, accuracy: correct as f64 * inv_b },
+            RawStepStats { loss_sum: loss, correct, n: batch },
         )
     }
 }
@@ -821,6 +910,114 @@ mod tests {
             for (a, w) in y.data.iter().zip(&want.data) {
                 assert!((a - w).abs() < 1e-4, "conv {in_c}x{side} k{k}: {a} vs {w}");
             }
+        }
+    }
+
+    #[test]
+    fn strided_conv_forward_matches_naive_reference() {
+        // The stride-2 cases the StridedV1 workload exercises, against the
+        // same naive direct-convolution reference (which honours stride).
+        let b = fb();
+        let mut rng = SplitMix64::new(23);
+        let cases = [
+            (1usize, 6usize, 3usize, 1usize, 2usize, 2usize),
+            (2, 8, 5, 2, 4, 2),
+            (3, 7, 3, 0, 2, 2),
+            (1, 9, 3, 1, 3, 3),
+        ];
+        for (in_c, side, k, pad, out_c, stride) in cases {
+            let shape = ConvShape::square(in_c, side, k, stride, pad);
+            let layer = Conv2d::init(&b, shape, out_c, InitScheme::HeNormal, &mut rng);
+            let x = Tensor::from_vec(
+                2,
+                shape.in_len(),
+                (0..2 * shape.in_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+            );
+            let (_, y) = layer.forward(&b, &x);
+            let want = conv_naive(&x, &layer);
+            assert_eq!(y.rows, want.rows);
+            assert_eq!(y.cols, want.cols);
+            for (a, w) in y.data.iter().zip(&want.data) {
+                let msg = format!("strided conv {in_c}x{side} k{k} s{stride}: {a} vs {w}");
+                assert!((a - w).abs() < 1e-4, "{msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_v1_geometry_chains() {
+        let arch = CnnArch::strided_v1(12, 4);
+        assert_eq!(arch.conv1_shape().stride, 2);
+        // (12 + 2·2 − 5)/2 + 1 = 6, then (6 + 4 − 5)/2 + 1 = 3.
+        assert_eq!(arch.conv1_shape().out_h(), 6);
+        assert_eq!(arch.conv2_shape().in_h, 6);
+        assert_eq!(arch.conv2_shape().out_h(), 3);
+        assert_eq!(arch.flat_len(), 12 * 9);
+        assert_eq!(CnnVariant::parse("strided-v1"), Some(CnnVariant::StridedV1));
+        assert_eq!(CnnVariant::parse(CnnVariant::Pooled.label()), Some(CnnVariant::Pooled));
+        assert_eq!(CnnVariant::parse("nope"), None);
+    }
+
+    #[test]
+    fn strided_v1_forward_shapes_and_backprop_runs() {
+        let b = fb();
+        let mut rng = SplitMix64::new(31);
+        let arch = CnnArch { c1: 3, c2: 4, hidden: 10, ..CnnArch::strided_v1(12, 3) };
+        let cnn = Cnn::init(&b, &arch, InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(
+            4,
+            arch.input_len(),
+            (0..4 * arch.input_len()).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        );
+        let cache = cnn.forward(&b, &x);
+        assert!(cache.route1.is_empty() && cache.route2.is_empty(), "no pool routing");
+        assert_eq!(cache.p1.cols, 3 * 36, "p1 is the conv-1 activation map");
+        assert_eq!(cache.p2.cols, arch.flat_len());
+        let (g, s) = cnn.backprop(&b, &x, &[0, 1, 2, 0]);
+        assert_eq!(g.dw.len(), 4);
+        assert_eq!(g.dw[0].rows, arch.conv1_shape().patch_len());
+        assert!(s.loss > 0.0);
+    }
+
+    /// Finite-difference gradcheck through the strided variant: with no
+    /// pools in the path this pins the stride-2 col2im backward exactly
+    /// where the pooled gradcheck (tests/train_integration.rs) cannot.
+    #[test]
+    fn strided_v1_gradcheck_float() {
+        let b = fb();
+        let mut rng = SplitMix64::new(37);
+        let arch = CnnArch { c1: 2, c2: 3, k: 3, pad: 1, hidden: 8, ..CnnArch::strided_v1(8, 3) };
+        let mut cnn = Cnn::init(&b, &arch, InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(
+            3,
+            arch.input_len(),
+            (0..3 * arch.input_len()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let labels = vec![0usize, 2, 1];
+        let loss_of = |m: &Cnn<f32>| -> f64 { m.backprop(&b, &x, &labels).1.loss };
+        let (grads, _) = cnn.backprop(&b, &x, &labels);
+        let eps = 1e-3f32;
+        fn layer_w(cnn: &mut Cnn<f32>, l: usize) -> &mut Vec<f32> {
+            match l {
+                0 => &mut cnn.conv1.w.data,
+                1 => &mut cnn.conv2.w.data,
+                2 => &mut cnn.fc1.w.data,
+                _ => &mut cnn.fc2.w.data,
+            }
+        }
+        for (l, idx) in [(0usize, 3usize), (0, 11), (1, 5), (1, 40), (2, 7), (3, 2)] {
+            let orig = layer_w(&mut cnn, l)[idx];
+            layer_w(&mut cnn, l)[idx] = orig + eps;
+            let lp = loss_of(&cnn);
+            layer_w(&mut cnn, l)[idx] = orig - eps;
+            let lm = loss_of(&cnn);
+            layer_w(&mut cnn, l)[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps as f64);
+            let ana = grads.dw[l].data[idx] as f64;
+            assert!(
+                (num - ana).abs() < 1e-2 * (1.0 + num.abs()),
+                "strided layer {l} idx {idx}: numeric {num} vs analytic {ana}"
+            );
         }
     }
 

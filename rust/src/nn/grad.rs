@@ -1,0 +1,189 @@
+//! Gradients as first-class mergeable values.
+//!
+//! The sharded trainer ([`crate::train::shard`]) needs to move gradients
+//! between workers and combine them in a *fixed* ⊞ order, so gradients
+//! can no longer be an opaque value consumed inside `backprop`. This
+//! module gives them an algebra:
+//!
+//! * [`GradStore`] — a mergeable, scalable bag of per-layer gradient
+//!   buffers with flat slice views (the wire format every reduction,
+//!   checkpoint, or future multi-process transport works over),
+//! * [`RawStepStats`] — the unscaled loss/accuracy sums that ride along
+//!   with gradient sums and merge by plain addition.
+//!
+//! The reduction contract: [`GradStore::accumulate`] is elementwise
+//! backend ⊞ over the flat views via [`Backend::add_slice`] (so LNS gets
+//! its hoisted Δ±-LUT fast path), and callers fix the merge *order* —
+//! ⊞ is approximate and non-associative in LNS, so the order is part of
+//! the numeric spec exactly as it is for the matmul reductions.
+
+use super::mlp::{Gradients, StepStats};
+use crate::tensor::{ops, Backend, Tensor};
+
+/// Unscaled per-batch sums from a backward pass: the mergeable twin of
+/// [`StepStats`]. Merging is plain addition, so any grouping of shards
+/// produces identical integer counts; the f64 loss sum is folded in slot
+/// order by [`crate::train::shard::accumulate_tree`]'s caller.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct RawStepStats {
+    /// Σ over samples of −ln p_label (natural-log CE, unscaled).
+    pub loss_sum: f64,
+    /// Correct argmax predictions.
+    pub correct: usize,
+    /// Samples summed over.
+    pub n: usize,
+}
+
+impl RawStepStats {
+    /// One sample's contribution.
+    pub fn one(ln_p: f64, ok: bool) -> Self {
+        RawStepStats { loss_sum: -ln_p, correct: ok as usize, n: 1 }
+    }
+
+    /// Fold another partial in (left ⊞ right, matching the serial
+    /// row-ascending loss accumulation bit for bit: `a − l` ≡ `a + (−l)`
+    /// in IEEE arithmetic).
+    pub fn merge(&mut self, other: &RawStepStats) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.n += other.n;
+    }
+
+    /// Average into the reported [`StepStats`] — the same `sum × (1/n)`
+    /// expression the un-sharded backward passes have always used.
+    pub fn finish(&self) -> StepStats {
+        let inv = 1.0 / self.n as f64;
+        StepStats { loss: self.loss_sum * inv, accuracy: self.correct as f64 * inv }
+    }
+}
+
+/// A mergeable gradient container: per-layer buffers exposed as flat
+/// slices in a fixed layer order.
+///
+/// Implementations must keep the view order stable across calls and
+/// across same-shaped instances — [`GradStore::accumulate`] zips the
+/// views positionally, and the sharded trainer's bit-exactness guarantee
+/// rests on every worker agreeing on that layout.
+pub trait GradStore<B: Backend>: Sized + Send {
+    /// A same-shaped store holding the backend zero everywhere (the ⊞
+    /// identity — merging it into any store is exact in every backend).
+    fn zeros_like(&self, backend: &B) -> Self;
+
+    /// Flat per-layer views in the canonical order (each layer's weight
+    /// buffer, then its bias buffer).
+    fn flat_views(&self) -> Vec<&[B::E]>;
+
+    /// Mutable twin of [`GradStore::flat_views`], same order.
+    fn flat_views_mut(&mut self) -> Vec<&mut [B::E]>;
+
+    /// `self ⊞= other`, elementwise over the flat views (left ⊞ right).
+    fn accumulate(&mut self, backend: &B, other: &Self) {
+        let theirs = other.flat_views();
+        let mut mine = self.flat_views_mut();
+        assert_eq!(mine.len(), theirs.len(), "gradient layout mismatch");
+        for (dst, src) in mine.iter_mut().zip(theirs) {
+            assert_eq!(dst.len(), src.len(), "gradient view length mismatch");
+            backend.add_slice(dst, src);
+        }
+    }
+
+    /// Scale every element by a real constant (encoded once) — the single
+    /// `1/B` averaging step after a reduction.
+    fn scale(&mut self, backend: &B, c: f64) {
+        for view in self.flat_views_mut() {
+            ops::scale_slice(backend, view, c);
+        }
+    }
+}
+
+/// The MLP/CNN gradient bundle is the canonical store: `dw[l]` then
+/// `db[l]`, layers ascending.
+impl<B: Backend> GradStore<B> for Gradients<B::E> {
+    fn zeros_like(&self, backend: &B) -> Self {
+        Gradients {
+            dw: self
+                .dw
+                .iter()
+                .map(|t| Tensor::full(t.rows, t.cols, backend.zero()))
+                .collect(),
+            db: self.db.iter().map(|b| vec![backend.zero(); b.len()]).collect(),
+        }
+    }
+
+    fn flat_views(&self) -> Vec<&[B::E]> {
+        let mut v = Vec::with_capacity(2 * self.dw.len());
+        for (dw, db) in self.dw.iter().zip(&self.db) {
+            v.push(dw.data.as_slice());
+            v.push(db.as_slice());
+        }
+        v
+    }
+
+    fn flat_views_mut(&mut self) -> Vec<&mut [B::E]> {
+        let mut v = Vec::with_capacity(2 * self.dw.len());
+        for (dw, db) in self.dw.iter_mut().zip(self.db.iter_mut()) {
+            v.push(dw.data.as_mut_slice());
+            v.push(db.as_mut_slice());
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{InitScheme, Mlp};
+    use crate::rng::SplitMix64;
+    use crate::tensor::FloatBackend;
+
+    fn grads() -> (FloatBackend, Gradients<f32>) {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(3);
+        let mlp = Mlp::init(&b, &[3, 4, 2], InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(2, 3, vec![0.5f32, -0.25, 1.0, 0.0, 0.75, -1.0]);
+        let (g, _) = mlp.backprop(&b, &x, &[0, 1]);
+        (b, g)
+    }
+
+    #[test]
+    fn flat_views_cover_every_parameter() {
+        let (_, g) = grads();
+        let total: usize = GradStore::<FloatBackend>::flat_views(&g).iter().map(|v| v.len()).sum();
+        assert_eq!(total, 3 * 4 + 4 + 4 * 2 + 2);
+    }
+
+    #[test]
+    fn zeros_like_is_accumulate_identity() {
+        let (b, g) = grads();
+        let mut acc = g.zeros_like(&b);
+        acc.accumulate(&b, &g);
+        let got = GradStore::<FloatBackend>::flat_views(&acc);
+        let want = GradStore::<FloatBackend>::flat_views(&g);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scale_matches_tensor_scale() {
+        let (b, g) = grads();
+        let mut via_store = g.clone();
+        GradStore::<FloatBackend>::scale(&mut via_store, &b, 0.25);
+        let mut via_ops = g.clone();
+        for t in via_ops.dw.iter_mut() {
+            ops::scale(&b, t, 0.25);
+        }
+        for (s, o) in via_store.dw.iter().zip(&via_ops.dw) {
+            assert_eq!(s.data, o.data);
+        }
+    }
+
+    #[test]
+    fn raw_stats_finish_matches_manual_average() {
+        let mut s = RawStepStats::one(-0.7, true);
+        s.merge(&RawStepStats::one(-1.1, false));
+        s.merge(&RawStepStats::one(-0.2, true));
+        let f = s.finish();
+        assert_eq!(s.n, 3);
+        assert!((f.loss - (0.7 + 1.1 + 0.2) / 3.0).abs() < 1e-12);
+        assert!((f.accuracy - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -13,10 +13,10 @@
 //! bit-identical to the serial reference, so training stays exactly
 //! deterministic in the seed.
 
+use super::grad::{GradStore, RawStepStats};
 use super::init::{he_normal_init, log_domain_init, InitScheme};
 use crate::rng::SplitMix64;
 use crate::tensor::{ops, Backend, Tensor};
-use rayon::prelude::*;
 
 /// One dense layer's parameters.
 #[derive(Clone, Debug)]
@@ -156,74 +156,55 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         x: &Tensor<E>,
         labels: &[usize],
     ) -> (Gradients<E>, StepStats) {
+        let (mut grads, raw) = self.backprop_sums(backend, x, labels);
+        grads.scale(backend, 1.0 / raw.n as f64);
+        (grads, raw.finish())
+    }
+
+    /// [`Mlp::backprop`] without the `1/B` averaging: gradients come back
+    /// as **raw ⊞-sums over the batch rows** and the statistics as raw
+    /// sums ([`RawStepStats`]). This is the shard-mergeable form: because
+    /// every sample contributes exactly one ⊞ term per gradient element
+    /// (`dW` is a row-ascending `matmul_at` fold, `db` a row-ascending
+    /// `col_sum` fold), per-sample calls merged in sample order by
+    /// [`crate::train::shard::accumulate_tree`] reproduce this batched
+    /// fold bit for bit — the foundation of the sharded trainer's
+    /// determinism guarantee.
+    pub fn backprop_sums<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        labels: &[usize],
+    ) -> (Gradients<E>, RawStepStats) {
         let batch = x.rows;
         assert_eq!(labels.len(), batch);
         let (zs, acts) = self.forward(backend, x);
         let logits = acts.last().unwrap();
         let classes = self.dims[self.dims.len() - 1];
 
-        // δ_head = p − y (per row), plus loss/accuracy bookkeeping. Rows
-        // are independent; large (eval-sized) batches fan out across the
-        // rayon pool, with the scalar reduction done afterwards in row
-        // order so both paths produce identical numbers.
+        // δ_head = p − y (per row), plus loss/accuracy bookkeeping —
+        // the shared head of [`ops::softmax_ce_head`]: row-parallel for
+        // large batches, scalar reduction in row order either way.
         let mut delta = Tensor::full(batch, classes, backend.zero());
-        let per_row: Vec<(f64, bool)> = if ops::par_rows_worthwhile(batch) && classes > 0 {
-            delta
-                .data
-                .par_chunks_mut(classes)
-                .enumerate()
-                .map(|(i, grow)| {
-                    let row = logits.row(i);
-                    let ln_p = backend.softmax_ce_grad(row, labels[i], grow);
-                    (ln_p, ops::argmax_row(backend, row) == labels[i])
-                })
-                .collect()
-        } else {
-            (0..batch)
-                .map(|i| {
-                    let ln_p =
-                        backend.softmax_ce_grad(logits.row(i), labels[i], delta.row_mut(i));
-                    (ln_p, ops::argmax_row(backend, logits.row(i)) == labels[i])
-                })
-                .collect()
-        };
-        let mut loss = 0.0;
-        let mut correct = 0usize;
-        for &(ln_p, ok) in &per_row {
-            loss -= ln_p;
-            if ok {
-                correct += 1;
-            }
-        }
+        let (loss, correct) = ops::softmax_ce_head(backend, logits, labels, &mut delta);
 
         // Walk layers backwards: dW_l = a_{l-1}ᵀ · δ, db_l = Σ_rows δ,
-        // δ_{l-1} = (δ · W_lᵀ) ⊙ act'(z_{l-1}).
+        // δ_{l-1} = (δ · W_lᵀ) ⊙ act'(z_{l-1}). Sums stay unscaled; the
+        // single `1/B` lives in [`Mlp::backprop`] / the shard reduction.
         let nl = self.layers.len();
         let mut dw = vec![Tensor::full(0, 0, backend.zero()); nl];
         let mut db = vec![Vec::new(); nl];
-        let inv_b = 1.0 / batch as f64;
         for l in (0..nl).rev() {
-            let mut g = ops::matmul_at(backend, &acts[l], &delta);
-            ops::scale(backend, &mut g, inv_b);
-            let mut bias_g = Tensor::from_vec(1, classes_of(&delta), ops::col_sum(backend, &delta));
-            ops::scale(backend, &mut bias_g, inv_b);
-            dw[l] = g;
-            db[l] = bias_g.data;
+            dw[l] = ops::matmul_at(backend, &acts[l], &delta);
+            db[l] = ops::col_sum(backend, &delta);
             if l > 0 {
                 let back = ops::matmul_bt(backend, &delta, &self.layers[l].w);
                 delta = ops::leaky_relu_bwd(backend, &zs[l - 1], &back);
             }
         }
 
-        (
-            Gradients { dw, db },
-            StepStats { loss: loss * inv_b, accuracy: correct as f64 * inv_b },
-        )
+        (Gradients { dw, db }, RawStepStats { loss_sum: loss, correct, n: batch })
     }
-}
-
-fn classes_of<E>(t: &Tensor<E>) -> usize {
-    t.cols
 }
 
 #[cfg(test)]
@@ -309,6 +290,22 @@ mod tests {
                 (num - ana).abs() < 1e-2 * (1.0 + num.abs()),
                 "bias layer {l} idx {idx}: numeric {num} vs analytic {ana}"
             );
+        }
+    }
+
+    #[test]
+    fn backprop_is_scaled_backprop_sums() {
+        let (b, mlp) = tiny_mlp(6);
+        let x = Tensor::full(4, 4, 0.3f32);
+        let labels = [0usize, 1, 2, 0];
+        let (avg, stats) = mlp.backprop(&b, &x, &labels);
+        let (mut sums, raw) = mlp.backprop_sums(&b, &x, &labels);
+        assert_eq!(raw.n, 4);
+        assert_eq!(raw.finish().loss, stats.loss);
+        sums.scale(&b, 1.0 / 4.0);
+        for l in 0..avg.dw.len() {
+            assert_eq!(avg.dw[l].data, sums.dw[l].data, "layer {l} dW");
+            assert_eq!(avg.db[l], sums.db[l], "layer {l} db");
         }
     }
 

@@ -4,11 +4,13 @@
 //! trains in float, linear fixed point, or LNS.
 
 pub mod conv;
+pub mod grad;
 pub mod init;
 pub mod mlp;
 pub mod sgd;
 
-pub use conv::{Cnn, CnnArch, CnnCache, Conv2d, Pool2d, PoolKind};
+pub use conv::{Cnn, CnnArch, CnnCache, CnnVariant, Conv2d, Pool2d, PoolKind};
+pub use grad::{GradStore, RawStepStats};
 pub use init::{he_normal_init, log_domain_init, InitScheme};
 pub use mlp::{Dense, Gradients, Mlp, StepStats};
 pub use sgd::SgdConfig;

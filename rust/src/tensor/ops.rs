@@ -295,16 +295,74 @@ pub fn leaky_relu_bwd<B: Backend>(
     Tensor { rows: preact.rows, cols: preact.cols, data }
 }
 
-/// Scale every element by a real constant (encoded once).
-pub fn scale<B: Backend>(b: &B, x: &mut Tensor<B::E>, c: f64) {
+/// Slice-level scaling by a real constant (encoded once): the averaging
+/// step of the shard-reduction contract
+/// ([`crate::nn::grad::GradStore::scale`] — "⊞-reduce, then one ⊡ by
+/// `1/B`"). [`scale`] delegates here, so the gradient stores and the
+/// tensor ops cannot diverge on how a constant scaling is evaluated.
+/// Elementwise ⊡ is order-free, so the parallel and serial paths are
+/// bit-identical.
+pub fn scale_slice<B: Backend>(b: &B, xs: &mut [B::E], c: f64) {
     let ce = b.encode(c);
-    if parallel_worthwhile(x.len(), x.len()) {
-        x.data.par_iter_mut().for_each(|v| *v = b.mul(*v, ce));
+    if parallel_worthwhile(xs.len(), xs.len()) {
+        xs.par_iter_mut().for_each(|v| *v = b.mul(*v, ce));
     } else {
-        for v in x.data.iter_mut() {
+        for v in xs.iter_mut() {
             *v = b.mul(*v, ce);
         }
     }
+}
+
+/// Scale every element by a real constant (encoded once).
+pub fn scale<B: Backend>(b: &B, x: &mut Tensor<B::E>, c: f64) {
+    scale_slice(b, &mut x.data, c);
+}
+
+/// Soft-max/CE head bookkeeping shared by the MLP and CNN backward
+/// passes: writes `δ_j = p_j − y_j` into each row of `delta` and returns
+/// the `(loss_sum, correct)` reduction. Rows are independent, so
+/// eval-sized batches fan out across the rayon pool; the scalar
+/// reduction always happens afterwards in row order, so the parallel and
+/// serial paths report identical numbers. One shared definition so the
+/// two model families' heads cannot silently diverge (same policy as
+/// [`par_rows_worthwhile`]).
+pub fn softmax_ce_head<B: Backend>(
+    b: &B,
+    logits: &Tensor<B::E>,
+    labels: &[usize],
+    delta: &mut Tensor<B::E>,
+) -> (f64, usize) {
+    let classes = delta.cols;
+    debug_assert_eq!(logits.rows, delta.rows);
+    debug_assert_eq!(logits.rows, labels.len());
+    let per_row: Vec<(f64, bool)> = if par_rows_worthwhile(logits.rows) && classes > 0 {
+        delta
+            .data
+            .par_chunks_mut(classes)
+            .enumerate()
+            .map(|(i, grow)| {
+                let row = logits.row(i);
+                let ln_p = b.softmax_ce_grad(row, labels[i], grow);
+                (ln_p, argmax_row(b, row) == labels[i])
+            })
+            .collect()
+    } else {
+        (0..logits.rows)
+            .map(|i| {
+                let ln_p = b.softmax_ce_grad(logits.row(i), labels[i], delta.row_mut(i));
+                (ln_p, argmax_row(b, logits.row(i)) == labels[i])
+            })
+            .collect()
+    };
+    let mut loss = 0.0;
+    let mut correct = 0usize;
+    for &(ln_p, ok) in &per_row {
+        loss -= ln_p;
+        if ok {
+            correct += 1;
+        }
+    }
+    (loss, correct)
 }
 
 /// Index of the row maximum under the backend's linear order (argmax for
@@ -423,6 +481,46 @@ mod tests {
         let mut x = t(1, 3, &[2., 4., 6.]);
         scale(&b, &mut x, 0.5);
         assert_eq!(x.data, vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn softmax_ce_head_parallel_matches_serial() {
+        // Cross the PAR_MIN_ROWS threshold so the rayon branch actually
+        // runs, and pin it against a hand-rolled serial reference.
+        let b = fb();
+        let mut rng = crate::rng::SplitMix64::new(8);
+        let (rows, classes) = (80usize, 5usize);
+        let logits = Tensor::from_vec(
+            rows,
+            classes,
+            (0..rows * classes).map(|_| rng.uniform(-2., 2.) as f32).collect(),
+        );
+        let labels: Vec<usize> = (0..rows).map(|i| i % classes).collect();
+        let mut delta = Tensor::full(rows, classes, 0.0f32);
+        let (loss, correct) = softmax_ce_head(&b, &logits, &labels, &mut delta);
+
+        let mut want_delta = Tensor::full(rows, classes, 0.0f32);
+        let mut want_loss = 0.0;
+        let mut want_correct = 0usize;
+        for i in 0..rows {
+            want_loss -= b.softmax_ce_grad(logits.row(i), labels[i], want_delta.row_mut(i));
+            if argmax_row(&b, logits.row(i)) == labels[i] {
+                want_correct += 1;
+            }
+        }
+        assert_eq!(delta.data, want_delta.data);
+        assert_eq!(loss, want_loss);
+        assert_eq!(correct, want_correct);
+    }
+
+    #[test]
+    fn scale_slice_matches_tensor_scale() {
+        let b = fb();
+        let mut x = t(1, 3, &[2., 4., 6.]);
+        let mut flat = x.data.clone();
+        scale(&b, &mut x, 0.5);
+        scale_slice(&b, &mut flat, 0.5);
+        assert_eq!(flat, x.data);
     }
 
     #[test]

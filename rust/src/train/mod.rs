@@ -10,13 +10,21 @@
 //! to the serial references, training remains exactly deterministic in
 //! the seed regardless of thread count (see
 //! `tests/parallel_determinism.rs`).
+//!
+//! On top of that, the epoch loop itself is data-parallel: a
+//! [`ShardConfig`] splits every mini-batch across workers and merges the
+//! per-sample gradients in the fixed reduction order of
+//! [`shard::accumulate_tree`], so the trained weights are bit-identical
+//! for every worker count (see `tests/shard_determinism.rs`).
 
 pub mod metrics;
+pub mod shard;
 
 pub use metrics::{evaluate, evaluate_with, EvalResult};
+pub use shard::ShardConfig;
 
 use crate::data::Dataset;
-use crate::nn::{Cnn, CnnArch, InitScheme, Mlp, SgdConfig};
+use crate::nn::{Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig, StepStats};
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, Tensor};
 
@@ -37,6 +45,8 @@ pub struct TrainConfig {
     pub init: InitScheme,
     /// Master seed (init, shuffles, split).
     pub seed: u64,
+    /// Data-parallel execution (bit-exact for every worker count).
+    pub shard: ShardConfig,
 }
 
 impl TrainConfig {
@@ -50,6 +60,7 @@ impl TrainConfig {
             val_ratio: 5,
             init: InitScheme::HeNormal,
             seed: 0x5EED,
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -82,6 +93,13 @@ pub struct TrainResult<M> {
 /// Train an MLP on a dataset with the given backend. The entire arithmetic
 /// path — forward, softmax+CE gradient, backprop, updates — runs in the
 /// backend's number system; floats appear only in reporting.
+///
+/// With `cfg.shard.n_shards > 1` every mini-batch (and the evaluation
+/// passes) fan out across a pool of that many workers; the gradient
+/// reduction order of [`shard`] makes the trained weights **bit-identical
+/// to the serial trainer** for every worker count (the MLP's per-sample
+/// gradients are single ⊞ terms of the batched fold — see
+/// [`Mlp::backprop_sums`]).
 pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainResult<Mlp<B::E>> {
     assert_eq!(cfg.dims[0], ds.pixels, "model input must match dataset pixels");
     assert_eq!(
@@ -89,6 +107,8 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
         ds.classes,
         "model head must match dataset classes"
     );
+    cfg.shard.validate();
+    let pool = cfg.shard.build_pool();
     let mut rng = SplitMix64::new(cfg.seed);
     let mut model = Mlp::init(backend, &cfg.dims, cfg.init, &mut rng);
 
@@ -118,13 +138,23 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
             chunk.clear();
             chunk.extend_from_slice(&order[batch_start..end]);
             let (bx, by) = gather_batch(backend, &train_x, &train_y, &chunk);
-            let (grads, stats) = model.backprop(backend, &bx, &by);
+            // Sharded: per-sample backward passes fanned across the pool,
+            // reduced in the canonical order — bit-identical to the
+            // serial full-batch backward below (shard module docs).
+            let (grads, stats) = if cfg.shard.is_sharded() {
+                sharded_step(backend, pool.as_ref(), bx.rows, |i| {
+                    let xi = shard::sample_row(&bx, i);
+                    model.backprop_sums(backend, &xi, &by[i..i + 1])
+                })
+            } else {
+                model.backprop(backend, &bx, &by)
+            };
             cfg.sgd.apply(backend, &mut model, &grads);
             loss_sum += stats.loss;
             batches += 1;
         }
         let seconds = start.elapsed().as_secs_f64();
-        let val = evaluate(backend, &model, &val_x, &val_y);
+        let val = eval_pooled(pool.as_ref(), || evaluate(backend, &model, &val_x, &val_y));
         curve.push(EpochRecord {
             epoch,
             train_loss: loss_sum / batches.max(1) as f64,
@@ -133,8 +163,23 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
         });
     }
 
-    let test = evaluate(backend, &model, &test_x, &test_y);
+    let test = eval_pooled(pool.as_ref(), || evaluate(backend, &model, &test_x, &test_y));
     TrainResult { model, curve, test }
+}
+
+/// Run an evaluation closure on the shard pool when one exists (so the
+/// eval set fans out across the sized workers), inline otherwise. The
+/// metric reductions are row-ordered, so the numbers are identical on
+/// both paths.
+fn eval_pooled<R, F>(pool: Option<&rayon::ThreadPool>, f: F) -> R
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    match pool {
+        Some(p) => p.install(f),
+        None => f(),
+    }
 }
 
 /// Training hyper-parameters for the CNN workload.
@@ -154,6 +199,8 @@ pub struct CnnTrainConfig {
     pub init: InitScheme,
     /// Master seed (init, shuffles, split).
     pub seed: u64,
+    /// Data-parallel execution (bit-exact for every worker count).
+    pub shard: ShardConfig,
 }
 
 impl CnnTrainConfig {
@@ -168,6 +215,7 @@ impl CnnTrainConfig {
             val_ratio: 5,
             init: InitScheme::HeNormal,
             seed: 0x5EED,
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -176,6 +224,13 @@ impl CnnTrainConfig {
 /// same epoch/mini-batch/validation protocol as [`train`], with the conv
 /// subsystem's backprop and [`SgdConfig::apply_cnn`] updates. Everything
 /// arithmetic runs in the backend's number system.
+///
+/// The CNN's batch gradient is *defined* as the per-sample reduction of
+/// [`shard`] at **every** shard count, including 1: conv kernels fold
+/// over `B·OH·OW` patch terms, so sample sharding necessarily regroups
+/// the ⊞ chain into per-sample subtrees, and using that grouping
+/// uniformly is what makes the weights invariant in `n_shards` (see the
+/// shard module docs for the full argument).
 pub fn train_cnn<B: Backend>(
     backend: &B,
     ds: &Dataset,
@@ -183,6 +238,8 @@ pub fn train_cnn<B: Backend>(
 ) -> TrainResult<Cnn<B::E>> {
     assert_eq!(cfg.arch.input_len(), ds.pixels, "CNN input must match dataset pixels");
     assert_eq!(cfg.arch.classes, ds.classes, "CNN head must match dataset classes");
+    cfg.shard.validate();
+    let pool = cfg.shard.build_pool();
     let mut rng = SplitMix64::new(cfg.seed);
     let mut model = Cnn::init(backend, &cfg.arch, cfg.init, &mut rng);
 
@@ -211,14 +268,18 @@ pub fn train_cnn<B: Backend>(
             chunk.clear();
             chunk.extend_from_slice(&order[batch_start..end]);
             let (bx, by) = gather_batch(backend, &train_x, &train_y, &chunk);
-            let (grads, stats) = model.backprop(backend, &bx, &by);
+            let (grads, stats) = sharded_step(backend, pool.as_ref(), bx.rows, |i| {
+                let xi = shard::sample_row(&bx, i);
+                model.backprop_sums(backend, &xi, &by[i..i + 1])
+            });
             cfg.sgd.apply_cnn(backend, &mut model, &grads);
             loss_sum += stats.loss;
             batches += 1;
         }
         let seconds = start.elapsed().as_secs_f64();
-        let val =
-            evaluate_with(backend, classes, |v| model.logits(backend, v), &val_x, &val_y);
+        let val = eval_pooled(pool.as_ref(), || {
+            evaluate_with(backend, classes, |v| model.logits(backend, v), &val_x, &val_y)
+        });
         curve.push(EpochRecord {
             epoch,
             train_loss: loss_sum / batches.max(1) as f64,
@@ -227,8 +288,31 @@ pub fn train_cnn<B: Backend>(
         });
     }
 
-    let test = evaluate_with(backend, classes, |v| model.logits(backend, v), &test_x, &test_y);
+    let test = eval_pooled(pool.as_ref(), || {
+        evaluate_with(backend, classes, |v| model.logits(backend, v), &test_x, &test_y)
+    });
     TrainResult { model, curve, test }
+}
+
+/// One sharded training step, shared by both model families: fan the
+/// per-sample backward `local` across the pool (the ambient rayon pool
+/// when `pool` is `None` — same bits either way, since the reduction is
+/// slot-positional), reduce in the canonical order, apply the single
+/// `1/B` scale, and average the statistics.
+fn sharded_step<B, G, F>(
+    backend: &B,
+    pool: Option<&rayon::ThreadPool>,
+    batch: usize,
+    local: F,
+) -> (G, StepStats)
+where
+    B: Backend,
+    G: GradStore<B>,
+    F: Fn(usize) -> (G, RawStepStats) + Sync,
+{
+    let (mut g, raw) = shard::sharded_backprop_sums(backend, pool, batch, local);
+    g.scale(backend, 1.0 / raw.n as f64);
+    (g, raw.finish())
 }
 
 /// Gather a batch by row indices from a pre-encoded tensor.
@@ -279,7 +363,23 @@ mod tests {
             val_ratio: 5,
             init: InitScheme::HeNormal,
             seed: 7,
+            shard: ShardConfig::default(),
         }
+    }
+
+    #[test]
+    fn sharded_mlp_training_matches_serial_bitwise() {
+        let ds = tiny_ds();
+        let serial = train(&FloatBackend::default(), &ds, &tiny_cfg(3, 2));
+        let mut cfg = tiny_cfg(3, 2);
+        cfg.shard = ShardConfig::with_shards(3);
+        let sharded = train(&FloatBackend::default(), &ds, &cfg);
+        for l in 0..serial.model.layers.len() {
+            assert_eq!(serial.model.layers[l].w.data, sharded.model.layers[l].w.data);
+            assert_eq!(serial.model.layers[l].b, sharded.model.layers[l].b);
+        }
+        assert_eq!(serial.test.accuracy, sharded.test.accuracy);
+        assert_eq!(serial.test.loss, sharded.test.loss);
     }
 
     #[test]

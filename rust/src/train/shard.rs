@@ -1,0 +1,262 @@
+//! Sharded data-parallel training: split a mini-batch across workers,
+//! reduce gradients in a fixed topology, stay bit-exact.
+//!
+//! # The reduction contract
+//!
+//! LNS ⊞ is approximate and **non-associative**, so "average the shard
+//! gradients" is not a well-defined number until the grouping of the ⊞
+//! chain is pinned. This module pins it:
+//!
+//! 1. A mini-batch of `B` samples is split into `B` per-sample gradient
+//!    partials (the existing backward passes run per sample — see
+//!    [`crate::nn::Mlp::backprop_sums`] /
+//!    [`crate::nn::Cnn::backprop_sums`]).
+//! 2. The partials are merged by [`accumulate_tree`]: a **fixed-topology
+//!    left-leaning binary tree** (a chain) over the *sample index* —
+//!    `((g₀ ⊞ g₁) ⊞ g₂) ⊞ …` — evaluated elementwise with the backend's
+//!    slice-level ⊞ ([`crate::tensor::Backend::add_slice`]).
+//! 3. One final ⊡ by `1/B` ([`crate::nn::GradStore::scale`]).
+//!
+//! The topology is a function of the batch alone — **never** of the
+//! worker count or of which worker finished first — so the trained
+//! weights are bit-identical for every `n_shards`, proven across
+//! `{1, 2, 4, 8}` on all four backends by `tests/shard_determinism.rs`.
+//!
+//! # Why a chain and not a balanced tree
+//!
+//! The chain is the unique topology that makes sharding a *conservative
+//! extension* of the serial trainer: in the MLP every sample contributes
+//! exactly one ⊞ term per gradient element (`matmul_at` / `col_sum` fold
+//! rows ascending), so the chain over per-sample partials reproduces the
+//! un-sharded batched fold **bit for bit** — `n_shards = 1` (which keeps
+//! the original full-batch backward) and `n_shards ∈ {2, 4, 8}` agree
+//! exactly. A balanced tree would parallelize the merge itself but would
+//! redefine every historical result. The merge is `O(B·|θ|)` cheap next
+//! to the `O(B·model)` backward work, which is what actually fans out
+//! across the pool.
+//!
+//! For the CNN, conv-kernel gradients fold over `B·OH·OW` patch terms,
+//! so a per-sample partial is a *subtree* (its own `OH·OW`-term chain),
+//! and regrouping is unavoidable under sample sharding. The per-sample
+//! order is therefore the canonical order at **every** shard count for
+//! `train_cnn` (including 1), keeping the shard-invariance guarantee; it
+//! differs from the pre-shard flat patch-major chain only in ⊞ grouping.
+//!
+//! Future scaling work (multi-process, PJRT offload) plugs into this
+//! contract: a remote worker owns a contiguous sample range, computes the
+//! same per-sample partials, and the coordinator merges them by index.
+
+use crate::nn::{GradStore, RawStepStats};
+use crate::tensor::{Backend, Tensor};
+use rayon::prelude::*;
+
+/// Most workers the trainer will build a pool for. The determinism
+/// guarantee holds for any count (the reduction never sees the worker
+/// count); this bound only guards against nonsensical pool sizes.
+pub const MAX_SHARDS: usize = 64;
+
+/// Data-parallel execution settings for one training run.
+///
+/// `n_shards` is a worker-count **cap**, not a boost: a sharded run
+/// confines its step and evaluation work to a dedicated pool of exactly
+/// that many threads (nested tensor ops included, via rayon pool
+/// nesting), while `n_shards = 1` keeps the legacy path on whatever
+/// pool the caller provides. On a many-core host, `--shards 2` can
+/// therefore be *slower* than the unsharded run on the full global pool
+/// — pick `n_shards` near the cores you want the run to own, or use
+/// the sweep-level `threads / shards` sizing the coordinator applies.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Workers the mini-batch (and evaluation chunks) fan out across.
+    /// `1` = no dedicated pool (work runs on the ambient rayon pool);
+    /// the trained weights are the same either way.
+    pub n_shards: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { n_shards: 1 }
+    }
+}
+
+impl ShardConfig {
+    /// Config with the given worker count. Panics on counts outside
+    /// `1..=MAX_SHARDS`; front ends that want an error instead use
+    /// [`ShardConfig::try_with_shards`].
+    pub fn with_shards(n_shards: usize) -> Self {
+        Self::try_with_shards(n_shards).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`ShardConfig::with_shards`] — the single source
+    /// of truth for what counts are honoured (the CLI maps the error
+    /// onto its usual flag-error path instead of panicking).
+    pub fn try_with_shards(n_shards: usize) -> Result<Self, String> {
+        if (1..=MAX_SHARDS).contains(&n_shards) {
+            Ok(ShardConfig { n_shards })
+        } else {
+            Err(format!("n_shards must be in 1..={MAX_SHARDS}, got {n_shards}"))
+        }
+    }
+
+    /// Panic early on worker counts the trainer won't honour.
+    pub fn validate(&self) {
+        if let Err(e) = Self::try_with_shards(self.n_shards) {
+            panic!("{e}");
+        }
+    }
+
+    /// Does this config fan work out at all?
+    pub fn is_sharded(&self) -> bool {
+        self.n_shards > 1
+    }
+
+    /// Build the sized worker pool, or `None` for serial execution. The
+    /// pool is built once per training run; per-step work is dispatched
+    /// onto it with `install`, and the tensor ops' nested rayon calls
+    /// share it via work stealing.
+    pub fn build_pool(&self) -> Option<rayon::ThreadPool> {
+        self.validate();
+        if !self.is_sharded() {
+            return None;
+        }
+        Some(
+            rayon::ThreadPoolBuilder::new()
+                .num_threads(self.n_shards)
+                .thread_name(|i| format!("shard-{i}"))
+                .build()
+                .expect("building the shard thread pool"),
+        )
+    }
+}
+
+/// One sample's row as a `[1, cols]` tensor (the unit of shard work).
+pub fn sample_row<E: Copy>(x: &Tensor<E>, i: usize) -> Tensor<E> {
+    Tensor::from_vec(1, x.cols, x.row(i).to_vec())
+}
+
+/// Merge gradient partials in the canonical fixed topology: the
+/// left-leaning binary chain over the *slot index* (see module docs).
+///
+/// Only the position in `parts` matters — compute the partials in any
+/// order, on any worker, and the result is identical as long as each one
+/// lands in its own slot (`tests/shard_determinism.rs` proves this by
+/// filling the slots in permuted order). Returns `None` for no parts.
+pub fn accumulate_tree<B: Backend, G: GradStore<B>>(backend: &B, parts: Vec<G>) -> Option<G> {
+    let mut it = parts.into_iter();
+    let mut acc = it.next()?;
+    for p in it {
+        acc.accumulate(backend, &p);
+    }
+    Some(acc)
+}
+
+/// One sharded backward pass: fan `local(i)` (the per-sample gradient
+/// sums for sample `i`) across the pool — or across the *ambient* rayon
+/// pool when no dedicated one was built, which is safe because the
+/// reduction depends only on slot positions, never on which worker
+/// computed what — then reduce with [`accumulate_tree`] and fold the
+/// statistics in sample order.
+///
+/// Returns **unscaled** sums — callers apply the single `1/B`
+/// ([`GradStore::scale`]) exactly as the un-sharded backward passes do.
+pub fn sharded_backprop_sums<B, G, F>(
+    backend: &B,
+    pool: Option<&rayon::ThreadPool>,
+    batch: usize,
+    local: F,
+) -> (G, RawStepStats)
+where
+    B: Backend,
+    G: GradStore<B>,
+    F: Fn(usize) -> (G, RawStepStats) + Sync,
+{
+    assert!(batch > 0, "sharded backward needs a non-empty batch");
+    let parts: Vec<(G, RawStepStats)> = match pool {
+        Some(p) if batch > 1 => p.install(|| (0..batch).into_par_iter().map(&local).collect()),
+        None if batch > 1 => (0..batch).into_par_iter().map(&local).collect(),
+        _ => (0..batch).map(&local).collect(),
+    };
+    let mut stats = RawStepStats::default();
+    let mut grads = Vec::with_capacity(parts.len());
+    for (g, s) in parts {
+        stats.merge(&s);
+        grads.push(g);
+    }
+    let grads = accumulate_tree(backend, grads).expect("non-empty batch");
+    (grads, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Gradients, InitScheme, Mlp};
+    use crate::rng::SplitMix64;
+    use crate::tensor::FloatBackend;
+
+    fn fixture() -> (FloatBackend, Mlp<f32>, Tensor<f32>, Vec<usize>) {
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(12);
+        let mlp = Mlp::init(&b, &[5, 7, 3], InitScheme::HeNormal, &mut rng);
+        let x = Tensor::from_vec(
+            6,
+            5,
+            (0..30).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        (b, mlp, x, vec![0, 1, 2, 0, 1, 2])
+    }
+
+    #[test]
+    fn config_validates_bounds() {
+        ShardConfig::default().validate();
+        ShardConfig::with_shards(MAX_SHARDS).validate();
+        assert!(!ShardConfig::default().is_sharded());
+        assert!(ShardConfig::with_shards(2).is_sharded());
+        assert!(ShardConfig::default().build_pool().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "n_shards must be in")]
+    fn zero_shards_panics() {
+        ShardConfig { n_shards: 0 }.validate();
+    }
+
+    #[test]
+    fn per_sample_chain_matches_batched_sums_float() {
+        // The MLP equivalence theorem, float instance (the LNS instances
+        // live in tests/shard_determinism.rs): per-sample partials merged
+        // in sample order equal the batched fold exactly.
+        let (b, mlp, x, labels) = fixture();
+        let (batched, braw) = mlp.backprop_sums(&b, &x, &labels);
+        let parts: Vec<(Gradients<f32>, RawStepStats)> = (0..x.rows)
+            .map(|i| mlp.backprop_sums(&b, &sample_row(&x, i), &labels[i..i + 1]))
+            .collect();
+        let mut stats = RawStepStats::default();
+        let mut grads = Vec::new();
+        for (g, s) in parts {
+            stats.merge(&s);
+            grads.push(g);
+        }
+        let merged = accumulate_tree(&b, grads).unwrap();
+        assert_eq!(stats.n, braw.n);
+        assert_eq!(stats.loss_sum, braw.loss_sum);
+        assert_eq!(stats.correct, braw.correct);
+        for l in 0..batched.dw.len() {
+            assert_eq!(batched.dw[l].data, merged.dw[l].data, "layer {l} dW");
+            assert_eq!(batched.db[l], merged.db[l], "layer {l} db");
+        }
+    }
+
+    #[test]
+    fn sharded_driver_matches_serial_driver() {
+        let (b, mlp, x, labels) = fixture();
+        let local = |i: usize| mlp.backprop_sums(&b, &sample_row(&x, i), &labels[i..i + 1]);
+        let (g_serial, s_serial) = sharded_backprop_sums(&b, None, x.rows, local);
+        let pool = ShardConfig::with_shards(4).build_pool().unwrap();
+        let (g_par, s_par): (Gradients<f32>, _) =
+            sharded_backprop_sums(&b, Some(&pool), x.rows, local);
+        assert_eq!(s_serial.loss_sum, s_par.loss_sum);
+        for l in 0..g_serial.dw.len() {
+            assert_eq!(g_serial.dw[l].data, g_par.dw[l].data, "layer {l}");
+        }
+    }
+}

@@ -262,6 +262,7 @@ fn training_bitexact_across_runs_with_parallel_engine() {
         val_ratio: 5,
         init: InitScheme::HeNormal,
         seed: 7,
+        shard: Default::default(),
     };
     let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
     let r1 = train(&b, &ds, &cfg);

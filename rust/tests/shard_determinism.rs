@@ -1,0 +1,308 @@
+//! Shard determinism: the headline guarantee of the data-parallel
+//! trainer. For the MLP and the CNN, on all four number systems (float,
+//! linear fixed point, LNS LUT, LNS bit-shift), training with
+//! `n_shards ∈ {1, 2, 4, 8}` must produce **bit-identical** final
+//! weights, biases, per-epoch losses and test metrics — and for the MLP,
+//! `n_shards = 1` takes the pre-existing serial full-batch path, so the
+//! same assertions prove the sharded reduction extends the serial
+//! trainer bit for bit.
+//!
+//! Plus the reduction-contract unit tests: `accumulate_tree` depends
+//! only on slot position (not compute/arrival order), and the MLP
+//! per-sample-chain ≡ batched-fold theorem on the order-sensitive LNS
+//! backend.
+
+use lnsdnn::data::{stripes_dataset, synth_dataset, StripeSpec, SynthSpec};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::{CnnArch, GradStore, Gradients, InitScheme, Mlp, RawStepStats, SgdConfig};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
+use lnsdnn::train::shard::{accumulate_tree, sample_row, ShardConfig};
+use lnsdnn::train::{train, train_cnn, CnnTrainConfig, TrainConfig, TrainResult};
+
+/// Shard counts compared against the `n_shards = 1` reference run (which
+/// the helpers train once — rerunning 1 vs 1 would only test run-to-run
+/// determinism, which `tests/train_integration.rs` already pins).
+const SHARD_COUNTS: [usize; 3] = [2, 4, 8];
+
+fn mlp_ds() -> lnsdnn::data::Dataset {
+    synth_dataset(&SynthSpec {
+        name: "shard-tiny".into(),
+        classes: 3,
+        train_per_class: 25,
+        test_per_class: 8,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.04,
+        seed: 41,
+    })
+}
+
+fn mlp_cfg(n_shards: usize) -> TrainConfig {
+    TrainConfig {
+        dims: vec![784, 12, 3],
+        epochs: 2,
+        batch_size: 6,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 13,
+        shard: ShardConfig::with_shards(n_shards),
+    }
+}
+
+fn cnn_ds() -> lnsdnn::data::Dataset {
+    stripes_dataset(&StripeSpec {
+        train_per_class: 12,
+        test_per_class: 4,
+        ..StripeSpec::cnn_default(1.0, 19)
+    })
+}
+
+fn cnn_cfg(n_shards: usize) -> CnnTrainConfig {
+    let mut cfg = CnnTrainConfig::lenet(12, 4);
+    cfg.arch.c1 = 3;
+    cfg.arch.c2 = 4;
+    cfg.arch.hidden = 16;
+    cfg.epochs = 1;
+    cfg.batch_size = 6;
+    cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+    cfg.seed = 23;
+    cfg.shard = ShardConfig::with_shards(n_shards);
+    cfg
+}
+
+/// Assert two MLP runs are bit-identical: every parameter, every curve
+/// point, the test metrics.
+fn assert_mlp_identical<E: Copy + PartialEq + std::fmt::Debug>(
+    tag: &str,
+    n: usize,
+    a: &TrainResult<Mlp<E>>,
+    b: &TrainResult<Mlp<E>>,
+) {
+    for l in 0..a.model.layers.len() {
+        assert_eq!(
+            a.model.layers[l].w.data, b.model.layers[l].w.data,
+            "{tag}: layer {l} weights diverge at n_shards={n}"
+        );
+        assert_eq!(
+            a.model.layers[l].b, b.model.layers[l].b,
+            "{tag}: layer {l} biases diverge at n_shards={n}"
+        );
+    }
+    for (ea, eb) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(ea.train_loss, eb.train_loss, "{tag}: epoch loss diverges at n_shards={n}");
+        assert_eq!(ea.val_accuracy, eb.val_accuracy, "{tag}: val acc diverges at n_shards={n}");
+    }
+    assert_eq!(a.test.accuracy, b.test.accuracy, "{tag}: test acc diverges at n_shards={n}");
+    assert_eq!(a.test.loss, b.test.loss, "{tag}: test loss diverges at n_shards={n}");
+}
+
+fn mlp_shard_invariance<B: Backend>(backend: &B) {
+    let ds = mlp_ds();
+    let tag = backend.tag();
+    // n_shards = 1 is the pre-existing serial full-batch trainer; every
+    // sharded run must reproduce it exactly.
+    let reference = train(backend, &ds, &mlp_cfg(1));
+    for n in SHARD_COUNTS {
+        let run = train(backend, &ds, &mlp_cfg(n));
+        assert_mlp_identical(&tag, n, &reference, &run);
+    }
+}
+
+#[test]
+fn shard_mlp_bit_identical_float() {
+    mlp_shard_invariance(&FloatBackend::default());
+}
+
+#[test]
+fn shard_mlp_bit_identical_fixed16() {
+    mlp_shard_invariance(&FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01));
+}
+
+#[test]
+fn shard_mlp_bit_identical_lns16_lut() {
+    mlp_shard_invariance(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01));
+}
+
+#[test]
+fn shard_mlp_bit_identical_lns16_bitshift() {
+    mlp_shard_invariance(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01));
+}
+
+fn cnn_shard_invariance<B: Backend>(backend: &B) {
+    let ds = cnn_ds();
+    let tag = backend.tag();
+    let reference = train_cnn(backend, &ds, &cnn_cfg(1));
+    for n in SHARD_COUNTS {
+        let run = train_cnn(backend, &ds, &cnn_cfg(n));
+        assert_eq!(
+            reference.model.conv1.w.data, run.model.conv1.w.data,
+            "{tag}: conv1 weights diverge at n_shards={n}"
+        );
+        assert_eq!(
+            reference.model.conv2.w.data, run.model.conv2.w.data,
+            "{tag}: conv2 weights diverge at n_shards={n}"
+        );
+        assert_eq!(
+            reference.model.fc1.w.data, run.model.fc1.w.data,
+            "{tag}: fc1 weights diverge at n_shards={n}"
+        );
+        assert_eq!(
+            reference.model.fc2.w.data, run.model.fc2.w.data,
+            "{tag}: fc2 weights diverge at n_shards={n}"
+        );
+        assert_eq!(
+            reference.model.fc2.b, run.model.fc2.b,
+            "{tag}: head biases diverge at n_shards={n}"
+        );
+        for (ea, eb) in reference.curve.iter().zip(&run.curve) {
+            assert_eq!(ea.train_loss, eb.train_loss, "{tag}: CNN loss diverges at n_shards={n}");
+        }
+        assert_eq!(reference.test.accuracy, run.test.accuracy, "{tag}: CNN test acc (n={n})");
+        assert_eq!(reference.test.loss, run.test.loss, "{tag}: CNN test loss (n={n})");
+    }
+}
+
+#[test]
+fn shard_cnn_bit_identical_float() {
+    cnn_shard_invariance(&FloatBackend::default());
+}
+
+#[test]
+fn shard_cnn_bit_identical_fixed16() {
+    cnn_shard_invariance(&FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01));
+}
+
+#[test]
+fn shard_cnn_bit_identical_lns16_lut() {
+    cnn_shard_invariance(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01));
+}
+
+#[test]
+fn shard_cnn_bit_identical_lns16_bitshift() {
+    cnn_shard_invariance(&LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01));
+}
+
+/// The strided workload rides the same reduction contract: spot-check
+/// shard invariance on the stride-2 variant (float + LNS-LUT).
+#[test]
+fn shard_cnn_strided_v1_bit_identical() {
+    let ds = cnn_ds();
+    for n in [2usize, 8] {
+        let mut a = cnn_cfg(1);
+        a.arch = CnnArch { c1: 3, c2: 4, hidden: 16, ..CnnArch::strided_v1(12, 4) };
+        let mut b = cnn_cfg(n);
+        b.arch = a.arch.clone();
+        let backend = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let ra = train_cnn(&backend, &ds, &a);
+        let rb = train_cnn(&backend, &ds, &b);
+        assert_eq!(ra.model.conv1.w.data, rb.model.conv1.w.data, "strided conv1 (n={n})");
+        assert_eq!(ra.model.fc2.w.data, rb.model.fc2.w.data, "strided fc2 (n={n})");
+        assert_eq!(ra.test.accuracy, rb.test.accuracy, "strided test acc (n={n})");
+    }
+}
+
+/// `accumulate_tree` is a function of slot *positions*, not of the order
+/// the partials were computed or delivered in: filling the slot vector
+/// in a permuted order and then restoring slot order yields the exact
+/// same merged gradient — on the LNS backend, where ⊞ grouping genuinely
+/// changes bits, so the test would catch an arrival-order reduction.
+#[test]
+fn shard_accumulate_tree_ignores_arrival_order() {
+    let backend = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let mut rng = SplitMix64::new(77);
+    let mlp = Mlp::init(&backend, &[6, 5, 3], InitScheme::HeNormal, &mut rng);
+    let x = Tensor::from_vec(
+        8,
+        6,
+        (0..48).map(|_| backend.encode(rng.uniform(-1.0, 1.0))).collect(),
+    );
+    let labels: Vec<usize> = (0..8).map(|i| i % 3).collect();
+
+    let local = |i: usize| mlp.backprop_sums(&backend, &sample_row(&x, i), &labels[i..i + 1]);
+
+    // Compute in ascending order.
+    let fwd: Vec<_> = (0..8).map(local).map(|(g, _)| g).collect();
+    // Compute in a scrambled order, deliver each partial to its slot.
+    let arrival = [5usize, 0, 7, 2, 6, 1, 4, 3];
+    let mut slots: Vec<Option<Gradients<_>>> = (0..8).map(|_| None).collect();
+    for &i in &arrival {
+        slots[i] = Some(local(i).0);
+    }
+    let permuted: Vec<_> = slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+
+    let a = accumulate_tree(&backend, fwd).unwrap();
+    let b = accumulate_tree(&backend, permuted).unwrap();
+    for l in 0..a.dw.len() {
+        assert_eq!(a.dw[l].data, b.dw[l].data, "layer {l} dW depends on arrival order");
+        assert_eq!(a.db[l], b.db[l], "layer {l} db depends on arrival order");
+    }
+}
+
+/// The MLP equivalence theorem on the order-sensitive backend: merging
+/// per-sample partials in slot order reproduces the batched ⊞ fold bit
+/// for bit (each sample is exactly one term of that fold).
+#[test]
+fn shard_per_sample_chain_matches_batched_sums_lns() {
+    let backend = LnsBackend::new(LnsSystem::new(LnsConfig::w12_lut()), 0.01);
+    let mut rng = SplitMix64::new(3);
+    let mlp = Mlp::init(&backend, &[10, 8, 4], InitScheme::HeNormal, &mut rng);
+    let x = Tensor::from_vec(
+        7,
+        10,
+        (0..70).map(|_| backend.encode(rng.uniform(-1.0, 1.0))).collect(),
+    );
+    let labels: Vec<usize> = (0..7).map(|i| i % 4).collect();
+
+    let (batched, braw) = mlp.backprop_sums(&backend, &x, &labels);
+    let mut stats = RawStepStats::default();
+    let mut parts = Vec::new();
+    for i in 0..x.rows {
+        let (g, s) = mlp.backprop_sums(&backend, &sample_row(&x, i), &labels[i..i + 1]);
+        stats.merge(&s);
+        parts.push(g);
+    }
+    let merged = accumulate_tree(&backend, parts).unwrap();
+    assert_eq!(stats.loss_sum, braw.loss_sum);
+    assert_eq!(stats.correct, braw.correct);
+    for l in 0..batched.dw.len() {
+        assert_eq!(batched.dw[l].data, merged.dw[l].data, "layer {l} dW");
+        assert_eq!(batched.db[l], merged.db[l], "layer {l} db");
+    }
+}
+
+/// Scaling after the reduction is the same single ⊡ the serial backward
+/// applies — `backprop` on a batch equals the reduced-and-scaled
+/// per-sample path end to end (gradient-level twin of the training-level
+/// invariance tests above).
+#[test]
+fn shard_scaled_reduction_matches_backprop_fixed() {
+    let backend = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+    let mut rng = SplitMix64::new(29);
+    let mlp = Mlp::init(&backend, &[9, 6, 3], InitScheme::HeNormal, &mut rng);
+    let x = Tensor::from_vec(
+        5,
+        9,
+        (0..45).map(|_| backend.encode(rng.uniform(-1.0, 1.0))).collect(),
+    );
+    let labels = vec![0usize, 1, 2, 1, 0];
+
+    let (want, want_stats) = mlp.backprop(&backend, &x, &labels);
+    let mut stats = RawStepStats::default();
+    let mut parts = Vec::new();
+    for i in 0..x.rows {
+        let (g, s) = mlp.backprop_sums(&backend, &sample_row(&x, i), &labels[i..i + 1]);
+        stats.merge(&s);
+        parts.push(g);
+    }
+    let mut got = accumulate_tree(&backend, parts).unwrap();
+    got.scale(&backend, 1.0 / stats.n as f64);
+    assert_eq!(want_stats.loss, stats.finish().loss);
+    for l in 0..want.dw.len() {
+        assert_eq!(want.dw[l].data, got.dw[l].data, "layer {l} dW");
+        assert_eq!(want.db[l], got.db[l], "layer {l} db");
+    }
+}

@@ -8,7 +8,7 @@ use lnsdnn::lns::{DeltaMode, LnsConfig, LnsSystem, LnsValue};
 use lnsdnn::nn::{Cnn, CnnArch, InitScheme, PoolKind, SgdConfig};
 use lnsdnn::proptest_util::{run_prop, DEFAULT_CASES};
 use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
-use lnsdnn::train::{train, train_cnn, CnnTrainConfig, TrainConfig};
+use lnsdnn::train::{train, train_cnn, CnnTrainConfig, ShardConfig, TrainConfig};
 
 fn tiny_ds(seed: u64) -> lnsdnn::data::Dataset {
     synth_dataset(&SynthSpec {
@@ -33,6 +33,7 @@ fn cfg(classes: usize) -> TrainConfig {
         val_ratio: 5,
         init: InitScheme::HeNormal,
         seed: 11,
+        shard: ShardConfig::default(),
     }
 }
 
