@@ -4,9 +4,9 @@
 //! LNS MACs need no multiplier; in software the LUT ⊞ costs a few integer
 //! ops + a load — this bench quantifies that overhead against linear
 //! fixed-point and float MACs) plus the Δ/softmax primitives, and — the
-//! headline — serial vs rayon row-parallel matmul throughput per backend
-//! (MAC/s and rows/s), so the parallel engine's speedup is measured, not
-//! asserted.
+//! headline — serial vs rayon row-parallel vs cache-tiled matmul
+//! throughput per backend (MAC/s and rows/s), so the parallel engine's
+//! and the tiled kernels' speedups are measured, not asserted.
 
 use lnsdnn::bench_util::{bench, black_box};
 use lnsdnn::fixed::{FixedConfig, FixedSystem};
@@ -190,6 +190,111 @@ fn main() {
             || black_box(ops::matmul_bt_par(&b, &a, &wt)).len(),
         );
     }
+
+    // Cache-tiled vs row-parallel: the blocked kernels pack `w` into
+    // L1/L2-sized column panels while keeping every per-element ⊞ chain
+    // k-ascending, so these lines measure pure locality — the results
+    // are bit-identical by construction (tests/tiled_exactness.rs).
+    // Reported at the ISSUE's three motivating shapes: 256³, the MLP
+    // eval batch (B×784 · 784×100), and the im2col patch matrix of
+    // lenet28's conv-2 at batch 32 (6272×150 · 150×12).
+    println!("\n-- tiled vs row-parallel (tiles {:?}) --", ops::Tiling::DEFAULT);
+    {
+        let b = FloatBackend::default();
+        let (a, w) = float_mats(m, k, n, 12);
+        bench_tiled(
+            "matmul256/float32",
+            macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+    }
+    {
+        let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let (a, w) = encoded_mats(&b, m, k, n, 13);
+        bench_tiled(
+            "matmul256/lin16",
+            macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+    }
+    for (label, cfg) in [
+        ("log16-lut", LnsConfig::w16_lut()),
+        ("log16-bs", LnsConfig::w16_bitshift()),
+    ] {
+        let b = LnsBackend::new(LnsSystem::new(cfg), 0.01);
+        let (a, w) = encoded_mats(&b, m, k, n, 14);
+        bench_tiled(
+            &format!("matmul256/{label}"),
+            macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+        // The backward shapes at 256³ for the LNS hot path.
+        let wt = w.transpose();
+        bench_tiled(
+            &format!("matmul256_bt/{label}"),
+            macs,
+            || black_box(ops::matmul_bt_par(&b, &a, &wt)).len(),
+            || black_box(ops::matmul_bt_tiled(&b, &a, &wt)).len(),
+        );
+        let at = a.transpose();
+        bench_tiled(
+            &format!("matmul256_at/{label}"),
+            macs,
+            || black_box(ops::matmul_at_par(&b, &at, &w)).len(),
+            || black_box(ops::matmul_at_tiled(&b, &at, &w)).len(),
+        );
+    }
+    // MLP eval batch: 256×784 · 784×100 (the 784-wide layer the tiles
+    // were sized for).
+    let (bm, bk, bn) = (256usize, 784usize, 100usize);
+    let mlp_macs = (bm * bk * bn) as f64;
+    {
+        let b = FloatBackend::default();
+        let (a, w) = float_mats(bm, bk, bn, 15);
+        bench_tiled(
+            "matmul_mlp 256×784·784×100/float32",
+            mlp_macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+    }
+    {
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let (a, w) = encoded_mats(&b, bm, bk, bn, 16);
+        bench_tiled(
+            "matmul_mlp 256×784·784×100/log16-lut",
+            mlp_macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+    }
+    // im2col patch matrix: lenet28 conv-2 at batch 32 lowers to
+    // 6272×150 · 150×12 (B·OH·OW = 32·14·14 patch rows).
+    let (pm, pk, pn) = (6272usize, 150usize, 12usize);
+    let patch_macs = (pm * pk * pn) as f64;
+    {
+        let b = FloatBackend::default();
+        let (a, w) = float_mats(pm, pk, pn, 17);
+        bench_tiled(
+            "matmul_im2col 6272×150·150×12/float32",
+            patch_macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+    }
+    {
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let (a, w) = encoded_mats(&b, pm, pk, pn, 18);
+        bench_tiled(
+            "matmul_im2col 6272×150·150×12/log16-lut",
+            patch_macs,
+            || black_box(ops::matmul_par(&b, &a, &w)).len(),
+            || black_box(ops::matmul_tiled(&b, &a, &w)).len(),
+        );
+    }
 }
 
 /// Random float operand pair `[m,k]·[k,n]`.
@@ -212,6 +317,23 @@ fn encoded_mats<B: Backend>(
     let a = Tensor::from_vec(m, k, (0..m * k).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
     let w = Tensor::from_vec(k, n, (0..k * n).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
     (a, w)
+}
+
+/// Bench the row-parallel and cache-tiled variants of one case and print
+/// the tiled-vs-row speedup summary line (throughput column is MAC/s).
+fn bench_tiled<FR: FnMut() -> usize, FT: FnMut() -> usize>(
+    label: &str,
+    macs: f64,
+    mut row: FR,
+    mut tiled: FT,
+) {
+    let r = lnsdnn::bench_util::bench(&format!("{label} row-par"), Some(macs), || {
+        black_box(row());
+    });
+    let t = lnsdnn::bench_util::bench(&format!("{label} tiled"), Some(macs), || {
+        black_box(tiled());
+    });
+    println!("    ↳ tiled vs row-par {:.2}×", r.median_ns / t.median_ns);
 }
 
 /// Bench the serial and parallel variants of one case and print the

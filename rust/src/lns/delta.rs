@@ -135,24 +135,23 @@ impl DeltaApprox {
             DeltaMode::Exact => {
                 // Materialized at the word's own resolution (shift 0): the
                 // float-free equivalent of evaluating the closed form per
-                // call, used as the reference/ablation mode.
+                // call, used as the reference/ablation mode. Entries round
+                // through [`LnsConfig::to_units`] — the word format's one
+                // rounding rule, shared with the LUT builder above — so a
+                // future rounding change cannot silently fork the modes
+                // (pinned by `modes_agree_at_shared_entries`).
                 let n_padded = (d_reach + 1) as usize;
-                let unit = (1i64 << cfg.frac_bits) as f64;
                 let mut plus = Vec::with_capacity(n_padded);
                 let mut minus = Vec::with_capacity(n_padded);
                 for i in 0..n_padded {
-                    let d = i as f64 / unit;
-                    let p = delta_plus_exact(d) * unit;
-                    plus.push((p + 0.5).floor() as i32);
+                    let d = cfg.from_units(i as i32);
+                    plus.push(cfg.to_units(delta_plus_exact(d)) as i32);
                     if i == 0 {
                         minus.push(DELTA_MINUS_NEG_SAT);
                     } else {
-                        let m = delta_minus_exact(d) * unit;
-                        minus.push(if !m.is_finite() || m < DELTA_MINUS_NEG_SAT as f64 {
-                            DELTA_MINUS_NEG_SAT
-                        } else {
-                            (m - 0.5).ceil() as i32
-                        });
+                        let m = delta_minus_exact(d);
+                        let units = if m.is_finite() { cfg.to_units(m) } else { i64::MIN };
+                        minus.push(units.max(DELTA_MINUS_NEG_SAT as i64) as i32);
                     }
                 }
                 DeltaApprox {
@@ -324,6 +323,50 @@ mod tests {
             let du = d << cfg.frac_bits;
             let want = cfg.to_units((-(d as f64)).exp2());
             assert_eq!(bs.plus(du), want);
+        }
+    }
+
+    #[test]
+    fn modes_agree_at_shared_entries() {
+        // All three Δ modes now round through `LnsConfig::to_units`, so
+        // wherever two modes sample the same `d` their table entries must
+        // be equal — the guard that keeps a future rounding change from
+        // silently forking them.
+        for cfg in [LnsConfig::w16_lut(), LnsConfig::w12_lut()] {
+            let exact = DeltaApprox::new(&cfg, DeltaMode::Exact);
+            // LUT sample points d = i·r are shared with the Exact table.
+            for spec in [LutSpec::MAC20, LutSpec::SOFTMAX640] {
+                if spec.log2_inv_r > cfg.frac_bits {
+                    continue; // finer than the word — unrepresentable
+                }
+                let lut = DeltaApprox::new(&cfg, DeltaMode::Lut(spec));
+                assert_eq!(lut.plus(0), exact.plus(0), "Δ+(0) ({spec:?})");
+                for i in 1..spec.len() {
+                    let d = cfg.to_units(i as f64 * spec.r());
+                    assert_eq!(lut.plus(d), exact.plus(d), "Δ+ at sample {i} ({spec:?})");
+                    assert_eq!(lut.minus(d), exact.minus(d), "Δ− at sample {i} ({spec:?})");
+                }
+            }
+            // Bit-shift entries at integer d are exact shifts of Eq. 9's
+            // constants — the same values `to_units` produces for 2^-d and
+            // −1.5·2^-d while the shifts stay exact.
+            let bs = DeltaApprox::new(&cfg, DeltaMode::BitShift);
+            for d in 0..=6i64 {
+                let du = d << cfg.frac_bits;
+                let dr = d as f64;
+                assert_eq!(bs.plus(du), cfg.to_units((-dr).exp2()), "bit-shift Δ+ d={d}");
+                // Δ−'s base is 1.5·2^{q_f}, so its shift stays exact only
+                // for d < q_f; beyond that the shifter truncates where
+                // `to_units` would round — that truncation *is* Eq. 9's
+                // hardware behaviour, so only the exact range is shared.
+                if d > 0 && d < cfg.frac_bits as i64 {
+                    assert_eq!(
+                        bs.minus(du),
+                        cfg.to_units(-1.5 * (-dr).exp2()),
+                        "bit-shift Δ− d={d}"
+                    );
+                }
+            }
         }
     }
 

@@ -208,6 +208,70 @@ impl LnsSystem {
         }
     }
 
+    /// Panel-vectorized MAC — the cache-tiled matmul inner kernel:
+    /// `acc[j] = acc[j] ⊞ (a[p] ⊡ panel[p·nc + j])` for `p` ascending,
+    /// where `panel` is a packed row-major `a.len() × nc` tile
+    /// (`nc = acc.len()`).
+    ///
+    /// The tile-level twin of [`LnsSystem::mac_row`], hoisting the Δ±
+    /// approximator reference and the word-format clamp bounds **once per
+    /// panel** rather than once per row: the hot loop is integer add →
+    /// clamp → compare → shift-indexed table load for the entire `kc × nc`
+    /// tile, with the per-`p` work reduced to one zero test and one
+    /// `(m, s)` split.
+    ///
+    /// **Bit-exactness contract:** identical results, element by element,
+    /// to `for p { self.mac_row(&mut acc, a[p], panel_row_p) }` — i.e. to
+    /// the scalar `mac` fold with `p` ascending. The tiled tensor kernels
+    /// rely on this (`tests/tiled_exactness.rs`).
+    pub fn mac_panel(&self, acc: &mut [LnsValue], a: &[LnsValue], panel: &[LnsValue]) {
+        let nc = acc.len();
+        debug_assert_eq!(panel.len(), a.len() * nc);
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        for (p, &av) in a.iter().enumerate() {
+            // a[p] = 0 ⇒ every product in this panel row is the exact
+            // zero word ⇒ acc unchanged.
+            if av.is_zero() {
+                continue;
+            }
+            let (a_m, a_s) = (av.m, av.s);
+            let wrow = &panel[p * nc..(p + 1) * nc];
+            for (acc_j, &wv) in acc.iter_mut().zip(wrow.iter()) {
+                if wv.is_zero() {
+                    continue; // acc ⊞ 0 = acc exactly
+                }
+                let prod = LnsValue { m: (a_m + wv.m).clamp(m_min, m_max), s: !(a_s ^ wv.s) };
+                let x = *acc_j;
+                *acc_j = if x.is_zero() { prod } else { add_nonzero(ap, m_min, m_max, x, prod) };
+            }
+        }
+    }
+
+    /// Zero-skipping dot continuation `acc ⊞ Σ_i (a[i] ⊡ w[i])` (fold
+    /// order: `i` ascending) with the Δ±-LUT/bounds hoisting of
+    /// [`LnsSystem::mac_row`] — the `A·Bᵀ` inner kernel, shared by the
+    /// serial dot and the tiled kernel's per-`kc`-block continuation.
+    ///
+    /// **Bit-exactness contract:** identical to the scalar fold
+    /// `acc = self.mac(acc, a[i], w[i])` over `i` ascending.
+    pub fn dot_acc(&self, acc: LnsValue, a: &[LnsValue], w: &[LnsValue]) -> LnsValue {
+        debug_assert_eq!(a.len(), w.len());
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        let mut acc = acc;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            // Either operand zero ⇒ the product is the exact zero word ⇒
+            // acc ⊞ 0 = acc.
+            if av.is_zero() || wv.is_zero() {
+                continue;
+            }
+            let prod = LnsValue { m: (av.m + wv.m).clamp(m_min, m_max), s: !(av.s ^ wv.s) };
+            acc = if acc.is_zero() { prod } else { add_nonzero(ap, m_min, m_max, acc, prod) };
+        }
+        acc
+    }
+
     /// Element-wise slice accumulation `acc[j] = acc[j] ⊞ x[j]` with the
     /// same hoisting (and the same bit-exactness contract vs
     /// [`LnsSystem::add`]) as [`LnsSystem::mac_row`].
@@ -602,6 +666,56 @@ mod tests {
                 let slow: Vec<LnsValue> =
                     acc.iter().zip(&w).map(|(&o, &wv)| s.mac(o, a, wv)).collect();
                 assert_eq!(fast, slow, "{tag} case {case}: mac_row diverged from mac");
+            }
+        }
+    }
+
+    #[test]
+    fn mac_panel_bitexact_vs_mac_row_fold() {
+        for (tag, cfg) in [
+            ("w16_lut", LnsConfig::w16_lut()),
+            ("w12_bs", LnsConfig::w12_bitshift()),
+            ("w16_exact", {
+                let mut c = LnsConfig::w16_lut();
+                c.delta = DeltaMode::Exact;
+                c
+            }),
+        ] {
+            let s = LnsSystem::new(cfg);
+            let mut rng = crate::rng::SplitMix64::new(0xFA9E1 ^ tag.len() as u64);
+            for case in 0..120 {
+                let nc = 1 + rng.next_below(17) as usize;
+                let depth = 1 + rng.next_below(9) as usize;
+                let a: Vec<LnsValue> = (0..depth).map(|_| arb(&mut rng, &s)).collect();
+                let acc: Vec<LnsValue> = (0..nc).map(|_| arb(&mut rng, &s)).collect();
+                let panel: Vec<LnsValue> = (0..depth * nc).map(|_| arb(&mut rng, &s)).collect();
+                let mut fast = acc.clone();
+                s.mac_panel(&mut fast, &a, &panel);
+                let mut slow = acc;
+                for (p, &av) in a.iter().enumerate() {
+                    s.mac_row(&mut slow, av, &panel[p * nc..(p + 1) * nc]);
+                }
+                assert_eq!(fast, slow, "{tag} case {case}: mac_panel diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_acc_bitexact_vs_scalar_mac_fold() {
+        for cfg in [LnsConfig::w16_lut(), LnsConfig::w12_bitshift()] {
+            let s = LnsSystem::new(cfg);
+            let mut rng = crate::rng::SplitMix64::new(0xD07 ^ cfg.total_bits as u64);
+            for case in 0..200 {
+                let n = 1 + rng.next_below(48) as usize;
+                let acc0 = arb(&mut rng, &s);
+                let a: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let w: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let fast = s.dot_acc(acc0, &a, &w);
+                let mut slow = acc0;
+                for (&av, &wv) in a.iter().zip(w.iter()) {
+                    slow = s.mac(slow, av, wv);
+                }
+                assert_eq!(fast, slow, "case {case}: dot_acc diverged from mac fold");
             }
         }
     }

@@ -25,14 +25,17 @@ use crate::tensor::im2col::{self, ConvShape};
 use crate::tensor::{ops, Backend, Tensor};
 
 /// Which engine path a conv op runs on. `Auto` lets each lowered matmul
-/// dispatch on problem size; `Serial`/`Par` force one path end to end.
-/// All three produce bit-identical results (see
-/// `tests/parallel_determinism.rs`), so the explicit modes exist for
-/// benchmarking and for proving exactly that.
+/// dispatch on problem size; `Serial`/`Par`/`Tiled` force one path end
+/// to end. All four produce bit-identical results (see
+/// `tests/parallel_determinism.rs` and `tests/tiled_exactness.rs`), so
+/// the explicit modes exist for benchmarking and for proving exactly
+/// that. The im2col gather/scatter has no tiled flavour (it is pure
+/// data movement), so `Tiled` auto-dispatches it.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 enum Mode {
     Serial,
     Par,
+    Tiled,
     Auto,
 }
 
@@ -41,6 +44,7 @@ fn mm<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>, mode: Mode) -> Tens
     match mode {
         Mode::Serial => ops::matmul_serial(b, a, w),
         Mode::Par => ops::matmul_par(b, a, w),
+        Mode::Tiled => ops::matmul_tiled(b, a, w),
         Mode::Auto => ops::matmul(b, a, w),
     }
 }
@@ -50,6 +54,7 @@ fn mm_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>, mode: Mode) -> T
     match mode {
         Mode::Serial => ops::matmul_at_serial(b, a, w),
         Mode::Par => ops::matmul_at_par(b, a, w),
+        Mode::Tiled => ops::matmul_at_tiled(b, a, w),
         Mode::Auto => ops::matmul_at(b, a, w),
     }
 }
@@ -59,6 +64,7 @@ fn mm_bt<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>, mode: Mode) -> T
     match mode {
         Mode::Serial => ops::matmul_bt_serial(b, a, w),
         Mode::Par => ops::matmul_bt_par(b, a, w),
+        Mode::Tiled => ops::matmul_bt_tiled(b, a, w),
         Mode::Auto => ops::matmul_bt(b, a, w),
     }
 }
@@ -161,7 +167,7 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
         let cols = match mode {
             Mode::Serial => im2col::im2col_serial(backend, x, &self.shape),
             Mode::Par => im2col::im2col_par(backend, x, &self.shape),
-            Mode::Auto => im2col::im2col(backend, x, &self.shape),
+            Mode::Tiled | Mode::Auto => im2col::im2col(backend, x, &self.shape),
         };
         let mut y_cols = mm(backend, &cols, &self.w, mode);
         // Row-broadcast bias: bit-identical on either engine path.
@@ -202,6 +208,17 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
         self.forward_mode(backend, x, Mode::Par)
     }
 
+    /// [`Conv2d::forward`] with every lowered matmul forced onto the
+    /// cache-tiled kernels (the im2col gather keeps auto dispatch — it is
+    /// pure data movement). Bit-identical to the other paths.
+    pub fn forward_tiled<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+    ) -> (Tensor<E>, Tensor<E>) {
+        self.forward_mode(backend, x, Mode::Tiled)
+    }
+
     fn backward_mode<B: Backend<E = E>>(
         &self,
         backend: &B,
@@ -231,7 +248,7 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
             Some(match mode {
                 Mode::Serial => im2col::col2im_serial(backend, &d_patches, &self.shape, batch),
                 Mode::Par => im2col::col2im_par(backend, &d_patches, &self.shape, batch),
-                Mode::Auto => im2col::col2im(backend, &d_patches, &self.shape, batch),
+                Mode::Tiled | Mode::Auto => im2col::col2im(backend, &d_patches, &self.shape, batch),
             })
         } else {
             None
@@ -274,6 +291,19 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
         need_dx: bool,
     ) -> (Tensor<E>, Vec<E>, Option<Tensor<E>>) {
         self.backward_mode(backend, cols, upstream, need_dx, Mode::Par)
+    }
+
+    /// [`Conv2d::backward`] with every lowered matmul forced onto the
+    /// cache-tiled kernels (col2im keeps auto dispatch). Bit-identical to
+    /// the other paths.
+    pub fn backward_tiled<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        cols: &Tensor<E>,
+        upstream: &Tensor<E>,
+        need_dx: bool,
+    ) -> (Tensor<E>, Vec<E>, Option<Tensor<E>>) {
+        self.backward_mode(backend, cols, upstream, need_dx, Mode::Tiled)
     }
 }
 
@@ -772,9 +802,22 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         x: &Tensor<E>,
         labels: &[usize],
     ) -> (Gradients<E>, StepStats) {
+        let (grads, raw) = self.backprop_avg(backend, x, labels);
+        (grads, raw.finish())
+    }
+
+    /// [`Cnn::backprop_sums`] followed by the single `1/B` scale —
+    /// averaged gradients with the **raw** statistics still attached
+    /// (the mirror of [`crate::nn::Mlp::backprop_avg`]).
+    pub fn backprop_avg<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        labels: &[usize],
+    ) -> (Gradients<E>, RawStepStats) {
         let (mut grads, raw) = self.backprop_sums(backend, x, labels);
         grads.scale(backend, 1.0 / raw.n as f64);
-        (grads, raw.finish())
+        (grads, raw)
     }
 
     /// [`Cnn::backprop`] without the `1/B` averaging: gradients come back

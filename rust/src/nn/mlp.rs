@@ -11,7 +11,10 @@
 //! ([`crate::tensor::ops`]): large batches fan their matmuls and the
 //! soft-max/CE head across the rayon pool while keeping every reduction
 //! bit-identical to the serial reference, so training stays exactly
-//! deterministic in the seed.
+//! deterministic in the seed. The 784-wide layers are a motivating shape
+//! for the engine's cache-tiled kernels: eval-sized batches against the
+//! `[784, 100]` weight matrix auto-dispatch onto column-panel tiles
+//! (`ops::matmul_tiled`), again with bit-identical results.
 
 use super::grad::{GradStore, RawStepStats};
 use super::init::{he_normal_init, log_domain_init, InitScheme};
@@ -156,9 +159,24 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         x: &Tensor<E>,
         labels: &[usize],
     ) -> (Gradients<E>, StepStats) {
+        let (grads, raw) = self.backprop_avg(backend, x, labels);
+        (grads, raw.finish())
+    }
+
+    /// [`Mlp::backprop_sums`] followed by the single `1/B` scale —
+    /// averaged gradients with the **raw** statistics still attached, so
+    /// the epoch loop can fold exact per-sample loss sums
+    /// ([`crate::train::EpochLoss`]). This is the one copy of the
+    /// sums+scale composition; [`Mlp::backprop`] delegates here.
+    pub fn backprop_avg<B: Backend<E = E>>(
+        &self,
+        backend: &B,
+        x: &Tensor<E>,
+        labels: &[usize],
+    ) -> (Gradients<E>, RawStepStats) {
         let (mut grads, raw) = self.backprop_sums(backend, x, labels);
         grads.scale(backend, 1.0 / raw.n as f64);
-        (grads, raw.finish())
+        (grads, raw)
     }
 
     /// [`Mlp::backprop`] without the `1/B` averaging: gradients come back

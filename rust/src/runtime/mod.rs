@@ -114,11 +114,24 @@ pub use stub::{ArtifactExecutable, Runtime};
 mod tests {
     use super::*;
 
+    /// With real bindings the CPU client comes up; with the in-repo
+    /// compile-smoke shim (the default `xla` dependency, see
+    /// rust/Cargo.toml) construction fails with the swap-in hint
+    /// instead. Both are the correct behaviour for their configuration —
+    /// anything else (a silent success on the shim, an unrelated error
+    /// on real bindings) is a bug.
     #[test]
-    fn cpu_client_comes_up() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
-        assert!(rt.device_count() >= 1);
-        assert!(!rt.platform().is_empty());
+    fn cpu_client_comes_up_or_names_the_shim() {
+        match Runtime::cpu() {
+            Ok(rt) => {
+                assert!(rt.device_count() >= 1);
+                assert!(!rt.platform().is_empty());
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("xla shim"), "unexpected PJRT init failure: {msg}");
+            }
+        }
     }
 }
 

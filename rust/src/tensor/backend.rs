@@ -66,6 +66,56 @@ pub trait Backend: Send + Sync {
         }
     }
 
+    /// Panel MAC — the cache-tiled matmul inner kernel: for every `p`
+    /// ascending, `acc[j] = acc[j] ⊞ (a[p] ⊡ panel[p·nc + j])` where
+    /// `nc = acc.len()` and `panel` is a packed row-major
+    /// `a.len() × nc` tile of the stationary operand.
+    ///
+    /// This is [`Backend::mac_row`] lifted one level: a whole
+    /// `kc × nc` tile per call, so backends can hoist per-call setup
+    /// once per *panel* instead of once per row — see the
+    /// [`LnsBackend`] override. Same contract as `mac_row`:
+    /// implementations **must** stay bit-exact with this default
+    /// (`p` ascending, elementwise `mac`), because the tiled kernels'
+    /// bit-identity with the serial matmuls rests on it.
+    #[inline]
+    fn mac_panel(&self, acc: &mut [Self::E], a: &[Self::E], panel: &[Self::E]) {
+        let nc = acc.len();
+        debug_assert_eq!(panel.len(), a.len() * nc);
+        for (p, &av) in a.iter().enumerate() {
+            // Zero multiplier ⇒ the whole panel row leaves acc unchanged.
+            if self.is_zero(av) {
+                continue;
+            }
+            self.mac_row(acc, av, &panel[p * nc..(p + 1) * nc]);
+        }
+    }
+
+    /// Zero-skipping dot continuation — the `A·Bᵀ` inner kernel: fold
+    /// `acc = acc ⊞ (a[i] ⊡ w[i])` over `i` ascending, starting from the
+    /// caller's `acc` (the backend zero for a fresh dot, the running
+    /// output element for a `kc`-blocked one).
+    ///
+    /// Same contract as [`Backend::mac_row`]/[`Backend::mac_panel`]:
+    /// overrides may hoist per-call setup (the LNS backend hoists its Δ±
+    /// LUT pointers and clamp bounds once per slice) but must stay
+    /// bit-exact with this default — both the serial `matmul_bt` dot and
+    /// the tiled kernel's per-block continuation run through this one
+    /// hook, so the two cannot drift apart.
+    #[inline]
+    fn dot_acc(&self, acc: Self::E, a: &[Self::E], w: &[Self::E]) -> Self::E {
+        debug_assert_eq!(a.len(), w.len());
+        let mut acc = acc;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            // Zero operand ⇒ `acc ⊞ (0 ⊡ w) = acc` exactly: skip.
+            if self.is_zero(av) {
+                continue;
+            }
+            acc = self.mac(acc, av, wv);
+        }
+        acc
+    }
+
     /// Element-wise slice accumulation: `acc[j] = acc[j] ⊞ x[j]`.
     ///
     /// Same contract as [`Backend::mac_row`]: overrides may hoist setup
@@ -396,6 +446,19 @@ impl Backend for LnsBackend {
     fn mac_row(&self, acc: &mut [LnsValue], a: LnsValue, w: &[LnsValue]) {
         self.sys.mac_row(acc, a, w);
     }
+    /// Panel-level override: one Δ±-LUT/bounds hoist per `kc × nc` tile
+    /// (see [`LnsSystem::mac_panel`]) so the tiled hot loop stays
+    /// shift → load. Bit-exact with the default.
+    #[inline]
+    fn mac_panel(&self, acc: &mut [LnsValue], a: &[LnsValue], panel: &[LnsValue]) {
+        self.sys.mac_panel(acc, a, panel);
+    }
+    /// Dot-continuation override with the same per-call hoisting (see
+    /// [`LnsSystem::dot_acc`]). Bit-exact with the default.
+    #[inline]
+    fn dot_acc(&self, acc: LnsValue, a: &[LnsValue], w: &[LnsValue]) -> LnsValue {
+        self.sys.dot_acc(acc, a, w)
+    }
     /// Vectorized override of the slice accumulation (same hoisting).
     #[inline]
     fn add_slice(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
@@ -526,6 +589,26 @@ mod tests {
             assert!((f - lb.decode(gl[j])).abs() < 0.05, "lns δ[{j}]");
         }
         backends_agree_on(|_| (0.0, 0.0));
+    }
+
+    #[test]
+    fn mac_panel_default_matches_scalar_macs() {
+        // The default hook must equal the elementwise mac fold (p
+        // ascending) on backends that do not override it.
+        let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let vals = [0.5, -1.25, 0.0, 2.0, -0.125, 0.75];
+        let a: Vec<i32> = vals.iter().map(|&v| b.encode(v)).collect();
+        let panel: Vec<i32> =
+            (0..a.len() * 3).map(|i| b.encode((i as f64 - 8.0) / 4.0)).collect();
+        let mut acc = vec![b.encode(0.25); 3];
+        let mut want = acc.clone();
+        b.mac_panel(&mut acc, &a, &panel);
+        for (p, &av) in a.iter().enumerate() {
+            for j in 0..3 {
+                want[j] = b.mac(want[j], av, panel[p * 3 + j]);
+            }
+        }
+        assert_eq!(acc, want);
     }
 
     #[test]

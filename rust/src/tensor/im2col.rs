@@ -3,8 +3,13 @@
 //! `im2col` gathers every receptive-field patch of a CHW image batch into
 //! one row of a patch matrix, so conv forward becomes a single
 //! `patches · weights` matmul on the row-parallel engine — rayon
-//! parallelism and the serial↔parallel bit-exactness contract of
-//! [`super::ops`] carry over to convolution for free, in every backend.
+//! parallelism, the serial↔parallel bit-exactness contract of
+//! [`super::ops`], and the cache-tiled kernels carry over to convolution
+//! for free, in every backend. (Under auto dispatch the tiled path
+//! engages on the gradient's tall `patchesᵀ·δ` outer product once
+//! `B·OH·OW·out_c` clears the footprint threshold; the small
+//! `[patch_len, out_c]` forward kernels already fit in L1 and keep the
+//! row path unless the tiled mode is forced.)
 //! `col2im` is the transpose scatter (patch rows ⊞-accumulated back into
 //! image rows), which is exactly the input-gradient lowering.
 //!

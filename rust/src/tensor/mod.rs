@@ -12,6 +12,7 @@ pub mod ops;
 
 pub use backend::{Backend, FixedBackend, FloatBackend, LnsBackend};
 pub use im2col::ConvShape;
+pub use ops::{MatmulDispatch, Tiling};
 
 /// Dense row-major matrix of backend elements.
 #[derive(Clone, Debug, PartialEq)]

@@ -18,12 +18,27 @@
 //! * the undecorated name — dispatches to the parallel path when the
 //!   problem is big enough to amortize the fork/join overhead.
 //!
-//! Both paths drive the backend through the slice-level
-//! [`Backend::mac_row`] / [`Backend::add_slice`] hooks, which lets LNS
-//! hoist its Δ± LUT pointers and sign handling out of the inner loop.
+//! On top of the row engine sit the **cache-tiled** kernels
+//! (`*_tiled`, [`Tiling`]): the `w` operand is packed once into
+//! L1/L2-sized column panels and the output is blocked over
+//! (row-chunk × column-panel) tiles. Tiling only re-orders *which*
+//! output elements are computed when — every individual element still
+//! accumulates over `k` ascending (`kc` blocks walked in ascending
+//! order, `p` ascending inside each block, no partial accumulators ever
+//! merged), so the tiled results are **bit-identical** to the serial
+//! references in every backend (see `tests/tiled_exactness.rs`). The
+//! undecorated names auto-dispatch to the tiled path when the packed
+//! operand is large enough to thrash cache on the row path.
+//!
+//! All paths drive the backend through the slice-level
+//! [`Backend::mac_row`] / [`Backend::add_slice`] /
+//! [`Backend::mac_panel`] / [`Backend::dot_acc`] hooks, which lets LNS
+//! hoist its Δ± LUT pointers and sign handling out of the inner loop
+//! (once per panel or dot slice on the tiled paths).
 
 use super::{Backend, Tensor};
 use rayon::prelude::*;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Minimum total work (MACs for matmuls, elements for maps) before an op
 /// takes the parallel path. Below this the fork/join overhead outweighs
@@ -71,9 +86,18 @@ fn matmul_row<B: Backend>(b: &B, arow: &[B::E], w: &Tensor<B::E>, orow: &mut [B:
 }
 
 /// `C = A·B` (`[m,k]·[k,n] → [m,n]`), accumulating **sequentially over k
-/// ascending** from the backend zero (Eq. 10's ⊞ chain). Dispatches to
-/// the rayon row-parallel path when the problem is large enough.
+/// ascending** from the backend zero (Eq. 10's ⊞ chain). Dispatches by
+/// shape: the cache-tiled path when the `w` footprint is large enough to
+/// thrash the row path, the rayon row-parallel path on other large
+/// problems, the serial reference otherwise — all three bit-identical.
 pub fn matmul<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    match matmul_dispatch() {
+        MatmulDispatch::ForceTiled => return matmul_tiled(b, a, w),
+        MatmulDispatch::Auto if tiled_worthwhile(a.rows, a.cols * w.cols) => {
+            return matmul_tiled(b, a, w);
+        }
+        _ => {}
+    }
     if parallel_worthwhile(a.rows, a.rows * a.cols * w.cols) {
         matmul_par(b, a, w)
     } else {
@@ -113,17 +137,13 @@ pub fn matmul_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tens
 // C = A·Bᵀ
 // ---------------------------------------------------------------------
 
-/// Zero-skipping dot product, accumulating over the index ascending.
+/// Zero-skipping dot product, accumulating over the index ascending —
+/// one call into the [`Backend::dot_acc`] hook, which the serial rows
+/// and the tiled `kc`-block continuations both use (one copy of the
+/// skip/fold logic, so the paths cannot drift).
 #[inline]
 fn dot_skip_zero<B: Backend>(b: &B, a: &[B::E], w: &[B::E]) -> B::E {
-    let mut acc = b.zero();
-    for (&av, &wv) in a.iter().zip(w.iter()) {
-        if b.is_zero(av) {
-            continue; // acc ⊞ (0 ⊡ w) = acc exactly
-        }
-        acc = b.mac(acc, av, wv);
-    }
-    acc
+    b.dot_acc(b.zero(), a, w)
 }
 
 /// One output row of `A·Bᵀ`.
@@ -135,8 +155,15 @@ fn matmul_bt_row<B: Backend>(b: &B, arow: &[B::E], w: &Tensor<B::E>, orow: &mut 
 }
 
 /// `C = A·Bᵀ` without materializing the transpose (`[m,k]·[n,k] → [m,n]`).
-/// Dispatches to the rayon row-parallel path on large problems.
+/// Dispatches by shape like [`matmul`] (tiled / row-parallel / serial).
 pub fn matmul_bt<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    match matmul_dispatch() {
+        MatmulDispatch::ForceTiled => return matmul_bt_tiled(b, a, w),
+        MatmulDispatch::Auto if tiled_worthwhile(a.rows, w.rows * w.cols) => {
+            return matmul_bt_tiled(b, a, w);
+        }
+        _ => {}
+    }
     if parallel_worthwhile(a.rows, a.rows * a.cols * w.rows) {
         matmul_bt_par(b, a, w)
     } else {
@@ -175,9 +202,16 @@ pub fn matmul_bt_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> T
 // ---------------------------------------------------------------------
 
 /// `C = Aᵀ·B` (`[k,m]·[k,n] → [m,n]`): the gradient outer-product shape.
-/// Accumulates over k ascending. Dispatches to the row-parallel path on
-/// large problems.
+/// Accumulates over k ascending. Dispatches by shape like [`matmul`]
+/// (tiled / row-parallel / serial).
 pub fn matmul_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    match matmul_dispatch() {
+        MatmulDispatch::ForceTiled => return matmul_at_tiled(b, a, w),
+        MatmulDispatch::Auto if tiled_worthwhile(a.cols, a.rows * w.cols) => {
+            return matmul_at_tiled(b, a, w);
+        }
+        _ => {}
+    }
     if parallel_worthwhile(a.cols, a.rows * a.cols * w.cols) {
         matmul_at_par(b, a, w)
     } else {
@@ -224,6 +258,342 @@ pub fn matmul_at_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> T
                 continue;
             }
             b.mac_row(orow, av, w.row(p));
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// Cache-tiled kernels
+// ---------------------------------------------------------------------
+
+/// Tile geometry for the cache-blocked matmul kernels.
+///
+/// The stationary operand (`w`, or `a` for `matmul_bt`) is packed once
+/// into column panels `nc` wide, each split into `kc`-deep blocks along
+/// the reduction dimension, so the hot loop streams a contiguous
+/// `kc × nc` panel that fits in L1/L2 instead of striding through full
+/// `w` rows. Output rows are processed `mc` at a time (the rayon task
+/// granularity).
+///
+/// Tile sizes affect **performance only**: every output element's ⊞
+/// reduction walks `kc` blocks in ascending order with `k` ascending
+/// inside each block, so any tiling produces bits identical to
+/// [`matmul_serial`] — which is what lets tests sweep tiny tiles to
+/// exercise remainder handling.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    /// Output rows per task (row-chunk height).
+    pub mc: usize,
+    /// Reduction-dimension block depth.
+    pub kc: usize,
+    /// Column-panel width.
+    pub nc: usize,
+}
+
+impl Tiling {
+    /// Default tile sizes: a `kc × nc` panel is 32 KiB at 4-byte words
+    /// (64 KiB for the two-field LNS value) — L1-resident on typical
+    /// cores, comfortably L2-resident everywhere.
+    pub const DEFAULT: Tiling = Tiling { mc: 16, kc: 128, nc: 64 };
+
+    fn validate(&self) {
+        assert!(self.mc >= 1 && self.kc >= 1 && self.nc >= 1, "tile dims must be ≥ 1");
+    }
+}
+
+impl Default for Tiling {
+    fn default() -> Self {
+        Tiling::DEFAULT
+    }
+}
+
+/// Packed-operand footprint (elements) above which the undecorated
+/// matmuls prefer the tiled path: ≈128 KiB at 4-byte words, the point
+/// where the row path's full-`w` sweep per output row stops fitting L1/L2
+/// comfortably. The 784-wide MLP layers (784·100) and the 256³ bench both
+/// clear it; small conv kernel matrices stay on the row path.
+const TILED_MIN_FOOTPRINT: usize = 1 << 15;
+
+/// Minimum output rows for the tiled path: packing costs one pass over
+/// `w`, which needs a few output rows to amortize (the paper-protocol
+/// batch of 5 stays on the row path; eval-sized batches tile).
+const TILED_MIN_ROWS: usize = 8;
+
+#[inline]
+fn tiled_worthwhile(rows: usize, packed_footprint: usize) -> bool {
+    rows >= TILED_MIN_ROWS && packed_footprint >= TILED_MIN_FOOTPRINT
+}
+
+/// Runtime override for the undecorated matmul dispatch. Because every
+/// path is bit-identical, forcing one globally changes performance only —
+/// the shard-determinism suite uses exactly that to re-run full training
+/// with the tiled kernels forced on.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum MatmulDispatch {
+    /// Shape-based choice between tiled, row-parallel and serial.
+    Auto,
+    /// Every undecorated matmul takes the cache-tiled path.
+    ForceTiled,
+    /// Every undecorated matmul takes the row engine (pre-tiling
+    /// behaviour) — the A/B baseline for benches and tests.
+    ForceRow,
+}
+
+static MATMUL_DISPATCH: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide dispatch override (test/bench plumbing; safe at
+/// any time because all paths produce identical bits).
+pub fn set_matmul_dispatch(d: MatmulDispatch) {
+    let v = match d {
+        MatmulDispatch::Auto => 0,
+        MatmulDispatch::ForceTiled => 1,
+        MatmulDispatch::ForceRow => 2,
+    };
+    MATMUL_DISPATCH.store(v, Ordering::Relaxed);
+}
+
+/// The dispatch override currently in effect.
+pub fn matmul_dispatch() -> MatmulDispatch {
+    match MATMUL_DISPATCH.load(Ordering::Relaxed) {
+        1 => MatmulDispatch::ForceTiled,
+        2 => MatmulDispatch::ForceRow,
+        _ => MatmulDispatch::Auto,
+    }
+}
+
+/// Pack `w` (`[k, n]`) into (column-panel × k-block) tiles: panels of
+/// `t.nc` columns, each panel stored as ascending `t.kc`-deep blocks of
+/// contiguous `depth × width` row-major data. Pure data movement. The
+/// panel for columns `[jc0, jc0+width)` and rows `[kc0, kc0+depth)`
+/// starts at `k·jc0 + width·kc0` (full preceding panels hold `k`
+/// elements per column).
+fn pack_panels<E: Copy>(w: &Tensor<E>, t: &Tiling) -> Vec<E> {
+    let (k, n) = (w.rows, w.cols);
+    let mut data = Vec::with_capacity(k * n);
+    let mut jc0 = 0;
+    while jc0 < n {
+        let width = t.nc.min(n - jc0);
+        let mut kc0 = 0;
+        while kc0 < k {
+            let depth = t.kc.min(k - kc0);
+            for p in kc0..kc0 + depth {
+                data.extend_from_slice(&w.row(p)[jc0..jc0 + width]);
+            }
+            kc0 += depth;
+        }
+        jc0 += width;
+    }
+    data
+}
+
+/// Row-chunk height actually used: honour `t.mc` but shrink just enough
+/// that every thread gets a chunk (≈1 per thread). No finer: each chunk
+/// streams the whole packed operand once, so over-splitting multiplies
+/// panel traffic — the locality the tiles exist for. Chunking only
+/// changes scheduling — each chunk computes its rows independently — so
+/// the bits are unchanged for any value.
+fn effective_mc(t: &Tiling, m: usize) -> usize {
+    let per = m.div_ceil(rayon::current_num_threads());
+    t.mc.min(per.max(1))
+}
+
+/// Compute the output rows held in `chunk` (width `n`, rows
+/// `i0, i0+1, …` of the product) of `A·packed(B)`: column panels outer,
+/// `kc` blocks ascending inner, one [`Backend::mac_panel`] call per
+/// (row × panel-block) tile. Per output element the ⊞ chain is exactly
+/// the `k`-ascending reduction of [`matmul_serial`].
+fn tiled_chunk<B: Backend>(
+    b: &B,
+    a: &Tensor<B::E>,
+    i0: usize,
+    t: &Tiling,
+    packed: &[B::E],
+    chunk: &mut [B::E],
+    n: usize,
+) {
+    let k = a.cols;
+    let rows = chunk.len() / n;
+    let mut jc0 = 0;
+    while jc0 < n {
+        let width = t.nc.min(n - jc0);
+        let group = &packed[k * jc0..k * (jc0 + width)];
+        let mut kc0 = 0;
+        while kc0 < k {
+            let depth = t.kc.min(k - kc0);
+            let panel = &group[width * kc0..width * (kc0 + depth)];
+            for r in 0..rows {
+                let arow = &a.row(i0 + r)[kc0..kc0 + depth];
+                let acc = &mut chunk[r * n + jc0..r * n + jc0 + width];
+                b.mac_panel(acc, arow, panel);
+            }
+            kc0 += depth;
+        }
+        jc0 += width;
+    }
+}
+
+/// Drive `kernel` over the output row chunks — rayon when the problem
+/// clears the parallel threshold, sequential otherwise (identical bits
+/// either way: chunks are independent).
+fn drive_chunks<B, F>(out: &mut Tensor<B::E>, mc: usize, work: usize, kernel: F)
+where
+    B: Backend,
+    F: Fn(usize, &mut [B::E]) + Sync + Send,
+{
+    let (m, n) = (out.rows, out.cols);
+    if parallel_worthwhile(m.div_ceil(mc), work) {
+        out.data
+            .par_chunks_mut(mc * n)
+            .enumerate()
+            .for_each(|(ci, chunk)| kernel(ci * mc, chunk));
+    } else {
+        for ci in 0..m.div_ceil(mc) {
+            let lo = ci * mc * n;
+            let hi = (lo + mc * n).min(m * n);
+            kernel(ci * mc, &mut out.data[lo..hi]);
+        }
+    }
+}
+
+/// Cache-tiled [`matmul`] with the default [`Tiling`]. Bit-identical to
+/// [`matmul_serial`] on every backend.
+pub fn matmul_tiled<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    matmul_tiled_with(b, a, w, &Tiling::DEFAULT)
+}
+
+/// Cache-tiled `C = A·B` with explicit tile sizes (tests sweep degenerate
+/// tilings through here; results are independent of `t`).
+pub fn matmul_tiled_with<B: Backend>(
+    b: &B,
+    a: &Tensor<B::E>,
+    w: &Tensor<B::E>,
+    t: &Tiling,
+) -> Tensor<B::E> {
+    assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
+    t.validate();
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let mut out = Tensor::full(m, n, b.zero());
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let packed = pack_panels(w, t);
+    let mc = effective_mc(t, m);
+    drive_chunks::<B, _>(&mut out, mc, m * k * n, |i0, chunk| {
+        tiled_chunk(b, a, i0, t, &packed, chunk, n);
+    });
+    out
+}
+
+/// Cache-tiled [`matmul_at`] with the default [`Tiling`]. Bit-identical
+/// to [`matmul_at_serial`] on every backend.
+pub fn matmul_at_tiled<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    matmul_at_tiled_with(b, a, w, &Tiling::DEFAULT)
+}
+
+/// Cache-tiled `C = Aᵀ·B` with explicit tile sizes. Each row chunk first
+/// gathers its columns of `A` into contiguous rows (pure data movement),
+/// then runs the [`matmul_tiled_with`] kernel — per output element the
+/// reduction is the same `k`-ascending chain as [`matmul_at_serial`].
+pub fn matmul_at_tiled_with<B: Backend>(
+    b: &B,
+    a: &Tensor<B::E>,
+    w: &Tensor<B::E>,
+    t: &Tiling,
+) -> Tensor<B::E> {
+    assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
+    t.validate();
+    let (k, m, n) = (a.rows, a.cols, w.cols);
+    let mut out = Tensor::full(m, n, b.zero());
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let packed = pack_panels(w, t);
+    let mc = effective_mc(t, m);
+    drive_chunks::<B, _>(&mut out, mc, m * k * n, |i0, chunk| {
+        let rows = chunk.len() / n;
+        // Transpose columns [i0, i0+rows) of `a` into contiguous rows.
+        let mut at = Tensor::full(rows, k, b.zero());
+        for p in 0..k {
+            let arow = a.row(p);
+            for r in 0..rows {
+                at.data[r * k + p] = arow[i0 + r];
+            }
+        }
+        tiled_chunk(b, &at, 0, t, &packed, chunk, n);
+    });
+    out
+}
+
+/// Cache-tiled [`matmul_bt`] with the default [`Tiling`]. Bit-identical
+/// to [`matmul_bt_serial`] on every backend.
+pub fn matmul_bt_tiled<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
+    matmul_bt_tiled_with(b, a, w, &Tiling::DEFAULT)
+}
+
+/// Pack `w` (`[n, k]`, the `A·Bᵀ` operand) into (row-panel × k-block)
+/// tiles: panels of `t.nc` output columns (rows of `w`), each block
+/// stored j-major (`width` contiguous `depth`-long k-slices). Same
+/// offset arithmetic as [`pack_panels`].
+fn pack_panels_bt<E: Copy>(w: &Tensor<E>, t: &Tiling) -> Vec<E> {
+    let (n, k) = (w.rows, w.cols);
+    let mut data = Vec::with_capacity(n * k);
+    let mut jc0 = 0;
+    while jc0 < n {
+        let width = t.nc.min(n - jc0);
+        let mut kc0 = 0;
+        while kc0 < k {
+            let depth = t.kc.min(k - kc0);
+            for j in jc0..jc0 + width {
+                data.extend_from_slice(&w.row(j)[kc0..kc0 + depth]);
+            }
+            kc0 += depth;
+        }
+        jc0 += width;
+    }
+    data
+}
+
+/// Cache-tiled `C = A·Bᵀ` with explicit tile sizes. The inner loop is
+/// the zero-skipping dot of [`matmul_bt_serial`] restricted to one `kc`
+/// block, chained over blocks ascending — the identical per-element ⊞
+/// sequence, now over packed contiguous k-slices of `w`.
+pub fn matmul_bt_tiled_with<B: Backend>(
+    b: &B,
+    a: &Tensor<B::E>,
+    w: &Tensor<B::E>,
+    t: &Tiling,
+) -> Tensor<B::E> {
+    assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
+    t.validate();
+    let (m, k, n) = (a.rows, a.cols, w.rows);
+    let mut out = Tensor::full(m, n, b.zero());
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let packed = pack_panels_bt(w, t);
+    let mc = effective_mc(t, m);
+    drive_chunks::<B, _>(&mut out, mc, m * k * n, |i0, chunk| {
+        let rows = chunk.len() / n;
+        let mut jc0 = 0;
+        while jc0 < n {
+            let width = t.nc.min(n - jc0);
+            let group = &packed[k * jc0..k * (jc0 + width)];
+            let mut kc0 = 0;
+            while kc0 < k {
+                let depth = t.kc.min(k - kc0);
+                let panel = &group[width * kc0..width * (kc0 + depth)];
+                for r in 0..rows {
+                    let arow = &a.row(i0 + r)[kc0..kc0 + depth];
+                    let orow = &mut chunk[r * n + jc0..r * n + jc0 + width];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let wslice = &panel[j * depth..(j + 1) * depth];
+                        *o = b.dot_acc(*o, arow, wslice);
+                    }
+                }
+                kc0 += depth;
+            }
+            jc0 += width;
         }
     });
     out
@@ -390,6 +760,11 @@ mod tests {
         Tensor::from_vec(rows, cols, v.to_vec())
     }
 
+    fn rand_t(rng: &mut crate::rng::SplitMix64, rows: usize, cols: usize) -> Tensor<f32> {
+        let data = (0..rows * cols).map(|_| rng.uniform(-1., 1.) as f32).collect();
+        Tensor::from_vec(rows, cols, data)
+    }
+
     #[test]
     fn matmul_known() {
         let b = fb();
@@ -521,6 +896,114 @@ mod tests {
         scale(&b, &mut x, 0.5);
         scale_slice(&b, &mut flat, 0.5);
         assert_eq!(flat, x.data);
+    }
+
+    #[test]
+    fn tiled_matches_serial_small_known() {
+        let b = fb();
+        let a = t(2, 2, &[1., 2., 3., 4.]);
+        let w = t(2, 2, &[5., 6., 7., 8.]);
+        assert_eq!(matmul_tiled(&b, &a, &w).data, vec![19., 22., 43., 50.]);
+        // Degenerate tiling still agrees (remainders everywhere).
+        let tiny = Tiling { mc: 1, kc: 1, nc: 1 };
+        assert_eq!(matmul_tiled_with(&b, &a, &w, &tiny).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn tiled_variants_match_serial_at_remainder_shapes() {
+        let b = fb();
+        let mut rng = crate::rng::SplitMix64::new(21);
+        // Shapes chosen to straddle the default and custom tile borders.
+        for &(m, k, n) in &[(1usize, 37usize, 1usize), (5, 3, 2), (17, 33, 9), (33, 65, 34)] {
+            let a = rand_t(&mut rng, m, k);
+            let w = rand_t(&mut rng, k, n);
+            for tl in [Tiling::DEFAULT, Tiling { mc: 3, kc: 5, nc: 7 }] {
+                assert_eq!(
+                    matmul_tiled_with(&b, &a, &w, &tl).data,
+                    matmul_serial(&b, &a, &w).data,
+                    "matmul {m}x{k}x{n} {tl:?}"
+                );
+                let wt = w.transpose(); // [n,k] operand for bt
+                assert_eq!(
+                    matmul_bt_tiled_with(&b, &a, &wt, &tl).data,
+                    matmul_bt_serial(&b, &a, &wt).data,
+                    "matmul_bt {m}x{k}x{n} {tl:?}"
+                );
+                let at = a.transpose(); // [k,m] operand for at
+                assert_eq!(
+                    matmul_at_tiled_with(&b, &at, &w, &tl).data,
+                    matmul_at_serial(&b, &at, &w).data,
+                    "matmul_at {m}x{k}x{n} {tl:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_handles_degenerate_shapes() {
+        let b = fb();
+        let a = t(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let w0 = Tensor::full(2, 0, 0.0f32);
+        assert_eq!(matmul_tiled(&b, &a, &w0).len(), 0);
+        let empty_k = Tensor::full(3, 0, 0.0f32);
+        let w_ek = Tensor::full(0, 4, 0.0f32);
+        assert_eq!(matmul_tiled(&b, &empty_k, &w_ek).data, vec![0.0f32; 12]);
+        let w1 = t(2, 1, &[1., 1.]);
+        assert_eq!(matmul_tiled(&b, &a, &w1).data, vec![3., 7., 11.]);
+        let one = t(1, 2, &[2., 3.]);
+        let w = t(2, 2, &[1., 0., 0., 1.]);
+        assert_eq!(matmul_tiled(&b, &one, &w).data, vec![2., 3.]);
+    }
+
+    #[test]
+    fn dispatch_override_round_trips_and_preserves_bits() {
+        let b = fb();
+        let mut rng = crate::rng::SplitMix64::new(17);
+        let (m, k, n) = (12usize, 20usize, 15usize);
+        let a = rand_t(&mut rng, m, k);
+        let w = rand_t(&mut rng, k, n);
+        let want = matmul_serial(&b, &a, &w).data;
+        assert_eq!(matmul_dispatch(), MatmulDispatch::Auto);
+        for d in [MatmulDispatch::ForceTiled, MatmulDispatch::ForceRow, MatmulDispatch::Auto] {
+            set_matmul_dispatch(d);
+            assert_eq!(matmul_dispatch(), d);
+            assert_eq!(matmul(&b, &a, &w).data, want, "{d:?}");
+        }
+        set_matmul_dispatch(MatmulDispatch::Auto);
+    }
+
+    #[test]
+    fn auto_dispatch_takes_tiled_path_bit_identically() {
+        // Big enough that `matmul`'s Auto arm picks the tiled kernel
+        // (footprint 128·260 ≥ 2^15, rows ≥ 8): the public entry point
+        // must still equal the serial reference exactly.
+        let b = fb();
+        let mut rng = crate::rng::SplitMix64::new(19);
+        let (m, k, n) = (16usize, 128usize, 260usize);
+        let a = rand_t(&mut rng, m, k);
+        let w = rand_t(&mut rng, k, n);
+        assert!(tiled_worthwhile(m, k * n));
+        assert_eq!(matmul(&b, &a, &w).data, matmul_serial(&b, &a, &w).data);
+    }
+
+    #[test]
+    fn pack_panels_layout_round_trips() {
+        // Reconstruct w from the packed buffer using the documented
+        // offset arithmetic: panel (jc0, kc0) starts at k·jc0 + width·kc0.
+        let w = t(5, 7, &(0..35).map(|v| v as f32).collect::<Vec<_>>());
+        let tl = Tiling { mc: 2, kc: 2, nc: 3 };
+        let packed = pack_panels(&w, &tl);
+        assert_eq!(packed.len(), 35);
+        let (k, n) = (w.rows, w.cols);
+        for j in 0..n {
+            let jc0 = (j / tl.nc) * tl.nc;
+            let width = tl.nc.min(n - jc0);
+            for p in 0..k {
+                let kc0 = (p / tl.kc) * tl.kc;
+                let idx = k * jc0 + width * kc0 + (p - kc0) * width + (j - jc0);
+                assert_eq!(packed[idx], w.at(p, j), "w[{p}][{j}]");
+            }
+        }
     }
 
     #[test]

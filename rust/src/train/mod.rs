@@ -24,7 +24,7 @@ pub use metrics::{evaluate, evaluate_with, EvalResult};
 pub use shard::ShardConfig;
 
 use crate::data::Dataset;
-use crate::nn::{Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig, StepStats};
+use crate::nn::{Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig};
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, Tensor};
 
@@ -65,12 +65,48 @@ impl TrainConfig {
     }
 }
 
+/// Sample-weighted epoch-loss accumulator.
+///
+/// Epoch `train_loss` must weight every *sample* equally. A plain mean
+/// of per-batch means (`Σ batch_mean / batches`) overweights the final
+/// batch whenever `n % batch_size != 0` — its (fewer) samples count as
+/// much as a full batch's. Folding the **raw per-batch loss sums**
+/// ([`RawStepStats::loss_sum`]) and dividing by the total sample count
+/// once gives the exact per-sample mean; both training loops report
+/// through this one accumulator so they cannot diverge on the weighting
+/// rule again.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochLoss {
+    /// Σ per-sample losses across the folded batches.
+    loss_sum: f64,
+    /// Σ batch lengths.
+    samples: usize,
+}
+
+impl EpochLoss {
+    /// Fold one batch's raw loss sum over `batch` samples.
+    pub fn add_sum(&mut self, batch_loss_sum: f64, batch: usize) {
+        self.loss_sum += batch_loss_sum;
+        self.samples += batch;
+    }
+
+    /// Sample-weighted mean over everything folded so far (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.samples as f64
+        }
+    }
+}
+
 /// One epoch's record in a learning curve.
 #[derive(Clone, Copy, Debug)]
 pub struct EpochRecord {
     /// Epoch index (1-based, 0 = before training).
     pub epoch: usize,
-    /// Mean training loss over the epoch's batches (natural-log CE).
+    /// Sample-weighted mean training loss over the epoch (natural-log
+    /// CE; every sample counts once, see [`EpochLoss`]).
     pub train_loss: f64,
     /// Validation accuracy after the epoch.
     pub val_accuracy: f64,
@@ -130,8 +166,7 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
     for epoch in 1..=cfg.epochs {
         rng.shuffle(&mut order);
         let start = std::time::Instant::now();
-        let mut loss_sum = 0.0;
-        let mut batches = 0usize;
+        let mut loss = EpochLoss::default();
         let mut chunk = Vec::with_capacity(bs);
         for batch_start in (0..n).step_by(bs) {
             let end = (batch_start + bs).min(n);
@@ -140,24 +175,25 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
             let (bx, by) = gather_batch(backend, &train_x, &train_y, &chunk);
             // Sharded: per-sample backward passes fanned across the pool,
             // reduced in the canonical order — bit-identical to the
-            // serial full-batch backward below (shard module docs).
-            let (grads, stats) = if cfg.shard.is_sharded() {
+            // serial full-batch sums+scale below (shard module docs;
+            // `backprop` is defined as exactly that composition, pinned
+            // by `backprop_is_scaled_backprop_sums`).
+            let (grads, raw) = if cfg.shard.is_sharded() {
                 sharded_step(backend, pool.as_ref(), bx.rows, |i| {
                     let xi = shard::sample_row(&bx, i);
                     model.backprop_sums(backend, &xi, &by[i..i + 1])
                 })
             } else {
-                model.backprop(backend, &bx, &by)
+                model.backprop_avg(backend, &bx, &by)
             };
             cfg.sgd.apply(backend, &mut model, &grads);
-            loss_sum += stats.loss;
-            batches += 1;
+            loss.add_sum(raw.loss_sum, raw.n);
         }
         let seconds = start.elapsed().as_secs_f64();
         let val = eval_pooled(pool.as_ref(), || evaluate(backend, &model, &val_x, &val_y));
         curve.push(EpochRecord {
             epoch,
-            train_loss: loss_sum / batches.max(1) as f64,
+            train_loss: loss.mean(),
             val_accuracy: val.accuracy,
             seconds,
         });
@@ -260,21 +296,19 @@ pub fn train_cnn<B: Backend>(
     for epoch in 1..=cfg.epochs {
         rng.shuffle(&mut order);
         let start = std::time::Instant::now();
-        let mut loss_sum = 0.0;
-        let mut batches = 0usize;
+        let mut loss = EpochLoss::default();
         let mut chunk = Vec::with_capacity(bs);
         for batch_start in (0..n).step_by(bs) {
             let end = (batch_start + bs).min(n);
             chunk.clear();
             chunk.extend_from_slice(&order[batch_start..end]);
             let (bx, by) = gather_batch(backend, &train_x, &train_y, &chunk);
-            let (grads, stats) = sharded_step(backend, pool.as_ref(), bx.rows, |i| {
+            let (grads, raw) = sharded_step(backend, pool.as_ref(), bx.rows, |i| {
                 let xi = shard::sample_row(&bx, i);
                 model.backprop_sums(backend, &xi, &by[i..i + 1])
             });
             cfg.sgd.apply_cnn(backend, &mut model, &grads);
-            loss_sum += stats.loss;
-            batches += 1;
+            loss.add_sum(raw.loss_sum, raw.n);
         }
         let seconds = start.elapsed().as_secs_f64();
         let val = eval_pooled(pool.as_ref(), || {
@@ -282,7 +316,7 @@ pub fn train_cnn<B: Backend>(
         });
         curve.push(EpochRecord {
             epoch,
-            train_loss: loss_sum / batches.max(1) as f64,
+            train_loss: loss.mean(),
             val_accuracy: val.accuracy,
             seconds,
         });
@@ -298,13 +332,14 @@ pub fn train_cnn<B: Backend>(
 /// per-sample backward `local` across the pool (the ambient rayon pool
 /// when `pool` is `None` — same bits either way, since the reduction is
 /// slot-positional), reduce in the canonical order, apply the single
-/// `1/B` scale, and average the statistics.
+/// `1/B` scale. Statistics come back as **raw sums** so the epoch loop
+/// can fold exact per-sample loss sums ([`EpochLoss::add_sum`]).
 fn sharded_step<B, G, F>(
     backend: &B,
     pool: Option<&rayon::ThreadPool>,
     batch: usize,
     local: F,
-) -> (G, StepStats)
+) -> (G, RawStepStats)
 where
     B: Backend,
     G: GradStore<B>,
@@ -312,7 +347,7 @@ where
 {
     let (mut g, raw) = shard::sharded_backprop_sums(backend, pool, batch, local);
     g.scale(backend, 1.0 / raw.n as f64);
-    (g, raw.finish())
+    (g, raw)
 }
 
 /// Gather a batch by row indices from a pre-encoded tensor.
@@ -365,6 +400,34 @@ mod tests {
             seed: 7,
             shard: ShardConfig::default(),
         }
+    }
+
+    #[test]
+    fn epoch_loss_weights_partial_final_batch_by_samples() {
+        // n = 7, batch_size = 5 ⇒ n % bs = 2: a 5-sample batch with loss
+        // sum 5.0 (mean 1.0) and a 2-sample batch with loss sum 8.0
+        // (mean 4.0).
+        let mut acc = EpochLoss::default();
+        acc.add_sum(5.0, 5);
+        acc.add_sum(8.0, 2);
+        let want = (5.0 + 8.0) / 7.0;
+        assert!((acc.mean() - want).abs() < 1e-12, "{} vs {want}", acc.mean());
+        // The pre-fix batches-mean formula would report (1 + 4)/2 = 2.5,
+        // overweighting the 2-sample batch.
+        assert!((acc.mean() - 2.5).abs() > 0.3);
+        assert_eq!(EpochLoss::default().mean(), 0.0);
+    }
+
+    #[test]
+    fn epoch_loss_equals_batch_mean_for_uniform_batches() {
+        // With every batch full the sample weighting reduces to the old
+        // mean-of-batch-means — the fix must not change full-batch
+        // epochs: sums 1, 2, 3 over 4 samples each (means 0.25/0.5/0.75).
+        let mut acc = EpochLoss::default();
+        for sum in [1.0, 2.0, 3.0] {
+            acc.add_sum(sum, 4);
+        }
+        assert!((acc.mean() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Tiled↔serial↔parallel bit-exactness: the cache-tiled matmul kernels
+//! must reproduce the serial references **bit for bit** on all four
+//! number systems (float, linear fixed point, LNS LUT, LNS bit-shift),
+//! for every tiling — including degenerate 1×1×1 tiles and shapes that
+//! leave remainders at every tile border — because tiling only re-orders
+//! *which* output elements are computed when, never the per-element
+//! `k`-ascending ⊞ chain.
+//!
+//! The second half re-runs the shard-determinism suite's training
+//! workloads with the tiled kernels forced on via
+//! [`ops::set_matmul_dispatch`]: full MLP and CNN training must produce
+//! identical weights, per-epoch losses and test metrics whether the
+//! undecorated matmuls take the row engine or the tiled kernels.
+
+use lnsdnn::data::{stripes_dataset, synth_dataset, StripeSpec, SynthSpec};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::{CnnVariant, Conv2d, InitScheme, SgdConfig};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::tensor::ops::{self, MatmulDispatch, Tiling};
+use lnsdnn::tensor::{Backend, ConvShape, FixedBackend, FloatBackend, LnsBackend, Tensor};
+use lnsdnn::train::{train, train_cnn, CnnTrainConfig, ShardConfig, TrainConfig};
+use std::sync::Mutex;
+
+fn float_backend() -> FloatBackend {
+    FloatBackend::default()
+}
+
+fn fixed_backend() -> FixedBackend {
+    FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01)
+}
+
+fn lns_lut_backend() -> LnsBackend {
+    LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01)
+}
+
+fn lns_bs_backend() -> LnsBackend {
+    LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01)
+}
+
+/// Random encoded matrix with ~10% exact-zero words (the zero-skip path
+/// must agree between the row and tiled kernels too).
+fn enc_mat<B: Backend>(b: &B, rng: &mut SplitMix64, rows: usize, cols: usize) -> Tensor<B::E> {
+    let data = (0..rows * cols)
+        .map(|_| {
+            let v = if rng.next_f64() < 0.1 { 0.0 } else { rng.uniform(-2.0, 2.0) };
+            b.encode(v)
+        })
+        .collect();
+    Tensor::from_vec(rows, cols, data)
+}
+
+/// Shapes with remainders at the default and custom tile borders, plus
+/// the 1×k / k×1 degenerates.
+const SHAPES: [(usize, usize, usize); 6] = [
+    (1, 37, 1),
+    (7, 1, 5),
+    (1, 1, 1),
+    (16, 33, 9),
+    (33, 129, 65),
+    (40, 64, 100),
+];
+
+const TILINGS: [Tiling; 4] = [
+    Tiling::DEFAULT,
+    Tiling { mc: 3, kc: 5, nc: 7 },
+    Tiling { mc: 1, kc: 1, nc: 1 },
+    Tiling { mc: 64, kc: 256, nc: 128 },
+];
+
+fn tiled_matches_serial_and_par<B: Backend>(b: &B, seed: u64) {
+    let tag = b.tag();
+    let mut rng = SplitMix64::new(seed);
+    for (m, k, n) in SHAPES {
+        let a = enc_mat(b, &mut rng, m, k);
+        let w = enc_mat(b, &mut rng, k, n);
+        let want = ops::matmul_serial(b, &a, &w);
+        assert_eq!(ops::matmul_par(b, &a, &w).data, want.data, "{tag} par {m}x{k}x{n}");
+        let wt = enc_mat(b, &mut rng, n, k); // [n,k] operand for bt
+        let want_bt = ops::matmul_bt_serial(b, &a, &wt);
+        let at = enc_mat(b, &mut rng, k, m); // [k,m] operand for at
+        let want_at = ops::matmul_at_serial(b, &at, &w);
+        for t in TILINGS {
+            assert_eq!(
+                ops::matmul_tiled_with(b, &a, &w, &t).data,
+                want.data,
+                "{tag} matmul {m}x{k}x{n} {t:?}"
+            );
+            assert_eq!(
+                ops::matmul_bt_tiled_with(b, &a, &wt, &t).data,
+                want_bt.data,
+                "{tag} matmul_bt {m}x{k}x{n} {t:?}"
+            );
+            assert_eq!(
+                ops::matmul_at_tiled_with(b, &at, &w, &t).data,
+                want_at.data,
+                "{tag} matmul_at {m}x{k}x{n} {t:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_bit_identical_float() {
+    tiled_matches_serial_and_par(&float_backend(), 1);
+}
+
+#[test]
+fn tiled_bit_identical_fixed16() {
+    tiled_matches_serial_and_par(&fixed_backend(), 2);
+}
+
+#[test]
+fn tiled_bit_identical_lns16_lut() {
+    tiled_matches_serial_and_par(&lns_lut_backend(), 3);
+}
+
+#[test]
+fn tiled_bit_identical_lns16_bitshift() {
+    tiled_matches_serial_and_par(&lns_bs_backend(), 4);
+}
+
+/// Conv lowering through the forced-tiled path: forward patches/maps and
+/// all three backward outputs must match the serial conv exactly.
+fn conv_tiled_matches_serial<B: Backend>(b: &B, seed: u64) {
+    let tag = b.tag();
+    let mut rng = SplitMix64::new(seed);
+    // Strided geometry with padding: remainders in every lowered matmul.
+    let shape = ConvShape::square(2, 9, 3, 2, 1);
+    let layer = Conv2d::init(b, shape, 5, InitScheme::HeNormal, &mut rng);
+    let x = enc_mat(b, &mut rng, 6, shape.in_len());
+    let (cols_s, y_s) = layer.forward_serial(b, &x);
+    let (cols_t, y_t) = layer.forward_tiled(b, &x);
+    assert_eq!(cols_s.data, cols_t.data, "{tag}: im2col diverged");
+    assert_eq!(y_s.data, y_t.data, "{tag}: conv forward diverged");
+    let up = enc_mat(b, &mut rng, 6, shape.out_len(5));
+    let (dw_s, db_s, dx_s) = layer.backward_serial(b, &cols_s, &up, true);
+    let (dw_t, db_t, dx_t) = layer.backward_tiled(b, &cols_t, &up, true);
+    assert_eq!(dw_s.data, dw_t.data, "{tag}: conv dW diverged");
+    assert_eq!(db_s, db_t, "{tag}: conv db diverged");
+    assert_eq!(dx_s.unwrap().data, dx_t.unwrap().data, "{tag}: conv dX diverged");
+}
+
+#[test]
+fn conv_tiled_bit_identical_all_backends() {
+    conv_tiled_matches_serial(&float_backend(), 11);
+    conv_tiled_matches_serial(&fixed_backend(), 12);
+    conv_tiled_matches_serial(&lns_lut_backend(), 13);
+    conv_tiled_matches_serial(&lns_bs_backend(), 14);
+}
+
+// ---------------------------------------------------------------------
+// Forced-dispatch runs (global override ⇒ serialized by a lock)
+// ---------------------------------------------------------------------
+
+/// The dispatch override is process-global, so the tests that flip it
+/// run under one lock and restore `Auto` before releasing. (Everything
+/// else in this binary only calls the explicit `*_tiled_with`/`*_serial`
+/// entry points, which ignore the override.)
+static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+struct DispatchGuard;
+
+impl DispatchGuard {
+    fn force(d: MatmulDispatch) {
+        ops::set_matmul_dispatch(d);
+    }
+}
+
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        ops::set_matmul_dispatch(MatmulDispatch::Auto);
+    }
+}
+
+#[test]
+fn public_entry_points_identical_under_forced_dispatch() {
+    let _lock = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = DispatchGuard;
+    let b = lns_lut_backend();
+    let mut rng = SplitMix64::new(21);
+    let (m, k, n) = (24usize, 80usize, 50usize);
+    let a = enc_mat(&b, &mut rng, m, k);
+    let w = enc_mat(&b, &mut rng, k, n);
+    let wt = enc_mat(&b, &mut rng, n, k);
+    let at = enc_mat(&b, &mut rng, k, m);
+    let want = ops::matmul_serial(&b, &a, &w).data;
+    let want_bt = ops::matmul_bt_serial(&b, &a, &wt).data;
+    let want_at = ops::matmul_at_serial(&b, &at, &w).data;
+    for d in [MatmulDispatch::ForceRow, MatmulDispatch::ForceTiled, MatmulDispatch::Auto] {
+        DispatchGuard::force(d);
+        assert_eq!(ops::matmul(&b, &a, &w).data, want, "matmul under {d:?}");
+        assert_eq!(ops::matmul_bt(&b, &a, &wt).data, want_bt, "matmul_bt under {d:?}");
+        assert_eq!(ops::matmul_at(&b, &at, &w).data, want_at, "matmul_at under {d:?}");
+    }
+}
+
+fn mlp_ds() -> lnsdnn::data::Dataset {
+    synth_dataset(&SynthSpec {
+        name: "tiled-tiny".into(),
+        classes: 3,
+        train_per_class: 25,
+        test_per_class: 8,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.04,
+        seed: 41,
+    })
+}
+
+fn mlp_cfg(n_shards: usize) -> TrainConfig {
+    TrainConfig {
+        dims: vec![784, 12, 3],
+        epochs: 2,
+        // 60 train samples, batch 7 ⇒ a partial final batch of 4: the
+        // forced-tiled rerun also exercises the sample-weighted epoch
+        // loss on a `n % bs != 0` epoch.
+        batch_size: 7,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 13,
+        shard: ShardConfig::with_shards(n_shards),
+    }
+}
+
+/// The shard-determinism workload re-run with the tiled kernels forced
+/// on: weights, losses and metrics must be bit-identical to the forced
+/// row engine, at shard counts 1 and 4.
+fn mlp_training_dispatch_invariant<B: Backend>(backend: &B) {
+    let ds = mlp_ds();
+    let tag = backend.tag();
+    DispatchGuard::force(MatmulDispatch::ForceRow);
+    let reference = train(backend, &ds, &mlp_cfg(1));
+    for shards in [1usize, 4] {
+        DispatchGuard::force(MatmulDispatch::ForceTiled);
+        let run = train(backend, &ds, &mlp_cfg(shards));
+        for l in 0..reference.model.layers.len() {
+            assert_eq!(
+                reference.model.layers[l].w.data, run.model.layers[l].w.data,
+                "{tag}: layer {l} weights diverge (tiled, shards={shards})"
+            );
+            assert_eq!(
+                reference.model.layers[l].b, run.model.layers[l].b,
+                "{tag}: layer {l} biases diverge (tiled, shards={shards})"
+            );
+        }
+        for (ea, eb) in reference.curve.iter().zip(&run.curve) {
+            assert_eq!(
+                ea.train_loss, eb.train_loss,
+                "{tag}: epoch loss diverges (tiled, shards={shards})"
+            );
+            assert_eq!(
+                ea.val_accuracy, eb.val_accuracy,
+                "{tag}: val accuracy diverges (tiled, shards={shards})"
+            );
+        }
+        assert_eq!(reference.test.accuracy, run.test.accuracy, "{tag}: test accuracy");
+        assert_eq!(reference.test.loss, run.test.loss, "{tag}: test loss");
+    }
+}
+
+#[test]
+fn mlp_training_bit_identical_with_tiled_forced_float() {
+    let _lock = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = DispatchGuard;
+    mlp_training_dispatch_invariant(&float_backend());
+}
+
+#[test]
+fn mlp_training_bit_identical_with_tiled_forced_lns16_lut() {
+    let _lock = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = DispatchGuard;
+    mlp_training_dispatch_invariant(&lns_lut_backend());
+}
+
+#[test]
+fn cnn_training_bit_identical_with_tiled_forced() {
+    let _lock = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = DispatchGuard;
+    let ds = stripes_dataset(&StripeSpec {
+        train_per_class: 12,
+        test_per_class: 4,
+        ..StripeSpec::cnn_default(1.0, 19)
+    });
+    let cfg = |shards: usize| {
+        let mut cfg = CnnTrainConfig::lenet(12, 4);
+        cfg.arch.c1 = 3;
+        cfg.arch.c2 = 4;
+        cfg.arch.hidden = 16;
+        cfg.epochs = 1;
+        cfg.batch_size = 7; // 39-sample train split ⇒ partial final batch
+        cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+        cfg.seed = 23;
+        cfg.shard = ShardConfig::with_shards(shards);
+        cfg
+    };
+    let backend = lns_lut_backend();
+    DispatchGuard::force(MatmulDispatch::ForceRow);
+    let reference = train_cnn(&backend, &ds, &cfg(1));
+    assert_eq!(reference.model.arch.variant, CnnVariant::Pooled);
+    for shards in [1usize, 2] {
+        DispatchGuard::force(MatmulDispatch::ForceTiled);
+        let run = train_cnn(&backend, &ds, &cfg(shards));
+        assert_eq!(reference.model.conv1.w.data, run.model.conv1.w.data, "conv1 (s={shards})");
+        assert_eq!(reference.model.conv2.w.data, run.model.conv2.w.data, "conv2 (s={shards})");
+        assert_eq!(reference.model.fc1.w.data, run.model.fc1.w.data, "fc1 (s={shards})");
+        assert_eq!(reference.model.fc2.w.data, run.model.fc2.w.data, "fc2 (s={shards})");
+        assert_eq!(reference.model.fc2.b, run.model.fc2.b, "head bias (s={shards})");
+        for (ea, eb) in reference.curve.iter().zip(&run.curve) {
+            assert_eq!(ea.train_loss, eb.train_loss, "CNN epoch loss (s={shards})");
+        }
+        assert_eq!(reference.test.accuracy, run.test.accuracy, "CNN test acc (s={shards})");
+        assert_eq!(reference.test.loss, run.test.loss, "CNN test loss (s={shards})");
+    }
+}

@@ -1,0 +1,255 @@
+//! Compile-smoke shim of the `xla` bindings' API surface used by
+//! `lnsdnn`'s PJRT runtime (see this package's Cargo.toml for the full
+//! rationale).
+//!
+//! Contract: everything **type-checks** exactly like the real bindings at
+//! the call sites in `lnsdnn::runtime`, `tests/pjrt_roundtrip.rs`,
+//! `benches/pjrt_e2e.rs` and `examples/serve_infer.rs`; the [`Literal`]
+//! value plumbing is genuinely functional (so literal-level unit tests
+//! pass), while every path that would need a real PJRT client fails at
+//! runtime with an error naming the swap-in procedure.
+
+use std::fmt;
+
+/// Shim error: carries a human-readable message, convertible into
+/// `anyhow::Error` at the lnsdnn call sites via `std::error::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn shim(what: &str) -> Error {
+        Error(format!(
+            "xla shim: {what} requires the real xla bindings — repoint the `xla` \
+             dependency in rust/Cargo.toml from rust/xla-shim at a real \
+             xla-rs/xla_extension install and rebuild with --features pjrt"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Shim result alias (mirrors the real crate).
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// 32-bit integer plane (the LNS m/s planes).
+    I32(Vec<i32>),
+    /// 32-bit float plane (loss/logit outputs).
+    F32(Vec<f32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::I32(v) => v.len(),
+            Payload::F32(v) => v.len(),
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for i32 {}
+    impl Sealed for f32 {}
+}
+
+/// Element types the shim's [`Literal`] can hold (the two lnsdnn uses).
+pub trait NativeType: sealed::Sealed + Copy {
+    #[doc(hidden)]
+    fn into_payload(data: Vec<Self>) -> Payload;
+    #[doc(hidden)]
+    fn from_payload(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for i32 {
+    fn into_payload(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<i32>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            Payload::F32(_) => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn into_payload(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<f32>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            Payload::I32(_) => None,
+        }
+    }
+}
+
+/// Host-side typed array — the one shim type with real behaviour, so
+/// literal construction helpers and their unit tests work unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: T::into_payload(data.to_vec()) }
+    }
+
+    /// Same data, new shape; errors when the element counts differ.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.payload.len() {
+            return Err(Error(format!(
+                "xla shim: cannot reshape {} elements to {dims:?}",
+                self.payload.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Number of elements.
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Shape (diagnostics).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed host vector; errors on an element-type
+    /// mismatch, like the real bindings.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_payload(&self.payload)
+            .ok_or_else(|| Error("xla shim: literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal. The shim never constructs tuples (they
+    /// only arise from real executions), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::shim("tuple literals (execution results)"))
+    }
+}
+
+/// Parsed HLO module handle. Construction requires the real parser.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file — real bindings only.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::shim("parsing HLO text"))
+    }
+}
+
+/// Computation wrapper over a parsed module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module (trivially constructible: the proto itself
+    /// can only come from the real parser).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device-side buffer returned by an execution; never constructed by the
+/// shim.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Device→host transfer — real bindings only.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::shim("device-to-host transfer"))
+    }
+}
+
+/// Compiled executable handle; never constructed by the shim.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs — real bindings only.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::shim("artifact execution"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the shim, so
+/// the runtime's error path (not a silent wrong answer) is what users of
+/// a shim build hit.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Bring up the CPU client — real bindings only.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::shim("the PJRT CPU client"))
+    }
+
+    /// Platform name (unreachable: no constructor succeeds).
+    pub fn platform_name(&self) -> String {
+        "xla-shim".into()
+    }
+
+    /// Device count (unreachable, as above).
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation — real bindings only.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::shim("HLO compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_and_reshapes() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(l.element_count(), 6);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(r.to_vec::<f32>().is_err(), "type mismatch must error");
+        assert!(l.reshape(&[4, 2]).is_err(), "bad element count must error");
+        let f = Literal::vec1(&[0.5f32, 1.5]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn execution_paths_fail_with_swap_in_hint() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("shim client must not come up"),
+        };
+        assert!(err.contains("rust/xla-shim"), "unhelpful shim error: {err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+}
