@@ -4,7 +4,7 @@
 //! benchmark. Full-scale regeneration: `cargo run --release -- fig2`.
 
 use lnsdnn::coordinator::experiments::{fig2, ConfigTag};
-use lnsdnn::coordinator::report;
+use lnsdnn::coordinator::{report, MultiprocSpec};
 use lnsdnn::data::{synth_dataset, SynthSpec};
 use std::path::Path;
 
@@ -17,7 +17,7 @@ fn main() {
         ds.test_len()
     );
     let t0 = std::time::Instant::now();
-    let recs = fig2(&ds, 8, 100, 7, 4, 1);
+    let recs = fig2(&ds, 8, 100, 7, 4, 1, &MultiprocSpec::new(1));
     let wall = t0.elapsed().as_secs_f64();
 
     report::write_csv(

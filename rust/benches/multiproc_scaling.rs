@@ -1,0 +1,120 @@
+//! Multi-process scaling: training samples/s for the serial trainer,
+//! the in-process sharded trainer, and the multi-process trainer
+//! (stdio + TCP transports), float and 16-bit LNS-LUT.
+//!
+//! The trained weights are bit-identical across every row of a backend's
+//! table (`tests/multiproc_determinism.rs`), so like `shard_scaling`
+//! this bench measures the only thing the axes are allowed to move:
+//! wall-clock. The multi-process rows pay for B gradient-sized frames up
+//! and one broadcast down per step (see `train::multiproc` docs), so
+//! they are expected to trail the in-process rows at the paper's tiny
+//! batch sizes — the point of the table is to *see* that serialization
+//! tax next to the contract it buys.
+//!
+//! Timing uses the epoch records' step seconds (training steps only —
+//! evaluation and encoding are excluded).
+
+use lnsdnn::coordinator::server::{train_multiproc, MultiprocSpec};
+use lnsdnn::data::{synth_dataset, Dataset, SynthSpec};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::{InitScheme, SgdConfig};
+use lnsdnn::tensor::{Backend, FloatBackend, LnsBackend};
+use lnsdnn::train::wire::WireElem;
+use lnsdnn::train::{train, ShardConfig, TrainConfig, Transport};
+use std::path::PathBuf;
+
+const WORKER_COUNTS: [usize; 2] = [2, 4];
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_lnsdnn"))
+}
+
+fn bench_cfg(classes: usize) -> TrainConfig {
+    TrainConfig {
+        dims: vec![784, 32, classes],
+        epochs: 2,
+        batch_size: 16,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 0.0 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 7,
+        shard: ShardConfig::default(),
+    }
+}
+
+fn step_seconds(curve: &[lnsdnn::train::EpochRecord]) -> f64 {
+    curve.iter().map(|e| e.seconds).sum()
+}
+
+fn report_row(label: &str, samples: f64, secs: f64, base: f64) {
+    let rate = samples / secs;
+    println!("  {label:<26} {secs:>8.2}s {rate:>12.0} samples/s {:>8.2}x", base / secs);
+}
+
+fn bench_backend<B, F>(tag: &str, mk: F, ds: &Dataset)
+where
+    B: Backend,
+    B::E: WireElem,
+    F: Fn() -> B,
+{
+    let cfg = bench_cfg(ds.classes);
+    let n = ds.train_len();
+    let samples = ((n - n / cfg.val_ratio) * cfg.epochs) as f64;
+    println!("{tag}:");
+
+    let serial = train(&mk(), ds, &cfg);
+    let base = step_seconds(&serial.curve);
+    report_row("serial (in-process)", samples, base, base);
+
+    for shards in WORKER_COUNTS {
+        let mut c = cfg.clone();
+        c.shard = ShardConfig::with_shards(shards);
+        let r = train(&mk(), ds, &c);
+        assert_eq!(r.test.accuracy, serial.test.accuracy, "shards={shards} must be bit-exact");
+        report_row(&format!("in-process shards={shards}"), samples, step_seconds(&r.curve), base);
+    }
+
+    for workers in WORKER_COUNTS {
+        let mut spec = MultiprocSpec::new(workers);
+        spec.worker_exe = Some(worker_exe());
+        spec.worker_threads = 1;
+        let r = train_multiproc(&mk(), ds, &cfg, &spec).expect("multi-process run failed");
+        assert_eq!(r.test.accuracy, serial.test.accuracy, "workers={workers} must be bit-exact");
+        assert_eq!(r.test.loss, serial.test.loss, "workers={workers} must be bit-exact");
+        report_row(
+            &format!("processes={workers} (stdio)"),
+            samples,
+            step_seconds(&r.curve),
+            base,
+        );
+    }
+
+    let mut spec = MultiprocSpec::new(2);
+    spec.worker_exe = Some(worker_exe());
+    spec.transport = Transport::Tcp;
+    spec.worker_threads = 1;
+    let r = train_multiproc(&mk(), ds, &cfg, &spec).expect("multi-process tcp run failed");
+    assert_eq!(r.test.accuracy, serial.test.accuracy, "tcp transport must be bit-exact");
+    assert_eq!(r.test.loss, serial.test.loss, "tcp transport must be bit-exact");
+    report_row("processes=2 (tcp)", samples, step_seconds(&r.curve), base);
+    println!();
+}
+
+fn main() {
+    let ds = synth_dataset(&SynthSpec::mnist_like(0.01, 7));
+    println!(
+        "multiproc scaling: {} — {} train / {} test, {} epochs, batch {}\n",
+        ds.name,
+        ds.train_len(),
+        ds.test_len(),
+        bench_cfg(ds.classes).epochs,
+        bench_cfg(ds.classes).batch_size
+    );
+    bench_backend("float32", FloatBackend::default, &ds);
+    bench_backend(
+        "log16-lut",
+        || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01),
+        &ds,
+    );
+    println!("every row above trained bit-identical weights (asserted on test metrics).");
+}

@@ -4,7 +4,7 @@
 //! --scale 1.0 --epochs 20`.
 
 use lnsdnn::coordinator::experiments::{table1, ConfigTag};
-use lnsdnn::coordinator::report;
+use lnsdnn::coordinator::{report, MultiprocSpec};
 use lnsdnn::data::paper_datasets;
 use std::path::Path;
 
@@ -22,7 +22,7 @@ fn main() {
     }
     let t0 = std::time::Instant::now();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let recs = table1(&datasets, 6, 48, 7, threads, 1);
+    let recs = table1(&datasets, 6, 48, 7, threads, 1, &MultiprocSpec::new(1));
     let wall = t0.elapsed().as_secs_f64();
 
     let md = report::table1_markdown(&recs);

@@ -6,6 +6,7 @@
 //! * [`table1`] — test accuracy at 20 epochs for all seven number-system
 //!   columns × four datasets (Table 1), fanned out across threads.
 
+use crate::coordinator::server::{train_cnn_multiproc, train_multiproc, MultiprocSpec};
 use crate::data::Dataset;
 use crate::fixed::{FixedConfig, FixedSystem};
 use crate::lns::{DeltaApprox, DeltaMode, LnsConfig, LnsSystem, LutSpec};
@@ -168,6 +169,100 @@ pub fn run_one(ds: &Dataset, tag: ConfigTag, cfg: &TrainConfig) -> RunRecord {
     }
 }
 
+/// Multi-process twin of [`run_one`]: identical backends and record, but
+/// the training run itself fans out across `spec.workers` local worker
+/// processes ([`train_multiproc`]) — trained weights and metrics are
+/// bit-identical to [`run_one`] by the multi-process determinism
+/// contract (`tests/multiproc_determinism.rs`).
+pub fn run_one_mp(
+    ds: &Dataset,
+    tag: ConfigTag,
+    cfg: &TrainConfig,
+    spec: &MultiprocSpec,
+) -> anyhow::Result<RunRecord> {
+    let t0 = std::time::Instant::now();
+    let (curve, test) = match tag {
+        ConfigTag::Float => {
+            let b = FloatBackend { slope: SLOPE as f32 };
+            let r = train_multiproc(&b, ds, cfg, spec)?;
+            (r.curve, r.test)
+        }
+        ConfigTag::Lin12 | ConfigTag::Lin16 => {
+            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+            let b = FixedBackend::new(FixedSystem::new(fc), SLOPE);
+            let r = train_multiproc(&b, ds, cfg, spec)?;
+            (r.curve, r.test)
+        }
+        _ => {
+            let lc = lns_config_for(tag).expect("log tag");
+            let b = LnsBackend::new(LnsSystem::new(lc), SLOPE);
+            let r = train_multiproc(&b, ds, cfg, spec)?;
+            (r.curve, r.test)
+        }
+    };
+    Ok(RunRecord {
+        dataset: ds.name.clone(),
+        tag,
+        curve,
+        test_accuracy: test.accuracy,
+        test_loss: test.loss,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Multi-process twin of [`run_one_cnn`].
+pub fn run_one_cnn_mp(
+    ds: &Dataset,
+    tag: ConfigTag,
+    cfg: &CnnTrainConfig,
+    spec: &MultiprocSpec,
+) -> anyhow::Result<RunRecord> {
+    let t0 = std::time::Instant::now();
+    let (curve, test) = match tag {
+        ConfigTag::Float => {
+            let b = FloatBackend { slope: SLOPE as f32 };
+            let r = train_cnn_multiproc(&b, ds, cfg, spec)?;
+            (r.curve, r.test)
+        }
+        ConfigTag::Lin12 | ConfigTag::Lin16 => {
+            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+            let b = FixedBackend::new(FixedSystem::new(fc), SLOPE);
+            let r = train_cnn_multiproc(&b, ds, cfg, spec)?;
+            (r.curve, r.test)
+        }
+        _ => {
+            let lc = lns_config_for(tag).expect("log tag");
+            let b = LnsBackend::new(LnsSystem::new(lc), SLOPE);
+            let r = train_cnn_multiproc(&b, ds, cfg, spec)?;
+            (r.curve, r.test)
+        }
+    };
+    Ok(RunRecord {
+        dataset: ds.name.clone(),
+        tag,
+        curve,
+        test_accuracy: test.accuracy,
+        test_loss: test.loss,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Size a sweep's [`MultiprocSpec`] to its thread budget: when the
+/// caller left `worker_threads` at 0 (library default), each worker
+/// process would build a full-machine rayon pool, and with `concurrent`
+/// sweep cells in flight the machine would run
+/// `concurrent × workers × cores` compute threads. Cap each worker at
+/// `threads / (concurrent × workers)` so total active compute threads
+/// stay ≈ `threads`, matching the in-process sweeps' sizing invariant.
+/// An explicit non-zero `worker_threads` is respected as-is.
+fn sized_mp(mp: &MultiprocSpec, threads: usize, concurrent: usize) -> MultiprocSpec {
+    let mut eff = mp.clone();
+    if eff.is_multiproc() && eff.worker_threads == 0 {
+        eff.worker_threads = (threads / (concurrent * eff.workers).max(1)).max(1);
+    }
+    eff
+}
+
 /// Paper training protocol for a dataset, with the tag's weight decay.
 pub fn paper_config(
     ds: &Dataset,
@@ -199,6 +294,16 @@ pub fn paper_config(
 /// pool, so the sweep pool is sized to `threads / shards` concurrent
 /// jobs — total active workers stay ≈ `threads` instead of
 /// multiplying out to `threads × shards`.
+///
+/// With `mp.workers > 1` every cell instead trains across that many
+/// **worker processes** ([`run_one_mp`]); `shards` is then ignored, the
+/// sweep pool is sized to `threads / workers`, and each worker
+/// process's rayon pool is capped so that
+/// `concurrent × workers × worker_threads ≈ threads` (see `sized_mp`;
+/// an explicit `worker_threads` is respected as-is). The weights are
+/// still bit-identical to the in-process runs. A failed process spawn aborts
+/// the sweep (panic with context): a half-degraded sweep would silently
+/// report a different machine's worth of throughput.
 pub fn run_grid(
     datasets: &[Dataset],
     tags: &[ConfigTag],
@@ -207,20 +312,24 @@ pub fn run_grid(
     seed: u64,
     threads: usize,
     shards: usize,
+    mp: &MultiprocSpec,
 ) -> Vec<RunRecord> {
     // Fail fast on invalid shard counts, before any pool spins up (the
     // per-job `ShardConfig` below would otherwise panic mid-sweep inside
     // a rayon worker).
     let shard_cfg = ShardConfig::with_shards(shards);
+    mp.validate().expect("invalid multi-process spec");
     let jobs: Vec<(usize, ConfigTag)> = (0..datasets.len())
         .flat_map(|d| tags.iter().map(move |&t| (d, t)))
         .collect();
     if jobs.is_empty() {
         return Vec::new();
     }
-    let concurrent = (threads / shards).max(1);
+    let per_job = if mp.is_multiproc() { mp.workers } else { shards };
+    let concurrent = (threads / per_job).max(1).clamp(1, jobs.len());
+    let mp = sized_mp(mp, threads, concurrent);
     let pool = rayon::ThreadPoolBuilder::new()
-        .num_threads(concurrent.clamp(1, jobs.len()))
+        .num_threads(concurrent)
         .thread_name(|i| format!("sweep-{i}"))
         .build()
         .expect("building the sweep thread pool");
@@ -231,7 +340,11 @@ pub fn run_grid(
                 let ds = &datasets[d];
                 let mut cfg = paper_config(ds, tag, epochs, hidden, seed);
                 cfg.shard = shard_cfg;
-                let rec = run_one(ds, tag, &cfg);
+                let rec = if mp.is_multiproc() {
+                    run_one_mp(ds, tag, &cfg, &mp).expect("multi-process sweep cell failed")
+                } else {
+                    run_one(ds, tag, &cfg)
+                };
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
                     "[{finished}/{} done] {} × {:<10} acc={:.3} ({:.1}s)",
@@ -255,8 +368,9 @@ pub fn table1(
     seed: u64,
     threads: usize,
     shards: usize,
+    mp: &MultiprocSpec,
 ) -> Vec<RunRecord> {
-    run_grid(datasets, &ConfigTag::table1_columns(), epochs, hidden, seed, threads, shards)
+    run_grid(datasets, &ConfigTag::table1_columns(), epochs, hidden, seed, threads, shards, mp)
 }
 
 /// Fig. 2: the four learning-curve series for one dataset.
@@ -267,6 +381,7 @@ pub fn fig2(
     seed: u64,
     threads: usize,
     shards: usize,
+    mp: &MultiprocSpec,
 ) -> Vec<RunRecord> {
     run_grid(
         std::slice::from_ref(ds),
@@ -276,6 +391,7 @@ pub fn fig2(
         seed,
         threads,
         shards,
+        mp,
     )
 }
 
@@ -349,14 +465,20 @@ pub fn cnn_grid(
     threads: usize,
     variant: CnnVariant,
     shards: usize,
+    mp: &MultiprocSpec,
 ) -> Vec<RunRecord> {
     if tags.is_empty() {
         return Vec::new();
     }
     // Fail fast on invalid shard counts (same rationale as `run_grid`).
     ShardConfig::with_shards(shards);
+    mp.validate().expect("invalid multi-process spec");
+    let per_job = if mp.is_multiproc() { mp.workers } else { shards };
+    let pool_threads = (threads / per_job).max(1);
+    // Effective concurrency is also bounded by how many cells exist.
+    let mp = sized_mp(mp, threads, pool_threads.min(tags.len()));
     let pool = rayon::ThreadPoolBuilder::new()
-        .num_threads((threads / shards).max(1))
+        .num_threads(pool_threads)
         .thread_name(|i| format!("cnn-sweep-{i}"))
         .build()
         .expect("building the CNN-sweep thread pool");
@@ -365,7 +487,11 @@ pub fn cnn_grid(
         tags.par_iter()
             .map(|&tag| {
                 let cfg = cnn_config(ds, tag, epochs, seed, variant, shards);
-                let rec = run_one_cnn(ds, tag, &cfg);
+                let rec = if mp.is_multiproc() {
+                    run_one_cnn_mp(ds, tag, &cfg, &mp).expect("multi-process CNN cell failed")
+                } else {
+                    run_one_cnn(ds, tag, &cfg)
+                };
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
                     "[{finished}/{} done] cnn/{} {} × {:<10} acc={:.3} ({:.1}s)",
@@ -559,7 +685,8 @@ mod tests {
     #[test]
     fn grid_runs_all_cells_in_parallel() {
         let ds = vec![tiny()];
-        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin16], 1, 8, 3, 2, 1);
+        let mp = MultiprocSpec::new(1);
+        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin16], 1, 8, 3, 2, 1, &mp);
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
         assert_eq!(recs[1].tag, ConfigTag::Lin16);
@@ -569,8 +696,9 @@ mod tests {
     fn sharded_grid_reproduces_serial_grid() {
         // The shards axis moves wall-clock only: identical accuracies.
         let ds = vec![tiny()];
-        let a = run_grid(&ds, &[ConfigTag::Float], 1, 8, 3, 2, 1);
-        let b = run_grid(&ds, &[ConfigTag::Float], 1, 8, 3, 2, 2);
+        let mp = MultiprocSpec::new(1);
+        let a = run_grid(&ds, &[ConfigTag::Float], 1, 8, 3, 2, 1, &mp);
+        let b = run_grid(&ds, &[ConfigTag::Float], 1, 8, 3, 2, 2, &mp);
         assert_eq!(a[0].test_accuracy, b[0].test_accuracy);
         assert_eq!(a[0].test_loss, b[0].test_loss);
     }
@@ -583,8 +711,9 @@ mod tests {
             test_per_class: 4,
             ..StripeSpec::cnn_default(1.0, 5)
         });
-        let recs =
-            cnn_grid(&ds, &[ConfigTag::Float, ConfigTag::Log16Lut], 1, 3, 2, CnnVariant::Pooled, 1);
+        let mp = MultiprocSpec::new(1);
+        let tags = [ConfigTag::Float, ConfigTag::Log16Lut];
+        let recs = cnn_grid(&ds, &tags, 1, 3, 2, CnnVariant::Pooled, 1, &mp);
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
         assert_eq!(recs[1].tag, ConfigTag::Log16Lut);
@@ -600,7 +729,8 @@ mod tests {
             test_per_class: 4,
             ..StripeSpec::cnn_default(1.0, 6)
         });
-        let recs = cnn_grid(&ds, &[ConfigTag::Float], 1, 3, 2, CnnVariant::StridedV1, 2);
+        let mp = MultiprocSpec::new(1);
+        let recs = cnn_grid(&ds, &[ConfigTag::Float], 1, 3, 2, CnnVariant::StridedV1, 2, &mp);
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].curve.len(), 1);
     }

@@ -1,13 +1,34 @@
-//! Batched inference server (std-thread implementation; tokio is not
-//! available offline).
+//! The coordinator's server roles: batched inference *and* the
+//! multi-process training driver (std-thread/std-process implementation;
+//! tokio is not available offline).
 //!
-//! Demonstrates the deployment story: clients submit single images, a
+//! **Inference** ([`BatchServer`]): clients submit single images, a
 //! collector thread groups them into batches (up to `max_batch`, waiting
 //! at most `max_wait` for stragglers) and hands each batch to a pluggable
 //! handler — the native LNS engine or a PJRT artifact executable. This is
 //! the standard dynamic-batching pattern (vLLM-style router, scaled to
 //! this paper's workload).
+//!
+//! **Training** ([`train_multiproc`] / [`train_cnn_multiproc`]): spawns
+//! `N` local `lnsdnn worker` processes (over stdio pipes or loopback
+//! TCP per [`MultiprocSpec`]), then hands the connections to the
+//! transport-agnostic protocol driver in [`crate::train::multiproc`].
+//! This module owns only the *process* concerns — spawning, connection
+//! establishment, kill-on-error, exit-status collection — so the
+//! protocol stays testable without a binary.
 
+use crate::data::Dataset;
+use crate::nn::{Cnn, Mlp};
+use crate::tensor::Backend;
+use crate::train::multiproc::{self, JobEnv, PeerIo, Transport};
+use crate::train::shard::MAX_SHARDS;
+use crate::train::wire::WireElem;
+use crate::train::{CnnTrainConfig, TrainConfig, TrainResult};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio as ProcStdio};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -161,9 +182,228 @@ impl BatchServer {
     }
 }
 
+// ---------------------------------------------------------------------
+// Multi-process training driver
+// ---------------------------------------------------------------------
+
+/// How to run a multi-process training job: worker count, transport,
+/// which binary to spawn, and the worker environment.
+#[derive(Clone, Debug)]
+pub struct MultiprocSpec {
+    /// Worker processes to spawn (1 is legal — one worker computes every
+    /// slot — but the interesting counts are ≥ 2).
+    pub workers: usize,
+    /// stdio pipes or loopback TCP.
+    pub transport: Transport,
+    /// Worker binary. `None` = `std::env::current_exe()`, which is right
+    /// when the coordinator *is* the `lnsdnn` CLI; tests and embedders
+    /// must point this at the `lnsdnn` binary explicitly.
+    pub worker_exe: Option<PathBuf>,
+    /// Rayon threads per worker process (0 = library default). Pick
+    /// ≈ cores / workers to avoid oversubscription; the trained bits are
+    /// identical either way.
+    pub worker_threads: usize,
+    /// Leaky/llReLU slope the coordinator's backend uses — workers
+    /// rebuild their backend from the tag + this value.
+    pub slope: f64,
+}
+
+impl MultiprocSpec {
+    /// Spec with the given worker count and stdio transport.
+    pub fn new(workers: usize) -> Self {
+        MultiprocSpec {
+            workers,
+            transport: Transport::Stdio,
+            worker_exe: None,
+            worker_threads: 0,
+            slope: 0.01,
+        }
+    }
+
+    /// Does this spec actually fan out across processes? Grid drivers use
+    /// the in-process trainers below this threshold.
+    pub fn is_multiproc(&self) -> bool {
+        self.workers > 1
+    }
+
+    /// Range-check the spec (same worker bound as the in-process
+    /// trainer's [`crate::train::ShardConfig`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=MAX_SHARDS).contains(&self.workers),
+            "workers must be in 1..={MAX_SHARDS}, got {}",
+            self.workers
+        );
+        Ok(())
+    }
+}
+
+/// Train an MLP across `spec.workers` local worker processes. Bit-
+/// identical to [`crate::train::train`] at any worker count (see
+/// `tests/multiproc_determinism.rs`); `cfg.shard` is ignored because the
+/// processes are the shards.
+pub fn train_multiproc<B: Backend>(
+    backend: &B,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    spec: &MultiprocSpec,
+) -> Result<TrainResult<Mlp<B::E>>>
+where
+    B::E: WireElem,
+{
+    spec.validate()?;
+    let (peers, children) = spawn_workers(spec)?;
+    let env = JobEnv { slope: spec.slope, worker_threads: spec.worker_threads };
+    let result = multiproc::coordinate_mlp(backend, ds, cfg, &env, peers);
+    finish_children(children, result)
+}
+
+/// CNN twin of [`train_multiproc`] (bit-identical to
+/// [`crate::train::train_cnn`]).
+pub fn train_cnn_multiproc<B: Backend>(
+    backend: &B,
+    ds: &Dataset,
+    cfg: &CnnTrainConfig,
+    spec: &MultiprocSpec,
+) -> Result<TrainResult<Cnn<B::E>>>
+where
+    B::E: WireElem,
+{
+    spec.validate()?;
+    let (peers, children) = spawn_workers(spec)?;
+    let env = JobEnv { slope: spec.slope, worker_threads: spec.worker_threads };
+    let result = multiproc::coordinate_cnn(backend, ds, cfg, &env, peers);
+    finish_children(children, result)
+}
+
+fn worker_exe(spec: &MultiprocSpec) -> Result<PathBuf> {
+    match &spec.worker_exe {
+        Some(p) => Ok(p.clone()),
+        None => std::env::current_exe().context("resolving the lnsdnn binary for worker spawn"),
+    }
+}
+
+/// Spawn the worker processes and establish one framed duplex connection
+/// per worker. On any error, every child spawned so far is killed.
+fn spawn_workers(spec: &MultiprocSpec) -> Result<(Vec<PeerIo>, Vec<Child>)> {
+    let mut children = Vec::new();
+    match spawn_workers_inner(spec, &mut children) {
+        Ok(peers) => Ok((peers, children)),
+        Err(e) => {
+            kill_children(&mut children);
+            Err(e)
+        }
+    }
+}
+
+fn spawn_workers_inner(spec: &MultiprocSpec, children: &mut Vec<Child>) -> Result<Vec<PeerIo>> {
+    let exe = worker_exe(spec)?;
+    let mut peers = Vec::with_capacity(spec.workers);
+    match spec.transport {
+        Transport::Stdio => {
+            for rank in 0..spec.workers {
+                let mut child = Command::new(&exe)
+                    .args(["worker", "--transport", "stdio"])
+                    .stdin(ProcStdio::piped())
+                    .stdout(ProcStdio::piped())
+                    .spawn()
+                    .with_context(|| format!("spawning worker {rank} from {}", exe.display()))?;
+                let stdin = child.stdin.take().expect("piped worker stdin");
+                let stdout = child.stdout.take().expect("piped worker stdout");
+                peers.push(PeerIo {
+                    rx: Box::new(BufReader::new(stdout)),
+                    tx: Box::new(BufWriter::new(stdin)),
+                });
+                children.push(child);
+            }
+        }
+        Transport::Tcp => {
+            let listener = TcpListener::bind("127.0.0.1:0").context("binding the listener")?;
+            let addr = listener.local_addr().context("reading listener address")?.to_string();
+            for rank in 0..spec.workers {
+                let child = Command::new(&exe)
+                    .args(["worker", "--transport", "tcp", "--connect", &addr])
+                    .stdin(ProcStdio::null())
+                    .spawn()
+                    .with_context(|| format!("spawning worker {rank} from {}", exe.display()))?;
+                children.push(child);
+            }
+            // Accept with a deadline, watching for children that die
+            // before connecting (a blocking accept would hang forever).
+            listener.set_nonblocking(true).context("setting listener non-blocking")?;
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while peers.len() < spec.workers {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).context("resetting socket mode")?;
+                        let _ = stream.set_nodelay(true);
+                        let rx = stream.try_clone().context("cloning worker socket")?;
+                        peers.push(PeerIo {
+                            rx: Box::new(BufReader::new(rx)),
+                            tx: Box::new(BufWriter::new(stream)),
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        for (rank, c) in children.iter_mut().enumerate() {
+                            if let Some(status) = c.try_wait()? {
+                                bail!("worker {rank} exited with {status} before connecting");
+                            }
+                        }
+                        if Instant::now() >= deadline {
+                            bail!(
+                                "timed out waiting for {} worker connection(s)",
+                                spec.workers - peers.len()
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("accepting worker connection"),
+                }
+            }
+        }
+    }
+    Ok(peers)
+}
+
+fn kill_children(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// On success, reap every worker and require a clean exit; on error, kill
+/// the fleet so no orphan keeps the pipes (or CI) alive.
+fn finish_children<T>(mut children: Vec<Child>, result: Result<T>) -> Result<T> {
+    match result {
+        Ok(v) => {
+            for (rank, c) in children.iter_mut().enumerate() {
+                let status = c.wait().with_context(|| format!("reaping worker {rank}"))?;
+                ensure!(status.success(), "worker {rank} exited with {status}");
+            }
+            Ok(v)
+        }
+        Err(e) => {
+            kill_children(&mut children);
+            Err(e)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn multiproc_spec_validates_bounds() {
+        assert!(MultiprocSpec::new(1).validate().is_ok());
+        assert!(MultiprocSpec::new(MAX_SHARDS).validate().is_ok());
+        assert!(MultiprocSpec::new(0).validate().is_err());
+        assert!(MultiprocSpec::new(MAX_SHARDS + 1).validate().is_err());
+        assert!(!MultiprocSpec::new(1).is_multiproc());
+        assert!(MultiprocSpec::new(2).is_multiproc());
+        assert_eq!(MultiprocSpec::new(2).transport, Transport::Stdio);
+    }
 
     #[test]
     fn serves_and_batches() {

@@ -14,6 +14,21 @@
 //!   paper's experiment sweeps, the PJRT runtime that loads and executes
 //!   the AOT artifacts, and the experiment coordinator/CLI.
 //!
+//! Inside L3, dependencies point strictly downward:
+//!
+//! | Layer | Modules | Role |
+//! |-------|---------|------|
+//! | coordinator | [`coordinator`] | sweeps, reports, batched inference, worker-process spawning |
+//! | training | [`train`] | epoch loop, metrics, in-process + multi-process sharding, wire format |
+//! | models | [`nn`] | MLP/CNN with manual ⊞/⊡ backprop, SGD, mergeable gradients |
+//! | engine | [`tensor`] | backend trait, row-parallel + cache-tiled matmuls, im2col |
+//! | number systems | [`lns`], [`fixed`] | the paper's arithmetic (Δ± LUT/bit-shift/exact), linear baseline |
+//!
+//! The architecture map lives in `docs/ARCHITECTURE.md`; the bit-exactness
+//! contract every execution path obeys (reduction orders, tiling argument,
+//! shard topology, wire framing) is specified in `docs/NUMERICS.md` —
+//! read that before touching any reduction.
+//!
 //! Quick start:
 //! ```no_run
 //! use lnsdnn::lns::{LnsConfig, DeltaMode, LnsSystem};

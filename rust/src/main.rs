@@ -6,6 +6,8 @@
 //! * `table1` — the accuracy table → `results/table1.{md,csv}`
 //! * `bitwidth` — the Eq. 15 bound table
 //! * `train` — one (dataset × config) run with full logging
+//! * `cnn` — the conv workload sweep
+//! * `worker` — multi-process training worker (spawned by `--workers N`)
 //! * `artifacts` — list/verify the AOT bundle via the PJRT runtime
 //!
 //! Argument parsing is hand-rolled (`clap` is unavailable offline); every
@@ -13,10 +15,11 @@
 
 use anyhow::{bail, Context, Result};
 use lnsdnn::coordinator::experiments::ConfigTag;
-use lnsdnn::coordinator::{experiments, report};
+use lnsdnn::coordinator::{experiments, report, MultiprocSpec};
 use lnsdnn::data;
 use lnsdnn::lns;
 use lnsdnn::runtime::{ArtifactRegistry, Runtime};
+use lnsdnn::train::Transport;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -79,20 +82,27 @@ USAGE: lnsdnn <command> [--flag value ...]
 COMMANDS
   fig1      [--dmax 11] [--samples 441] [--out results]
   fig2      [--dataset mnist] [--epochs 20] [--scale 0.1] [--hidden 100]
-            [--seed 7] [--threads N] [--shards 1] [--out results]
+            [--seed 7] [--threads N] [--shards 1] [--workers 1]
+            [--transport stdio|tcp] [--worker-threads 0] [--out results]
             [--data-dir DIR]
   table1    [--epochs 20] [--scale 0.1] [--hidden 100] [--seed 7]
-            [--threads N] [--shards 1] [--out results] [--data-dir DIR]
-            [--datasets a,b]
+            [--threads N] [--shards 1] [--workers 1]
+            [--transport stdio|tcp] [--worker-threads 0] [--out results]
+            [--data-dir DIR] [--datasets a,b]
   bitwidth  (prints the Eq. 15 bound table)
   cost      (first-order MAC gate counts: LNS vs linear, per config)
   train     --config log16-lut [--dataset mnist] [--epochs 20]
             [--scale 0.1] [--hidden 100] [--lr 0.01] [--wd 0.0001]
-            [--batch 5] [--seed 7] [--shards 1] [--data-dir DIR]
+            [--batch 5] [--seed 7] [--shards 1] [--workers 1]
+            [--transport stdio|tcp] [--worker-threads 0] [--data-dir DIR]
   cnn       [--dataset stripes] [--configs float,log16-lut,log16-bs]
             [--arch lenet|strided-v1] [--epochs 8] [--scale 1.0]
-            [--seed 7] [--threads N] [--shards 1] [--out results]
+            [--seed 7] [--threads N] [--shards 1] [--workers 1]
+            [--transport stdio|tcp] [--worker-threads 0] [--out results]
             (conv workload sweep)
+  worker    --transport stdio|tcp [--connect HOST:PORT]
+            (multi-process training worker; spawned by the coordinator,
+             not normally run by hand)
   artifacts [--dir artifacts] (list and smoke-compile the AOT bundle)
 
 CONFIG TAGS
@@ -101,8 +111,11 @@ CONFIG TAGS
 Datasets default to the synthetic paper stand-ins; pass --data-dir with
 real IDX files (mnist/fmnist/emnistd/emnistl tags) to use them instead.
 --scale shrinks the synthetic datasets (1.0 = full paper scale).
---shards N runs each training job data-parallel over N workers; trained
-weights are bit-identical for every N (see README \"Sharded training\").";
+--shards N runs each training job data-parallel over N in-process
+workers; --workers N runs it over N worker *processes* exchanging
+serialized gradient frames (stdio pipes or loopback TCP). Trained
+weights are bit-identical for every N on both axes (see README
+\"Sharded training\" / \"Multi-process training\" and docs/NUMERICS.md).";
 
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -119,6 +132,7 @@ fn run() -> Result<()> {
         "cost" => cmd_cost(),
         "train" => cmd_train(&flags),
         "cnn" => cmd_cnn(&flags),
+        "worker" => cmd_worker(&flags),
         "artifacts" => cmd_artifacts(&flags),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -141,6 +155,29 @@ fn shards_flag(flags: &Flags) -> Result<usize> {
     lnsdnn::train::ShardConfig::try_with_shards(n)
         .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
     Ok(n)
+}
+
+/// Parse the multi-process axis (`--workers`, `--transport`,
+/// `--worker-threads`) into a [`MultiprocSpec`]. `--workers 1` (the
+/// default) keeps everything in-process.
+fn mp_spec(flags: &Flags) -> Result<MultiprocSpec> {
+    let workers = flags.usize("workers", 1)?;
+    let t_s = flags.get("transport").unwrap_or("stdio");
+    let transport =
+        Transport::parse(t_s).with_context(|| format!("bad --transport '{t_s}' (stdio|tcp)"))?;
+    let mut spec = MultiprocSpec::new(workers);
+    spec.transport = transport;
+    spec.worker_threads = flags.usize("worker-threads", 0)?;
+    spec.slope = experiments::SLOPE;
+    spec.validate().map_err(|e| anyhow::anyhow!("--workers: {e}"))?;
+    Ok(spec)
+}
+
+fn cmd_worker(flags: &Flags) -> Result<()> {
+    let t_s = flags.get("transport").unwrap_or("stdio");
+    let transport =
+        Transport::parse(t_s).with_context(|| format!("bad --transport '{t_s}' (stdio|tcp)"))?;
+    lnsdnn::train::multiproc::run_worker(transport, flags.get("connect"))
 }
 
 fn load_dataset(flags: &Flags, name: &str) -> Result<data::Dataset> {
@@ -186,7 +223,8 @@ fn cmd_fig2(flags: &Flags) -> Result<()> {
     let seed = flags.u64("seed", 7)?;
     let threads = flags.usize("threads", default_threads())?;
     let shards = shards_flag(flags)?;
-    let recs = experiments::fig2(&ds, epochs, hidden, seed, threads, shards);
+    let mp = mp_spec(flags)?;
+    let recs = experiments::fig2(&ds, epochs, hidden, seed, threads, shards, &mp);
     let path = out_dir(flags).join(format!("fig2_{name}.csv"));
     report::write_csv(
         &path,
@@ -217,7 +255,8 @@ fn cmd_table1(flags: &Flags) -> Result<()> {
     let datasets: Vec<data::Dataset> =
         names.iter().map(|n| load_dataset(flags, n)).collect::<Result<_>>()?;
     let shards = shards_flag(flags)?;
-    let recs = experiments::table1(&datasets, epochs, hidden, seed, threads, shards);
+    let mp = mp_spec(flags)?;
+    let recs = experiments::table1(&datasets, epochs, hidden, seed, threads, shards, &mp);
     let md = report::table1_markdown(&recs);
     let dir = out_dir(flags);
     report::write_markdown(&dir.join("table1.md"), &md)?;
@@ -289,16 +328,31 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     cfg.sgd.weight_decay = flags.f64("wd", cfg.sgd.weight_decay)?;
     cfg.batch_size = flags.usize("batch", cfg.batch_size)?;
     cfg.shard = lnsdnn::train::ShardConfig::with_shards(shards_flag(flags)?);
+    let mut mp = mp_spec(flags)?;
+    // Without an explicit --worker-threads, split the machine across the
+    // worker processes instead of letting each build a full-size pool.
+    if mp.is_multiproc() && mp.worker_threads == 0 {
+        mp.worker_threads = (default_threads() / mp.workers).max(1);
+    }
     println!(
-        "training {} on {} ({} train / {} test, {} classes), {} epochs",
+        "training {} on {} ({} train / {} test, {} classes), {} epochs{}",
         tag.label(),
         ds.name,
         ds.train_len(),
         ds.test_len(),
         ds.classes,
-        epochs
+        epochs,
+        if mp.is_multiproc() {
+            format!(", {} worker processes over {}", mp.workers, mp.transport.label())
+        } else {
+            String::new()
+        }
     );
-    let rec = experiments::run_one(&ds, tag, &cfg);
+    let rec = if mp.is_multiproc() {
+        experiments::run_one_mp(&ds, tag, &cfg, &mp)?
+    } else {
+        experiments::run_one(&ds, tag, &cfg)
+    };
     for e in &rec.curve {
         println!(
             "  epoch {:>3}: loss {:.4}  val acc {:.4}  ({:.1}s)",
@@ -334,6 +388,7 @@ fn cmd_cnn(flags: &Flags) -> Result<()> {
             .collect::<Result<_>>()?,
         None => vec![ConfigTag::Float, ConfigTag::Log16Lut, ConfigTag::Log16Bs],
     };
+    let mp = mp_spec(flags)?;
     println!(
         "CNN sweep ({}) on {} ({} train / {} test, {} classes), {} epochs, {} configs, {} shard(s)",
         variant.label(),
@@ -345,7 +400,7 @@ fn cmd_cnn(flags: &Flags) -> Result<()> {
         tags.len(),
         shards
     );
-    let recs = experiments::cnn_grid(&ds, &tags, epochs, seed, threads, variant, shards);
+    let recs = experiments::cnn_grid(&ds, &tags, epochs, seed, threads, variant, shards, &mp);
     let dir = out_dir(flags);
     // Keep the historical filename for the default arch; suffix variants.
     let stem = match variant {

@@ -529,7 +529,9 @@ impl CnnVariant {
 }
 
 /// Architecture of the conv–pool–conv–pool–dense–dense CNN.
-#[derive(Clone, Debug)]
+/// (`PartialEq`/`Eq` because the multi-process wire format round-trips
+/// it inside [`crate::train::wire::ModelSpec`].)
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CnnArch {
     /// Input channels.
     pub in_c: usize,

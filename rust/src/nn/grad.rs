@@ -89,6 +89,10 @@ pub trait GradStore<B: Backend>: Sized + Send {
 
     /// Scale every element by a real constant (encoded once) — the single
     /// `1/B` averaging step after a reduction.
+    ///
+    /// (Deserialized gradient frames do not land through this trait:
+    /// [`crate::train::multiproc::build_grads`] moves decoded wire views
+    /// straight into a store without a zero-fill or copy.)
     fn scale(&mut self, backend: &B, c: f64) {
         for view in self.flat_views_mut() {
             ops::scale_slice(backend, view, c);

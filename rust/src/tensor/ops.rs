@@ -295,6 +295,20 @@ impl Tiling {
     /// Default tile sizes: a `kc × nc` panel is 32 KiB at 4-byte words
     /// (64 KiB for the two-field LNS value) — L1-resident on typical
     /// cores, comfortably L2-resident everywhere.
+    ///
+    /// Any tiling — including pathological ones — produces bit-identical
+    /// results, because tiling only re-orders *which* output elements
+    /// compute when (see `docs/NUMERICS.md` §2):
+    ///
+    /// ```
+    /// use lnsdnn::tensor::{ops, FloatBackend, Tensor, Tiling};
+    /// let b = FloatBackend::default();
+    /// let a = Tensor::from_vec(2, 3, vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    /// let w = Tensor::from_vec(3, 2, vec![0.5f32, -1.0, 2.0, 0.25, -0.5, 1.5]);
+    /// let tiny = Tiling { mc: 1, kc: 2, nc: 1 };
+    /// let tiled = ops::matmul_tiled_with(&b, &a, &w, &tiny);
+    /// assert_eq!(tiled.data, ops::matmul_serial(&b, &a, &w).data);
+    /// ```
     pub const DEFAULT: Tiling = Tiling { mc: 16, kc: 128, nc: 64 };
 
     fn validate(&self) {

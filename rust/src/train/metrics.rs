@@ -5,9 +5,18 @@
 //! argmax bookkeeping fans out across the rayon pool for large chunks.
 //! Loss/accuracy are reduced in row order afterwards, so parallel and
 //! serial evaluation report identical numbers.
+//!
+//! Loss accounting goes through the one shared accumulator,
+//! [`crate::train::EpochLoss`] — per-row raw loss sums folded in row
+//! order, divided by the sample count once at the end. Every evaluation
+//! caller (the epoch-loop validation passes, the final test pass, the
+//! multi-process coordinator) lands here, so nobody can reintroduce the
+//! per-batch mean-of-means weighting bug that used to overweight partial
+//! final batches (PR 4).
 
 use crate::nn::Mlp;
 use crate::tensor::{ops, Backend, Tensor};
+use crate::train::EpochLoss;
 use rayon::prelude::*;
 
 /// Accuracy/loss summary over a dataset slice.
@@ -54,7 +63,10 @@ where
     // Evaluate in modest chunks to bound peak memory on large test sets.
     const CHUNK: usize = 256;
     let mut correct = 0usize;
-    let mut loss = 0.0f64;
+    // Per-row raw loss sums fold through the shared sample-weighted
+    // accumulator in row order — the identical IEEE chain the seed's
+    // single `loss -= ln_p` accumulator produced (`a − l ≡ a + (−l)`).
+    let mut loss = EpochLoss::default();
     let mut grad_scratch = vec![backend.zero(); classes];
     for start in (0..x.rows).step_by(CHUNK) {
         let end = (start + CHUNK).min(x.rows);
@@ -93,12 +105,12 @@ where
             if ok {
                 correct += 1;
             }
-            loss -= ln_p;
+            loss.add_sum(-ln_p, 1);
         }
     }
     EvalResult {
         accuracy: correct as f64 / labels.len() as f64,
-        loss: loss / labels.len() as f64,
+        loss: loss.mean(),
         n: labels.len(),
     }
 }
@@ -156,6 +168,26 @@ mod tests {
         assert_eq!(off_diag, 0);
         let diag: usize = (0..3).map(|i| m[i][i]).sum();
         assert_eq!(diag, 3);
+    }
+
+    #[test]
+    fn eval_loss_is_the_row_order_sample_weighted_chain() {
+        // Pins the EpochLoss refactor: the reported loss must equal the
+        // row-ascending −ln p chain divided by the sample count once.
+        let b = FloatBackend::default();
+        let mut rng = SplitMix64::new(9);
+        let model = Mlp::init(&b, &[3, 5, 2], InitScheme::HeNormal, &mut rng);
+        let data: Vec<f32> = (0..15).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let x = Tensor::from_vec(5, 3, data);
+        let labels = vec![0, 1, 0, 1, 1];
+        let r = evaluate(&b, &model, &x, &labels);
+        let logits = model.logits(&b, &x);
+        let mut scratch = vec![0f32; 2];
+        let mut want = 0.0f64;
+        for i in 0..5 {
+            want -= b.softmax_ce_grad(logits.row(i), labels[i], &mut scratch);
+        }
+        assert_eq!(r.loss, want / 5.0);
     }
 
     #[test]

@@ -16,11 +16,21 @@
 //! per-sample gradients in the fixed reduction order of
 //! [`shard::accumulate_tree`], so the trained weights are bit-identical
 //! for every worker count (see `tests/shard_determinism.rs`).
+//!
+//! The same reduction contract crosses process boundaries: [`multiproc`]
+//! runs the per-sample gradient work in separate worker processes,
+//! moving partials as versioned [`wire`] frames and merging them in the
+//! identical slot order — multi-process training is bit-identical to the
+//! in-process trainers too (`tests/multiproc_determinism.rs`). The full
+//! contract is written up in `docs/NUMERICS.md`.
 
 pub mod metrics;
+pub mod multiproc;
 pub mod shard;
+pub mod wire;
 
 pub use metrics::{evaluate, evaluate_with, EvalResult};
+pub use multiproc::{JobEnv, PeerIo, Transport};
 pub use shard::ShardConfig;
 
 use crate::data::Dataset;

@@ -57,6 +57,15 @@ pub const MAX_SHARDS: usize = 64;
 
 /// Data-parallel execution settings for one training run.
 ///
+/// ```
+/// use lnsdnn::train::ShardConfig;
+/// let cfg = ShardConfig::with_shards(4);
+/// assert!(cfg.is_sharded());
+/// // The fallible twin is the single source of truth for the bounds.
+/// assert!(ShardConfig::try_with_shards(0).is_err());
+/// assert!(!ShardConfig::default().is_sharded());
+/// ```
+///
 /// `n_shards` is a worker-count **cap**, not a boost: a sharded run
 /// confines its step and evaluation work to a dedicated pool of exactly
 /// that many threads (nested tensor ops included, via rayon pool
@@ -132,6 +141,50 @@ impl ShardConfig {
 /// One sample's row as a `[1, cols]` tensor (the unit of shard work).
 pub fn sample_row<E: Copy>(x: &Tensor<E>, i: usize) -> Tensor<E> {
     Tensor::from_vec(1, x.cols, x.row(i).to_vec())
+}
+
+/// The contiguous slot range worker `rank` owns in a batch of `batch`
+/// samples split across `workers` workers: the first `batch % workers`
+/// workers get one extra slot. The partition is a pure function of
+/// `(batch, workers, rank)`, so every process in a multi-process run
+/// (see [`crate::train::multiproc`]) derives the identical assignment
+/// without negotiation. Ranges may be empty when `batch < workers`.
+pub fn worker_range(batch: usize, workers: usize, rank: usize) -> std::ops::Range<usize> {
+    assert!(workers > 0, "worker_range needs at least one worker");
+    assert!(rank < workers, "rank {rank} out of range for {workers} workers");
+    let base = batch / workers;
+    let extra = batch % workers;
+    let lo = rank * base + rank.min(extra);
+    let hi = lo + base + usize::from(rank < extra);
+    lo..hi
+}
+
+/// [`accumulate_tree`] over a slot table that may have holes: the merge
+/// the multi-process coordinator runs after collecting gradient frames.
+///
+/// A `None` slot means a worker dropped (or never sent) that sample's
+/// partial. That is a **hard error**, never a silent skip: removing a
+/// term would regroup the non-associative ⊞ chain and quietly change
+/// the trained weights, which is exactly what the fixed-topology
+/// contract forbids. Slots are merged in index order, so late or
+/// out-of-order *arrival* is harmless as long as every slot is filled.
+pub fn accumulate_slots<B: Backend, G: GradStore<B>>(
+    backend: &B,
+    slots: Vec<Option<G>>,
+) -> Result<G, String> {
+    let missing: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| s.is_none().then_some(i))
+        .collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "gradient reduction is missing sample slots {missing:?}: a worker dropped \
+             mid-run; refusing to regroup the fixed ⊞ chain around the gap"
+        ));
+    }
+    let parts: Vec<G> = slots.into_iter().map(|s| s.unwrap()).collect();
+    accumulate_tree(backend, parts).ok_or_else(|| "empty slot table".to_string())
 }
 
 /// Merge gradient partials in the canonical fixed topology: the
@@ -244,6 +297,69 @@ mod tests {
             assert_eq!(batched.dw[l].data, merged.dw[l].data, "layer {l} dW");
             assert_eq!(batched.db[l], merged.db[l], "layer {l} db");
         }
+    }
+
+    #[test]
+    fn worker_range_partitions_exactly() {
+        for batch in [0usize, 1, 2, 5, 7, 16, 33] {
+            for workers in [1usize, 2, 3, 5, 8] {
+                let mut covered = Vec::new();
+                for rank in 0..workers {
+                    let r = worker_range(batch, workers, rank);
+                    // Contiguous with the previous worker's range.
+                    assert_eq!(r.start, covered.len(), "batch {batch} workers {workers}");
+                    covered.extend(r);
+                }
+                assert_eq!(covered, (0..batch).collect::<Vec<_>>());
+                // Balanced: sizes differ by at most one.
+                let sizes: Vec<usize> =
+                    (0..workers).map(|r| worker_range(batch, workers, r).len()).collect();
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "{sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn worker_range_rejects_bad_rank() {
+        let _ = worker_range(4, 2, 2);
+    }
+
+    #[test]
+    fn accumulate_slots_matches_tree_when_full() {
+        let (b, mlp, x, labels) = fixture();
+        let parts: Vec<Gradients<f32>> = (0..x.rows)
+            .map(|i| mlp.backprop_sums(&b, &sample_row(&x, i), &labels[i..i + 1]).0)
+            .collect();
+        let want = accumulate_tree(&b, parts.clone()).unwrap();
+        // Fill the slot table in permuted ("late shard") order: arrival
+        // order must not matter, only the slot index.
+        let mut slots: Vec<Option<Gradients<f32>>> = (0..parts.len()).map(|_| None).collect();
+        for i in [3usize, 0, 5, 1, 4, 2] {
+            slots[i] = Some(parts[i].clone());
+        }
+        let got = accumulate_slots(&b, slots).unwrap();
+        for l in 0..want.dw.len() {
+            assert_eq!(want.dw[l].data, got.dw[l].data, "layer {l}");
+            assert_eq!(want.db[l], got.db[l], "layer {l} bias");
+        }
+    }
+
+    #[test]
+    fn accumulate_slots_hard_errors_on_missing_shard() {
+        let (b, mlp, x, labels) = fixture();
+        let mut slots: Vec<Option<Gradients<f32>>> = (0..x.rows)
+            .map(|i| Some(mlp.backprop_sums(&b, &sample_row(&x, i), &labels[i..i + 1]).0))
+            .collect();
+        // Worker holding slots 2 and 4 "dropped mid-run".
+        slots[2] = None;
+        slots[4] = None;
+        let err = accumulate_slots(&b, slots).unwrap_err();
+        assert!(err.contains("[2, 4]"), "{err}");
+        assert!(err.contains("refusing to regroup"), "{err}");
+        let empty: Vec<Option<Gradients<f32>>> = Vec::new();
+        assert!(accumulate_slots(&b, empty).is_err());
     }
 
     #[test]

@@ -1,0 +1,1071 @@
+//! Versioned wire format for multi-process sharded training.
+//!
+//! The multi-process trainer ([`crate::train::multiproc`]) moves
+//! gradients between worker processes and the coordinator as
+//! **length-prefixed frames** over a byte stream (an stdio pipe or a TCP
+//! socket — the format is transport-agnostic). Everything that crosses
+//! the process boundary is a frame; nothing else is ever written to the
+//! stream.
+//!
+//! # Framing rules
+//!
+//! Every frame is a fixed 19-byte header followed by the payload:
+//!
+//! | offset | size | field | meaning |
+//! |--------|------|-------|---------|
+//! | 0 | 4 | magic | `b"LNSW"` — stream sanity check |
+//! | 4 | 2 | version | [`WIRE_VERSION`], little-endian `u16` |
+//! | 6 | 1 | kind | [`FrameKind`] discriminant |
+//! | 7 | 4 | len | payload length, little-endian `u32` |
+//! | 11 | 8 | checksum | FNV-1a 64 of the payload ([`fnv1a64`]) |
+//! | 19 | len | payload | kind-specific body |
+//!
+//! Decoding is strict: a wrong magic, an unknown kind, a version other
+//! than [`WIRE_VERSION`], a payload that fails its checksum, or a
+//! truncated stream are all **hard errors** — a frame is either accepted
+//! bit-exactly or the training run aborts. There is no renegotiation and
+//! no silent skip, because a dropped or altered gradient frame would
+//! change the ⊞ reduction chain and break the bit-exactness contract
+//! (see `docs/NUMERICS.md`).
+//!
+//! All multi-byte integers are little-endian. `f64` fields travel as
+//! their IEEE-754 bit patterns, and backend elements travel as their
+//! exact in-memory words ([`WireElem`]), so every numeric value
+//! round-trips **bit-identically** — serialization is pure data
+//! movement, never arithmetic.
+//!
+//! ```
+//! use lnsdnn::train::wire::{self, FrameKind};
+//! let mut buf = Vec::new();
+//! wire::write_frame(&mut buf, FrameKind::Digest, b"hello").unwrap();
+//! let frame = wire::read_frame(&mut buf.as_slice()).unwrap();
+//! assert_eq!(frame.kind, FrameKind::Digest);
+//! assert_eq!(frame.payload, b"hello");
+//! ```
+
+use crate::data::Dataset;
+use crate::lns::LnsValue;
+use crate::nn::{CnnArch, CnnVariant, InitScheme, PoolKind, RawStepStats};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Stream sanity marker at the start of every frame.
+pub const WIRE_MAGIC: [u8; 4] = *b"LNSW";
+
+/// Wire protocol version. Bump on ANY layout change — peers reject every
+/// other version outright (bit-exactness makes "best-effort" decoding of
+/// a near-miss layout worse than failing).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on a single payload (guards against allocating from a
+/// corrupt or hostile length field).
+pub const MAX_FRAME_LEN: u32 = 1 << 30;
+
+/// The slot marker for a coordinator→worker merged-sums broadcast
+/// (per-sample frames use their global in-batch sample index).
+pub const MERGED_SLOT: u32 = u32::MAX;
+
+/// What a frame carries.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Coordinator → worker: the full job description ([`JobSpec`] +
+    /// dataset) — always the first frame on a connection.
+    Job = 1,
+    /// Worker → coordinator: one sample's unscaled gradient sums
+    /// ([`GradFrame`] with the sample's in-batch slot index).
+    GradSums = 2,
+    /// Coordinator → worker: the merged unscaled batch sums
+    /// ([`GradFrame`] with slot [`MERGED_SLOT`]).
+    Merged = 3,
+    /// Worker → coordinator: final parameter digest ([`DigestMsg`]) for
+    /// end-of-run replica verification.
+    Digest = 4,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Result<FrameKind> {
+        Ok(match v {
+            1 => FrameKind::Job,
+            2 => FrameKind::GradSums,
+            3 => FrameKind::Merged,
+            4 => FrameKind::Digest,
+            other => bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    /// What the payload is.
+    pub kind: FrameKind,
+    /// Kind-specific body bytes (checksum already verified).
+    pub payload: Vec<u8>,
+}
+
+/// Streaming FNV-1a 64 — the frame checksum and the parameter-digest
+/// hash. Not cryptographic; it detects corruption and replica
+/// divergence, not adversaries. The streaming form lets
+/// [`write_job_frame`] checksum a multi-megabyte dataset without
+/// materializing the payload.
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// Fresh hasher at the FNV-1a offset basis.
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold more bytes in.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// One-shot [`Fnv64`].
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+fn frame_header(version: u16, kind: FrameKind, len: usize, checksum: u64) -> [u8; 19] {
+    let mut header = [0u8; 19];
+    header[0..4].copy_from_slice(&WIRE_MAGIC);
+    header[4..6].copy_from_slice(&version.to_le_bytes());
+    header[6] = kind as u8;
+    header[7..11].copy_from_slice(&(len as u32).to_le_bytes());
+    header[11..19].copy_from_slice(&checksum.to_le_bytes());
+    header
+}
+
+/// Write one frame (header + payload) and flush the stream.
+pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_LEN as usize,
+        "frame payload too large: {} bytes",
+        payload.len()
+    );
+    write_frame_with_version(w, WIRE_VERSION, kind, payload)
+}
+
+/// [`write_frame`] with an explicit version stamp. This is the test seam
+/// for the version-mismatch rejection path; production code always goes
+/// through [`write_frame`].
+pub fn write_frame_with_version<W: Write>(
+    w: &mut W,
+    version: u16,
+    kind: FrameKind,
+    payload: &[u8],
+) -> Result<()> {
+    let header = frame_header(version, kind, payload.len(), fnv1a64(payload));
+    w.write_all(&header).context("writing frame header")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame, verifying magic, version, length bound and checksum.
+/// Every failure (including EOF mid-frame) is a hard error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut header = [0u8; 19];
+    r.read_exact(&mut header).context("reading frame header (peer closed the stream?)")?;
+    ensure!(
+        header[0..4] == WIRE_MAGIC,
+        "bad frame magic {:02x?} (stream is not speaking the lnsdnn wire format)",
+        &header[0..4]
+    );
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    ensure!(
+        version == WIRE_VERSION,
+        "wire version mismatch: peer speaks v{version}, this build speaks v{WIRE_VERSION}"
+    );
+    let kind = FrameKind::from_u8(header[6])?;
+    let len = u32::from_le_bytes([header[7], header[8], header[9], header[10]]);
+    ensure!(len <= MAX_FRAME_LEN, "frame payload length {len} exceeds MAX_FRAME_LEN");
+    let want_sum = u64::from_le_bytes(header[11..19].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading frame payload (truncated frame)")?;
+    let got_sum = fnv1a64(&payload);
+    ensure!(
+        got_sum == want_sum,
+        "frame checksum mismatch (corrupt frame): got {got_sum:#018x}, header says {want_sum:#018x}"
+    );
+    Ok(Frame { kind, payload })
+}
+
+// ---------------------------------------------------------------------
+// Element encoding
+// ---------------------------------------------------------------------
+
+/// A backend element that can cross the wire as its exact word.
+///
+/// The contract is bit-exact round-tripping: `take(put(e)) == e` for
+/// every representable element, including negative zeros, the LNS zero
+/// word, and saturated fixed-point values. Each element type carries a
+/// distinct tag so a coordinator/worker backend mismatch is detected at
+/// decode time instead of silently reinterpreting words.
+pub trait WireElem: Copy {
+    /// Type tag stored in gradient frames (1 = f32, 2 = fixed i32,
+    /// 3 = LNS).
+    const TAG: u8;
+    /// Encoded size in bytes.
+    const SIZE: usize;
+    /// Append the exact wire encoding to `out`.
+    fn put(&self, out: &mut Vec<u8>);
+    /// Decode from exactly [`WireElem::SIZE`] bytes.
+    fn take(bytes: &[u8]) -> Self;
+}
+
+impl WireElem for f32 {
+    const TAG: u8 = 1;
+    const SIZE: usize = 4;
+    fn put(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+    fn take(bytes: &[u8]) -> Self {
+        f32::from_bits(u32::from_le_bytes(bytes[0..4].try_into().unwrap()))
+    }
+}
+
+/// Linear fixed point ([`crate::fixed::FixedValue`] is `i32`).
+impl WireElem for i32 {
+    const TAG: u8 = 2;
+    const SIZE: usize = 4;
+    fn put(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn take(bytes: &[u8]) -> Self {
+        i32::from_le_bytes(bytes[0..4].try_into().unwrap())
+    }
+}
+
+impl WireElem for LnsValue {
+    const TAG: u8 = 3;
+    const SIZE: usize = 5;
+    fn put(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.m.to_le_bytes());
+        out.push(self.s as u8);
+    }
+    fn take(bytes: &[u8]) -> Self {
+        LnsValue::new(i32::from_le_bytes(bytes[0..4].try_into().unwrap()), bytes[4] != 0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload primitives
+// ---------------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u64(out, v.len() as u64);
+    out.extend_from_slice(v);
+}
+
+fn put_str(out: &mut Vec<u8>, v: &str) {
+    put_bytes(out, v.as_bytes());
+}
+
+/// Bounds-checked cursor over a payload.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // Checked: `n` often comes straight from an untrusted length
+        // field, so `pos + n` must not be allowed to wrap.
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            bail!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).context("payload string is not UTF-8")
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "payload has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gradient frames
+// ---------------------------------------------------------------------
+
+/// A decoded gradient-carrying payload: either one sample's unscaled
+/// gradient sums (worker → coordinator, `slot` = the sample's in-batch
+/// index) or the merged batch sums (coordinator → worker,
+/// `slot` = [`MERGED_SLOT`]).
+///
+/// `views` are the flat per-layer gradient views in the canonical
+/// [`crate::nn::GradStore`] order (each layer's weight buffer, then its
+/// bias buffer, layers ascending) — the same order every reduction in
+/// the tree uses, so the wire never reorders a ⊞ chain.
+#[derive(Clone, Debug)]
+pub struct GradFrame<E> {
+    /// Epoch the step belongs to (1-based, mirrors the trainer).
+    pub epoch: u32,
+    /// Step index within the epoch (0-based).
+    pub step: u32,
+    /// In-batch sample index, or [`MERGED_SLOT`] for a broadcast.
+    pub slot: u32,
+    /// Raw loss/accuracy sums riding along with the gradient sums.
+    pub stats: RawStepStats,
+    /// Flat per-layer gradient views, canonical order.
+    pub views: Vec<Vec<E>>,
+}
+
+impl<E: WireElem> GradFrame<E> {
+    /// Encode a gradient payload directly from borrowed views (avoids
+    /// copying the gradient store just to serialize it).
+    pub fn encode_parts(
+        epoch: u32,
+        step: u32,
+        slot: u32,
+        stats: &RawStepStats,
+        views: &[&[E]],
+    ) -> Vec<u8> {
+        let elems: usize = views.iter().map(|v| v.len()).sum();
+        let mut out = Vec::with_capacity(32 + views.len() * 8 + elems * E::SIZE);
+        put_u8(&mut out, E::TAG);
+        put_u32(&mut out, epoch);
+        put_u32(&mut out, step);
+        put_u32(&mut out, slot);
+        put_f64(&mut out, stats.loss_sum);
+        put_u64(&mut out, stats.correct as u64);
+        put_u64(&mut out, stats.n as u64);
+        put_u32(&mut out, views.len() as u32);
+        for view in views {
+            put_u64(&mut out, view.len() as u64);
+            for e in view.iter() {
+                e.put(&mut out);
+            }
+        }
+        out
+    }
+
+    /// Decode, checking the element tag against the caller's backend.
+    pub fn decode(payload: &[u8]) -> Result<GradFrame<E>> {
+        let mut r = ByteReader::new(payload);
+        let tag = r.u8()?;
+        ensure!(
+            tag == E::TAG,
+            "gradient element tag mismatch: frame carries tag {tag}, this backend expects {} \
+             (coordinator and worker must run the same backend)",
+            E::TAG
+        );
+        let epoch = r.u32()?;
+        let step = r.u32()?;
+        let slot = r.u32()?;
+        let stats = RawStepStats {
+            loss_sum: r.f64()?,
+            correct: r.u64()? as usize,
+            n: r.u64()? as usize,
+        };
+        let n_views = r.u32()? as usize;
+        // Every view costs at least its 8-byte length prefix, so a count
+        // beyond that is a corrupt/hostile header — reject before
+        // allocating anything sized by it.
+        ensure!(
+            n_views <= r.remaining() / 8,
+            "gradient frame claims {n_views} views but only {} payload bytes remain",
+            r.remaining()
+        );
+        let mut views = Vec::with_capacity(n_views);
+        for _ in 0..n_views {
+            let len = r.usize()?;
+            let byte_len = len
+                .checked_mul(E::SIZE)
+                .filter(|&b| b <= r.remaining())
+                .with_context(|| format!("gradient view length {len} exceeds the payload"))?;
+            let bytes = r.take(byte_len)?;
+            let mut view = Vec::with_capacity(len);
+            for i in 0..len {
+                view.push(E::take(&bytes[i * E::SIZE..(i + 1) * E::SIZE]));
+            }
+            views.push(view);
+        }
+        r.done()?;
+        Ok(GradFrame { epoch, step, slot, stats, views })
+    }
+}
+
+/// End-of-run digest: FNV-1a 64 over the worker's final parameter words
+/// (in [`WireElem`] encoding, canonical layer order) plus the parameter
+/// count. The coordinator compares it against its own replica to prove
+/// the mirrored updates never diverged.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct DigestMsg {
+    /// FNV-1a 64 of the encoded parameters.
+    pub digest: u64,
+    /// Scalar parameter count (cheap extra shape check).
+    pub params: u64,
+}
+
+impl DigestMsg {
+    /// Encode to a payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        put_u64(&mut out, self.digest);
+        put_u64(&mut out, self.params);
+        out
+    }
+
+    /// Decode from a payload.
+    pub fn decode(payload: &[u8]) -> Result<DigestMsg> {
+        let mut r = ByteReader::new(payload);
+        let msg = DigestMsg { digest: r.u64()?, params: r.u64()? };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job frames
+// ---------------------------------------------------------------------
+
+/// Which model family a job trains (the architecture travels with it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// MLP with the given layer sizes (input and output included).
+    Mlp {
+        /// Layer sizes, e.g. `[784, 100, 10]`.
+        dims: Vec<usize>,
+    },
+    /// The LeNet-style CNN with its full architecture record.
+    Cnn {
+        /// Architecture (includes the pooled/strided variant).
+        arch: CnnArch,
+    },
+}
+
+/// Everything a worker needs to replicate the coordinator's training run
+/// deterministically: model + hyper-parameters + its own shard identity.
+/// The dataset rides in the same frame (see [`encode_job`]) so workers
+/// need no filesystem access and no generator coupling.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Backend tag ([`crate::tensor::Backend::tag`] format, e.g.
+    /// `log16-lut`); the worker reconstructs the identical backend.
+    pub backend_tag: String,
+    /// Leaky/llReLU slope the backend was built with.
+    pub slope: f64,
+    /// Backend fingerprint ([`crate::train::multiproc::act_probe`]):
+    /// wire encodings of `leaky_relu(encode(-1.0))`, a ⊞ and a ⊟ at
+    /// generic operands, and a small soft-max/CE evaluation — sensitive
+    /// to the slope, the word format, the Δ± mode and LUT shape, and
+    /// the soft-max Δ tables. The tag + slope pair under-determines a
+    /// backend, so the worker recomputes this probe on its
+    /// reconstruction and refuses to run on a mismatch — a silent
+    /// config divergence would train different bits.
+    pub act_probe: Vec<u8>,
+    /// Model family + architecture.
+    pub model: ModelSpec,
+    /// Epochs.
+    pub epochs: usize,
+    /// Mini-batch size.
+    pub batch_size: usize,
+    /// SGD learning rate.
+    pub lr: f64,
+    /// SGD weight decay.
+    pub weight_decay: f64,
+    /// Validation hold-back denominator.
+    pub val_ratio: usize,
+    /// Weight-init scheme.
+    pub init: InitScheme,
+    /// Master seed (init, shuffles, split) — identical on every replica.
+    pub seed: u64,
+    /// This worker's rank in `0..workers`.
+    pub rank: usize,
+    /// Total worker count (fixes the per-batch slot ranges).
+    pub workers: usize,
+    /// Rayon threads the worker should build its global pool with
+    /// (0 = library default).
+    pub worker_threads: usize,
+}
+
+fn put_init(out: &mut Vec<u8>, init: InitScheme) {
+    let code = match init {
+        InitScheme::HeNormal => 0,
+        InitScheme::LogDomain => 1,
+    };
+    put_u8(out, code);
+}
+
+fn read_init(r: &mut ByteReader<'_>) -> Result<InitScheme> {
+    Ok(match r.u8()? {
+        0 => InitScheme::HeNormal,
+        1 => InitScheme::LogDomain,
+        other => bail!("unknown init scheme {other}"),
+    })
+}
+
+fn put_model(out: &mut Vec<u8>, model: &ModelSpec) {
+    match model {
+        ModelSpec::Mlp { dims } => {
+            put_u8(out, 0);
+            put_u32(out, dims.len() as u32);
+            for &d in dims {
+                put_u64(out, d as u64);
+            }
+        }
+        ModelSpec::Cnn { arch } => {
+            put_u8(out, 1);
+            let geometry = [
+                arch.in_c,
+                arch.in_h,
+                arch.in_w,
+                arch.c1,
+                arch.c2,
+                arch.k,
+                arch.pad,
+                arch.pool,
+                arch.hidden,
+                arch.classes,
+            ];
+            for v in geometry {
+                put_u64(out, v as u64);
+            }
+            let pool_code = match arch.pool_kind {
+                PoolKind::Max => 0,
+                PoolKind::Avg => 1,
+            };
+            put_u8(out, pool_code);
+            let variant_code = match arch.variant {
+                CnnVariant::Pooled => 0,
+                CnnVariant::StridedV1 => 1,
+            };
+            put_u8(out, variant_code);
+        }
+    }
+}
+
+fn read_model(r: &mut ByteReader<'_>) -> Result<ModelSpec> {
+    Ok(match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            ensure!(
+                n <= r.remaining() / 8,
+                "MLP spec claims {n} dims but only {} payload bytes remain",
+                r.remaining()
+            );
+            let mut dims = Vec::with_capacity(n);
+            for _ in 0..n {
+                dims.push(r.usize()?);
+            }
+            ModelSpec::Mlp { dims }
+        }
+        1 => {
+            let in_c = r.usize()?;
+            let in_h = r.usize()?;
+            let in_w = r.usize()?;
+            let c1 = r.usize()?;
+            let c2 = r.usize()?;
+            let k = r.usize()?;
+            let pad = r.usize()?;
+            let pool = r.usize()?;
+            let hidden = r.usize()?;
+            let classes = r.usize()?;
+            let pool_kind = match r.u8()? {
+                0 => PoolKind::Max,
+                1 => PoolKind::Avg,
+                other => bail!("unknown pool kind {other}"),
+            };
+            let variant = match r.u8()? {
+                0 => CnnVariant::Pooled,
+                1 => CnnVariant::StridedV1,
+                other => bail!("unknown CNN variant {other}"),
+            };
+            ModelSpec::Cnn {
+                arch: CnnArch {
+                    in_c,
+                    in_h,
+                    in_w,
+                    c1,
+                    c2,
+                    k,
+                    pad,
+                    pool,
+                    pool_kind,
+                    hidden,
+                    classes,
+                    variant,
+                },
+            }
+        }
+        other => bail!("unknown model kind {other}"),
+    })
+}
+
+/// Everything in a job payload *before* the four dataset byte arrays
+/// (which [`write_job_frame`] streams rather than materializing).
+fn encode_job_head(job: &JobSpec, ds: &Dataset) -> Vec<u8> {
+    let mut out = Vec::with_capacity(256);
+    put_str(&mut out, &job.backend_tag);
+    put_f64(&mut out, job.slope);
+    put_bytes(&mut out, &job.act_probe);
+    put_model(&mut out, &job.model);
+    put_u64(&mut out, job.epochs as u64);
+    put_u64(&mut out, job.batch_size as u64);
+    put_f64(&mut out, job.lr);
+    put_f64(&mut out, job.weight_decay);
+    put_u64(&mut out, job.val_ratio as u64);
+    put_init(&mut out, job.init);
+    put_u64(&mut out, job.seed);
+    put_u32(&mut out, job.rank as u32);
+    put_u32(&mut out, job.workers as u32);
+    put_u32(&mut out, job.worker_threads as u32);
+    put_str(&mut out, &ds.name);
+    put_u64(&mut out, ds.classes as u64);
+    put_u64(&mut out, ds.pixels as u64);
+    out
+}
+
+/// Encode a [`JobSpec`] plus the full dataset into a [`FrameKind::Job`]
+/// payload. The dataset travels verbatim (8-bit images + labels), so a
+/// worker reproduces the coordinator's encode/split/shuffle stream
+/// exactly without regenerating or re-reading anything.
+///
+/// This materializes the whole payload (dataset copy included); the
+/// coordinator's send path uses [`write_job_frame`], which produces the
+/// identical bytes while streaming the dataset straight from `ds`.
+pub fn encode_job(job: &JobSpec, ds: &Dataset) -> Vec<u8> {
+    let img_bytes = ds.train_images.len() + ds.test_images.len();
+    let lbl_bytes = ds.train_labels.len() + ds.test_labels.len();
+    let mut out = encode_job_head(job, ds);
+    out.reserve(img_bytes + lbl_bytes + 32);
+    put_bytes(&mut out, &ds.train_images);
+    put_bytes(&mut out, &ds.train_labels);
+    put_bytes(&mut out, &ds.test_images);
+    put_bytes(&mut out, &ds.test_labels);
+    out
+}
+
+/// Write a complete [`FrameKind::Job`] frame, streaming the dataset
+/// arrays directly from `ds` instead of copying them into a payload
+/// buffer first (a full-scale dataset is tens of megabytes, and the
+/// coordinator sends one job frame per worker). Byte-for-byte identical
+/// to `write_frame(w, FrameKind::Job, &encode_job(job, ds))`.
+pub fn write_job_frame<W: Write>(w: &mut W, job: &JobSpec, ds: &Dataset) -> Result<()> {
+    let head = encode_job_head(job, ds);
+    let arrays: [&[u8]; 4] =
+        [&ds.train_images, &ds.train_labels, &ds.test_images, &ds.test_labels];
+    let mut len = head.len();
+    let mut crc = Fnv64::new();
+    crc.update(&head);
+    let mut prefixes = [[0u8; 8]; 4];
+    for (prefix, arr) in prefixes.iter_mut().zip(arrays) {
+        *prefix = (arr.len() as u64).to_le_bytes();
+        crc.update(prefix);
+        crc.update(arr);
+        len += 8 + arr.len();
+    }
+    ensure!(len <= MAX_FRAME_LEN as usize, "job frame too large: {len} bytes");
+    let header = frame_header(WIRE_VERSION, FrameKind::Job, len, crc.finish());
+    w.write_all(&header).context("writing job frame header")?;
+    w.write_all(&head).context("writing job frame head")?;
+    for (prefix, arr) in prefixes.iter().zip(arrays) {
+        w.write_all(prefix).context("writing job array prefix")?;
+        w.write_all(arr).context("writing job array")?;
+    }
+    w.flush().context("flushing job frame")?;
+    Ok(())
+}
+
+/// Decode a [`FrameKind::Job`] payload back into the job and dataset.
+pub fn decode_job(payload: &[u8]) -> Result<(JobSpec, Dataset)> {
+    let mut r = ByteReader::new(payload);
+    let backend_tag = r.string()?;
+    let slope = r.f64()?;
+    let act_probe = r.bytes()?;
+    let model = read_model(&mut r)?;
+    let epochs = r.usize()?;
+    let batch_size = r.usize()?;
+    let lr = r.f64()?;
+    let weight_decay = r.f64()?;
+    let val_ratio = r.usize()?;
+    let init = read_init(&mut r)?;
+    let seed = r.u64()?;
+    let rank = r.u32()? as usize;
+    let workers = r.u32()? as usize;
+    let worker_threads = r.u32()? as usize;
+    let name = r.string()?;
+    let classes = r.usize()?;
+    let pixels = r.usize()?;
+    let train_images = r.bytes()?;
+    let train_labels = r.bytes()?;
+    let test_images = r.bytes()?;
+    let test_labels = r.bytes()?;
+    r.done()?;
+    ensure!(batch_size > 0, "job batch_size must be positive");
+    ensure!(val_ratio > 0, "job val_ratio must be positive");
+    ensure!(workers > 0 && rank < workers, "bad worker identity {rank}/{workers}");
+    ensure!(pixels > 0, "job dataset has zero pixels");
+    ensure!(
+        train_images.len() == train_labels.len() * pixels,
+        "job dataset train images/labels are inconsistent"
+    );
+    ensure!(
+        test_images.len() == test_labels.len() * pixels,
+        "job dataset test images/labels are inconsistent"
+    );
+    let ds = Dataset {
+        name,
+        classes,
+        pixels,
+        train_images,
+        train_labels,
+        test_images,
+        test_labels,
+    };
+    let job = JobSpec {
+        backend_tag,
+        slope,
+        act_probe,
+        model,
+        epochs,
+        batch_size,
+        lr,
+        weight_decay,
+        val_ratio,
+        init,
+        seed,
+        rank,
+        workers,
+        worker_threads,
+    };
+    Ok((job, ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dataset() -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            classes: 2,
+            pixels: 4,
+            train_images: (0..24).map(|i| (i * 9) as u8).collect(),
+            train_labels: vec![0, 1, 0, 1, 0, 1],
+            test_images: vec![7; 8],
+            test_labels: vec![1, 0],
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::GradSums, b"payload bytes").unwrap();
+        write_frame(&mut buf, FrameKind::Digest, b"").unwrap();
+        let mut r = buf.as_slice();
+        let a = read_frame(&mut r).unwrap();
+        assert_eq!(a.kind, FrameKind::GradSums);
+        assert_eq!(a.payload, b"payload bytes");
+        let b = read_frame(&mut r).unwrap();
+        assert_eq!(b.kind, FrameKind::Digest);
+        assert!(b.payload.is_empty());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Merged, b"sensitive gradient bits").unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x01;
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"x").unwrap();
+        buf[0] = b'X';
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame_with_version(&mut buf, WIRE_VERSION + 1, FrameKind::Job, b"x").unwrap();
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version mismatch"), "{msg}");
+        assert!(msg.contains(&format!("v{}", WIRE_VERSION + 1)), "{msg}");
+    }
+
+    #[test]
+    fn truncated_stream_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Digest, b"0123456789").unwrap();
+        let cut = &buf[..buf.len() - 3];
+        assert!(read_frame(&mut &cut[..]).is_err());
+        // And inside the header too.
+        assert!(read_frame(&mut &buf[..7]).is_err());
+    }
+
+    #[test]
+    fn elements_roundtrip_bitwise() {
+        for v in [0.0f32, -0.0, 1.5, -3.25e-20, f32::MAX, f32::MIN_POSITIVE] {
+            let mut out = Vec::new();
+            v.put(&mut out);
+            assert_eq!(f32::take(&out).to_bits(), v.to_bits());
+        }
+        for v in [0i32, -1, i32::MAX, i32::MIN, 12345] {
+            let mut out = Vec::new();
+            v.put(&mut out);
+            assert_eq!(i32::take(&out), v);
+        }
+        let lns_vals = [
+            LnsValue::ZERO,
+            LnsValue::ONE,
+            LnsValue::new(-77, false),
+            LnsValue::new(42, true),
+        ];
+        for v in lns_vals {
+            let mut out = Vec::new();
+            v.put(&mut out);
+            assert_eq!(LnsValue::take(&out), v);
+        }
+    }
+
+    #[test]
+    fn grad_frame_roundtrip_lns() {
+        let stats = RawStepStats { loss_sum: 1.25, correct: 3, n: 5 };
+        let v0 = vec![LnsValue::ZERO, LnsValue::new(-3, false)];
+        let v1 = vec![LnsValue::ONE];
+        let views: Vec<&[LnsValue]> = vec![&v0, &v1];
+        let payload = GradFrame::<LnsValue>::encode_parts(2, 7, 4, &stats, &views);
+        let f = GradFrame::<LnsValue>::decode(&payload).unwrap();
+        assert_eq!((f.epoch, f.step, f.slot), (2, 7, 4));
+        assert_eq!(f.stats.loss_sum, 1.25);
+        assert_eq!((f.stats.correct, f.stats.n), (3, 5));
+        assert_eq!(f.views, vec![v0, v1]);
+    }
+
+    #[test]
+    fn hostile_length_fields_error_instead_of_panicking() {
+        // Length fields come off the wire: absurd values must surface as
+        // Err (the hard-error decode policy), never a panic or an
+        // allocation abort. The view length u64 sits 8 bytes before the
+        // single view's 4 data bytes; the view count u32 sits before it.
+        let views: Vec<&[f32]> = vec![&[1.0]];
+        let mut payload =
+            GradFrame::<f32>::encode_parts(1, 0, 0, &RawStepStats::default(), &views);
+        let len_off = payload.len() - 4 - 8;
+        payload[len_off..len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(GradFrame::<f32>::decode(&payload).is_err());
+
+        let mut payload =
+            GradFrame::<f32>::encode_parts(1, 0, 0, &RawStepStats::default(), &views);
+        let cnt_off = payload.len() - 4 - 8 - 4;
+        payload[cnt_off..cnt_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(GradFrame::<f32>::decode(&payload).is_err());
+    }
+
+    #[test]
+    fn grad_frame_rejects_wrong_element_tag() {
+        let views: Vec<&[f32]> = vec![&[1.0, 2.0]];
+        let payload = GradFrame::<f32>::encode_parts(1, 0, 0, &RawStepStats::default(), &views);
+        let err = GradFrame::<i32>::decode(&payload).unwrap_err();
+        assert!(err.to_string().contains("element tag mismatch"), "{err}");
+    }
+
+    #[test]
+    fn job_roundtrip_mlp() {
+        let ds = toy_dataset();
+        let job = JobSpec {
+            backend_tag: "log16-lut".into(),
+            slope: 0.01,
+            act_probe: vec![1, 2, 3, 4, 5],
+            model: ModelSpec::Mlp { dims: vec![4, 8, 2] },
+            epochs: 3,
+            batch_size: 5,
+            lr: 0.02,
+            weight_decay: 1e-4,
+            val_ratio: 5,
+            init: InitScheme::HeNormal,
+            seed: 0x5EED,
+            rank: 1,
+            workers: 2,
+            worker_threads: 1,
+        };
+        let payload = encode_job(&job, &ds);
+        let (j2, d2) = decode_job(&payload).unwrap();
+        assert_eq!(j2.backend_tag, "log16-lut");
+        assert_eq!(j2.act_probe, vec![1, 2, 3, 4, 5]);
+        assert_eq!(j2.model, job.model);
+        assert_eq!((j2.rank, j2.workers), (1, 2));
+        assert_eq!(j2.seed, job.seed);
+        assert_eq!(d2.name, ds.name);
+        assert_eq!(d2.train_images, ds.train_images);
+        assert_eq!(d2.test_labels, ds.test_labels);
+    }
+
+    #[test]
+    fn job_roundtrip_cnn_and_consistency_checks() {
+        let ds = toy_dataset();
+        let arch = CnnArch::lenet(12, 2);
+        let job = JobSpec {
+            backend_tag: "float32".into(),
+            slope: 0.01,
+            act_probe: Vec::new(),
+            model: ModelSpec::Cnn { arch: arch.clone() },
+            epochs: 1,
+            batch_size: 2,
+            lr: 0.01,
+            weight_decay: 0.0,
+            val_ratio: 5,
+            init: InitScheme::LogDomain,
+            seed: 9,
+            rank: 0,
+            workers: 1,
+            worker_threads: 0,
+        };
+        let payload = encode_job(&job, &ds);
+        let (j2, _) = decode_job(&payload).unwrap();
+        assert_eq!(j2.model, ModelSpec::Cnn { arch });
+        assert_eq!(j2.init, InitScheme::LogDomain);
+
+        // Inconsistent image/label sizes must be rejected.
+        let mut bad = toy_dataset();
+        bad.train_images.pop();
+        let payload = encode_job(&job, &bad);
+        assert!(decode_job(&payload).is_err());
+    }
+
+    #[test]
+    fn streaming_job_frame_matches_buffered_encoding() {
+        // write_job_frame must be byte-identical to the buffered path —
+        // same payload, same checksum, decodable by the same reader.
+        let ds = toy_dataset();
+        let job = JobSpec {
+            backend_tag: "lin16".into(),
+            slope: 0.01,
+            act_probe: vec![9, 9],
+            model: ModelSpec::Mlp { dims: vec![4, 3, 2] },
+            epochs: 2,
+            batch_size: 3,
+            lr: 0.01,
+            weight_decay: 1e-4,
+            val_ratio: 5,
+            init: InitScheme::HeNormal,
+            seed: 1,
+            rank: 0,
+            workers: 2,
+            worker_threads: 1,
+        };
+        let mut buffered = Vec::new();
+        write_frame(&mut buffered, FrameKind::Job, &encode_job(&job, &ds)).unwrap();
+        let mut streamed = Vec::new();
+        write_job_frame(&mut streamed, &job, &ds).unwrap();
+        assert_eq!(buffered, streamed);
+        let frame = read_frame(&mut streamed.as_slice()).unwrap();
+        let (j2, d2) = decode_job(&frame.payload).unwrap();
+        assert_eq!(j2.backend_tag, "lin16");
+        assert_eq!(d2.train_images, ds.train_images);
+    }
+
+    #[test]
+    fn streaming_fnv_matches_one_shot() {
+        let mut h = Fnv64::new();
+        h.update(b"hel");
+        h.update(b"");
+        h.update(b"lo frame");
+        assert_eq!(h.finish(), fnv1a64(b"hello frame"));
+    }
+
+    #[test]
+    fn digest_roundtrip() {
+        let d = DigestMsg { digest: 0xDEAD_BEEF_0BAD_F00D, params: 1234 };
+        assert_eq!(DigestMsg::decode(&d.encode()).unwrap(), d);
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Pinned reference values: the checksum is part of the wire
+        // contract, so it must never drift between builds.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

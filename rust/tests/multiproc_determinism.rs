@@ -1,0 +1,247 @@
+//! End-to-end multi-process determinism.
+//!
+//! The acceptance theorem for the multi-process trainer: training across
+//! **real worker processes** (≥ 2, spawned from the `lnsdnn` binary,
+//! over stdio pipes and loopback TCP) produces weights, per-epoch
+//! losses, and test metrics **bit-identical** to the in-process sharded
+//! trainer and to the serial trainer, on all four backends. Plus the
+//! wire-format hard-failure guarantees: version mismatch, corruption,
+//! and dead workers are errors, never silent regroupings.
+
+use lnsdnn::coordinator::server::{train_cnn_multiproc, train_multiproc, MultiprocSpec};
+use lnsdnn::data::{stripes_dataset, synth_dataset, Dataset, StripeSpec, SynthSpec};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{LnsConfig, LnsSystem};
+use lnsdnn::nn::{Cnn, InitScheme, Mlp, SgdConfig};
+use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend};
+use lnsdnn::train::wire::{self, FrameKind, WireElem};
+use lnsdnn::train::{
+    train, train_cnn, CnnTrainConfig, ShardConfig, TrainConfig, TrainResult, Transport,
+};
+use std::path::PathBuf;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_lnsdnn"))
+}
+
+fn mp_spec(workers: usize, transport: Transport) -> MultiprocSpec {
+    let mut spec = MultiprocSpec::new(workers);
+    spec.worker_exe = Some(worker_exe());
+    spec.transport = transport;
+    spec.worker_threads = 1;
+    spec
+}
+
+fn tiny_ds() -> Dataset {
+    synth_dataset(&SynthSpec {
+        name: "tiny".into(),
+        classes: 3,
+        train_per_class: 14,
+        test_per_class: 5,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.04,
+        seed: 42,
+    })
+}
+
+fn tiny_cfg() -> TrainConfig {
+    TrainConfig {
+        // n = 42 → 34 train after the 1:5 hold-back → batch 5 leaves a
+        // 4-sample partial final batch, so the partial-batch paths are
+        // exercised too.
+        dims: vec![784, 8, 3],
+        epochs: 2,
+        batch_size: 5,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 3,
+        shard: ShardConfig::default(),
+    }
+}
+
+fn assert_mlp_runs_equal<E: PartialEq + std::fmt::Debug>(
+    label: &str,
+    a: &TrainResult<Mlp<E>>,
+    b: &TrainResult<Mlp<E>>,
+) {
+    assert_eq!(a.model.layers.len(), b.model.layers.len(), "{label}: layer count");
+    for l in 0..a.model.layers.len() {
+        assert_eq!(a.model.layers[l].w.data, b.model.layers[l].w.data, "{label}: layer {l} w");
+        assert_eq!(a.model.layers[l].b, b.model.layers[l].b, "{label}: layer {l} b");
+    }
+    assert_eq!(a.test.accuracy, b.test.accuracy, "{label}: test accuracy");
+    assert_eq!(a.test.loss, b.test.loss, "{label}: test loss");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (x, y) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(x.train_loss, y.train_loss, "{label}: epoch {} train loss", x.epoch);
+        assert_eq!(x.val_accuracy, y.val_accuracy, "{label}: epoch {} val acc", x.epoch);
+    }
+}
+
+/// Serial ≡ in-process shards=2 ≡ two worker processes, for one backend.
+fn check_mlp_backend<B, F>(label: &str, mk: F)
+where
+    B: Backend,
+    B::E: WireElem,
+    F: Fn() -> B,
+{
+    let ds = tiny_ds();
+    let cfg = tiny_cfg();
+    let serial = train(&mk(), &ds, &cfg);
+    let mut sharded_cfg = cfg.clone();
+    sharded_cfg.shard = ShardConfig::with_shards(2);
+    let sharded = train(&mk(), &ds, &sharded_cfg);
+    let spec = mp_spec(2, Transport::Stdio);
+    let mp = train_multiproc(&mk(), &ds, &cfg, &spec)
+        .unwrap_or_else(|e| panic!("{label}: multi-process run failed: {e:#}"));
+    assert_mlp_runs_equal(&format!("{label} serial vs multiproc"), &serial, &mp);
+    assert_mlp_runs_equal(&format!("{label} sharded vs multiproc"), &sharded, &mp);
+}
+
+#[test]
+fn mlp_multiproc_bit_identical_float() {
+    check_mlp_backend("float32", FloatBackend::default);
+}
+
+#[test]
+fn mlp_multiproc_bit_identical_fixed16() {
+    check_mlp_backend("lin16", || {
+        FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01)
+    });
+}
+
+#[test]
+fn mlp_multiproc_bit_identical_lns16_lut() {
+    check_mlp_backend("log16-lut", || {
+        LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01)
+    });
+}
+
+#[test]
+fn mlp_multiproc_bit_identical_lns16_bitshift() {
+    check_mlp_backend("log16-bs", || {
+        LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01)
+    });
+}
+
+#[test]
+fn worker_count_and_transport_do_not_change_bits() {
+    let ds = tiny_ds();
+    let cfg = tiny_cfg();
+    let serial = train(&FloatBackend::default(), &ds, &cfg);
+    let three = train_multiproc(&FloatBackend::default(), &ds, &cfg, &mp_spec(3, Transport::Stdio))
+        .expect("3-worker stdio run failed");
+    assert_mlp_runs_equal("serial vs 3 workers", &serial, &three);
+    let tcp = train_multiproc(&FloatBackend::default(), &ds, &cfg, &mp_spec(2, Transport::Tcp))
+        .expect("2-worker tcp run failed");
+    assert_mlp_runs_equal("serial vs tcp", &serial, &tcp);
+}
+
+fn cnn_fixture() -> (Dataset, CnnTrainConfig) {
+    let ds = stripes_dataset(&StripeSpec {
+        train_per_class: 8,
+        test_per_class: 3,
+        ..StripeSpec::cnn_default(1.0, 17)
+    });
+    let mut cfg = CnnTrainConfig::lenet(12, 4);
+    cfg.arch.c1 = 2;
+    cfg.arch.c2 = 3;
+    cfg.arch.hidden = 8;
+    cfg.epochs = 1;
+    cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+    cfg.seed = 19;
+    (ds, cfg)
+}
+
+fn assert_cnn_runs_equal<E: PartialEq + std::fmt::Debug>(
+    label: &str,
+    a: &TrainResult<Cnn<E>>,
+    b: &TrainResult<Cnn<E>>,
+) {
+    assert_eq!(a.model.conv1.w.data, b.model.conv1.w.data, "{label}: conv1 w");
+    assert_eq!(a.model.conv2.w.data, b.model.conv2.w.data, "{label}: conv2 w");
+    assert_eq!(a.model.fc1.w.data, b.model.fc1.w.data, "{label}: fc1 w");
+    assert_eq!(a.model.fc2.w.data, b.model.fc2.w.data, "{label}: fc2 w");
+    assert_eq!(a.model.conv1.b, b.model.conv1.b, "{label}: conv1 b");
+    assert_eq!(a.model.fc2.b, b.model.fc2.b, "{label}: fc2 b");
+    assert_eq!(a.test.accuracy, b.test.accuracy, "{label}: test accuracy");
+    assert_eq!(a.test.loss, b.test.loss, "{label}: test loss");
+}
+
+#[test]
+fn cnn_multiproc_bit_identical_float_and_lns() {
+    let (ds, cfg) = cnn_fixture();
+    let inproc = train_cnn(&FloatBackend::default(), &ds, &cfg);
+    let mp = train_cnn_multiproc(&FloatBackend::default(), &ds, &cfg, &mp_spec(2, Transport::Stdio))
+        .expect("float CNN multi-process run failed");
+    assert_cnn_runs_equal("cnn float", &inproc, &mp);
+
+    let mk = || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let inproc = train_cnn(&mk(), &ds, &cfg);
+    let mp = train_cnn_multiproc(&mk(), &ds, &cfg, &mp_spec(2, Transport::Stdio))
+        .expect("LNS CNN multi-process run failed");
+    assert_cnn_runs_equal("cnn log16-lut", &inproc, &mp);
+}
+
+#[test]
+fn dead_worker_binary_is_a_hard_error() {
+    let ds = tiny_ds();
+    let cfg = tiny_cfg();
+    let mut spec = mp_spec(2, Transport::Stdio);
+    // A "worker" that exits immediately without speaking the protocol.
+    spec.worker_exe = Some(PathBuf::from("/bin/false"));
+    let err = train_multiproc(&FloatBackend::default(), &ds, &cfg, &spec)
+        .expect_err("a dead worker must abort the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker"), "{msg}");
+}
+
+#[test]
+fn worker_process_rejects_version_mismatch() {
+    use std::io::Write;
+    use std::process::{Command, Stdio};
+    // Hand the worker a job frame stamped with a future wire version:
+    // it must refuse and exit non-zero, not guess at the layout.
+    let mut bad = Vec::new();
+    wire::write_frame_with_version(&mut bad, wire::WIRE_VERSION + 1, FrameKind::Job, b"whatever")
+        .unwrap();
+    let mut child = Command::new(worker_exe())
+        .args(["worker", "--transport", "stdio"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning worker");
+    child.stdin.take().unwrap().write_all(&bad).expect("writing bad frame");
+    let status = child.wait().expect("waiting for worker");
+    assert!(!status.success(), "worker must reject a wire version mismatch");
+}
+
+#[test]
+fn frame_roundtrip_and_corruption_rejection() {
+    // Round-trip.
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, FrameKind::Merged, b"gradient payload").unwrap();
+    let frame = wire::read_frame(&mut buf.as_slice()).unwrap();
+    assert_eq!(frame.kind, FrameKind::Merged);
+    assert_eq!(frame.payload, b"gradient payload");
+
+    // A single flipped payload bit is detected.
+    let mut corrupt = buf.clone();
+    let last = corrupt.len() - 1;
+    corrupt[last] ^= 0x40;
+    let err = wire::read_frame(&mut corrupt.as_slice()).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+
+    // A version bump is rejected with both versions named.
+    let mut vbuf = Vec::new();
+    wire::write_frame_with_version(&mut vbuf, wire::WIRE_VERSION + 7, FrameKind::Digest, b"x")
+        .unwrap();
+    let err = wire::read_frame(&mut vbuf.as_slice()).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("version mismatch"), "{msg}");
+    assert!(msg.contains(&format!("v{}", wire::WIRE_VERSION)), "{msg}");
+}
