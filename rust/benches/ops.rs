@@ -7,14 +7,135 @@
 //! headline — serial vs rayon row-parallel vs cache-tiled matmul
 //! throughput per backend (MAC/s and rows/s), so the parallel engine's
 //! and the tiled kernels' speedups are measured, not asserted.
+//!
+//! The bench opens with the **pinned record suite**: fixed shapes and
+//! seeds, one [`BenchRecord`] per (backend, kernel, shape), including the
+//! lane-vs-scalar `mac_panel` pair that quantifies the branchless lane
+//! kernels. CI runs it in quick mode and persists the records as the
+//! repo's `BENCH_*.json` trajectory. Environment knobs:
+//!
+//! * `BENCH_QUICK=1` — record suite only, skip the exploratory sections,
+//! * `BENCH_BUDGET_MS` — per-case budget (default 60 quick / 300 full),
+//! * `BENCH_JSON_OUT`  — write the records to this path,
+//! * `BENCH_COMMIT`    — commit field (falls back to `GITHUB_SHA`, then
+//!   `"uncommitted"`),
+//! * `BENCH_BASELINE`  — compare against this `BENCH_*.json` and emit
+//!   `::warning ::` lines on >10 % drops (always exits 0 — throughput on
+//!   shared CI runners is advisory, not a gate).
 
-use lnsdnn::bench_util::{bench, black_box};
+use lnsdnn::bench_util::{
+    bench, bench_n, black_box, records_from_json, records_to_json, regressions, utc_date_string,
+    BenchRecord,
+};
 use lnsdnn::fixed::{FixedConfig, FixedSystem};
-use lnsdnn::lns::{DeltaMode, LnsConfig, LnsSystem, LnsValue};
+use lnsdnn::lns::{lanes, DeltaMode, LnsConfig, LnsSystem, LnsValue};
 use lnsdnn::rng::SplitMix64;
 use lnsdnn::tensor::{ops, Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
 
 const N: usize = 4096;
+
+/// Accumulates the pinned suite's trajectory records with a shared
+/// commit/date stamp.
+struct Recorder {
+    commit: String,
+    date: String,
+    records: Vec<BenchRecord>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        let commit = std::env::var("BENCH_COMMIT")
+            .or_else(|_| std::env::var("GITHUB_SHA"))
+            .unwrap_or_else(|_| "uncommitted".into());
+        Recorder { commit, date: utc_date_string(), records: Vec::new() }
+    }
+
+    fn add(&mut self, backend: &str, kernel: &str, (m, k, n): (usize, usize, usize), tput: f64) {
+        self.records.push(BenchRecord {
+            commit: self.commit.clone(),
+            date: self.date.clone(),
+            backend: backend.into(),
+            kernel: kernel.into(),
+            shape: format!("{m}x{k}x{n}"),
+            mac_per_s: tput,
+        });
+    }
+}
+
+/// Time one case with a single warm-up, print the report line, return
+/// MAC/s.
+fn timed<F: FnMut()>(label: &str, budget_ms: u64, macs: f64, f: F) -> f64 {
+    let s = bench_n(label, 1, budget_ms, Some(macs), f);
+    println!("{}", s.report());
+    s.throughput().unwrap_or(0.0)
+}
+
+/// Record `matmul_tiled` throughput for one backend at one shape.
+fn record_tiled<B: Backend>(
+    rec: &mut Recorder,
+    b: &B,
+    (m, k, n): (usize, usize, usize),
+    seed: u64,
+    budget_ms: u64,
+) {
+    let (a, w) = encoded_mats(b, m, k, n, seed);
+    let tag = b.tag();
+    let label = format!("record/{tag}/matmul_tiled/{m}x{k}x{n}");
+    let tput = timed(&label, budget_ms, (m * k * n) as f64, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    rec.add(&tag, "matmul_tiled", (m, k, n), tput);
+}
+
+/// Record the lane-vs-scalar `mac_panel` pair at 256³ for an LNS backend
+/// by flipping the process-global lane toggle around the same tiled
+/// matmul (both paths are bit-identical, so the toggle only moves time).
+/// Returns the lane/scalar speedup.
+fn record_lane_vs_scalar(rec: &mut Recorder, b: &LnsBackend, seed: u64, budget_ms: u64) -> f64 {
+    let shape = (256usize, 256usize, 256usize);
+    let (m, k, n) = shape;
+    let (a, w) = encoded_mats(b, m, k, n, seed);
+    let macs = (m * k * n) as f64;
+    let tag = b.tag();
+    lanes::set_enabled(true);
+    let lane_label = format!("record/{tag}/mac_panel_lane/{m}x{k}x{n}");
+    let lane = timed(&lane_label, budget_ms, macs, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    lanes::set_enabled(false);
+    let scalar_label = format!("record/{tag}/mac_panel_scalar/{m}x{k}x{n}");
+    let scalar = timed(&scalar_label, budget_ms, macs, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    lanes::set_enabled(true);
+    rec.add(&tag, "mac_panel_lane", shape, lane);
+    rec.add(&tag, "mac_panel_scalar", shape, scalar);
+    let speedup = lane / scalar;
+    println!("    ↳ lane vs scalar mac_panel {speedup:.2}×");
+    speedup
+}
+
+/// The pinned record suite: 256³ on all four backends, the lane-vs-scalar
+/// pairs on both LNS Δ modes, and the MLP / im2col shapes.
+fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
+    let mut rec = Recorder::new();
+    let cube = (256usize, 256usize, 256usize);
+    let lin = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+    record_tiled(&mut rec, &FloatBackend::default(), cube, 21, budget_ms);
+    record_tiled(&mut rec, &lin, cube, 21, budget_ms);
+    let lut = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+    let bs = LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01);
+    record_tiled(&mut rec, &lut, cube, 21, budget_ms);
+    record_tiled(&mut rec, &bs, cube, 21, budget_ms);
+    record_lane_vs_scalar(&mut rec, &lut, 22, budget_ms);
+    record_lane_vs_scalar(&mut rec, &bs, 22, budget_ms);
+    for shape in [(256usize, 784usize, 100usize), (6272, 150, 12)] {
+        record_tiled(&mut rec, &FloatBackend::default(), shape, 23, budget_ms);
+        record_tiled(&mut rec, &lut, shape, 23, budget_ms);
+        record_tiled(&mut rec, &bs, shape, 23, budget_ms);
+    }
+    rec.records
+}
 
 fn lns_operands(sys: &LnsSystem, seed: u64) -> Vec<(LnsValue, LnsValue)> {
     let mut rng = SplitMix64::new(seed);
@@ -29,7 +150,39 @@ fn lns_operands(sys: &LnsSystem, seed: u64) -> Vec<(LnsValue, LnsValue)> {
 }
 
 fn main() {
-    println!("== op-level microbenchmarks (N = {N} per iteration) ==\n");
+    let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| v == "1");
+    let budget_ms = std::env::var("BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 60 } else { 300 });
+    let mode = if quick { ", quick" } else { "" };
+    println!("== pinned record suite ({budget_ms} ms/case{mode}) ==\n");
+    let records = record_suite(budget_ms);
+    if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
+        std::fs::write(&path, records_to_json(&records)).expect("write BENCH_JSON_OUT");
+        println!("\nwrote {} records to {path}", records.len());
+    }
+    if let Ok(path) = std::env::var("BENCH_BASELINE") {
+        match std::fs::read_to_string(&path).ok().and_then(|t| records_from_json(&t)) {
+            Some(old) => {
+                let hits = regressions(&records, &old, 0.10);
+                if hits.is_empty() {
+                    println!("baseline {path}: no kernel regressed > 10%");
+                } else {
+                    // Fail-soft: shared CI runners make throughput advisory.
+                    for h in &hits {
+                        println!("::warning ::bench regression vs {path}: {h}");
+                    }
+                }
+            }
+            None => println!("::warning ::could not read/parse baseline {path}"),
+        }
+    }
+    if quick {
+        return;
+    }
+
+    println!("\n== op-level microbenchmarks (N = {N} per iteration) ==\n");
 
     // MAC chains per number system.
     println!("-- MAC: acc = acc + a*b over {N} pairs --");

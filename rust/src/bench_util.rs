@@ -4,6 +4,11 @@
 //! uniform report line format shared by every `cargo bench` target. Bench
 //! binaries are declared with `harness = false` and call [`bench`] /
 //! [`bench_n`] directly.
+//!
+//! Also home to the `BENCH_*.json` trajectory format ([`BenchRecord`]):
+//! a flat JSON array of throughput records that the CI benchmark lane
+//! appends to on every PR, hand-serialized here because the crate takes
+//! no serde dependency.
 
 use std::time::Instant;
 
@@ -113,6 +118,233 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One measured throughput point in the repo-root `BENCH_*.json`
+/// trajectory. The flat shape is deliberate: every field a plain string
+/// (plus one number) keeps the files diffable and the parser trivial.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Git commit the measurement was taken at (or `"uncommitted"`).
+    pub commit: String,
+    /// UTC date, `YYYY-MM-DD`.
+    pub date: String,
+    /// Backend tag ([`crate::tensor::Backend::tag`]), e.g. `"log16-bs"`.
+    pub backend: String,
+    /// Kernel label, e.g. `"matmul_tiled"` or `"autotune[mc=16,kc=128,nc=64]"`.
+    pub kernel: String,
+    /// Problem shape, e.g. `"256x256x256"`.
+    pub shape: String,
+    /// Measured multiply-accumulates per second (median-based).
+    pub mac_per_s: f64,
+}
+
+/// Serialize records as a pretty-printed JSON array (one record per
+/// object, stable field order) — the on-disk `BENCH_*.json` format.
+pub fn records_to_json(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[");
+    for (i, r) in records.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n  {");
+        out.push_str(&format!("\"commit\": {}, ", json_string(&r.commit)));
+        out.push_str(&format!("\"date\": {}, ", json_string(&r.date)));
+        out.push_str(&format!("\"backend\": {}, ", json_string(&r.backend)));
+        out.push_str(&format!("\"kernel\": {}, ", json_string(&r.kernel)));
+        out.push_str(&format!("\"shape\": {}, ", json_string(&r.shape)));
+        out.push_str(&format!("\"mac_per_s\": {:.1}", r.mac_per_s));
+        out.push('}');
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse a `BENCH_*.json` array back into records. Minimal hand-rolled
+/// parser for the subset [`records_to_json`] emits (flat objects, string
+/// and number values); unknown keys are skipped, records missing a field
+/// get that field's default. Returns `None` on malformed input.
+pub fn records_from_json(text: &str) -> Option<Vec<BenchRecord>> {
+    let mut chars = text.char_indices().peekable();
+    skip_ws(&mut chars);
+    if chars.next()?.1 != '[' {
+        return None;
+    }
+    let mut records = Vec::new();
+    loop {
+        skip_ws(&mut chars);
+        match chars.peek()?.1 {
+            ']' => {
+                chars.next();
+                return Some(records);
+            }
+            ',' => {
+                chars.next();
+            }
+            '{' => {
+                chars.next();
+                let mut r = BenchRecord {
+                    commit: String::new(),
+                    date: String::new(),
+                    backend: String::new(),
+                    kernel: String::new(),
+                    shape: String::new(),
+                    mac_per_s: 0.0,
+                };
+                loop {
+                    skip_ws(&mut chars);
+                    match chars.peek()?.1 {
+                        '}' => {
+                            chars.next();
+                            break;
+                        }
+                        ',' => {
+                            chars.next();
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    let key = parse_json_string(&mut chars)?;
+                    skip_ws(&mut chars);
+                    if chars.next()?.1 != ':' {
+                        return None;
+                    }
+                    skip_ws(&mut chars);
+                    if chars.peek()?.1 == '"' {
+                        let v = parse_json_string(&mut chars)?;
+                        match key.as_str() {
+                            "commit" => r.commit = v,
+                            "date" => r.date = v,
+                            "backend" => r.backend = v,
+                            "kernel" => r.kernel = v,
+                            "shape" => r.shape = v,
+                            _ => {}
+                        }
+                    } else {
+                        let v = parse_json_number(&mut chars)?;
+                        if key == "mac_per_s" {
+                            r.mac_per_s = v;
+                        }
+                    }
+                }
+                records.push(r);
+            }
+            _ => return None,
+        }
+    }
+}
+
+type CharStream<'a> = std::iter::Peekable<std::str::CharIndices<'a>>;
+
+fn skip_ws(chars: &mut CharStream) {
+    while chars.peek().is_some_and(|&(_, c)| c.is_whitespace()) {
+        chars.next();
+    }
+}
+
+fn parse_json_string(chars: &mut CharStream) -> Option<String> {
+    if chars.next()?.1 != '"' {
+        return None;
+    }
+    let mut out = String::new();
+    loop {
+        match chars.next()?.1 {
+            '"' => return Some(out),
+            '\\' => match chars.next()?.1 {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'u' => {
+                    let mut v = 0u32;
+                    for _ in 0..4 {
+                        v = v * 16 + chars.next()?.1.to_digit(16)?;
+                    }
+                    out.push(char::from_u32(v)?);
+                }
+                _ => return None,
+            },
+            c => out.push(c),
+        }
+    }
+}
+
+fn parse_json_number(chars: &mut CharStream) -> Option<f64> {
+    let mut buf = String::new();
+    while chars.peek().is_some_and(|&(_, c)| c.is_ascii_digit() || "+-.eE".contains(c)) {
+        buf.push(chars.next()?.1);
+    }
+    buf.parse().ok()
+}
+
+/// Today's UTC date as `YYYY-MM-DD`, from the system clock (no chrono
+/// dependency; days-to-civil conversion per Howard Hinnant's algorithm).
+pub fn utc_date_string() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days(secs.div_euclid(86_400));
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-1970-01-01 → (year, month, day), proleptic Gregorian.
+fn civil_from_days(days: i64) -> (i64, u32, u32) {
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (y + i64::from(m <= 2), m, d)
+}
+
+/// Compare a fresh run against a baseline: for every `(backend, kernel,
+/// shape)` present in both, report a line when the new throughput fell
+/// more than `tol` (fractional, e.g. `0.10`) below the baseline. Keys
+/// only in one set are ignored — kernels come and go across PRs.
+pub fn regressions(new: &[BenchRecord], old: &[BenchRecord], tol: f64) -> Vec<String> {
+    let mut out = Vec::new();
+    for n in new {
+        let Some(o) = old
+            .iter()
+            .find(|o| o.backend == n.backend && o.kernel == n.kernel && o.shape == n.shape)
+        else {
+            continue;
+        };
+        if o.mac_per_s > 0.0 && n.mac_per_s < o.mac_per_s * (1.0 - tol) {
+            out.push(format!(
+                "{}/{}/{}: {:.3e} MAC/s vs baseline {:.3e} ({:+.1}%)",
+                n.backend,
+                n.kernel,
+                n.shape,
+                n.mac_per_s,
+                o.mac_per_s,
+                (n.mac_per_s / o.mac_per_s - 1.0) * 100.0
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +359,80 @@ mod tests {
         assert!(s.median_ns >= 0.0);
         assert!(s.p95_ns >= s.median_ns);
         assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    fn rec(backend: &str, kernel: &str, shape: &str, mac_per_s: f64) -> BenchRecord {
+        BenchRecord {
+            commit: "abc1234".into(),
+            date: "2026-08-08".into(),
+            backend: backend.into(),
+            kernel: kernel.into(),
+            shape: shape.into(),
+            mac_per_s,
+        }
+    }
+
+    #[test]
+    fn records_json_round_trip() {
+        let records = vec![
+            rec("log16-bs", "mac_panel_lane", "256x256x256", 1.25e9),
+            rec("float32", "autotune[mc=16,kc=128,nc=64]", "256x784x100", 3.5e9),
+        ];
+        let text = records_to_json(&records);
+        assert_eq!(records_from_json(&text).unwrap(), records);
+        assert!(records_from_json("[]").unwrap().is_empty());
+        assert!(records_from_json("[\n]\n").unwrap().is_empty());
+        assert!(records_from_json("not json").is_none());
+        assert!(records_from_json("[{\"commit\": }]").is_none());
+    }
+
+    #[test]
+    fn records_json_tolerates_unknown_keys() {
+        let text = r#"[
+          {"commit": "x", "extra": "ignored", "n_iters": 42,
+           "backend": "lin16", "kernel": "k", "shape": "8x8x8",
+           "mac_per_s": 12.5, "date": "2026-01-01"}
+        ]"#;
+        let got = records_from_json(text).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].backend, "lin16");
+        assert_eq!(got[0].mac_per_s, 12.5);
+        assert_eq!(got[0].date, "2026-01-01");
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        let mut chars = "\"a\\\"b\\\\c\\nd\"".char_indices().peekable();
+        assert_eq!(parse_json_string(&mut chars).unwrap(), "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // leap year start
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29)); // leap day
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+        let today = utc_date_string();
+        assert_eq!(today.len(), 10);
+        assert_eq!(today.as_bytes()[4], b'-');
+    }
+
+    #[test]
+    fn regressions_flags_only_real_drops() {
+        let old = vec![
+            rec("log16-bs", "matmul_tiled", "256x256x256", 1.0e9),
+            rec("float32", "matmul_tiled", "256x256x256", 2.0e9),
+        ];
+        let new = vec![
+            rec("log16-bs", "matmul_tiled", "256x256x256", 0.85e9), // -15%
+            rec("float32", "matmul_tiled", "256x256x256", 1.95e9),  // -2.5%
+            rec("lin16", "brand_new_kernel", "256x256x256", 1.0),   // no baseline
+        ];
+        let hits = regressions(&new, &old, 0.10);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].contains("log16-bs"), "{hits:?}");
+        assert!(regressions(&new, &old, 0.20).is_empty());
     }
 
     #[test]

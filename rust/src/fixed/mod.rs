@@ -119,6 +119,61 @@ impl FixedSystem {
         self.add(acc, self.mul(a, b))
     }
 
+    /// Row-vectorized MAC: `acc[j] = sat(acc[j] + mul(a, w[j]))` for every
+    /// `j` — the fixed-point twin of the LNS lane kernels.
+    ///
+    /// The body is fully branchless: the round-half-away-from-zero rescale
+    /// is computed sign-magnitude style (`|p|` via the xor/sub trick,
+    /// round, negate back), which is bit-identical to [`FixedSystem::mul`]'s
+    /// two-sided branch, and both saturations (post-mul and post-add) are
+    /// plain clamps. With no data-dependent control flow in the loop, LLVM
+    /// autovectorizes it.
+    ///
+    /// **Bit-exactness contract:** identical, element by element, to
+    /// `acc[j] = self.mac(acc[j], a, w[j])` (`tests/lane_exactness.rs`).
+    pub fn mac_row(&self, acc: &mut [FixedValue], a: FixedValue, w: &[FixedValue]) {
+        debug_assert_eq!(acc.len(), w.len());
+        let f = self.cfg.frac_bits;
+        let half = 1i64 << (f - 1);
+        let lo = self.cfg.min_code() as i64;
+        let hi = self.cfg.max_code() as i64;
+        let aw = a as i64;
+        for (acc_j, &wv) in acc.iter_mut().zip(w.iter()) {
+            let p = aw * wv as i64;
+            let sg = p >> 63;
+            let pa = (p ^ sg) - sg; // |p|
+            let rs = (((pa + half) >> f) ^ sg) - sg; // round-half-away
+            let prod = rs.clamp(lo, hi);
+            *acc_j = (*acc_j as i64 + prod).clamp(lo, hi) as i32;
+        }
+    }
+
+    /// Dot continuation `acc + Σ_i mul(a[i], w[i])`, `i` ascending, with
+    /// per-term saturation — branchless body, but **sequentially folded**:
+    /// saturating adds are order-sensitive, so the chain must not be
+    /// regrouped (NUMERICS.md §2).
+    ///
+    /// **Bit-exactness contract:** identical to the zero-skipping fold
+    /// `acc = self.mac(acc, a[i], w[i]) when a[i] != 0` — skipping a zero
+    /// term equals adding its exactly-zero product, so dropping the skip
+    /// branch changes nothing but the control flow.
+    pub fn dot_acc(&self, acc: FixedValue, a: &[FixedValue], w: &[FixedValue]) -> FixedValue {
+        debug_assert_eq!(a.len(), w.len());
+        let f = self.cfg.frac_bits;
+        let half = 1i64 << (f - 1);
+        let lo = self.cfg.min_code() as i64;
+        let hi = self.cfg.max_code() as i64;
+        let mut acc = acc as i64;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            let p = av as i64 * wv as i64;
+            let sg = p >> 63;
+            let pa = (p ^ sg) - sg;
+            let rs = (((pa + half) >> f) ^ sg) - sg;
+            acc = (acc + rs.clamp(lo, hi)).clamp(lo, hi);
+        }
+        acc as i32
+    }
+
     /// Multiplication with **stochastic rounding** of the `>> b_f` rescale:
     /// `floor((a·b + u) / 2^{b_f})` with `u` uniform in `[0, 2^{b_f})`.
     ///
@@ -188,6 +243,40 @@ mod tests {
         let s16 = s16();
         assert!(s12.config().unit() > s16.config().unit());
         assert_eq!(s12.config().max_code(), (1 << 11) - 1);
+    }
+
+    #[test]
+    fn mac_row_bitexact_vs_scalar_mac() {
+        for cfg in [FixedConfig::w16(), FixedConfig::w12()] {
+            let s = FixedSystem::new(cfg);
+            let mc = cfg.max_code();
+            // Deterministic mix of interior, boundary, and zero codes.
+            let codes: Vec<i32> = (0..97i64)
+                .map(|i| ((i * 2654435761) % (2 * mc as i64 + 1)) as i32 - mc)
+                .collect();
+            for &a in &[0, 1, -1, mc, -mc, mc / 3, -(mc / 5)] {
+                let mut fast = codes.clone();
+                let w: Vec<i32> = codes.iter().rev().cloned().collect();
+                s.mac_row(&mut fast, a, &w);
+                let slow: Vec<i32> =
+                    codes.iter().zip(&w).map(|(&o, &wv)| s.mac(o, a, wv)).collect();
+                assert_eq!(fast, slow, "a={a} ({}b)", cfg.total_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_acc_bitexact_vs_scalar_mac_fold() {
+        let s = s16();
+        let mc = s.config().max_code();
+        let a: Vec<i32> = (0..41).map(|i| (i * 37) % mc - mc / 2).collect();
+        let w: Vec<i32> = (0..41).map(|i| (i * 53) % mc - mc / 3).collect();
+        let fast = s.dot_acc(100, &a, &w);
+        let mut slow = 100;
+        for (&av, &wv) in a.iter().zip(&w) {
+            slow = s.mac(slow, av, wv);
+        }
+        assert_eq!(fast, slow);
     }
 
     #[test]

@@ -178,6 +178,18 @@ impl DeltaApprox {
         self.logical_len
     }
 
+    /// Right-shift turning a fixed-point difference into a table index
+    /// (kernel export: the lane kernels in `lns::lanes` re-derive the
+    /// shift→load indexing outside this struct).
+    pub fn index_shift(&self) -> u32 {
+        self.index_shift
+    }
+
+    /// Pre-shift rounding bias paired with [`Self::index_shift`].
+    pub fn index_round(&self) -> i32 {
+        self.index_round
+    }
+
     /// Raw Δ+ table access (kernel export / artifact cross-checks).
     pub fn table_plus(&self) -> &[i32] {
         &self.table_plus

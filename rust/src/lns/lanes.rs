@@ -1,0 +1,481 @@
+//! Branchless lane-vectorized ⊞ kernels (stable Rust, no `std::simd`).
+//!
+//! The scalar ⊞ core ([`super::system`]'s `add_nonzero`) decides between
+//! four outcomes per element — zero-skip, take-the-other-operand, exact
+//! cancellation, and the max+Δ± path — with data-dependent branches. Those
+//! branches are unpredictable on real operand streams, and they stop LLVM
+//! from autovectorizing the MAC inner loops. This module re-expresses the
+//! same integer semantics over fixed-width lanes of `[i32; LANES]`:
+//!
+//! * every condition becomes an all-ones/all-zeros **mask**
+//!   (`-(cond as i32)`), every choice a mask select
+//!   `(a & m) | (b & !m)` — no per-element branching anywhere;
+//! * bit-shift mode evaluates Δ± as a **closed-form shift** per lane
+//!   (exactly the padded table's constructor expression, so the values are
+//!   equal by construction);
+//! * LUT/Exact modes batch the index arithmetic across the lane, then
+//!   gather the Δ± entries with plain loads.
+//!
+//! **Bit-exactness contract (NUMERICS.md §2):** the lane kernels compute,
+//! element by element, the *same bits* as the scalar kernels they replace
+//! — including the `ZERO_M` sentinel's sign field, the cancellation sign
+//! (`LnsValue::ZERO.s == true`), and the clamp behaviour at `±m_max`.
+//! Lanes batch *independent output elements* (`j` across a row); the
+//! k-ascending ⊞ chain of any single element is never regrouped. Slice
+//! tails shorter than [`LANES`] run the scalar twin. Pinned by
+//! `tests/lane_exactness.rs` and the equivalence probes in
+//! `lns::system::tests`.
+//!
+//! Two invariants make the branchless form safe:
+//! * the exact-zero sentinel `ZERO_M = i32::MIN` is mask-substituted with
+//!   `0` *before* any subtraction, so `|X − Y|` cannot wrap;
+//! * the unconditional two-sided clamp equals the scalar's one-sided
+//!   clamps (Δ+ ≥ 0 makes the lower clamp a no-op on the same-sign path;
+//!   Δ− ≤ 0 makes the upper clamp a no-op on the opposite-sign path).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::config::DeltaMode;
+use super::delta::DeltaApprox;
+use super::system::add_nonzero;
+use super::value::{LnsValue, ZERO_M};
+
+/// Lane width. Eight `i32`s = one 256-bit vector register; narrower ISAs
+/// split it into two 128-bit ops, which LLVM handles for free.
+pub const LANES: usize = 8;
+
+/// Process-global lane-kernel switch (default **on**).
+///
+/// Exists for apples-to-apples benchmarking (`benches/ops.rs` times the
+/// lane and scalar paths through the same public entry points) and as an
+/// escape hatch while triaging a miscompile. Because both paths are
+/// bit-identical, flipping it mid-run can never change any result — only
+/// throughput.
+static LANES_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable or disable the lane kernels process-wide.
+pub fn set_enabled(on: bool) {
+    LANES_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the lane kernels are enabled.
+#[inline]
+pub fn enabled() -> bool {
+    LANES_ENABLED.load(Ordering::Relaxed)
+}
+
+/// `-1` (all ones) when `c`, else `0` — the lane-mask idiom.
+#[inline(always)]
+fn mask(c: bool) -> i32 {
+    -(c as i32)
+}
+
+/// `LnsValue` sign as a mask: `-1` ⇔ `s == true`.
+#[inline(always)]
+fn smask(s: bool) -> i32 {
+    -(s as i32)
+}
+
+/// Hoisted per-kernel state: Δ± evaluation plan plus clamp bounds.
+///
+/// Bit-shift mode carries only the shift amount and re-derives the padded
+/// table's constructor expression per lane (branchless, no loads); the
+/// LUT/Exact modes carry the table base pointers and gather.
+struct Ctx<'a> {
+    shift_form: bool,
+    index_shift: u32,
+    index_round: i32,
+    table_plus: &'a [i32],
+    table_minus: &'a [i32],
+    m_min: i32,
+    m_max: i32,
+}
+
+impl<'a> Ctx<'a> {
+    #[inline(always)]
+    fn new(ap: &'a DeltaApprox, m_min: i32, m_max: i32) -> Self {
+        Ctx {
+            shift_form: ap.mode() == DeltaMode::BitShift,
+            index_shift: ap.index_shift(),
+            index_round: ap.index_round(),
+            table_plus: ap.table_plus(),
+            table_minus: ap.table_minus(),
+            m_min,
+            m_max,
+        }
+    }
+
+    /// Δ± for one lane's difference `d ∈ [0, 2·m_max]`, as `(Δ+, Δ−)`.
+    ///
+    /// Shift form: `idx = d >> q_f`, `Δ+ = (1 << q_f) >> idx`,
+    /// `Δ− = −((3 << q_f) >> 1 >> idx)` — literally the bit-shift table
+    /// constructor from `delta.rs` (entries are 0 from index 63 on, which
+    /// the `min(63)` shift clamp reproduces), so equality with the gather
+    /// path is by construction, not by coincidence. Test-only reference;
+    /// the kernels inline both forms in `lane_acc_add`.
+    #[cfg(test)]
+    #[inline(always)]
+    fn delta_pair(&self, d: i32) -> (i32, i32) {
+        if self.shift_form {
+            let idx = ((d >> self.index_shift) as u32).min(63);
+            let dp = ((1i64 << self.index_shift) >> idx) as i32;
+            let dm = -((((3i64 << self.index_shift) >> 1) >> idx) as i32);
+            (dp, dm)
+        } else {
+            let idx = ((d + self.index_round) >> self.index_shift) as usize;
+            (self.table_plus[idx], self.table_minus[idx])
+        }
+    }
+}
+
+/// Branchless lane ⊞-accumulate: `acc ⊞= p` per lane, with `pz` marking
+/// lanes whose `p` operand is the exact zero word (those lanes keep `acc`
+/// bit-for-bit, matching the scalar zero-skip `continue`).
+///
+/// Inputs: `am`/`asm_` are the accumulator magnitude and sign-mask lanes
+/// (updated in place); `pm`/`ps` the other operand's, with `pm` already
+/// in clamped word range for non-zero lanes (zero lanes may carry any
+/// in-range magnitude — they are masked out). Select priority mirrors the
+/// scalar kernels exactly: p-zero → acc unchanged, acc-zero → p, exact
+/// cancellation → the canonical `ZERO` word (`s = true`), else
+/// `clamp(max + Δ±)` with the larger operand's sign.
+#[inline(always)]
+fn lane_acc_add(
+    ctx: &Ctx,
+    am: &mut [i32; LANES],
+    asm_: &mut [i32; LANES],
+    pm: &[i32; LANES],
+    ps: &[i32; LANES],
+    pz: &[i32; LANES],
+) {
+    let mut d = [0i32; LANES];
+    let mut mmax = [0i32; LANES];
+    let mut sz = [0i32; LANES];
+    let mut same = [0i32; LANES];
+    let mut az = [0i32; LANES];
+    for i in 0..LANES {
+        let a = am[i];
+        let azm = mask(a == ZERO_M);
+        // Substitute 0 for the sentinel before subtracting (wrap hazard).
+        let a2 = a & !azm;
+        let p = pm[i];
+        // Strict `>` matches the scalar tie rule: ties take p's sign.
+        let gt = mask(a2 > p);
+        mmax[i] = (a2 & gt) | (p & !gt);
+        let draw = a2 - p;
+        let sg = draw >> 31;
+        d[i] = (draw ^ sg) - sg; // |a2 − p|, branchless abs
+        sz[i] = (asm_[i] & gt) | (ps[i] & !gt);
+        same[i] = !(asm_[i] ^ ps[i]);
+        az[i] = azm;
+    }
+    let mut dp = [0i32; LANES];
+    let mut dm = [0i32; LANES];
+    if ctx.shift_form {
+        // Closed-form shifts: fully branchless, no memory traffic.
+        for i in 0..LANES {
+            let idx = ((d[i] >> ctx.index_shift) as u32).min(63);
+            dp[i] = ((1i64 << ctx.index_shift) >> idx) as i32;
+            dm[i] = -((((3i64 << ctx.index_shift) >> 1) >> idx) as i32);
+        }
+    } else {
+        // Gather: index arithmetic vectorizes; the loads are scalar but
+        // straight-line (no data-dependent control flow).
+        for i in 0..LANES {
+            let idx = ((d[i] + ctx.index_round) >> ctx.index_shift) as usize;
+            dp[i] = ctx.table_plus[idx];
+            dm[i] = ctx.table_minus[idx];
+        }
+    }
+    for i in 0..LANES {
+        let delta = (dp[i] & same[i]) | (dm[i] & !same[i]);
+        let mres = (mmax[i] + delta).clamp(ctx.m_min, ctx.m_max);
+        // Opposite signs at d = 0: exact cancellation → canonical ZERO.
+        let cancel = !same[i] & mask(d[i] == 0);
+        let m_nz = (ZERO_M & cancel) | (mres & !cancel);
+        let s_nz = cancel | (sz[i] & !cancel); // ZERO.s = true
+        // acc-zero lanes take p verbatim.
+        let m_inner = (pm[i] & az[i]) | (m_nz & !az[i]);
+        let s_inner = (ps[i] & az[i]) | (s_nz & !az[i]);
+        // p-zero lanes keep acc verbatim (outermost priority).
+        am[i] = (am[i] & pz[i]) | (m_inner & !pz[i]);
+        asm_[i] = (asm_[i] & pz[i]) | (s_inner & !pz[i]);
+    }
+}
+
+/// Lane body shared by `mac_row` and `mac_panel`: one full-width chunk of
+/// `acc[j] ⊞= (a ⊡ w[j])` for a non-zero scalar multiplier `a`.
+#[inline(always)]
+fn mac_lane_chunk(ctx: &Ctx, a_m: i32, a_s: i32, acc: &mut [LnsValue], w: &[LnsValue]) {
+    let mut am = [0i32; LANES];
+    let mut asm_ = [0i32; LANES];
+    let mut pm = [0i32; LANES];
+    let mut ps = [0i32; LANES];
+    let mut pz = [0i32; LANES];
+    for i in 0..LANES {
+        am[i] = acc[i].m;
+        asm_[i] = smask(acc[i].s);
+        let wv = w[i];
+        let wz = mask(wv.m == ZERO_M);
+        // ⊡ (Eq. 2) on the zero-substituted magnitude: the product lane is
+        // garbage when w is zero, but pz masks it out downstream.
+        let wm2 = wv.m & !wz;
+        pm[i] = (a_m + wm2).clamp(ctx.m_min, ctx.m_max);
+        ps[i] = !(a_s ^ smask(wv.s));
+        pz[i] = wz;
+    }
+    lane_acc_add(ctx, &mut am, &mut asm_, &pm, &ps, &pz);
+    for i in 0..LANES {
+        acc[i] = LnsValue { m: am[i], s: asm_[i] != 0 };
+    }
+}
+
+/// Scalar tail of the MAC kernels — the exact per-element logic of
+/// `LnsSystem::mac_row_scalar`, applied to a remainder shorter than
+/// [`LANES`].
+#[inline(always)]
+fn mac_scalar_tail(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    a_m: i32,
+    a_s: bool,
+    acc: &mut [LnsValue],
+    w: &[LnsValue],
+) {
+    for (acc_j, &wv) in acc.iter_mut().zip(w.iter()) {
+        if wv.is_zero() {
+            continue;
+        }
+        let p = LnsValue { m: (a_m + wv.m).clamp(m_min, m_max), s: !(a_s ^ wv.s) };
+        let x = *acc_j;
+        *acc_j = if x.is_zero() { p } else { add_nonzero(ap, m_min, m_max, x, p) };
+    }
+}
+
+/// Lane `mac_row`: `acc[j] = acc[j] ⊞ (a ⊡ w[j])`. Caller guarantees
+/// `a` non-zero (the dispatcher early-returns otherwise).
+pub(crate) fn mac_row(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    acc: &mut [LnsValue],
+    a: LnsValue,
+    w: &[LnsValue],
+) {
+    debug_assert_eq!(acc.len(), w.len());
+    debug_assert!(!a.is_zero());
+    let ctx = Ctx::new(ap, m_min, m_max);
+    mac_row_with(&ctx, ap, a, acc, w);
+}
+
+/// `mac_row` body over a pre-hoisted [`Ctx`] (shared with `mac_panel`).
+#[inline(always)]
+fn mac_row_with(ctx: &Ctx, ap: &DeltaApprox, a: LnsValue, acc: &mut [LnsValue], w: &[LnsValue]) {
+    let (a_m, a_s) = (a.m, smask(a.s));
+    let mut acc_it = acc.chunks_exact_mut(LANES);
+    let mut w_it = w.chunks_exact(LANES);
+    for (ac, wc) in (&mut acc_it).zip(&mut w_it) {
+        mac_lane_chunk(ctx, a_m, a_s, ac, wc);
+    }
+    mac_scalar_tail(ap, ctx.m_min, ctx.m_max, a.m, a.s, acc_it.into_remainder(), w_it.remainder());
+}
+
+/// Lane `mac_panel`: `acc[j] ⊞= (a[p] ⊡ panel[p·nc + j])`, `p` ascending.
+/// The [`Ctx`] hoists once per panel; each panel row reuses the lane
+/// `mac_row` body. Per-row zero-skip keeps the scalar semantics (`a[p] =
+/// 0` leaves `acc` untouched for the whole row).
+pub(crate) fn mac_panel(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    acc: &mut [LnsValue],
+    a: &[LnsValue],
+    panel: &[LnsValue],
+) {
+    let nc = acc.len();
+    debug_assert_eq!(panel.len(), a.len() * nc);
+    let ctx = Ctx::new(ap, m_min, m_max);
+    for (p, &av) in a.iter().enumerate() {
+        if av.is_zero() {
+            continue;
+        }
+        mac_row_with(&ctx, ap, av, acc, &panel[p * nc..(p + 1) * nc]);
+    }
+}
+
+/// Lane `dot_acc`: zero-skipping continuation `acc ⊞ Σ_i (a[i] ⊡ w[i])`,
+/// `i` ascending.
+///
+/// The ⊞ chain here runs through a **single accumulator**, so lane-folding
+/// it would regroup the chain — forbidden by NUMERICS.md §2. Instead the
+/// order-free part (the ⊡ products: magnitude adds, sign XNORs, zero
+/// detects) is lane-batched, and the fold itself stays a sequential
+/// `add_nonzero` walk in the original order.
+pub(crate) fn dot_acc(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    acc: LnsValue,
+    a: &[LnsValue],
+    w: &[LnsValue],
+) -> LnsValue {
+    debug_assert_eq!(a.len(), w.len());
+    let mut acc = acc;
+    let mut a_it = a.chunks_exact(LANES);
+    let mut w_it = w.chunks_exact(LANES);
+    for (ac, wc) in (&mut a_it).zip(&mut w_it) {
+        let mut pm = [0i32; LANES];
+        let mut ps = [0i32; LANES];
+        let mut pz = [0i32; LANES];
+        for i in 0..LANES {
+            let av = ac[i];
+            let wv = wc[i];
+            let azm = mask(av.m == ZERO_M);
+            let wzm = mask(wv.m == ZERO_M);
+            pm[i] = ((av.m & !azm) + (wv.m & !wzm)).clamp(m_min, m_max);
+            ps[i] = !(smask(av.s) ^ smask(wv.s));
+            pz[i] = azm | wzm;
+        }
+        // Ordered fold over the batched products (i ascending, unchanged).
+        for i in 0..LANES {
+            if pz[i] == 0 {
+                let prod = LnsValue { m: pm[i], s: ps[i] != 0 };
+                acc = if acc.is_zero() {
+                    prod
+                } else {
+                    add_nonzero(ap, m_min, m_max, acc, prod)
+                };
+            }
+        }
+    }
+    for (&av, &wv) in a_it.remainder().iter().zip(w_it.remainder().iter()) {
+        if av.is_zero() || wv.is_zero() {
+            continue;
+        }
+        let prod = LnsValue { m: (av.m + wv.m).clamp(m_min, m_max), s: !(av.s ^ wv.s) };
+        acc = if acc.is_zero() { prod } else { add_nonzero(ap, m_min, m_max, acc, prod) };
+    }
+    acc
+}
+
+/// Lane `add_slice`: `acc[j] = acc[j] ⊞ x[j]`.
+///
+/// The select priority differs from the MAC kernels — the scalar
+/// `add_slice` checks the **accumulator** for zero first and copies `x[j]`
+/// verbatim (whatever its bits), so zero lanes must yield the *original*
+/// `x` word, not the zero-substituted magnitude used for arithmetic.
+pub(crate) fn add_slice(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    acc: &mut [LnsValue],
+    x: &[LnsValue],
+) {
+    debug_assert_eq!(acc.len(), x.len());
+    let ctx = Ctx::new(ap, m_min, m_max);
+    let mut acc_it = acc.chunks_exact_mut(LANES);
+    let mut x_it = x.chunks_exact(LANES);
+    for (ac, xc) in (&mut acc_it).zip(&mut x_it) {
+        let mut am = [0i32; LANES];
+        let mut asm_ = [0i32; LANES];
+        let mut ym = [0i32; LANES];
+        let mut ym2 = [0i32; LANES];
+        let mut ys = [0i32; LANES];
+        let mut yz = [0i32; LANES];
+        for i in 0..LANES {
+            am[i] = ac[i].m;
+            asm_[i] = smask(ac[i].s);
+            let yv = xc[i];
+            let z = mask(yv.m == ZERO_M);
+            ym[i] = yv.m;
+            ym2[i] = yv.m & !z;
+            ys[i] = smask(yv.s);
+            yz[i] = z;
+        }
+        let mut a2 = am;
+        let mut s2 = asm_;
+        // Run the shared core with substituted y-magnitudes; its az branch
+        // (acc zero → take p) returns ym2, which we then patch back to the
+        // original y bits to match the scalar verbatim copy.
+        let pm: [i32; LANES] = ym2;
+        lane_acc_add(&ctx, &mut a2, &mut s2, &pm, &ys, &yz);
+        for i in 0..LANES {
+            let az = mask(am[i] == ZERO_M);
+            // acc-zero lanes: scalar copies y before looking at y's zero
+            // bit, so they win over the core's y-zero keep.
+            let m_out = (ym[i] & az) | (a2[i] & !az);
+            let s_out = (ys[i] & az) | (s2[i] & !az);
+            ac[i] = LnsValue { m: m_out, s: s_out != 0 };
+        }
+    }
+    for (a, &y) in acc_it.into_remainder().iter_mut().zip(x_it.remainder().iter()) {
+        let xv = *a;
+        if xv.is_zero() {
+            *a = y;
+            continue;
+        }
+        if y.is_zero() {
+            continue;
+        }
+        *a = add_nonzero(ap, m_min, m_max, xv, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::config::LnsConfig;
+
+    #[test]
+    fn toggle_roundtrips() {
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+    }
+
+    /// The shift closed form must equal the padded bit-shift table at
+    /// every reachable difference — the equality `lane_acc_add` relies on
+    /// to skip the gather in bit-shift mode.
+    #[test]
+    fn shift_closed_form_matches_bitshift_table() {
+        for cfg in [LnsConfig::w16_bitshift(), LnsConfig::w12_bitshift()] {
+            let ap = DeltaApprox::new(&cfg, DeltaMode::BitShift);
+            let ctx = Ctx::new(&ap, cfg.m_min(), cfg.m_max());
+            assert!(ctx.shift_form);
+            for d in 0..=(2 * cfg.m_max()) {
+                let (dp, dm) = ctx.delta_pair(d);
+                assert_eq!(dp, ap.plus_i32(d), "Δ+ at d={d} ({}b)", cfg.total_bits);
+                if d > 0 {
+                    assert_eq!(dm, ap.minus_i32(d), "Δ− at d={d} ({}b)", cfg.total_bits);
+                }
+            }
+        }
+    }
+
+    /// Gather form must reproduce the accessor indexing bit-for-bit.
+    #[test]
+    fn gather_form_matches_lut_accessors() {
+        let cfg = LnsConfig::w16_lut();
+        let ap = DeltaApprox::new(&cfg, cfg.delta);
+        let ctx = Ctx::new(&ap, cfg.m_min(), cfg.m_max());
+        assert!(!ctx.shift_form);
+        for d in 0..=(2 * cfg.m_max()) {
+            let (dp, dm) = ctx.delta_pair(d);
+            assert_eq!(dp, ap.plus_i32(d), "Δ+ at d={d}");
+            if d > 0 {
+                assert_eq!(dm, ap.minus_i32(d), "Δ− at d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn mask_idiom() {
+        assert_eq!(mask(true), -1);
+        assert_eq!(mask(false), 0);
+        assert_eq!((7 & mask(true)) | (9 & !mask(true)), 7);
+        assert_eq!((7 & mask(false)) | (9 & !mask(false)), 9);
+    }
+}

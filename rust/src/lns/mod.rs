@@ -20,6 +20,7 @@ mod analysis;
 mod config;
 mod cost;
 mod delta;
+pub mod lanes;
 mod linconv;
 mod system;
 mod value;
@@ -28,6 +29,7 @@ pub use analysis::{bound_table, min_log_bits, BitWidthRow};
 pub use cost::{area_ratio, linear_mac_cost, lns_mac_cost, MacCost};
 pub use config::{DeltaMode, LnsConfig, LutSpec};
 pub use delta::{delta_minus_exact, delta_plus_exact, DeltaApprox};
+pub use lanes::LANES;
 pub use linconv::Pow2Table;
 pub use system::LnsSystem;
 pub use value::{LnsValue, ZERO_M};

@@ -13,10 +13,17 @@ use super::value::LnsValue;
 /// stays with the callers, which is what lets the slice kernels skip it
 /// per shape. This is the **single copy** of the max/Δ±/tie logic that
 /// [`LnsSystem::add_with`], [`LnsSystem::mac_row`] and
-/// [`LnsSystem::add_slice`] all share, so the bit-exactness contract
-/// between the scalar and vectorized paths holds by construction.
+/// [`LnsSystem::add_slice`] all share (the lane kernels in `lns::lanes`
+/// use it for sequential folds and remainder tails), so the bit-exactness
+/// contract between the scalar and vectorized paths holds by construction.
 #[inline(always)]
-fn add_nonzero(ap: &DeltaApprox, m_min: i32, m_max: i32, x: LnsValue, y: LnsValue) -> LnsValue {
+pub(crate) fn add_nonzero(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    x: LnsValue,
+    y: LnsValue,
+) -> LnsValue {
     debug_assert!(!x.is_zero() && !y.is_zero());
     // (max, other-sign bookkeeping). Eq. 3c: s_z = s_x if X > Y else s_y.
     let (mmax, d, s_z) = if x.m > y.m { (x.m, x.m - y.m, x.s) } else { (y.m, y.m - x.m, y.s) };
@@ -178,12 +185,10 @@ impl LnsSystem {
 
     /// Row-vectorized MAC: `acc[j] = acc[j] ⊞ (a ⊡ w[j])` for every `j`.
     ///
-    /// The slice-level twin of [`LnsSystem::mac`], written so everything
-    /// loop-invariant is hoisted out of the inner loop: the Δ± approximator
-    /// reference (and through it the LUT base pointers), the word-format
-    /// clamp bounds, and the multiplier's `(m, s)` split. The loop body is
-    /// then integer add → clamp → compare → shift-indexed table load, with
-    /// no per-element re-derivation of any of those.
+    /// Dispatches to the branchless lane kernel ([`crate::lns::lanes`])
+    /// unless the process-global lane switch is off, in which case the
+    /// scalar twin [`LnsSystem::mac_row_scalar`] runs. Both paths are
+    /// bit-identical, so the switch can never change results.
     ///
     /// **Bit-exactness contract:** identical results, element by element,
     /// to `acc[j] = self.mac(acc[j], a, w[j])`. The parallel tensor ops
@@ -191,6 +196,26 @@ impl LnsSystem {
     pub fn mac_row(&self, acc: &mut [LnsValue], a: LnsValue, w: &[LnsValue]) {
         debug_assert_eq!(acc.len(), w.len());
         // a = 0 ⇒ every product is the exact zero word ⇒ acc unchanged.
+        if a.is_zero() {
+            return;
+        }
+        if super::lanes::enabled() {
+            super::lanes::mac_row(&self.delta, self.cfg.m_min(), self.cfg.m_max(), acc, a, w);
+        } else {
+            self.mac_row_scalar(acc, a, w);
+        }
+    }
+
+    /// Scalar `mac_row` (the lane kernels' reference semantics).
+    ///
+    /// Written so everything loop-invariant is hoisted out of the inner
+    /// loop: the Δ± approximator reference (and through it the LUT base
+    /// pointers), the word-format clamp bounds, and the multiplier's
+    /// `(m, s)` split. The loop body is then integer add → clamp → compare
+    /// → shift-indexed table load, with no per-element re-derivation of
+    /// any of those.
+    pub fn mac_row_scalar(&self, acc: &mut [LnsValue], a: LnsValue, w: &[LnsValue]) {
+        debug_assert_eq!(acc.len(), w.len());
         if a.is_zero() {
             return;
         }
@@ -213,18 +238,28 @@ impl LnsSystem {
     /// where `panel` is a packed row-major `a.len() × nc` tile
     /// (`nc = acc.len()`).
     ///
-    /// The tile-level twin of [`LnsSystem::mac_row`], hoisting the Δ±
-    /// approximator reference and the word-format clamp bounds **once per
-    /// panel** rather than once per row: the hot loop is integer add →
-    /// clamp → compare → shift-indexed table load for the entire `kc × nc`
-    /// tile, with the per-`p` work reduced to one zero test and one
-    /// `(m, s)` split.
+    /// The tile-level twin of [`LnsSystem::mac_row`]; like it, dispatches
+    /// to the branchless lane kernel unless lanes are switched off.
     ///
     /// **Bit-exactness contract:** identical results, element by element,
     /// to `for p { self.mac_row(&mut acc, a[p], panel_row_p) }` — i.e. to
     /// the scalar `mac` fold with `p` ascending. The tiled tensor kernels
     /// rely on this (`tests/tiled_exactness.rs`).
     pub fn mac_panel(&self, acc: &mut [LnsValue], a: &[LnsValue], panel: &[LnsValue]) {
+        debug_assert_eq!(panel.len(), a.len() * acc.len());
+        if super::lanes::enabled() {
+            super::lanes::mac_panel(&self.delta, self.cfg.m_min(), self.cfg.m_max(), acc, a, panel);
+        } else {
+            self.mac_panel_scalar(acc, a, panel);
+        }
+    }
+
+    /// Scalar `mac_panel`, hoisting the Δ± approximator reference and the
+    /// word-format clamp bounds **once per panel** rather than once per
+    /// row: the hot loop is integer add → clamp → compare → shift-indexed
+    /// table load for the entire `kc × nc` tile, with the per-`p` work
+    /// reduced to one zero test and one `(m, s)` split.
+    pub fn mac_panel_scalar(&self, acc: &mut [LnsValue], a: &[LnsValue], panel: &[LnsValue]) {
         let nc = acc.len();
         debug_assert_eq!(panel.len(), a.len() * nc);
         let ap = &self.delta;
@@ -254,8 +289,20 @@ impl LnsSystem {
     /// serial dot and the tiled kernel's per-`kc`-block continuation.
     ///
     /// **Bit-exactness contract:** identical to the scalar fold
-    /// `acc = self.mac(acc, a[i], w[i])` over `i` ascending.
+    /// `acc = self.mac(acc, a[i], w[i])` over `i` ascending. The lane
+    /// path batches only the order-free ⊡ products; the ⊞ chain itself
+    /// stays a sequential fold (NUMERICS.md §2 forbids regrouping it).
     pub fn dot_acc(&self, acc: LnsValue, a: &[LnsValue], w: &[LnsValue]) -> LnsValue {
+        debug_assert_eq!(a.len(), w.len());
+        if super::lanes::enabled() {
+            let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+            return super::lanes::dot_acc(&self.delta, m_min, m_max, acc, a, w);
+        }
+        self.dot_acc_scalar(acc, a, w)
+    }
+
+    /// Scalar `dot_acc` (the lane kernel's reference semantics).
+    pub fn dot_acc_scalar(&self, acc: LnsValue, a: &[LnsValue], w: &[LnsValue]) -> LnsValue {
         debug_assert_eq!(a.len(), w.len());
         let ap = &self.delta;
         let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
@@ -273,9 +320,19 @@ impl LnsSystem {
     }
 
     /// Element-wise slice accumulation `acc[j] = acc[j] ⊞ x[j]` with the
-    /// same hoisting (and the same bit-exactness contract vs
+    /// same hoisting, lane dispatch, and bit-exactness contract (vs
     /// [`LnsSystem::add`]) as [`LnsSystem::mac_row`].
     pub fn add_slice(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
+        debug_assert_eq!(acc.len(), x.len());
+        if super::lanes::enabled() {
+            super::lanes::add_slice(&self.delta, self.cfg.m_min(), self.cfg.m_max(), acc, x);
+        } else {
+            self.add_slice_scalar(acc, x);
+        }
+    }
+
+    /// Scalar `add_slice` (the lane kernel's reference semantics).
+    pub fn add_slice_scalar(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
         debug_assert_eq!(acc.len(), x.len());
         let ap = &self.delta;
         let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());

@@ -1,0 +1,334 @@
+//! Per-(backend, shape-class) [`Tiling`] autotuner.
+//!
+//! The cache-tiled matmuls are bit-identical under **any** tile geometry
+//! (NUMERICS.md §2: tiling re-orders which output elements compute when,
+//! never any element's ⊞ chain), so tile selection is a pure performance
+//! decision — which makes it safe to decide at runtime, per machine.
+//!
+//! The tuner sweeps a curated `{mc, kc, nc}` candidate list by timing
+//! [`super::ops::matmul_tiled_with`] on synthetic backend-encoded
+//! operands, and records the winner in a process-global registry keyed by
+//! `(backend tag, shape class)`, where the shape class buckets each of
+//! `(m, k, n)` by ⌈log2⌉ — near-identical shapes share a tuning, and the
+//! sweep cost amortizes across a training run.
+//!
+//! Tuning is **opt-in** ([`set_autotune`] or `LNSDNN_AUTOTUNE=1`): when
+//! off (the default), [`tiling_for`] is a registry lookup falling back to
+//! [`Tiling::DEFAULT`], so library users pay nothing. Sweep results
+//! convert to/from the repo-root `BENCH_*.json` records
+//! ([`crate::bench_util::BenchRecord`]) via [`TuneOutcome::records`] and
+//! [`seed_from_records`], which is how the CI benchmark lane persists the
+//! measured trajectory.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::ops::{self, Tiling};
+use super::{Backend, Tensor};
+use crate::bench_util::{bench_n, black_box, BenchRecord};
+
+/// Log2-bucketed matmul shape `(m, k, n)`: each dimension maps to
+/// ⌈log2(dim)⌉, so e.g. every `m ∈ (64, 128]` shares a bucket. Coarse on
+/// purpose — tile choice is driven by order-of-magnitude cache footprints,
+/// and coarse buckets keep the sweep count tiny.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    /// ⌈log2 m⌉ (output rows).
+    pub m: u8,
+    /// ⌈log2 k⌉ (reduction depth).
+    pub k: u8,
+    /// ⌈log2 n⌉ (output cols).
+    pub n: u8,
+}
+
+impl ShapeClass {
+    /// Classify a concrete `(m, k, n)`.
+    pub fn of(m: usize, k: usize, n: usize) -> Self {
+        ShapeClass { m: bucket(m), k: bucket(k), n: bucket(n) }
+    }
+}
+
+/// ⌈log2(x)⌉ for `x ≥ 1` (0 maps with 1 — degenerate shapes never tile).
+fn bucket(x: usize) -> u8 {
+    let x = x.max(1);
+    (usize::BITS - (x - 1).leading_zeros()) as u8
+}
+
+/// Tri-state enable: unset (consult env) / on / off.
+static ENABLED: AtomicU8 = AtomicU8::new(0);
+/// Fast path: true once any registry entry exists (saves the tag
+/// allocation + mutex on the common disabled-and-empty case).
+static HAS_ENTRIES: AtomicBool = AtomicBool::new(false);
+
+/// Turn autotuning on or off process-wide (overrides `LNSDNN_AUTOTUNE`).
+pub fn set_autotune(on: bool) {
+    ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Whether a [`tiling_for`] miss triggers a sweep: explicit
+/// [`set_autotune`] wins, else `LNSDNN_AUTOTUNE=1` in the environment.
+pub fn autotune_enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => std::env::var("LNSDNN_AUTOTUNE").is_ok_and(|v| v == "1"),
+    }
+}
+
+type Registry = Mutex<HashMap<(String, ShapeClass), Tiling>>;
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The tiling the undecorated tiled matmuls should use for this backend
+/// and shape: a seeded/tuned registry entry if one exists, else (with
+/// autotuning enabled) the winner of a first-use sweep, else
+/// [`Tiling::DEFAULT`].
+pub fn tiling_for<B: Backend>(b: &B, m: usize, k: usize, n: usize) -> Tiling {
+    if !HAS_ENTRIES.load(Ordering::Relaxed) && !autotune_enabled() {
+        return Tiling::DEFAULT;
+    }
+    let key = (b.tag(), ShapeClass::of(m, k, n));
+    if let Some(t) = registry().lock().unwrap().get(&key) {
+        return *t;
+    }
+    if !autotune_enabled() {
+        return Tiling::DEFAULT;
+    }
+    let outcome = tune(b, m, k, n);
+    outcome.best
+}
+
+/// Pin a tiling for `(tag, shape-class-of(m, k, n))` without sweeping —
+/// the warm-start path for tilings carried in `BENCH_*.json`.
+pub fn seed_tiling(tag: &str, m: usize, k: usize, n: usize, t: Tiling) {
+    registry().lock().unwrap().insert((tag.to_string(), ShapeClass::of(m, k, n)), t);
+    HAS_ENTRIES.store(true, Ordering::Relaxed);
+}
+
+/// Forget every tuned/seeded tiling (test isolation).
+pub fn clear() {
+    registry().lock().unwrap().clear();
+    HAS_ENTRIES.store(false, Ordering::Relaxed);
+}
+
+/// The sweep's curated candidate list: [`Tiling::DEFAULT`] plus
+/// neighbours that trade panel depth against width and chunk height —
+/// the axes that move L1/L2 residency on real cores. Small on purpose:
+/// the sweep runs on first use.
+pub fn candidate_tilings() -> Vec<Tiling> {
+    vec![
+        Tiling::DEFAULT, // {16, 128, 64}
+        Tiling { mc: 8, kc: 256, nc: 64 },
+        Tiling { mc: 16, kc: 64, nc: 128 },
+        Tiling { mc: 32, kc: 128, nc: 32 },
+        Tiling { mc: 16, kc: 256, nc: 32 },
+        Tiling { mc: 8, kc: 128, nc: 128 },
+        Tiling { mc: 32, kc: 64, nc: 64 },
+    ]
+}
+
+/// One sweep's result: the winning tiling plus every candidate's measured
+/// throughput (MAC/s, median-based), for trajectory recording.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// Backend tag the sweep ran on.
+    pub backend: String,
+    /// Concrete shape the candidates were timed at.
+    pub shape: (usize, usize, usize),
+    /// The fastest candidate (also inserted into the registry).
+    pub best: Tiling,
+    /// `(candidate, mac_per_s)` for every swept tiling.
+    pub samples: Vec<(Tiling, f64)>,
+}
+
+impl TuneOutcome {
+    /// Convert the sweep samples into `BENCH_*.json` records: kernel
+    /// field `autotune[mc=..,kc=..,nc=..]`, shape field `MxKxN`.
+    pub fn records(&self, commit: &str, date: &str) -> Vec<BenchRecord> {
+        let (m, k, n) = self.shape;
+        self.samples
+            .iter()
+            .map(|(t, mac_per_s)| BenchRecord {
+                commit: commit.to_string(),
+                date: date.to_string(),
+                backend: self.backend.clone(),
+                kernel: kernel_name(t),
+                shape: format!("{m}x{k}x{n}"),
+                mac_per_s: *mac_per_s,
+            })
+            .collect()
+    }
+}
+
+fn kernel_name(t: &Tiling) -> String {
+    format!("autotune[mc={},kc={},nc={}]", t.mc, t.kc, t.nc)
+}
+
+/// Parse a [`kernel_name`]-formatted kernel field back into a tiling.
+fn parse_kernel_name(kernel: &str) -> Option<Tiling> {
+    let inner = kernel.strip_prefix("autotune[")?.strip_suffix(']')?;
+    let mut dims = [0usize; 3];
+    for (slot, part) in dims.iter_mut().zip(inner.splitn(3, ',')) {
+        let (_, v) = part.split_once('=')?;
+        *slot = v.parse().ok()?;
+    }
+    // All three dims must have parsed to something tileable (a partial
+    // or zero spec would later trip `Tiling::validate`).
+    if dims.iter().any(|&d| d == 0) {
+        return None;
+    }
+    Some(Tiling { mc: dims[0], kc: dims[1], nc: dims[2] })
+}
+
+/// Parse an `MxKxN` shape field.
+fn parse_shape(shape: &str) -> Option<(usize, usize, usize)> {
+    let mut it = shape.splitn(3, 'x');
+    let m = it.next()?.parse().ok()?;
+    let k = it.next()?.parse().ok()?;
+    let n = it.next()?.parse().ok()?;
+    Some((m, k, n))
+}
+
+/// Warm-start the registry from persisted `BENCH_*.json` records: for
+/// every `(backend, shape)` the fastest `autotune[..]` record wins.
+/// Non-autotune records are ignored. Returns how many tilings were
+/// seeded.
+pub fn seed_from_records(records: &[BenchRecord]) -> usize {
+    let mut best: HashMap<(String, ShapeClass), (f64, Tiling)> = HashMap::new();
+    for r in records {
+        let (Some(t), Some((m, k, n))) = (parse_kernel_name(&r.kernel), parse_shape(&r.shape))
+        else {
+            continue;
+        };
+        let key = (r.backend.clone(), ShapeClass::of(m, k, n));
+        let cur = best.entry(key).or_insert((f64::NEG_INFINITY, t));
+        if r.mac_per_s > cur.0 {
+            *cur = (r.mac_per_s, t);
+        }
+    }
+    let n = best.len();
+    if n > 0 {
+        let mut reg = registry().lock().unwrap();
+        for (key, (_, t)) in best {
+            reg.insert(key, t);
+        }
+        HAS_ENTRIES.store(true, Ordering::Relaxed);
+    }
+    n
+}
+
+/// Sweep every candidate at the given concrete shape on synthetic
+/// backend-encoded operands, register the winner for the shape class,
+/// and return the full outcome. Per-candidate timing budget comes from
+/// `LNSDNN_AUTOTUNE_MS` (default 20 ms + 1 warm-up iteration).
+pub fn tune<B: Backend>(b: &B, m: usize, k: usize, n: usize) -> TuneOutcome {
+    let budget_ms = std::env::var("LNSDNN_AUTOTUNE_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20u64);
+    // Synthetic operands: deterministic pseudo-uniform values in (-1, 1),
+    // encoded once. Only throughput matters — every tiling computes the
+    // same bits on them anyway.
+    let mut rng = crate::rng::SplitMix64::new(0x7EAE ^ (m * 31 + k * 7 + n) as u64);
+    let a = Tensor::from_vec(m, k, (0..m * k).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+    let w = Tensor::from_vec(k, n, (0..k * n).map(|_| b.encode(rng.uniform(-1.0, 1.0))).collect());
+    let macs = (m * k * n) as f64;
+    let mut samples = Vec::new();
+    let mut best = (f64::NEG_INFINITY, Tiling::DEFAULT);
+    for t in candidate_tilings() {
+        let stats = bench_n(&kernel_name(&t), 1, budget_ms, Some(macs), || {
+            black_box(ops::matmul_tiled_with(b, &a, &w, &t));
+        });
+        let mac_per_s = stats.throughput().unwrap_or(0.0);
+        if mac_per_s > best.0 {
+            best = (mac_per_s, t);
+        }
+        samples.push((t, mac_per_s));
+    }
+    seed_tiling(&b.tag(), m, k, n, best.1);
+    TuneOutcome { backend: b.tag(), shape: (m, k, n), best: best.1, samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatBackend;
+
+    #[test]
+    fn shape_class_buckets_by_ceil_log2() {
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(64), 6);
+        assert_eq!(bucket(65), 7);
+        assert_eq!(bucket(128), 7);
+        assert_eq!(ShapeClass::of(100, 784, 100), ShapeClass::of(96, 700, 128));
+        assert_ne!(ShapeClass::of(256, 256, 256), ShapeClass::of(256, 256, 512));
+    }
+
+    #[test]
+    fn kernel_name_round_trips() {
+        for t in candidate_tilings() {
+            assert_eq!(parse_kernel_name(&kernel_name(&t)), Some(t));
+        }
+        assert_eq!(parse_kernel_name("matmul_tiled"), None);
+        assert_eq!(parse_shape("256x784x100"), Some((256, 784, 100)));
+        assert_eq!(parse_shape("256x784"), None);
+    }
+
+    #[test]
+    fn seed_and_lookup_round_trip() {
+        // Serialized against other registry tests via the lock itself;
+        // use a tag no real backend produces to avoid cross-talk.
+        let t = Tiling { mc: 4, kc: 32, nc: 16 };
+        seed_tiling("test-seed-tag", 100, 200, 300, t);
+        let got = registry()
+            .lock()
+            .unwrap()
+            .get(&("test-seed-tag".to_string(), ShapeClass::of(100, 200, 300)))
+            .copied();
+        assert_eq!(got, Some(t));
+    }
+
+    #[test]
+    fn seed_from_records_picks_fastest_per_key() {
+        let rec = |kernel: &str, mac_per_s: f64| BenchRecord {
+            commit: "c".into(),
+            date: "2026-08-08".into(),
+            backend: "test-rec-tag".into(),
+            kernel: kernel.into(),
+            shape: "64x64x64".into(),
+            mac_per_s,
+        };
+        let n = seed_from_records(&[
+            rec("autotune[mc=8,kc=64,nc=32]", 1.0e9),
+            rec("autotune[mc=16,kc=128,nc=64]", 3.0e9),
+            rec("matmul_tiled", 9.9e9), // ignored: not an autotune record
+        ]);
+        assert_eq!(n, 1);
+        let got = registry()
+            .lock()
+            .unwrap()
+            .get(&("test-rec-tag".to_string(), ShapeClass::of(64, 64, 64)))
+            .copied();
+        assert_eq!(got, Some(Tiling { mc: 16, kc: 128, nc: 64 }));
+    }
+
+    #[test]
+    fn tiling_for_defaults_when_disabled() {
+        set_autotune(false);
+        let b = FloatBackend::default();
+        // Unseeded class → DEFAULT, no sweep.
+        assert_eq!(tiling_for(&b, 3, 5, 7), Tiling::DEFAULT);
+        set_autotune(true);
+        // Tiny sweep (shape is small, budget irrelevant) registers a
+        // winner, after which lookups hit the registry even when off.
+        let got = tiling_for(&b, 4, 4, 4);
+        set_autotune(false);
+        assert_eq!(tiling_for(&b, 4, 4, 4), got);
+    }
+}

@@ -49,11 +49,14 @@ pub trait Backend: Send + Sync {
     ///
     /// This is the matmul inner loop lifted to slice level so backends can
     /// hoist per-call setup (Δ± LUT base pointers, word-format bounds,
-    /// the multiplier's sign/magnitude split) out of it — see the
-    /// [`LnsBackend`] override. Implementations **must** stay bit-exact
+    /// the multiplier's sign/magnitude split) out of it and batch the
+    /// element work into branchless lanes — see the [`LnsBackend`] and
+    /// [`FixedBackend`] overrides. Implementations **must** stay bit-exact
     /// with the default element-by-element definition: the documented
     /// sequential-over-`k` reduction order of the tensor ops (and thus
-    /// bit-exactness with the Pallas kernels) depends on it.
+    /// bit-exactness with the Pallas kernels) depends on it. Lanes may
+    /// batch *across `j`* (independent output elements) but never regroup
+    /// one element's reduction chain (NUMERICS.md §2).
     #[inline]
     fn mac_row(&self, acc: &mut [Self::E], a: Self::E, w: &[Self::E]) {
         debug_assert_eq!(acc.len(), w.len());
@@ -342,6 +345,22 @@ impl Backend for FixedBackend {
     /// Stochastic rounding on the update scaling (see trait docs).
     fn mul_update(&self, a: FixedValue, b: FixedValue) -> FixedValue {
         self.sys.mul_sr(a, b, self.next_dither())
+    }
+    /// Branchless lane override (see [`FixedSystem::mac_row`]): the
+    /// round/saturate pipeline runs mask-style with no per-element
+    /// branches, so LLVM autovectorizes it. Bit-exact with the default;
+    /// a zero multiplier yields all-zero products, so no early-out is
+    /// needed for equality with the default's skip.
+    #[inline]
+    fn mac_row(&self, acc: &mut [FixedValue], a: FixedValue, w: &[FixedValue]) {
+        self.sys.mac_row(acc, a, w);
+    }
+    /// Branchless sequential fold (see [`FixedSystem::dot_acc`]):
+    /// saturating adds are order-sensitive, so only the per-term branch
+    /// goes away, never the fold order. Bit-exact with the default.
+    #[inline]
+    fn dot_acc(&self, acc: FixedValue, a: &[FixedValue], w: &[FixedValue]) -> FixedValue {
+        self.sys.dot_acc(acc, a, w)
     }
     fn leaky_relu(&self, x: FixedValue) -> FixedValue {
         if x > 0 {

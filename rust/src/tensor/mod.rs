@@ -6,6 +6,7 @@
 //! float, linear fixed-point, or LNS (with any Δ approximation) and makes
 //! the numeric format a first-class, swappable component.
 
+pub mod autotune;
 pub mod backend;
 pub mod im2col;
 pub mod ops;

@@ -20,8 +20,11 @@
 //!
 //! On top of the row engine sit the **cache-tiled** kernels
 //! (`*_tiled`, [`Tiling`]): the `w` operand is packed once into
-//! L1/L2-sized column panels and the output is blocked over
-//! (row-chunk × column-panel) tiles. Tiling only re-orders *which*
+//! L1/L2-sized column panels, each row chunk packs its `a` rows into
+//! `kc`-block slabs, and the output is blocked over
+//! (row-chunk × column-panel) tiles. The undecorated tiled names take
+//! their tile geometry from the [`super::autotune`] registry (default
+//! [`Tiling::DEFAULT`] until a sweep has run). Tiling only re-orders *which*
 //! output elements are computed when — every individual element still
 //! accumulates over `k` ascending (`kc` blocks walked in ascending
 //! order, `p` ascending inside each block, no partial accumulators ever
@@ -412,11 +415,35 @@ fn effective_mc(t: &Tiling, m: usize) -> usize {
     t.mc.min(per.max(1))
 }
 
+/// Pack rows `[i0, i0+rows)` of the moving operand `a` into
+/// `kc`-block-major storage: blocks ascending along the reduction
+/// dimension, each a contiguous row-major `rows × depth` slab. The hot
+/// loop revisits each `a` block once per column panel; packed, those
+/// revisits stream one dense slab instead of striding across full `a`
+/// rows. Pure data movement (NUMERICS.md §2) — values and fold order are
+/// untouched. The slab for block `kc0` starts at `rows · kc0` (all
+/// preceding blocks hold `rows` elements per reduction index).
+fn pack_a_chunk<E: Copy>(a: &Tensor<E>, i0: usize, rows: usize, kc: usize) -> Vec<E> {
+    let k = a.cols;
+    let mut data = Vec::with_capacity(rows * k);
+    let mut kc0 = 0;
+    while kc0 < k {
+        let depth = kc.min(k - kc0);
+        for r in 0..rows {
+            data.extend_from_slice(&a.row(i0 + r)[kc0..kc0 + depth]);
+        }
+        kc0 += depth;
+    }
+    data
+}
+
 /// Compute the output rows held in `chunk` (width `n`, rows
 /// `i0, i0+1, …` of the product) of `A·packed(B)`: column panels outer,
 /// `kc` blocks ascending inner, one [`Backend::mac_panel`] call per
-/// (row × panel-block) tile. Per output element the ⊞ chain is exactly
-/// the `k`-ascending reduction of [`matmul_serial`].
+/// (row × panel-block) tile. The chunk's `a` rows are packed
+/// (`kc`-block-major) once up front so both operands of every panel call
+/// are contiguous. Per output element the ⊞ chain is exactly the
+/// `k`-ascending reduction of [`matmul_serial`].
 fn tiled_chunk<B: Backend>(
     b: &B,
     a: &Tensor<B::E>,
@@ -428,6 +455,7 @@ fn tiled_chunk<B: Backend>(
 ) {
     let k = a.cols;
     let rows = chunk.len() / n;
+    let packed_a = pack_a_chunk(a, i0, rows, t.kc);
     let mut jc0 = 0;
     while jc0 < n {
         let width = t.nc.min(n - jc0);
@@ -437,7 +465,7 @@ fn tiled_chunk<B: Backend>(
             let depth = t.kc.min(k - kc0);
             let panel = &group[width * kc0..width * (kc0 + depth)];
             for r in 0..rows {
-                let arow = &a.row(i0 + r)[kc0..kc0 + depth];
+                let arow = &packed_a[rows * kc0 + r * depth..][..depth];
                 let acc = &mut chunk[r * n + jc0..r * n + jc0 + width];
                 b.mac_panel(acc, arow, panel);
             }
@@ -470,10 +498,12 @@ where
     }
 }
 
-/// Cache-tiled [`matmul`] with the default [`Tiling`]. Bit-identical to
-/// [`matmul_serial`] on every backend.
+/// Cache-tiled [`matmul`] with the autotuned (or default) [`Tiling`] for
+/// this backend and shape class (see [`super::autotune`]). Bit-identical
+/// to [`matmul_serial`] on every backend — tile geometry is perf-only.
 pub fn matmul_tiled<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
-    matmul_tiled_with(b, a, w, &Tiling::DEFAULT)
+    let t = super::autotune::tiling_for(b, a.rows, a.cols, w.cols);
+    matmul_tiled_with(b, a, w, &t)
 }
 
 /// Cache-tiled `C = A·B` with explicit tile sizes (tests sweep degenerate
@@ -499,10 +529,12 @@ pub fn matmul_tiled_with<B: Backend>(
     out
 }
 
-/// Cache-tiled [`matmul_at`] with the default [`Tiling`]. Bit-identical
-/// to [`matmul_at_serial`] on every backend.
+/// Cache-tiled [`matmul_at`] with the autotuned (or default) [`Tiling`]
+/// for this backend and shape class. Bit-identical to
+/// [`matmul_at_serial`] on every backend.
 pub fn matmul_at_tiled<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
-    matmul_at_tiled_with(b, a, w, &Tiling::DEFAULT)
+    let t = super::autotune::tiling_for(b, a.cols, a.rows, w.cols);
+    matmul_at_tiled_with(b, a, w, &t)
 }
 
 /// Cache-tiled `C = Aᵀ·B` with explicit tile sizes. Each row chunk first
@@ -539,10 +571,12 @@ pub fn matmul_at_tiled_with<B: Backend>(
     out
 }
 
-/// Cache-tiled [`matmul_bt`] with the default [`Tiling`]. Bit-identical
-/// to [`matmul_bt_serial`] on every backend.
+/// Cache-tiled [`matmul_bt`] with the autotuned (or default) [`Tiling`]
+/// for this backend and shape class. Bit-identical to
+/// [`matmul_bt_serial`] on every backend.
 pub fn matmul_bt_tiled<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
-    matmul_bt_tiled_with(b, a, w, &Tiling::DEFAULT)
+    let t = super::autotune::tiling_for(b, a.rows, a.cols, w.rows);
+    matmul_bt_tiled_with(b, a, w, &t)
 }
 
 /// Pack `w` (`[n, k]`, the `A·Bᵀ` operand) into (row-panel × k-block)
@@ -589,6 +623,7 @@ pub fn matmul_bt_tiled_with<B: Backend>(
     let mc = effective_mc(t, m);
     drive_chunks::<B, _>(&mut out, mc, m * k * n, |i0, chunk| {
         let rows = chunk.len() / n;
+        let packed_a = pack_a_chunk(a, i0, rows, t.kc);
         let mut jc0 = 0;
         while jc0 < n {
             let width = t.nc.min(n - jc0);
@@ -598,7 +633,7 @@ pub fn matmul_bt_tiled_with<B: Backend>(
                 let depth = t.kc.min(k - kc0);
                 let panel = &group[width * kc0..width * (kc0 + depth)];
                 for r in 0..rows {
-                    let arow = &a.row(i0 + r)[kc0..kc0 + depth];
+                    let arow = &packed_a[rows * kc0 + r * depth..][..depth];
                     let orow = &mut chunk[r * n + jc0..r * n + jc0 + width];
                     for (j, o) in orow.iter_mut().enumerate() {
                         let wslice = &panel[j * depth..(j + 1) * depth];
@@ -1016,6 +1051,25 @@ mod tests {
                 let kc0 = (p / tl.kc) * tl.kc;
                 let idx = k * jc0 + width * kc0 + (p - kc0) * width + (j - jc0);
                 assert_eq!(packed[idx], w.at(p, j), "w[{p}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_chunk_layout_round_trips() {
+        // Reconstruct the chunk's a rows from the packed buffer using the
+        // documented offsets: block kc0 starts at rows·kc0, row r at
+        // rows·kc0 + r·depth.
+        let a = t(6, 7, &(0..42).map(|v| v as f32).collect::<Vec<_>>());
+        let (i0, rows, kc) = (2usize, 3usize, 3usize);
+        let packed = pack_a_chunk(&a, i0, rows, kc);
+        assert_eq!(packed.len(), rows * a.cols);
+        for r in 0..rows {
+            for p in 0..a.cols {
+                let kc0 = (p / kc) * kc;
+                let depth = kc.min(a.cols - kc0);
+                let idx = rows * kc0 + r * depth + (p - kc0);
+                assert_eq!(packed[idx], a.at(i0 + r, p), "a[{}][{p}]", i0 + r);
             }
         }
     }

@@ -1,0 +1,275 @@
+//! Bit-exactness pins for the branchless lane kernels (NUMERICS.md §2,
+//! "lane-batched ⊞").
+//!
+//! The lane kernels in `lns::lanes` (and the fixed-point twins in
+//! `fixed`) batch *independent output elements* into fixed-width arrays
+//! so LLVM can autovectorize, but every single element's reduction chain
+//! must stay exactly the scalar k-ascending fold — same Δ lookups, same
+//! clamps, same canonical-zero handling, same bits. These tests compare
+//! the lane paths against the retained `*_scalar` twins and against
+//! hand-written scalar folds, on every backend, across:
+//!
+//! * tail lengths (`len % LANES ∈ {0, 1, LANES−1}`),
+//! * both Δ± approximations (LUT and BitShift) at both word widths,
+//! * saturation boundaries (`m_max`/`m_min` words, clamping products),
+//! * exact cancellation (opposite signs, equal magnitudes → canonical
+//!   zero), and zero words in every operand position,
+//! * the process-global lane toggle through the public matmul entry
+//!   points (both settings must agree — the toggle may only move time).
+//!
+//! CI runs this file in release mode too: autovectorized codegen is
+//! exactly what the contract is about.
+
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{lanes, LnsConfig, LnsSystem, LnsValue, LANES};
+use lnsdnn::rng::SplitMix64;
+use lnsdnn::tensor::{ops, LnsBackend, Tensor};
+
+/// The four LNS systems under contract: LUT and BitShift Δ at 16 and 12
+/// bits.
+fn systems() -> Vec<(&'static str, LnsSystem)> {
+    vec![
+        ("w16_lut", LnsSystem::new(LnsConfig::w16_lut())),
+        ("w12_lut", LnsSystem::new(LnsConfig::w12_lut())),
+        ("w16_bs", LnsSystem::new(LnsConfig::w16_bitshift())),
+        ("w12_bs", LnsSystem::new(LnsConfig::w12_bitshift())),
+    ]
+}
+
+/// Lengths that exercise full lanes plus every interesting remainder.
+fn lens() -> Vec<usize> {
+    vec![LANES * 2, LANES * 2 + 1, LANES * 3 - 1, 1, LANES - 1, 0]
+}
+
+/// Adversarial value mix: ~15 % exact zeros, ~10 % `m_max`/`m_min`
+/// boundary words (both signs), rest ordinary encoded values.
+fn arb_vals(sys: &LnsSystem, rng: &mut SplitMix64, n: usize) -> Vec<LnsValue> {
+    let (m_min, m_max) = (sys.config().m_min(), sys.config().m_max());
+    (0..n)
+        .map(|_| match rng.next_u64() % 20 {
+            0..=2 => LnsValue::ZERO,
+            3 => LnsValue { m: m_max, s: rng.next_u64() % 2 == 0 },
+            4 => LnsValue { m: m_min, s: rng.next_u64() % 2 == 0 },
+            _ => sys.encode_f64(rng.uniform(-16.0, 16.0)),
+        })
+        .collect()
+}
+
+#[test]
+fn mac_row_matches_scalar_twin_all_tails() {
+    for (name, sys) in systems() {
+        let mut rng = SplitMix64::new(0x61);
+        for len in lens() {
+            for trial in 0..30 {
+                let acc0 = arb_vals(&sys, &mut rng, len);
+                let w = arb_vals(&sys, &mut rng, len);
+                let a = arb_vals(&sys, &mut rng, 1)[0];
+                let mut lane = acc0.clone();
+                sys.mac_row(&mut lane, a, &w);
+                let mut scalar = acc0.clone();
+                sys.mac_row_scalar(&mut scalar, a, &w);
+                assert_eq!(lane, scalar, "{name} len={len} trial={trial}");
+                // And against the definitional per-element fold.
+                let fold: Vec<LnsValue> =
+                    acc0.iter().zip(&w).map(|(&o, &wv)| sys.mac(o, a, wv)).collect();
+                assert_eq!(lane, fold, "{name} len={len} trial={trial} (fold)");
+            }
+        }
+    }
+}
+
+#[test]
+fn mac_panel_matches_scalar_twin_and_row_fold() {
+    for (name, sys) in systems() {
+        let mut rng = SplitMix64::new(0x62);
+        for nc in [LANES, LANES + 1, 2 * LANES - 1, 3] {
+            let depth = 5;
+            let a = arb_vals(&sys, &mut rng, depth);
+            let panel = arb_vals(&sys, &mut rng, depth * nc);
+            let acc0 = arb_vals(&sys, &mut rng, nc);
+            let mut lane = acc0.clone();
+            sys.mac_panel(&mut lane, &a, &panel);
+            let mut scalar = acc0.clone();
+            sys.mac_panel_scalar(&mut scalar, &a, &panel);
+            assert_eq!(lane, scalar, "{name} nc={nc}");
+            let mut fold = acc0.clone();
+            for (p, &av) in a.iter().enumerate() {
+                sys.mac_row_scalar(&mut fold, av, &panel[p * nc..(p + 1) * nc]);
+            }
+            assert_eq!(lane, fold, "{name} nc={nc} (row fold)");
+        }
+    }
+}
+
+#[test]
+fn dot_acc_matches_scalar_twin_and_mac_fold() {
+    for (name, sys) in systems() {
+        let mut rng = SplitMix64::new(0x63);
+        for len in lens() {
+            let a = arb_vals(&sys, &mut rng, len);
+            let w = arb_vals(&sys, &mut rng, len);
+            for acc0 in [LnsValue::ZERO, arb_vals(&sys, &mut rng, 1)[0]] {
+                let lane = sys.dot_acc(acc0, &a, &w);
+                let scalar = sys.dot_acc_scalar(acc0, &a, &w);
+                assert_eq!(lane, scalar, "{name} len={len}");
+                let mut fold = acc0;
+                for (&av, &wv) in a.iter().zip(&w) {
+                    fold = sys.mac(fold, av, wv);
+                }
+                assert_eq!(lane, fold, "{name} len={len} (mac fold)");
+            }
+        }
+    }
+}
+
+#[test]
+fn add_slice_matches_scalar_twin() {
+    for (name, sys) in systems() {
+        let mut rng = SplitMix64::new(0x64);
+        for len in lens() {
+            let acc0 = arb_vals(&sys, &mut rng, len);
+            let x = arb_vals(&sys, &mut rng, len);
+            let mut lane = acc0.clone();
+            sys.add_slice(&mut lane, &x);
+            let mut scalar = acc0.clone();
+            sys.add_slice_scalar(&mut scalar, &x);
+            assert_eq!(lane, scalar, "{name} len={len}");
+            let fold: Vec<LnsValue> = acc0.iter().zip(&x).map(|(&o, &y)| sys.add(o, y)).collect();
+            assert_eq!(lane, fold, "{name} len={len} (add fold)");
+        }
+    }
+}
+
+#[test]
+fn exact_cancellation_yields_canonical_zero_in_lanes() {
+    for (name, sys) in systems() {
+        let mut rng = SplitMix64::new(0x65);
+        let len = 2 * LANES + 3;
+        // acc ⊞ (-acc): every lane (and the tail) must produce the one
+        // canonical zero word, not merely "some zero".
+        let acc0: Vec<LnsValue> = arb_vals(&sys, &mut rng, len);
+        let x: Vec<LnsValue> = acc0.iter().map(|v| v.neg()).collect();
+        let mut lane = acc0.clone();
+        sys.add_slice(&mut lane, &x);
+        for (j, v) in lane.iter().enumerate() {
+            if !acc0[j].is_zero() {
+                assert_eq!(*v, LnsValue::ZERO, "{name} j={j}");
+            }
+        }
+        // Same through mac_row: acc[j] = -(a ⊡ w[j]).
+        let w = arb_vals(&sys, &mut rng, len);
+        let a = sys.encode_f64(1.7);
+        let acc0: Vec<LnsValue> = w.iter().map(|&wv| sys.mul(a, wv).neg()).collect();
+        let mut lane = acc0.clone();
+        sys.mac_row(&mut lane, a, &w);
+        let mut scalar = acc0.clone();
+        sys.mac_row_scalar(&mut scalar, a, &w);
+        assert_eq!(lane, scalar, "{name} (cancel mac_row)");
+        for (j, v) in lane.iter().enumerate() {
+            if !w[j].is_zero() {
+                assert_eq!(*v, LnsValue::ZERO, "{name} j={j} (cancel mac_row)");
+            }
+        }
+    }
+}
+
+#[test]
+fn saturated_operands_stay_bit_identical() {
+    for (name, sys) in systems() {
+        let (m_min, m_max) = (sys.config().m_min(), sys.config().m_max());
+        // Every combination of boundary words in acc/a/w, both signs.
+        let edge = [
+            LnsValue { m: m_max, s: true },
+            LnsValue { m: m_max, s: false },
+            LnsValue { m: m_min, s: true },
+            LnsValue { m: m_min, s: false },
+            LnsValue::ZERO,
+            LnsValue::ONE,
+        ];
+        let len = edge.len() * edge.len(); // 36 = 4·8+4: lanes + tail
+        let accs: Vec<LnsValue> = (0..len).map(|i| edge[i / edge.len()]).collect();
+        let ws: Vec<LnsValue> = (0..len).map(|i| edge[i % edge.len()]).collect();
+        for a in edge {
+            let mut lane = accs.clone();
+            sys.mac_row(&mut lane, a, &ws);
+            let mut scalar = accs.clone();
+            sys.mac_row_scalar(&mut scalar, a, &ws);
+            assert_eq!(lane, scalar, "{name} a={a:?}");
+            assert_eq!(
+                sys.dot_acc(LnsValue::ONE, &accs, &ws),
+                sys.dot_acc_scalar(LnsValue::ONE, &accs, &ws),
+                "{name} a={a:?} (dot)"
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_point_lane_kernels_match_scalar_macs() {
+    for cfg in [FixedConfig::w16(), FixedConfig::w12()] {
+        let s = FixedSystem::new(cfg);
+        let mc = cfg.max_code();
+        let mut rng = SplitMix64::new(0x66);
+        for len in lens() {
+            let codes = |rng: &mut SplitMix64| -> Vec<i32> {
+                (0..len)
+                    .map(|_| match rng.next_u64() % 10 {
+                        0 => 0,
+                        1 => mc,
+                        2 => -mc,
+                        _ => (rng.next_below(2 * mc as u64 + 1) as i32) - mc,
+                    })
+                    .collect()
+            };
+            let acc0 = codes(&mut rng);
+            let w = codes(&mut rng);
+            for a in [0, 1, -1, mc, -mc, mc / 3] {
+                let mut fast = acc0.clone();
+                s.mac_row(&mut fast, a, &w);
+                let slow: Vec<i32> = acc0.iter().zip(&w).map(|(&o, &wv)| s.mac(o, a, wv)).collect();
+                assert_eq!(fast, slow, "fixed{} len={len} a={a}", cfg.total_bits);
+            }
+            let fast = s.dot_acc(7, &acc0, &w);
+            let mut slow = 7;
+            for (&av, &wv) in acc0.iter().zip(&w) {
+                slow = s.mac(slow, av, wv);
+            }
+            assert_eq!(fast, slow, "fixed{} len={len} (dot)", cfg.total_bits);
+        }
+    }
+}
+
+#[test]
+fn lane_toggle_is_invisible_through_public_matmuls() {
+    // The toggle selects which code runs, never what it computes: every
+    // matmul entry point must produce the same bits with lanes on and
+    // off. (Other tests may flip the global toggle concurrently — that
+    // is safe precisely because of the property asserted here.)
+    let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01);
+    let sys = LnsSystem::new(LnsConfig::w16_bitshift());
+    let mut rng = SplitMix64::new(0x67);
+    let (m, k, n) = (13, 37, 11); // odd sizes: tails everywhere
+    let a = Tensor::from_vec(m, k, arb_vals(&sys, &mut rng, m * k));
+    let w = Tensor::from_vec(k, n, arb_vals(&sys, &mut rng, k * n));
+    let at = a.transpose();
+    let wt = w.transpose();
+    let run = || {
+        (
+            ops::matmul(&b, &a, &w),
+            ops::matmul_tiled(&b, &a, &w),
+            ops::matmul_bt(&b, &a, &wt),
+            ops::matmul_at(&b, &at, &w),
+        )
+    };
+    lanes::set_enabled(true);
+    let on = run();
+    lanes::set_enabled(false);
+    let off = run();
+    lanes::set_enabled(true);
+    assert_eq!(on.0.data, off.0.data, "matmul");
+    assert_eq!(on.1.data, off.1.data, "matmul_tiled");
+    assert_eq!(on.2.data, off.2.data, "matmul_bt");
+    assert_eq!(on.3.data, off.3.data, "matmul_at");
+    // And the dispatch-selected path agrees with the serial reference.
+    assert_eq!(on.0.data, ops::matmul_serial(&b, &a, &w).data, "vs serial");
+}
