@@ -11,7 +11,8 @@
 //! The bench opens with the **pinned record suite**: fixed shapes and
 //! seeds, one [`BenchRecord`] per (backend, kernel, shape), including the
 //! lane-vs-scalar `mac_panel` pair that quantifies the branchless lane
-//! kernels. CI runs it in quick mode and persists the records as the
+//! kernels and the obs off/on pair that prices the telemetry gate
+//! (docs/OBSERVABILITY.md). CI runs it in quick mode and persists the records as the
 //! repo's `BENCH_*.json` trajectory. Environment knobs:
 //!
 //! * `BENCH_QUICK=1` — record suite only, skip the exploratory sections,
@@ -29,6 +30,7 @@ use lnsdnn::bench_util::{
 };
 use lnsdnn::fixed::{FixedConfig, FixedSystem};
 use lnsdnn::lns::{lanes, DeltaMode, LnsConfig, LnsSystem, LnsValue};
+use lnsdnn::obs;
 use lnsdnn::rng::SplitMix64;
 use lnsdnn::tensor::{ops, Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
 
@@ -115,8 +117,39 @@ fn record_lane_vs_scalar(rec: &mut Recorder, b: &LnsBackend, seed: u64, budget_m
     speedup
 }
 
+/// Record the observation cost pair at 256³: the same tiled matmul with
+/// counters disabled (the production path — one relaxed load per
+/// dispatcher call, so `mac_panel_obs_off` should sit within noise of
+/// the adjacent `mac_panel_lane` record and of the previous PR's
+/// trajectory; the CI baseline comparison is the disabled-overhead pin)
+/// and with counters enabled (routes through the counted scalar bodies,
+/// so the expected cost is roughly the lane/scalar ratio above).
+fn record_obs_pair(rec: &mut Recorder, b: &LnsBackend, seed: u64, budget_ms: u64) {
+    let shape = (256usize, 256usize, 256usize);
+    let (m, k, n) = shape;
+    let (a, w) = encoded_mats(b, m, k, n, seed);
+    let macs = (m * k * n) as f64;
+    let tag = b.tag();
+    obs::set_counters(false);
+    let off_label = format!("record/{tag}/mac_panel_obs_off/{m}x{k}x{n}");
+    let off = timed(&off_label, budget_ms, macs, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    obs::set_counters(true);
+    let on_label = format!("record/{tag}/mac_panel_obs_on/{m}x{k}x{n}");
+    let on = timed(&on_label, budget_ms, macs, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    obs::set_counters(false);
+    obs::reset_all();
+    rec.add(&tag, "mac_panel_obs_off", shape, off);
+    rec.add(&tag, "mac_panel_obs_on", shape, on);
+    println!("    ↳ counting cost {:.2}× (obs off vs on)", off / on);
+}
+
 /// The pinned record suite: 256³ on all four backends, the lane-vs-scalar
-/// pairs on both LNS Δ modes, and the MLP / im2col shapes.
+/// pairs on both LNS Δ modes, the obs off/on pair, and the MLP / im2col
+/// shapes.
 fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
     let mut rec = Recorder::new();
     let cube = (256usize, 256usize, 256usize);
@@ -129,6 +162,7 @@ fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
     record_tiled(&mut rec, &bs, cube, 21, budget_ms);
     record_lane_vs_scalar(&mut rec, &lut, 22, budget_ms);
     record_lane_vs_scalar(&mut rec, &bs, 22, budget_ms);
+    record_obs_pair(&mut rec, &lut, 22, budget_ms);
     for shape in [(256usize, 784usize, 100usize), (6272, 150, 12)] {
         record_tiled(&mut rec, &FloatBackend::default(), shape, 23, budget_ms);
         record_tiled(&mut rec, &lut, shape, 23, budget_ms);

@@ -292,6 +292,139 @@ fn parse_json_number(chars: &mut CharStream) -> Option<f64> {
     buf.parse().ok()
 }
 
+/// A parsed JSON value — just enough structure for
+/// [`validate_chrome_trace`] to walk a trace document.
+enum JsonValue {
+    Null,
+    Bool(#[allow(dead_code)] bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+fn parse_json_value(chars: &mut CharStream) -> Option<JsonValue> {
+    skip_ws(chars);
+    match chars.peek()?.1 {
+        '"' => Some(JsonValue::Str(parse_json_string(chars)?)),
+        '{' => {
+            chars.next();
+            let mut obj = Vec::new();
+            skip_ws(chars);
+            if chars.peek()?.1 == '}' {
+                chars.next();
+                return Some(JsonValue::Obj(obj));
+            }
+            loop {
+                skip_ws(chars);
+                let key = parse_json_string(chars)?;
+                skip_ws(chars);
+                if chars.next()?.1 != ':' {
+                    return None;
+                }
+                obj.push((key, parse_json_value(chars)?));
+                skip_ws(chars);
+                match chars.next()?.1 {
+                    ',' => continue,
+                    '}' => return Some(JsonValue::Obj(obj)),
+                    _ => return None,
+                }
+            }
+        }
+        '[' => {
+            chars.next();
+            let mut arr = Vec::new();
+            skip_ws(chars);
+            if chars.peek()?.1 == ']' {
+                chars.next();
+                return Some(JsonValue::Arr(arr));
+            }
+            loop {
+                arr.push(parse_json_value(chars)?);
+                skip_ws(chars);
+                match chars.next()?.1 {
+                    ',' => continue,
+                    ']' => return Some(JsonValue::Arr(arr)),
+                    _ => return None,
+                }
+            }
+        }
+        c if c.is_ascii_alphabetic() => {
+            let mut word = String::new();
+            while chars.peek().is_some_and(|&(_, c)| c.is_ascii_alphabetic()) {
+                word.push(chars.next()?.1);
+            }
+            match word.as_str() {
+                "true" => Some(JsonValue::Bool(true)),
+                "false" => Some(JsonValue::Bool(false)),
+                "null" => Some(JsonValue::Null),
+                _ => None,
+            }
+        }
+        _ => Some(JsonValue::Num(parse_json_number(chars)?)),
+    }
+}
+
+/// Validate a Chrome `trace_event` document as produced by
+/// [`crate::obs::trace::write_chrome_trace`]: the text must parse as a
+/// JSON object whose `traceEvents` member is an array of event objects
+/// with a `name`, a numeric `tid`, and per-tid balanced `"B"`/`"E"`
+/// duration pairs. Returns the completed-span count (the number of `"E"`
+/// events). This is the checker the CI obs-smoke step runs over a real
+/// `--trace` artifact — it proves the writer emits loadable JSON without
+/// taking a JSON (or browser) dependency.
+pub fn validate_chrome_trace(text: &str) -> Result<usize, String> {
+    let mut chars = text.char_indices().peekable();
+    let doc = parse_json_value(&mut chars).ok_or_else(|| "trace is not valid JSON".to_string())?;
+    skip_ws(&mut chars);
+    if chars.next().is_some() {
+        return Err("trailing bytes after the JSON document".into());
+    }
+    let JsonValue::Obj(top) = doc else {
+        return Err("top level is not a JSON object".into());
+    };
+    let top_field = |name: &str| top.iter().find(|(k, _)| k == name).map(|(_, v)| v);
+    let Some(JsonValue::Arr(events)) = top_field("traceEvents") else {
+        return Err("no traceEvents array at the top level".into());
+    };
+    let mut depth: std::collections::HashMap<i64, i64> = std::collections::HashMap::new();
+    let mut completed = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let JsonValue::Obj(ev) = ev else {
+            return Err(format!("traceEvents[{i}] is not an object"));
+        };
+        let field = |name: &str| ev.iter().find(|(k, _)| k == name).map(|(_, v)| v);
+        let Some(JsonValue::Str(ph)) = field("ph") else {
+            return Err(format!("traceEvents[{i}] has no \"ph\" string"));
+        };
+        let tid = match field("tid") {
+            Some(JsonValue::Num(t)) => *t as i64,
+            _ => return Err(format!("traceEvents[{i}] has no numeric \"tid\"")),
+        };
+        if !matches!(field("name"), Some(JsonValue::Str(_))) {
+            return Err(format!("traceEvents[{i}] has no \"name\" string"));
+        }
+        match ph.as_str() {
+            "B" => *depth.entry(tid).or_insert(0) += 1,
+            "E" => {
+                let d = depth.entry(tid).or_insert(0);
+                if *d == 0 {
+                    return Err(format!(
+                        "traceEvents[{i}]: \"E\" with no open \"B\" on tid {tid}"
+                    ));
+                }
+                *d -= 1;
+                completed += 1;
+            }
+            other => return Err(format!("traceEvents[{i}]: unsupported ph {other:?}")),
+        }
+    }
+    if let Some((tid, d)) = depth.iter().find(|(_, &d)| d != 0) {
+        return Err(format!("{d} unclosed \"B\" event(s) on tid {tid}"));
+    }
+    Ok(completed)
+}
+
 /// Today's UTC date as `YYYY-MM-DD`, from the system clock (no chrono
 /// dependency; days-to-civil conversion per Howard Hinnant's algorithm).
 pub fn utc_date_string() -> String {
@@ -433,6 +566,38 @@ mod tests {
         assert_eq!(hits.len(), 1);
         assert!(hits[0].contains("log16-bs"), "{hits:?}");
         assert!(regressions(&new, &old, 0.20).is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_validator_accepts_balanced_pairs() {
+        let good = r#"{"displayTimeUnit":"ms","traceEvents":[
+          {"name":"forward","cat":"lnsdnn","ph":"B","pid":1,"tid":1,"ts":0.000},
+          {"name":"eval","cat":"lnsdnn","ph":"B","pid":1,"tid":2,"ts":1.500},
+          {"name":"eval","cat":"lnsdnn","ph":"E","pid":1,"tid":2,"ts":2.000},
+          {"name":"forward","cat":"lnsdnn","ph":"E","pid":1,"tid":1,"ts":3.250}
+        ],"otherData":{"dropped_spans":0}}"#;
+        assert_eq!(validate_chrome_trace(good), Ok(2));
+        let empty = r#"{"traceEvents":[]}"#;
+        assert_eq!(validate_chrome_trace(empty), Ok(0));
+    }
+
+    #[test]
+    fn chrome_trace_validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("[1,2,3]").is_err());
+        assert!(validate_chrome_trace(r#"{"events":[]}"#).is_err());
+        // Unbalanced: E without B on that tid.
+        let bad = r#"{"traceEvents":[
+          {"name":"x","ph":"E","tid":1,"ts":0.0}
+        ]}"#;
+        assert!(validate_chrome_trace(bad).unwrap_err().contains("no open"), "{bad}");
+        // Unclosed B at end of stream.
+        let open = r#"{"traceEvents":[
+          {"name":"x","ph":"B","tid":1,"ts":0.0}
+        ]}"#;
+        assert!(validate_chrome_trace(open).unwrap_err().contains("unclosed"), "{open}");
+        // Trailing garbage after a valid document.
+        assert!(validate_chrome_trace("{\"traceEvents\":[]} x").is_err());
     }
 
     #[test]

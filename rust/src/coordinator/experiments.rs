@@ -319,6 +319,12 @@ pub fn run_grid(
     // a rayon worker).
     let shard_cfg = ShardConfig::with_shards(shards);
     mp.validate().expect("invalid multi-process spec");
+    // Numerics counters are process-global and sweep cells run
+    // concurrently, so the sweep resets once up front and reports
+    // aggregates over all cells — per-cell attribution would race.
+    if crate::obs::counters_enabled() {
+        crate::obs::reset_all();
+    }
     let jobs: Vec<(usize, ConfigTag)> = (0..datasets.len())
         .flat_map(|d| tags.iter().map(move |&t| (d, t)))
         .collect();
@@ -473,6 +479,10 @@ pub fn cnn_grid(
     // Fail fast on invalid shard counts (same rationale as `run_grid`).
     ShardConfig::with_shards(shards);
     mp.validate().expect("invalid multi-process spec");
+    // Same aggregate-counter story as `run_grid`: one reset per sweep.
+    if crate::obs::counters_enabled() {
+        crate::obs::reset_all();
+    }
     let per_job = if mp.is_multiproc() { mp.workers } else { shards };
     let pool_threads = (threads / per_job).max(1);
     // Effective concurrency is also bounded by how many cells exist.

@@ -25,7 +25,7 @@ use crate::train::shard::MAX_SHARDS;
 use crate::train::wire::WireElem;
 use crate::train::{CnnTrainConfig, TrainConfig, TrainResult};
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpListener;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio as ProcStdio};
@@ -283,9 +283,87 @@ fn worker_exe(spec: &MultiprocSpec) -> Result<PathBuf> {
     }
 }
 
+/// Bytes of worker stderr kept per child for post-mortem error reports.
+const STDERR_TAIL_BYTES: usize = 4096;
+
+/// A spawned worker process plus its rank and captured-stderr machinery.
+/// Stderr is piped (not inherited): a drainer thread forwards every byte
+/// to the coordinator's own stderr — so worker diagnostics stay live —
+/// while keeping the last [`STDERR_TAIL_BYTES`] for attachment to
+/// dead-worker errors, where "worker 3 exited with signal 9" alone is
+/// useless forensics.
+struct WorkerProc {
+    rank: usize,
+    child: Child,
+    stderr_tail: Arc<Mutex<Vec<u8>>>,
+    drainer: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerProc {
+    fn new(rank: usize, mut child: Child) -> Self {
+        let stderr_tail = Arc::new(Mutex::new(Vec::new()));
+        let drainer = child.stderr.take().map(|err| {
+            let tail = stderr_tail.clone();
+            std::thread::spawn(move || drain_stderr(err, &tail))
+        });
+        WorkerProc { rank, child, stderr_tail, drainer }
+    }
+
+    /// Wait for the drainer to see EOF (the child must be dead or dying,
+    /// or this blocks until it is).
+    fn join_drainer(&mut self) {
+        if let Some(h) = self.drainer.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// The captured stderr tail, lossily decoded.
+    fn tail(&self) -> String {
+        let tail = self.stderr_tail.lock().unwrap_or_else(|p| p.into_inner());
+        if tail.is_empty() {
+            "<no stderr output>".into()
+        } else {
+            String::from_utf8_lossy(&tail).into_owned()
+        }
+    }
+}
+
+fn drain_stderr(mut err: impl Read, tail: &Mutex<Vec<u8>>) {
+    let mut buf = [0u8; 1024];
+    loop {
+        match err.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                let _ = std::io::stderr().write_all(&buf[..n]);
+                let mut t = tail.lock().unwrap_or_else(|p| p.into_inner());
+                t.extend_from_slice(&buf[..n]);
+                if t.len() > STDERR_TAIL_BYTES {
+                    let cut = t.len() - STDERR_TAIL_BYTES;
+                    t.drain(..cut);
+                }
+            }
+        }
+    }
+}
+
+/// CLI argv for one worker process. Workers get `--obs` when this
+/// coordinator has counters enabled, so their heartbeat frames carry
+/// real telemetry; observation never changes trained bits either way.
+fn worker_args(transport: Transport, addr: Option<&str>) -> Vec<String> {
+    let mut args = vec!["worker".to_string(), "--transport".into(), transport.label().into()];
+    if let Some(addr) = addr {
+        args.push("--connect".into());
+        args.push(addr.into());
+    }
+    if crate::obs::counters_enabled() {
+        args.push("--obs".into());
+    }
+    args
+}
+
 /// Spawn the worker processes and establish one framed duplex connection
 /// per worker. On any error, every child spawned so far is killed.
-fn spawn_workers(spec: &MultiprocSpec) -> Result<(Vec<PeerIo>, Vec<Child>)> {
+fn spawn_workers(spec: &MultiprocSpec) -> Result<(Vec<PeerIo>, Vec<WorkerProc>)> {
     let mut children = Vec::new();
     match spawn_workers_inner(spec, &mut children) {
         Ok(peers) => Ok((peers, children)),
@@ -296,16 +374,20 @@ fn spawn_workers(spec: &MultiprocSpec) -> Result<(Vec<PeerIo>, Vec<Child>)> {
     }
 }
 
-fn spawn_workers_inner(spec: &MultiprocSpec, children: &mut Vec<Child>) -> Result<Vec<PeerIo>> {
+fn spawn_workers_inner(
+    spec: &MultiprocSpec,
+    children: &mut Vec<WorkerProc>,
+) -> Result<Vec<PeerIo>> {
     let exe = worker_exe(spec)?;
     let mut peers = Vec::with_capacity(spec.workers);
     match spec.transport {
         Transport::Stdio => {
             for rank in 0..spec.workers {
                 let mut child = Command::new(&exe)
-                    .args(["worker", "--transport", "stdio"])
+                    .args(worker_args(Transport::Stdio, None))
                     .stdin(ProcStdio::piped())
                     .stdout(ProcStdio::piped())
+                    .stderr(ProcStdio::piped())
                     .spawn()
                     .with_context(|| format!("spawning worker {rank} from {}", exe.display()))?;
                 let stdin = child.stdin.take().expect("piped worker stdin");
@@ -314,7 +396,7 @@ fn spawn_workers_inner(spec: &MultiprocSpec, children: &mut Vec<Child>) -> Resul
                     rx: Box::new(BufReader::new(stdout)),
                     tx: Box::new(BufWriter::new(stdin)),
                 });
-                children.push(child);
+                children.push(WorkerProc::new(rank, child));
             }
         }
         Transport::Tcp => {
@@ -322,11 +404,12 @@ fn spawn_workers_inner(spec: &MultiprocSpec, children: &mut Vec<Child>) -> Resul
             let addr = listener.local_addr().context("reading listener address")?.to_string();
             for rank in 0..spec.workers {
                 let child = Command::new(&exe)
-                    .args(["worker", "--transport", "tcp", "--connect", &addr])
+                    .args(worker_args(Transport::Tcp, Some(&addr)))
                     .stdin(ProcStdio::null())
+                    .stderr(ProcStdio::piped())
                     .spawn()
                     .with_context(|| format!("spawning worker {rank} from {}", exe.display()))?;
-                children.push(child);
+                children.push(WorkerProc::new(rank, child));
             }
             // Accept with a deadline, watching for children that die
             // before connecting (a blocking accept would hang forever).
@@ -344,9 +427,15 @@ fn spawn_workers_inner(spec: &MultiprocSpec, children: &mut Vec<Child>) -> Resul
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        for (rank, c) in children.iter_mut().enumerate() {
-                            if let Some(status) = c.try_wait()? {
-                                bail!("worker {rank} exited with {status} before connecting");
+                        for c in children.iter_mut() {
+                            if let Some(status) = c.child.try_wait()? {
+                                let rank = c.rank;
+                                c.join_drainer();
+                                bail!(
+                                    "worker {rank} exited with {status} before connecting; \
+                                     stderr tail:\n{}",
+                                    c.tail()
+                                );
                             }
                         }
                         if Instant::now() >= deadline {
@@ -365,27 +454,53 @@ fn spawn_workers_inner(spec: &MultiprocSpec, children: &mut Vec<Child>) -> Resul
     Ok(peers)
 }
 
-fn kill_children(children: &mut [Child]) {
+fn kill_children(children: &mut [WorkerProc]) {
     for c in children.iter_mut() {
-        let _ = c.kill();
-        let _ = c.wait();
+        let _ = c.child.kill();
+        let _ = c.child.wait();
+        c.join_drainer();
     }
 }
 
 /// On success, reap every worker and require a clean exit; on error, kill
-/// the fleet so no orphan keeps the pipes (or CI) alive.
-fn finish_children<T>(mut children: Vec<Child>, result: Result<T>) -> Result<T> {
+/// the fleet so no orphan keeps the pipes (or CI) alive. Either way a
+/// failing worker's report carries its rank and captured stderr tail
+/// (the protocol error from [`multiproc`] already carries its
+/// last-heartbeat progress).
+fn finish_children<T>(mut children: Vec<WorkerProc>, result: Result<T>) -> Result<T> {
     match result {
         Ok(v) => {
-            for (rank, c) in children.iter_mut().enumerate() {
-                let status = c.wait().with_context(|| format!("reaping worker {rank}"))?;
-                ensure!(status.success(), "worker {rank} exited with {status}");
+            for c in children.iter_mut() {
+                let rank = c.rank;
+                let status =
+                    c.child.wait().with_context(|| format!("reaping worker {rank}"))?;
+                c.join_drainer();
+                ensure!(
+                    status.success(),
+                    "worker {rank} exited with {status}; stderr tail:\n{}",
+                    c.tail()
+                );
             }
             Ok(v)
         }
         Err(e) => {
             kill_children(&mut children);
-            Err(e)
+            let mut tails = String::new();
+            for c in &children {
+                let t = c.tail();
+                if t != "<no stderr output>" {
+                    tails.push_str(&format!(
+                        "\n--- worker {} stderr tail ---\n{}",
+                        c.rank,
+                        t.trim_end()
+                    ));
+                }
+            }
+            if tails.is_empty() {
+                Err(e)
+            } else {
+                Err(e.context(format!("captured worker stderr:{tails}")))
+            }
         }
     }
 }
@@ -403,6 +518,17 @@ mod tests {
         assert!(!MultiprocSpec::new(1).is_multiproc());
         assert!(MultiprocSpec::new(2).is_multiproc());
         assert_eq!(MultiprocSpec::new(2).transport, Transport::Stdio);
+    }
+
+    #[test]
+    fn worker_args_carry_transport_and_address() {
+        let a = worker_args(Transport::Tcp, Some("127.0.0.1:9"));
+        assert_eq!(&a[..3], &["worker".to_string(), "--transport".into(), "tcp".into()]);
+        assert!(a.contains(&"--connect".to_string()));
+        assert!(a.contains(&"127.0.0.1:9".to_string()));
+        let b = worker_args(Transport::Stdio, None);
+        assert_eq!(&b[..3], &["worker".to_string(), "--transport".into(), "stdio".into()]);
+        assert!(!b.contains(&"--connect".to_string()));
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! round-to-nearest on the product shift. The paper's baselines: 16-bit
 //! (`b_f = 11`) and 12-bit (`b_f = 7`), each with 1 sign + 4 integer bits.
 
+use crate::obs::metrics::ObsTally;
+
 /// Q-format configuration for the linear fixed-point baseline.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct FixedConfig {
@@ -133,6 +135,15 @@ impl FixedSystem {
     /// `acc[j] = self.mac(acc[j], a, w[j])` (`tests/lane_exactness.rs`).
     pub fn mac_row(&self, acc: &mut [FixedValue], a: FixedValue, w: &[FixedValue]) {
         debug_assert_eq!(acc.len(), w.len());
+        // Saturation counting runs a counted copy of this body (identical
+        // values — the clamps are observed, never altered). Disabled
+        // cost: this one relaxed load.
+        if crate::obs::counters_enabled() {
+            let mut t = ObsTally::default();
+            self.mac_row_tallied(acc, a, w, &mut t);
+            t.flush_fixed();
+            return;
+        }
         let f = self.cfg.frac_bits;
         let half = 1i64 << (f - 1);
         let lo = self.cfg.min_code() as i64;
@@ -159,6 +170,12 @@ impl FixedSystem {
     /// branch changes nothing but the control flow.
     pub fn dot_acc(&self, acc: FixedValue, a: &[FixedValue], w: &[FixedValue]) -> FixedValue {
         debug_assert_eq!(a.len(), w.len());
+        if crate::obs::counters_enabled() {
+            let mut t = ObsTally::default();
+            let out = self.dot_acc_tallied(acc, a, w, &mut t);
+            t.flush_fixed();
+            return out;
+        }
         let f = self.cfg.frac_bits;
         let half = 1i64 << (f - 1);
         let lo = self.cfg.min_code() as i64;
@@ -170,6 +187,74 @@ impl FixedSystem {
             let pa = (p ^ sg) - sg;
             let rs = (((pa + half) >> f) ^ sg) - sg;
             acc = (acc + rs.clamp(lo, hi)).clamp(lo, hi);
+        }
+        acc as i32
+    }
+
+    /// [`FixedSystem::mac_row`] with saturation tallying — a verbatim
+    /// copy of the branchless body plus clamp observations
+    /// (`mul_sat`: product clamp engaged, `acc_sat`: accumulate clamp
+    /// engaged). Bit-identical to the uncounted body by construction.
+    pub(crate) fn mac_row_tallied(
+        &self,
+        acc: &mut [FixedValue],
+        a: FixedValue,
+        w: &[FixedValue],
+        t: &mut ObsTally,
+    ) {
+        debug_assert_eq!(acc.len(), w.len());
+        let f = self.cfg.frac_bits;
+        let half = 1i64 << (f - 1);
+        let lo = self.cfg.min_code() as i64;
+        let hi = self.cfg.max_code() as i64;
+        let aw = a as i64;
+        for (acc_j, &wv) in acc.iter_mut().zip(w.iter()) {
+            let p = aw * wv as i64;
+            let sg = p >> 63;
+            let pa = (p ^ sg) - sg; // |p|
+            let rs = (((pa + half) >> f) ^ sg) - sg; // round-half-away
+            let prod = rs.clamp(lo, hi);
+            if prod != rs {
+                t.mul_sat += 1;
+            }
+            let sum = *acc_j as i64 + prod;
+            let sumc = sum.clamp(lo, hi);
+            if sumc != sum {
+                t.acc_sat += 1;
+            }
+            *acc_j = sumc as i32;
+        }
+    }
+
+    /// [`FixedSystem::dot_acc`] with saturation tallying (same contract
+    /// as [`FixedSystem::mac_row_tallied`]).
+    pub(crate) fn dot_acc_tallied(
+        &self,
+        acc: FixedValue,
+        a: &[FixedValue],
+        w: &[FixedValue],
+        t: &mut ObsTally,
+    ) -> FixedValue {
+        debug_assert_eq!(a.len(), w.len());
+        let f = self.cfg.frac_bits;
+        let half = 1i64 << (f - 1);
+        let lo = self.cfg.min_code() as i64;
+        let hi = self.cfg.max_code() as i64;
+        let mut acc = acc as i64;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            let p = av as i64 * wv as i64;
+            let sg = p >> 63;
+            let pa = (p ^ sg) - sg;
+            let rs = (((pa + half) >> f) ^ sg) - sg;
+            let prod = rs.clamp(lo, hi);
+            if prod != rs {
+                t.mul_sat += 1;
+            }
+            let sum = acc + prod;
+            acc = sum.clamp(lo, hi);
+            if acc != sum {
+                t.acc_sat += 1;
+            }
         }
         acc as i32
     }
@@ -277,6 +362,50 @@ mod tests {
             slow = s.mac(slow, av, wv);
         }
         assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn tallied_kernels_bitexact_and_pin_saturation_counts() {
+        use crate::obs::metrics::ObsTally;
+        let s = s16();
+        let mc = s.config().max_code();
+
+        // Values: the counted bodies must match the branchless references
+        // on a saturation-heavy operand set.
+        let codes: Vec<i32> = (0..61i64)
+            .map(|i| ((i * 2654435761) % (2 * mc as i64 + 1)) as i32 - mc)
+            .collect();
+        for &a in &[0, 1, -1, mc, -mc] {
+            let mut counted = codes.clone();
+            let mut plain = codes.clone();
+            let mut t = ObsTally::default();
+            s.mac_row_tallied(&mut counted, a, &codes, &mut t);
+            s.mac_row(&mut plain, a, &codes);
+            assert_eq!(counted, plain, "mac_row_tallied diverged at a={a}");
+            let mut t = ObsTally::default();
+            assert_eq!(
+                s.dot_acc_tallied(7, &codes, &codes, &mut t),
+                s.dot_acc(7, &codes, &codes),
+                "dot_acc_tallied diverged"
+            );
+        }
+
+        // Hand-counted pins: max·max saturates the product; adding it to
+        // a max accumulator saturates the accumulate too.
+        let mut t = ObsTally::default();
+        let mut acc = vec![mc, 0];
+        s.mac_row_tallied(&mut acc, mc, &[mc, 0], &mut t);
+        assert_eq!(acc, vec![mc, 0]);
+        assert_eq!(t.mul_sat, 1, "max·max clamps the product");
+        assert_eq!(t.acc_sat, 1, "max + max clamps the accumulate");
+
+        // An in-range product on a zero accumulator saturates nothing.
+        let mut t = ObsTally::default();
+        let one = s.encode_f64(1.0);
+        let mut acc = vec![0];
+        s.mac_row_tallied(&mut acc, one, &[one], &mut t);
+        assert_eq!(acc, vec![one]);
+        assert_eq!(t, ObsTally::default());
     }
 
     #[test]

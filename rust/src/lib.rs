@@ -23,6 +23,7 @@
 //! | models | [`nn`] | MLP/CNN with manual ⊞/⊡ backprop, SGD, mergeable gradients |
 //! | engine | [`tensor`] | backend trait, row-parallel + cache-tiled matmuls, im2col |
 //! | number systems | [`lns`], [`fixed`] | the paper's arithmetic (Δ± LUT/bit-shift/exact), linear baseline |
+//! | observability | [`obs`] | numerics counters, span tracing, heartbeat telemetry (side layer: read-only, hooked from every tier) |
 //!
 //! The architecture map lives in `docs/ARCHITECTURE.md`; the bit-exactness
 //! contract every execution path obeys (reduction orders, tiling argument,
@@ -45,6 +46,7 @@ pub mod data;
 pub mod fixed;
 pub mod lns;
 pub mod nn;
+pub mod obs;
 pub mod proptest_util;
 pub mod rng;
 pub mod runtime;

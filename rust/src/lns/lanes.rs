@@ -32,6 +32,13 @@
 //! * the unconditional two-sided clamp equals the scalar's one-sided
 //!   clamps (Δ+ ≥ 0 makes the lower clamp a no-op on the same-sign path;
 //!   Δ− ≤ 0 makes the upper clamp a no-op on the opposite-sign path).
+//!
+//! **Observability:** the lane kernels carry no event counters. When the
+//! numerics counters are enabled, the `LnsSystem` dispatchers route to
+//! counted copies of the scalar twins *before* consulting [`enabled`] —
+//! the lane/scalar bit-exactness contract above is exactly what makes
+//! that value-preserving, and it keeps clamp/cancel tallies independent
+//! of this switch (`tests/obs_exactness.rs` pins both properties).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 

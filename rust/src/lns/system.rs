@@ -3,10 +3,11 @@
 //! This is the object threaded through the tensor/NN layers. It owns the
 //! precomputed Δ tables so the per-MAC hot path is shift/clamp/load only.
 
-use super::config::LnsConfig;
+use super::config::{DeltaMode, LnsConfig};
 use super::delta::DeltaApprox;
 use super::linconv::Pow2Table;
 use super::value::LnsValue;
+use crate::obs::metrics::{self, ObsTally};
 
 /// The non-zero ⊞ core (Eq. 3) over a pre-hoisted Δ± approximator and
 /// clamp bounds. Both operands must be non-zero words — zero handling
@@ -34,6 +35,42 @@ pub(crate) fn add_nonzero(
         LnsValue::ZERO
     } else {
         LnsValue { m: (mmax + ap.minus_i32(d)).max(m_min), s: s_z }
+    }
+}
+
+/// [`add_nonzero`] plus event counting into a stack-local
+/// [`ObsTally`]. A **verbatim copy** of the reference arithmetic — the
+/// clamp/cancel observations read the same intermediates the reference
+/// computes, they never feed back into the value — so the counted and
+/// uncounted paths are bit-identical by construction
+/// (`tests/obs_exactness.rs` pins it end to end).
+#[inline(always)]
+pub(crate) fn add_nonzero_counted(
+    ap: &DeltaApprox,
+    m_min: i32,
+    m_max: i32,
+    x: LnsValue,
+    y: LnsValue,
+    t: &mut ObsTally,
+) -> LnsValue {
+    debug_assert!(!x.is_zero() && !y.is_zero());
+    t.adds += 1;
+    let (mmax, d, s_z) = if x.m > y.m { (x.m, x.m - y.m, x.s) } else { (y.m, y.m - x.m, y.s) };
+    if x.s == y.s {
+        let m = mmax + ap.plus_i32(d);
+        if m > m_max {
+            t.clamp_hi += 1;
+        }
+        LnsValue { m: m.min(m_max), s: s_z }
+    } else if d == 0 {
+        t.cancel += 1;
+        LnsValue::ZERO
+    } else {
+        let m = mmax + ap.minus_i32(d);
+        if m < m_min {
+            t.clamp_lo += 1;
+        }
+        LnsValue { m: m.max(m_min), s: s_z }
     }
 }
 
@@ -199,6 +236,13 @@ impl LnsSystem {
         if a.is_zero() {
             return;
         }
+        // Counting forces the counted scalar body regardless of the lane
+        // switch: lane/scalar are bit-identical (NUMERICS.md §2), so this
+        // changes no values and makes tallies lane-invariant. Disabled
+        // cost: this one relaxed load.
+        if crate::obs::counters_enabled() {
+            return self.mac_row_counted(acc, a, w);
+        }
         if super::lanes::enabled() {
             super::lanes::mac_row(&self.delta, self.cfg.m_min(), self.cfg.m_max(), acc, a, w);
         } else {
@@ -247,6 +291,9 @@ impl LnsSystem {
     /// rely on this (`tests/tiled_exactness.rs`).
     pub fn mac_panel(&self, acc: &mut [LnsValue], a: &[LnsValue], panel: &[LnsValue]) {
         debug_assert_eq!(panel.len(), a.len() * acc.len());
+        if crate::obs::counters_enabled() {
+            return self.mac_panel_counted(acc, a, panel);
+        }
         if super::lanes::enabled() {
             super::lanes::mac_panel(&self.delta, self.cfg.m_min(), self.cfg.m_max(), acc, a, panel);
         } else {
@@ -294,6 +341,9 @@ impl LnsSystem {
     /// stays a sequential fold (NUMERICS.md §2 forbids regrouping it).
     pub fn dot_acc(&self, acc: LnsValue, a: &[LnsValue], w: &[LnsValue]) -> LnsValue {
         debug_assert_eq!(a.len(), w.len());
+        if crate::obs::counters_enabled() {
+            return self.dot_acc_counted(acc, a, w);
+        }
         if super::lanes::enabled() {
             let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
             return super::lanes::dot_acc(&self.delta, m_min, m_max, acc, a, w);
@@ -324,6 +374,9 @@ impl LnsSystem {
     /// [`LnsSystem::add`]) as [`LnsSystem::mac_row`].
     pub fn add_slice(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
         debug_assert_eq!(acc.len(), x.len());
+        if crate::obs::counters_enabled() {
+            return self.add_slice_counted(acc, x);
+        }
         if super::lanes::enabled() {
             super::lanes::add_slice(&self.delta, self.cfg.m_min(), self.cfg.m_max(), acc, x);
         } else {
@@ -346,6 +399,177 @@ impl LnsSystem {
                 continue;
             }
             *a = add_nonzero(ap, m_min, m_max, xv, y);
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Counted slice-kernel twins (observability)
+    // ---------------------------------------------------------------
+    //
+    // Verbatim copies of the `*_scalar` reference bodies accumulating a
+    // stack-local `ObsTally`, flushed as one atomic batch per call. They
+    // run only when `crate::obs::counters_enabled()` — the dispatchers
+    // above route here *before* the lane switch, so (a) values are
+    // unchanged (scalar ≡ lanes bit-for-bit, NUMERICS.md §2) and
+    // (b) counter totals are independent of the lane switch.
+
+    /// The Δ-dispatch counter for this system's MAC-path mode.
+    fn mac_adds_counter(&self) -> &'static metrics::Counter {
+        match self.cfg.delta {
+            DeltaMode::Lut(_) => &metrics::DELTA_LUT_ADDS,
+            DeltaMode::BitShift => &metrics::DELTA_SHIFT_ADDS,
+            DeltaMode::Exact => &metrics::DELTA_EXACT_ADDS,
+        }
+    }
+
+    fn mac_row_counted(&self, acc: &mut [LnsValue], a: LnsValue, w: &[LnsValue]) {
+        let mut t = ObsTally::default();
+        self.mac_row_tallied(acc, a, w, &mut t);
+        t.flush_lns(self.mac_adds_counter());
+    }
+
+    /// [`LnsSystem::mac_row_scalar`] with event tallying (exercised
+    /// directly by the counter-pin unit tests below).
+    pub(crate) fn mac_row_tallied(
+        &self,
+        acc: &mut [LnsValue],
+        a: LnsValue,
+        w: &[LnsValue],
+        t: &mut ObsTally,
+    ) {
+        debug_assert_eq!(acc.len(), w.len());
+        if a.is_zero() {
+            return;
+        }
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        let (a_m, a_s) = (a.m, a.s);
+        for (acc_j, &wv) in acc.iter_mut().zip(w.iter()) {
+            if wv.is_zero() {
+                t.zero_skip += 1;
+                continue; // acc ⊞ 0 = acc exactly
+            }
+            let pm = a_m + wv.m;
+            let pmc = pm.clamp(m_min, m_max);
+            if pmc != pm {
+                t.mul_sat += 1;
+            }
+            let p = LnsValue { m: pmc, s: !(a_s ^ wv.s) };
+            let x = *acc_j;
+            *acc_j = if x.is_zero() { p } else { add_nonzero_counted(ap, m_min, m_max, x, p, t) };
+        }
+    }
+
+    fn mac_panel_counted(&self, acc: &mut [LnsValue], a: &[LnsValue], panel: &[LnsValue]) {
+        let mut t = ObsTally::default();
+        self.mac_panel_tallied(acc, a, panel, &mut t);
+        t.flush_lns(self.mac_adds_counter());
+    }
+
+    /// [`LnsSystem::mac_panel_scalar`] with event tallying.
+    pub(crate) fn mac_panel_tallied(
+        &self,
+        acc: &mut [LnsValue],
+        a: &[LnsValue],
+        panel: &[LnsValue],
+        t: &mut ObsTally,
+    ) {
+        let nc = acc.len();
+        debug_assert_eq!(panel.len(), a.len() * nc);
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        for (p, &av) in a.iter().enumerate() {
+            if av.is_zero() {
+                // The uncounted kernels skip the whole panel row in one
+                // test; tally it as `nc` skipped products so totals match
+                // the per-element definition used everywhere else.
+                t.zero_skip += nc as u64;
+                continue;
+            }
+            let (a_m, a_s) = (av.m, av.s);
+            let wrow = &panel[p * nc..(p + 1) * nc];
+            for (acc_j, &wv) in acc.iter_mut().zip(wrow.iter()) {
+                if wv.is_zero() {
+                    t.zero_skip += 1;
+                    continue; // acc ⊞ 0 = acc exactly
+                }
+                let pm = a_m + wv.m;
+                let pmc = pm.clamp(m_min, m_max);
+                if pmc != pm {
+                    t.mul_sat += 1;
+                }
+                let prod = LnsValue { m: pmc, s: !(a_s ^ wv.s) };
+                let x = *acc_j;
+                *acc_j = if x.is_zero() {
+                    prod
+                } else {
+                    add_nonzero_counted(ap, m_min, m_max, x, prod, t)
+                };
+            }
+        }
+    }
+
+    fn dot_acc_counted(&self, acc: LnsValue, a: &[LnsValue], w: &[LnsValue]) -> LnsValue {
+        let mut t = ObsTally::default();
+        let out = self.dot_acc_tallied(acc, a, w, &mut t);
+        t.flush_lns(self.mac_adds_counter());
+        out
+    }
+
+    /// [`LnsSystem::dot_acc_scalar`] with event tallying.
+    pub(crate) fn dot_acc_tallied(
+        &self,
+        acc: LnsValue,
+        a: &[LnsValue],
+        w: &[LnsValue],
+        t: &mut ObsTally,
+    ) -> LnsValue {
+        debug_assert_eq!(a.len(), w.len());
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        let mut acc = acc;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            if av.is_zero() || wv.is_zero() {
+                t.zero_skip += 1;
+                continue;
+            }
+            let pm = av.m + wv.m;
+            let pmc = pm.clamp(m_min, m_max);
+            if pmc != pm {
+                t.mul_sat += 1;
+            }
+            let prod = LnsValue { m: pmc, s: !(av.s ^ wv.s) };
+            acc = if acc.is_zero() {
+                prod
+            } else {
+                add_nonzero_counted(ap, m_min, m_max, acc, prod, t)
+            };
+        }
+        acc
+    }
+
+    fn add_slice_counted(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
+        let mut t = ObsTally::default();
+        self.add_slice_tallied(acc, x, &mut t);
+        t.flush_lns(self.mac_adds_counter());
+    }
+
+    /// [`LnsSystem::add_slice_scalar`] with event tallying.
+    pub(crate) fn add_slice_tallied(&self, acc: &mut [LnsValue], x: &[LnsValue], t: &mut ObsTally) {
+        debug_assert_eq!(acc.len(), x.len());
+        let ap = &self.delta;
+        let (m_min, m_max) = (self.cfg.m_min(), self.cfg.m_max());
+        for (a, &y) in acc.iter_mut().zip(x.iter()) {
+            let xv = *a;
+            if xv.is_zero() {
+                *a = y;
+                continue;
+            }
+            if y.is_zero() {
+                t.zero_skip += 1;
+                continue;
+            }
+            *a = add_nonzero_counted(ap, m_min, m_max, xv, y, t);
         }
     }
 
@@ -793,6 +1017,104 @@ mod tests {
                 assert_eq!(fast, slow, "case {case}: add_slice diverged from add");
             }
         }
+    }
+
+    #[test]
+    fn tallied_kernels_bitexact_vs_scalar_twins() {
+        // The counted bodies must be value-for-value identical to the
+        // scalar references on random operand sets (the observation must
+        // be read-only). Exercised directly — no global obs flags — so
+        // this cannot race other tests.
+        use crate::obs::metrics::ObsTally;
+        for cfg in [LnsConfig::w16_lut(), LnsConfig::w12_bitshift()] {
+            let s = LnsSystem::new(cfg);
+            let mut rng = crate::rng::SplitMix64::new(0x0B5 ^ cfg.total_bits as u64);
+            for _ in 0..120 {
+                let n = 1 + rng.next_below(40) as usize;
+                let a = arb(&mut rng, &s);
+                let acc: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let w: Vec<LnsValue> = (0..n).map(|_| arb(&mut rng, &s)).collect();
+                let mut t = ObsTally::default();
+
+                let mut counted = acc.clone();
+                s.mac_row_tallied(&mut counted, a, &w, &mut t);
+                let mut scalar = acc.clone();
+                s.mac_row_scalar(&mut scalar, a, &w);
+                assert_eq!(counted, scalar, "mac_row_tallied diverged");
+
+                let acc0 = arb(&mut rng, &s);
+                assert_eq!(
+                    s.dot_acc_tallied(acc0, &acc, &w, &mut t),
+                    s.dot_acc_scalar(acc0, &acc, &w),
+                    "dot_acc_tallied diverged"
+                );
+
+                let mut counted = acc.clone();
+                s.add_slice_tallied(&mut counted, &w, &mut t);
+                let mut scalar = acc.clone();
+                s.add_slice_scalar(&mut scalar, &w);
+                assert_eq!(counted, scalar, "add_slice_tallied diverged");
+
+                let nc = 1 + rng.next_below(9) as usize;
+                let depth = 1 + rng.next_below(5) as usize;
+                let av: Vec<LnsValue> = (0..depth).map(|_| arb(&mut rng, &s)).collect();
+                let panel: Vec<LnsValue> = (0..depth * nc).map(|_| arb(&mut rng, &s)).collect();
+                let mut counted: Vec<LnsValue> = acc.iter().copied().take(nc).collect();
+                let mut scalar = counted.clone();
+                while counted.len() < nc {
+                    counted.push(LnsValue::ZERO);
+                    scalar.push(LnsValue::ZERO);
+                }
+                s.mac_panel_tallied(&mut counted, &av, &panel, &mut t);
+                s.mac_panel_scalar(&mut scalar, &av, &panel);
+                assert_eq!(counted, scalar, "mac_panel_tallied diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn tally_pins_on_hand_counted_operands() {
+        use crate::obs::metrics::ObsTally;
+        let s = sys16();
+        let hi = s.config().m_max();
+        let pos_max = LnsValue::new(hi, true);
+        let one = LnsValue::ONE; // m = 0
+        let x = s.encode_f64(2.75);
+
+        // Exact cancellation: one ⊞ fold, one cancel, no clamps.
+        let mut t = ObsTally::default();
+        let mut acc = vec![x];
+        s.add_slice_tallied(&mut acc, &[x.neg()], &mut t);
+        assert!(acc[0].is_zero());
+        assert_eq!(t, ObsTally { adds: 1, cancel: 1, ..Default::default() });
+
+        // Top-of-range same-sign add: Δ+ pushes past m_max → clamp_hi.
+        let mut t = ObsTally::default();
+        let mut acc = vec![pos_max];
+        s.add_slice_tallied(&mut acc, &[pos_max], &mut t);
+        assert_eq!(acc[0].m, hi);
+        assert_eq!(t, ObsTally { adds: 1, clamp_hi: 1, ..Default::default() });
+
+        // mac_row over [1, 0, max]: one zero skip, one product
+        // saturation (max ⊡ max), two non-zero ⊞ folds onto acc = 1.
+        let mut t = ObsTally::default();
+        let mut acc = vec![one, one, one];
+        s.mac_row_tallied(&mut acc, pos_max, &[one, LnsValue::ZERO, pos_max], &mut t);
+        assert_eq!(t.zero_skip, 1);
+        assert_eq!(t.mul_sat, 1);
+        assert_eq!(t.adds, 2);
+
+        // dot_acc zero skips count either-operand-zero pairs.
+        let mut t = ObsTally::default();
+        let out = s.dot_acc_tallied(
+            LnsValue::ZERO,
+            &[x, LnsValue::ZERO, x],
+            &[LnsValue::ZERO, x, x],
+            &mut t,
+        );
+        assert!(!out.is_zero());
+        assert_eq!(t.zero_skip, 2);
+        assert_eq!(t.adds, 0, "first non-zero product lands in a zero acc");
     }
 
     #[test]

@@ -108,6 +108,14 @@ COMMANDS
 CONFIG TAGS
   float lin12 lin16 log12-lut log16-lut log12-bs log16-bs log16-exact
 
+OBSERVABILITY (any command; most useful on train/cnn/fig2/table1/worker)
+  --obs            enable numerics counters + a per-epoch stderr table,
+                   plus an end-of-run summary at <out>/obs_summary.md
+  --trace FILE     record phase spans; writes Chrome trace JSON on exit
+  --metrics FILE   stream per-epoch counter snapshots as JSON lines
+Observation is read-only: trained weights are bit-identical with or
+without these flags (see docs/OBSERVABILITY.md).
+
 Datasets default to the synthetic paper stand-ins; pass --data-dir with
 real IDX files (mnist/fmnist/emnistd/emnistl tags) to use them instead.
 --scale shrinks the synthetic datasets (1.0 = full paper scale).
@@ -123,8 +131,18 @@ fn run() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
-    let flags = Flags::parse(&args[1..])?;
-    match cmd.as_str() {
+    // `--obs` is the one bare switch (every other flag is `--key value`),
+    // so it is peeled off before the strict k/v parse.
+    let mut rest: Vec<String> = args[1..].to_vec();
+    let obs_switch = rest.iter().any(|a| a == "--obs");
+    rest.retain(|a| a != "--obs");
+    let flags = Flags::parse(&rest)?;
+    if obs_switch {
+        lnsdnn::obs::set_counters(true);
+        lnsdnn::obs::metrics::set_table(true);
+    }
+    let trace = obs_flags(&flags)?;
+    let result = match cmd.as_str() {
         "fig1" => cmd_fig1(&flags),
         "fig2" => cmd_fig2(&flags),
         "table1" => cmd_table1(&flags),
@@ -139,7 +157,39 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    };
+    // Write the trace even when the command failed — a trace of the run
+    // that died is exactly what the flag is for.
+    if let Some(path) = &trace {
+        lnsdnn::obs::trace::write_chrome_trace(path)
+            .with_context(|| format!("writing --trace file {}", path.display()))?;
+        eprintln!("[obs] Chrome trace → {}", path.display());
     }
+    // Workers are excluded: a coordinator passes `--obs` through to all
+    // N of them, and N processes racing on one summary file helps nobody
+    // — worker telemetry reaches the coordinator via heartbeats instead.
+    if obs_switch && result.is_ok() && cmd != "worker" {
+        let path = out_dir(&flags).join("obs_summary.md");
+        report::write_markdown(&path, &report::obs_markdown(cmd))?;
+        eprintln!("[obs] summary → {}", path.display());
+    }
+    result
+}
+
+/// Wire the `--trace` / `--metrics` observability sinks. Returns the
+/// Chrome-trace output path so [`run`] can render it once the command
+/// finishes (span events accumulate until then).
+fn obs_flags(flags: &Flags) -> Result<Option<PathBuf>> {
+    if let Some(p) = flags.get("metrics") {
+        lnsdnn::obs::set_counters(true);
+        lnsdnn::obs::metrics::set_metrics_path(std::path::Path::new(p))
+            .with_context(|| format!("creating --metrics sink {p}"))?;
+    }
+    let trace = flags.get("trace").map(PathBuf::from);
+    if trace.is_some() {
+        lnsdnn::obs::set_trace(true);
+    }
+    Ok(trace)
 }
 
 fn out_dir(flags: &Flags) -> PathBuf {

@@ -20,6 +20,7 @@
 use super::grad::{GradStore, RawStepStats};
 use super::init::InitScheme;
 use super::mlp::{Dense, Gradients, StepStats};
+use crate::obs::{layer_scope, span, SpanKind};
 use crate::rng::SplitMix64;
 use crate::tensor::im2col::{self, ConvShape};
 use crate::tensor::{ops, Backend, Tensor};
@@ -164,10 +165,13 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
         mode: Mode,
     ) -> (Tensor<E>, Tensor<E>) {
         assert_eq!(x.cols, self.shape.in_len(), "conv input width mismatch");
-        let cols = match mode {
-            Mode::Serial => im2col::im2col_serial(backend, x, &self.shape),
-            Mode::Par => im2col::im2col_par(backend, x, &self.shape),
-            Mode::Tiled | Mode::Auto => im2col::im2col(backend, x, &self.shape),
+        let cols = {
+            let _sp = span(SpanKind::Im2col);
+            match mode {
+                Mode::Serial => im2col::im2col_serial(backend, x, &self.shape),
+                Mode::Par => im2col::im2col_par(backend, x, &self.shape),
+                Mode::Tiled | Mode::Auto => im2col::im2col(backend, x, &self.shape),
+            }
         };
         let mut y_cols = mm(backend, &cols, &self.w, mode);
         // Row-broadcast bias: bit-identical on either engine path.
@@ -245,6 +249,7 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Conv2d<E> {
         // receptive field it came from.
         let dx = if need_dx {
             let d_patches = mm_bt(backend, &d_cols, &self.w, mode);
+            let _sp = span(SpanKind::Im2col);
             Some(match mode {
                 Mode::Serial => im2col::col2im_serial(backend, &d_patches, &self.shape, batch),
                 Mode::Par => im2col::col2im_par(backend, &d_patches, &self.shape, batch),
@@ -752,9 +757,16 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         mode: Mode,
     ) -> CnnCache<E> {
         assert_eq!(x.cols, self.arch.input_len(), "CNN input width mismatch");
+        let _sp = span(SpanKind::Forward);
         let pooled = self.arch.variant == CnnVariant::Pooled;
-        let (cols1, z1) = self.conv1.forward_mode(backend, x, mode);
-        let a1 = ops::leaky_relu(backend, &z1);
+        // Counter scopes 1–4 attribute numerics tallies to conv1, conv2,
+        // fc1, fc2 respectively (free when counting is off).
+        let (cols1, z1, a1) = {
+            let _scope = layer_scope(1);
+            let (cols1, z1) = self.conv1.forward_mode(backend, x, mode);
+            let a1 = ops::leaky_relu(backend, &z1);
+            (cols1, z1, a1)
+        };
         // Strided variant: the activation map feeds conv-2 directly
         // (`p1 = a1`, empty routing) — downsampling happened in the conv.
         let (p1, route1) = if pooled {
@@ -762,18 +774,30 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         } else {
             (a1, Vec::new())
         };
-        let (cols2, z2) = self.conv2.forward_mode(backend, &p1, mode);
-        let a2 = ops::leaky_relu(backend, &z2);
+        let (cols2, z2, a2) = {
+            let _scope = layer_scope(2);
+            let (cols2, z2) = self.conv2.forward_mode(backend, &p1, mode);
+            let a2 = ops::leaky_relu(backend, &z2);
+            (cols2, z2, a2)
+        };
         let (p2, route2) = if pooled {
             self.arch.pool2().forward(backend, &a2)
         } else {
             (a2, Vec::new())
         };
-        let mut zf = mm(backend, &p2, &self.fc1.w, mode);
-        ops::add_bias(backend, &mut zf, &self.fc1.b);
-        let af = ops::leaky_relu(backend, &zf);
-        let mut logits = mm(backend, &af, &self.fc2.w, mode);
-        ops::add_bias(backend, &mut logits, &self.fc2.b);
+        let (zf, af) = {
+            let _scope = layer_scope(3);
+            let mut zf = mm(backend, &p2, &self.fc1.w, mode);
+            ops::add_bias(backend, &mut zf, &self.fc1.b);
+            let af = ops::leaky_relu(backend, &zf);
+            (zf, af)
+        };
+        let logits = {
+            let _scope = layer_scope(4);
+            let mut logits = mm(backend, &af, &self.fc2.w, mode);
+            ops::add_bias(backend, &mut logits, &self.fc2.b);
+            logits
+        };
         CnnCache { cols1, z1, p1, route1, cols2, z2, p2, route2, zf, af, logits }
     }
 
@@ -838,6 +862,9 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         let batch = x.rows;
         assert_eq!(labels.len(), batch);
         let cache = self.forward(backend, x);
+        // As in the MLP, the Backward span opens after the forward pass so
+        // the trace shows the two phases side by side.
+        let _sp = span(SpanKind::Backward);
         let classes = self.arch.classes;
         let pooled = self.arch.variant == CnnVariant::Pooled;
 
@@ -849,16 +876,22 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         let (loss, correct) = ops::softmax_ce_head(backend, &cache.logits, labels, &mut delta);
 
         // Head: dW = afᵀ·δ, db = Σ δ, δ ← (δ·W₂ᵀ) ⊙ act'(zf).
-        let dw_fc2 = ops::matmul_at(backend, &cache.af, &delta);
-        let db_fc2 = ops::col_sum(backend, &delta);
-        let back = ops::matmul_bt(backend, &delta, &self.fc2.w);
-        let d_hidden = ops::leaky_relu_bwd(backend, &cache.zf, &back);
+        let (dw_fc2, db_fc2, d_hidden) = {
+            let _scope = layer_scope(4);
+            let dw_fc2 = ops::matmul_at(backend, &cache.af, &delta);
+            let db_fc2 = ops::col_sum(backend, &delta);
+            let back = ops::matmul_bt(backend, &delta, &self.fc2.w);
+            (dw_fc2, db_fc2, ops::leaky_relu_bwd(backend, &cache.zf, &back))
+        };
 
         // Hidden dense: dW = p₂ᵀ·δ, then δ leaves the dense head as the
         // flattened pool-2 (or conv-2 activation) gradient.
-        let dw_fc1 = ops::matmul_at(backend, &cache.p2, &d_hidden);
-        let db_fc1 = ops::col_sum(backend, &d_hidden);
-        let d_p2 = ops::matmul_bt(backend, &d_hidden, &self.fc1.w);
+        let (dw_fc1, db_fc1, d_p2) = {
+            let _scope = layer_scope(3);
+            let dw_fc1 = ops::matmul_at(backend, &cache.p2, &d_hidden);
+            let db_fc1 = ops::col_sum(backend, &d_hidden);
+            (dw_fc1, db_fc1, ops::matmul_bt(backend, &d_hidden, &self.fc1.w))
+        };
 
         // Pool-2 (identity when strided) → llReLU → conv-2.
         let d_a2 = if pooled {
@@ -866,8 +899,11 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         } else {
             d_p2
         };
-        let d_z2 = ops::leaky_relu_bwd(backend, &cache.z2, &d_a2);
-        let (dw2, db2, d_p1) = self.conv2.backward(backend, &cache.cols2, &d_z2, true);
+        let (dw2, db2, d_p1) = {
+            let _scope = layer_scope(2);
+            let d_z2 = ops::leaky_relu_bwd(backend, &cache.z2, &d_a2);
+            self.conv2.backward(backend, &cache.cols2, &d_z2, true)
+        };
         let d_p1 = d_p1.expect("conv2 backward with need_dx");
 
         // Pool-1 (identity when strided) → llReLU → conv-1 (input
@@ -877,8 +913,11 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         } else {
             d_p1
         };
-        let d_z1 = ops::leaky_relu_bwd(backend, &cache.z1, &d_a1);
-        let (dw1, db1, _) = self.conv1.backward(backend, &cache.cols1, &d_z1, false);
+        let (dw1, db1, _) = {
+            let _scope = layer_scope(1);
+            let d_z1 = ops::leaky_relu_bwd(backend, &cache.z1, &d_a1);
+            self.conv1.backward(backend, &cache.cols1, &d_z1, false)
+        };
 
         (
             Gradients {

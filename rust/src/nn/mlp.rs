@@ -18,6 +18,7 @@
 
 use super::grad::{GradStore, RawStepStats};
 use super::init::{he_normal_init, log_domain_init, InitScheme};
+use crate::obs::{layer_scope, span, SpanKind};
 use crate::rng::SplitMix64;
 use crate::tensor::{ops, Backend, Tensor};
 
@@ -120,10 +121,14 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         x: &Tensor<E>,
     ) -> (Vec<Tensor<E>>, Vec<Tensor<E>>) {
         assert_eq!(x.cols, self.dims[0], "input width mismatch");
+        let _sp = span(SpanKind::Forward);
         let mut zs = Vec::with_capacity(self.layers.len());
         let mut acts = Vec::with_capacity(self.layers.len() + 1);
         acts.push(x.clone());
         for (l, layer) in self.layers.iter().enumerate() {
+            // Attribute this layer's numerics counters to scope `l + 1`
+            // (scope 0 stays "unscoped"); free when counting is off.
+            let _scope = layer_scope(l + 1);
             let mut z = ops::matmul(backend, acts.last().unwrap(), &layer.w);
             ops::add_bias(backend, &mut z, &layer.b);
             let a = if l + 1 == self.layers.len() {
@@ -197,6 +202,9 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         let batch = x.rows;
         assert_eq!(labels.len(), batch);
         let (zs, acts) = self.forward(backend, x);
+        // The Backward span opens after the forward pass so the trace
+        // shows the two phases side by side, head bookkeeping included.
+        let _sp = span(SpanKind::Backward);
         let logits = acts.last().unwrap();
         let classes = self.dims[self.dims.len() - 1];
 
@@ -213,6 +221,7 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         let mut dw = vec![Tensor::full(0, 0, backend.zero()); nl];
         let mut db = vec![Vec::new(); nl];
         for l in (0..nl).rev() {
+            let _scope = layer_scope(l + 1);
             dw[l] = ops::matmul_at(backend, &acts[l], &delta);
             db[l] = ops::col_sum(backend, &delta);
             if l > 0 {

@@ -7,6 +7,7 @@
 
 use super::conv::Cnn;
 use super::mlp::{Gradients, Mlp};
+use crate::obs::{span, SpanKind};
 use crate::tensor::{Backend, Tensor};
 
 /// SGD hyper-parameters (paper §5: lr = 0.01, mini-batch 5, per-dataset
@@ -53,6 +54,7 @@ impl SgdConfig {
 
     /// Apply one update in-place.
     pub fn apply<B: Backend>(&self, backend: &B, mlp: &mut Mlp<B::E>, grads: &Gradients<B::E>) {
+        let _sp = span(SpanKind::Update);
         for (layer, (dw, db)) in mlp.layers.iter_mut().zip(grads.dw.iter().zip(&grads.db)) {
             self.update_layer(backend, &mut layer.w, &mut layer.b, dw, db);
         }
@@ -61,6 +63,7 @@ impl SgdConfig {
     /// Apply one update to a CNN, matching the gradient layer order of
     /// [`Cnn::backprop`]: `[conv1, conv2, fc1, fc2]`.
     pub fn apply_cnn<B: Backend>(&self, backend: &B, cnn: &mut Cnn<B::E>, grads: &Gradients<B::E>) {
+        let _sp = span(SpanKind::Update);
         assert_eq!(grads.dw.len(), 4, "CNN gradients carry four layers");
         self.update_layer(backend, &mut cnn.conv1.w, &mut cnn.conv1.b, &grads.dw[0], &grads.db[0]);
         self.update_layer(backend, &mut cnn.conv2.w, &mut cnn.conv2.b, &grads.dw[1], &grads.db[1]);

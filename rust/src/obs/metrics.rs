@@ -1,0 +1,589 @@
+//! Metrics registry: relaxed-atomic counters and fixed-bucket histograms
+//! under static keys.
+//!
+//! Every counter is a bank of [`MAX_SCOPES`] relaxed [`AtomicU64`] cells
+//! indexed by the thread-local *attribution scope* (scope 0 = unscoped,
+//! scopes 1… = model layer), so per-layer ⊞ clamp/cancel statistics come
+//! out of the same increment that feeds the global total. Counters are
+//! **observation only**: nothing in this module is ever read back by an
+//! arithmetic path, so enabling or disabling them cannot change a single
+//! trained bit (see `docs/OBSERVABILITY.md` and the invariant clause in
+//! `docs/NUMERICS.md`).
+//!
+//! Cost model: when counting is disabled
+//! ([`crate::obs::counters_enabled`] is `false`) the hot paths pay one
+//! relaxed atomic load per slice-kernel call and nothing else — the
+//! counted kernel bodies are separate functions that are never entered.
+//! When enabled, kernels accumulate into a stack-local [`ObsTally`] and
+//! flush it with one batch of relaxed `fetch_add`s per call.
+
+use std::cell::Cell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+/// Number of attribution scopes per counter: scope 0 collects increments
+/// made outside any layer scope, scopes `1..MAX_SCOPES` are model layers
+/// (deeper layers clamp into the last cell).
+pub const MAX_SCOPES: usize = 16;
+
+// ---------------------------------------------------------------------
+// Attribution scopes
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT_SCOPE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The attribution scope increments on this thread currently land in.
+#[inline]
+pub fn current_scope() -> usize {
+    CURRENT_SCOPE.get()
+}
+
+/// RAII guard restoring the previous attribution scope on drop. Inert
+/// (field `None`) when produced by [`layer_scope`] with counting off.
+pub struct ScopeGuard {
+    prev: Option<usize>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev {
+            CURRENT_SCOPE.set(prev);
+        }
+    }
+}
+
+/// Enter attribution scope `scope` (clamped to the scope bank) until the
+/// returned guard drops.
+pub fn enter_scope(scope: usize) -> ScopeGuard {
+    let s = scope.min(MAX_SCOPES - 1);
+    ScopeGuard { prev: Some(CURRENT_SCOPE.replace(s)) }
+}
+
+/// Enter the scope for model layer `layer` (1-based) — a no-op guard when
+/// counting is disabled, so the hot path pays one relaxed load.
+#[inline]
+pub fn layer_scope(layer: usize) -> ScopeGuard {
+    if super::counters_enabled() {
+        enter_scope(layer)
+    } else {
+        ScopeGuard { prev: None }
+    }
+}
+
+/// Capture the current scope for hand-off into rayon tasks: thread-local
+/// scope does not cross pool threads, so parallel drivers capture this
+/// before fanning out and re-enter it per task (see `tensor/ops.rs`).
+/// `None` when counting is disabled — tasks then skip the re-entry.
+#[inline]
+pub fn task_scope() -> Option<usize> {
+    if super::counters_enabled() {
+        Some(current_scope())
+    } else {
+        None
+    }
+}
+
+/// Re-enter a scope captured by [`task_scope`] inside a worker task.
+#[inline]
+pub fn reenter_scope(scope: Option<usize>) -> ScopeGuard {
+    match scope {
+        Some(s) => enter_scope(s),
+        None => ScopeGuard { prev: None },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Counters
+// ---------------------------------------------------------------------
+
+/// A named monotone counter with per-scope relaxed-atomic cells.
+pub struct Counter {
+    name: &'static str,
+    cells: [AtomicU64; MAX_SCOPES],
+}
+
+impl Counter {
+    /// New zeroed counter under a static key (const so counters can be
+    /// `static` items — the registry is the set of statics below).
+    pub const fn new(name: &'static str) -> Self {
+        Counter { name, cells: [const { AtomicU64::new(0) }; MAX_SCOPES] }
+    }
+
+    /// Static key this counter is registered under.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Add `n` at the current attribution scope (relaxed; no-op for 0).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if n != 0 {
+            self.cells[current_scope()].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Sum over all scopes.
+    pub fn total(&self) -> u64 {
+        self.cells.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-scope values (index 0 = unscoped, 1… = layer).
+    pub fn by_scope(&self) -> [u64; MAX_SCOPES] {
+        let mut out = [0u64; MAX_SCOPES];
+        for (o, c) in out.iter_mut().zip(self.cells.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Zero every cell.
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// ⊞ result clamped at the top of the magnitude range (`m > m_max`).
+pub static LNS_CLAMP_HI: Counter = Counter::new("lns_clamp_hi");
+/// ⊞ result clamped at the bottom of the magnitude range (`m < m_min`).
+pub static LNS_CLAMP_LO: Counter = Counter::new("lns_clamp_lo");
+/// Opposite-sign equal-magnitude ⊞ cancelled exactly to zero.
+pub static LNS_CANCEL: Counter = Counter::new("lns_cancel");
+/// ⊡ product magnitude clamped to the representable range.
+pub static LNS_MUL_SAT: Counter = Counter::new("lns_mul_sat");
+/// Fixed-point product saturated by the post-rounding clamp.
+pub static FIXED_MUL_SAT: Counter = Counter::new("fixed_mul_sat");
+/// Fixed-point accumulator saturated by the post-add clamp.
+pub static FIXED_ACC_SAT: Counter = Counter::new("fixed_acc_sat");
+/// Zero operands skipped by the slice kernels (`acc ⊞ 0 = acc` exactly).
+pub static DOT_ZERO_SKIP: Counter = Counter::new("dot_zero_skip");
+/// Non-zero ⊞ folds evaluated through a Δ± lookup table.
+pub static DELTA_LUT_ADDS: Counter = Counter::new("delta_lut_adds");
+/// Non-zero ⊞ folds evaluated through the closed-form bit-shift Δ±.
+pub static DELTA_SHIFT_ADDS: Counter = Counter::new("delta_shift_adds");
+/// Non-zero ⊞ folds evaluated through the Exact (float round-trip) Δ±.
+pub static DELTA_EXACT_ADDS: Counter = Counter::new("delta_exact_adds");
+/// Wire frames written (header + payload).
+pub static WIRE_FRAMES_TX: Counter = Counter::new("wire_frames_tx");
+/// Wire frames read and verified.
+pub static WIRE_FRAMES_RX: Counter = Counter::new("wire_frames_rx");
+/// Bytes written to wire peers (headers included).
+pub static WIRE_BYTES_TX: Counter = Counter::new("wire_bytes_tx");
+/// Bytes read from wire peers (headers included).
+pub static WIRE_BYTES_RX: Counter = Counter::new("wire_bytes_rx");
+/// Frames rejected by the FNV-1a payload checksum.
+pub static WIRE_CHECKSUM_FAIL: Counter = Counter::new("wire_checksum_fail");
+/// Heartbeat frames emitted by this process (worker role).
+pub static HEARTBEAT_TX: Counter = Counter::new("heartbeat_tx");
+/// Heartbeat frames consumed by this process (coordinator role).
+pub static HEARTBEAT_RX: Counter = Counter::new("heartbeat_rx");
+/// Worker peers detected dead by the coordinator.
+pub static WORKER_DEATHS: Counter = Counter::new("worker_deaths");
+
+/// The counter registry, in stable order (snapshots rely on it).
+pub fn all() -> [&'static Counter; 18] {
+    [
+        &LNS_CLAMP_HI,
+        &LNS_CLAMP_LO,
+        &LNS_CANCEL,
+        &LNS_MUL_SAT,
+        &FIXED_MUL_SAT,
+        &FIXED_ACC_SAT,
+        &DOT_ZERO_SKIP,
+        &DELTA_LUT_ADDS,
+        &DELTA_SHIFT_ADDS,
+        &DELTA_EXACT_ADDS,
+        &WIRE_FRAMES_TX,
+        &WIRE_FRAMES_RX,
+        &WIRE_BYTES_TX,
+        &WIRE_BYTES_RX,
+        &WIRE_CHECKSUM_FAIL,
+        &HEARTBEAT_TX,
+        &HEARTBEAT_RX,
+        &WORKER_DEATHS,
+    ]
+}
+
+/// Zero every registered counter and histogram.
+pub fn reset_all() {
+    for c in all() {
+        c.reset();
+    }
+    WIRE_FRAME_BYTES.reset();
+    WORKER_DETECT_LATENCY_MS.reset();
+}
+
+// ---------------------------------------------------------------------
+// Kernel-local tally
+// ---------------------------------------------------------------------
+
+/// Stack-local event tally a counted kernel accumulates into, flushed as
+/// one batch of relaxed `fetch_add`s per kernel call — the counted bodies
+/// touch no atomics in their inner loops.
+#[derive(Default, Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsTally {
+    /// Non-zero ⊞ folds (Δ± evaluations).
+    pub adds: u64,
+    /// ⊞ results clamped at `m_max`.
+    pub clamp_hi: u64,
+    /// ⊞ results clamped at `m_min`.
+    pub clamp_lo: u64,
+    /// Exact opposite-sign cancellations to zero.
+    pub cancel: u64,
+    /// Product saturations (⊡ magnitude clamp / fixed product clamp).
+    pub mul_sat: u64,
+    /// Fixed-point accumulator saturations.
+    pub acc_sat: u64,
+    /// Zero operands skipped.
+    pub zero_skip: u64,
+}
+
+impl ObsTally {
+    /// Flush an LNS kernel tally; `adds_into` selects the Δ-dispatch
+    /// counter ([`DELTA_LUT_ADDS`] / [`DELTA_SHIFT_ADDS`] /
+    /// [`DELTA_EXACT_ADDS`]) for this system's mode.
+    #[inline]
+    pub fn flush_lns(self, adds_into: &'static Counter) {
+        adds_into.add(self.adds);
+        LNS_CLAMP_HI.add(self.clamp_hi);
+        LNS_CLAMP_LO.add(self.clamp_lo);
+        LNS_CANCEL.add(self.cancel);
+        LNS_MUL_SAT.add(self.mul_sat);
+        DOT_ZERO_SKIP.add(self.zero_skip);
+    }
+
+    /// Flush a fixed-point kernel tally.
+    #[inline]
+    pub fn flush_fixed(self) {
+        FIXED_MUL_SAT.add(self.mul_sat);
+        FIXED_ACC_SAT.add(self.acc_sat);
+        DOT_ZERO_SKIP.add(self.zero_skip);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Histograms
+// ---------------------------------------------------------------------
+
+/// Maximum bucket count (bounds plus one overflow bucket).
+pub const MAX_BUCKETS: usize = 9;
+
+/// A fixed-bucket histogram: `bounds` are inclusive upper bounds, the
+/// last cell collects everything above the final bound.
+pub struct Histogram {
+    name: &'static str,
+    bounds: &'static [u64],
+    cells: [AtomicU64; MAX_BUCKETS],
+}
+
+impl Histogram {
+    /// New zeroed histogram; `bounds` must hold at most
+    /// `MAX_BUCKETS - 1` ascending inclusive upper bounds.
+    pub const fn new(name: &'static str, bounds: &'static [u64]) -> Self {
+        assert!(bounds.len() < MAX_BUCKETS);
+        Histogram { name, bounds, cells: [const { AtomicU64::new(0) }; MAX_BUCKETS] }
+    }
+
+    /// Static key this histogram is registered under.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Inclusive upper bounds (the overflow bucket follows them).
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Record one observation of `v` (relaxed).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let mut i = 0;
+        while i < self.bounds.len() && v > self.bounds[i] {
+            i += 1;
+        }
+        self.cells[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Bucket counts (bounds buckets, then the overflow bucket).
+    pub fn counts(&self) -> Vec<u64> {
+        self.cells[..=self.bounds.len()].iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total observations recorded.
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Zero every bucket.
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Wire frame payload sizes in bytes (gradient frames dominate).
+pub static WIRE_FRAME_BYTES: Histogram =
+    Histogram::new("wire_frame_bytes", &[64, 256, 1024, 4096, 16384, 65536, 262144, 1048576]);
+/// Milliseconds between a worker's last heartbeat and the coordinator
+/// noticing it dead — the dead-worker-detection-latency metric.
+pub static WORKER_DETECT_LATENCY_MS: Histogram =
+    Histogram::new("worker_detect_latency_ms", &[1, 10, 50, 100, 500, 1000, 5000, 30000]);
+
+// ---------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------
+
+/// Point-in-time copy of one counter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CounterSnap {
+    /// Registered key.
+    pub name: &'static str,
+    /// Per-scope values at snapshot time.
+    pub by_scope: [u64; MAX_SCOPES],
+}
+
+impl CounterSnap {
+    /// Sum over all scopes.
+    pub fn total(&self) -> u64 {
+        self.by_scope.iter().sum()
+    }
+}
+
+/// Point-in-time copy of the whole counter registry. Mergeable: worker
+/// snapshots add into a coordinator-side aggregate entry by entry (the
+/// registry order is stable, so merge is positional with a name check).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    /// One entry per registered counter, in registry order.
+    pub entries: Vec<CounterSnap>,
+}
+
+impl Snapshot {
+    /// Add `other` into `self` cell-wise. Entries are matched by name;
+    /// unknown names are ignored (a newer peer may know more counters).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for oe in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| e.name == oe.name) {
+                for (a, b) in e.by_scope.iter_mut().zip(oe.by_scope.iter()) {
+                    *a += b;
+                }
+            }
+        }
+    }
+
+    /// Total for the counter registered under `name` (0 if absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.entries.iter().find(|e| e.name == name).map(CounterSnap::total).unwrap_or(0)
+    }
+
+    /// Render as a JSON object `{"name": {"total": N, "per_scope":
+    /// [...]}}`; `per_scope` is trimmed to the last non-zero cell and
+    /// omitted when only scope 0 is populated.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        let mut first = true;
+        for e in &self.entries {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\"{}\":{{\"total\":{}", e.name, e.total()));
+            let last_nz = e.by_scope.iter().rposition(|&v| v != 0);
+            if let Some(last) = last_nz {
+                if last > 0 {
+                    out.push_str(",\"per_scope\":[");
+                    for (i, v) in e.by_scope[..=last].iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push_str(&v.to_string());
+                    }
+                    out.push(']');
+                }
+            }
+            out.push('}');
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Snapshot every registered counter.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        entries: all()
+            .iter()
+            .map(|c| CounterSnap { name: c.name(), by_scope: c.by_scope() })
+            .collect(),
+    }
+}
+
+/// `(name, total)` pairs for every counter with a non-zero total — the
+/// compact form heartbeat frames carry.
+pub fn named_totals() -> Vec<(String, u64)> {
+    all()
+        .iter()
+        .filter(|c| c.total() != 0)
+        .map(|c| (c.name().to_string(), c.total()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Per-epoch sink (JSONL) and stderr tables
+// ---------------------------------------------------------------------
+
+static SINK: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+static TABLE: AtomicBool = AtomicBool::new(false);
+
+/// Route per-epoch metric lines (JSONL) to `path` (truncates).
+pub fn set_metrics_path(path: &Path) -> std::io::Result<()> {
+    let f = File::create(path)?;
+    *SINK.lock().unwrap_or_else(PoisonError::into_inner) = Some(BufWriter::new(f));
+    Ok(())
+}
+
+/// Is a JSONL metrics sink installed?
+pub fn sink_active() -> bool {
+    SINK.lock().unwrap_or_else(PoisonError::into_inner).is_some()
+}
+
+/// Append one line to the JSONL sink (no-op without a sink; I/O errors
+/// are swallowed — observation must never fail the training run).
+pub fn sink_line(line: &str) {
+    if let Some(w) = SINK.lock().unwrap_or_else(PoisonError::into_inner).as_mut() {
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+/// Toggle the `--obs` stderr epoch tables.
+pub fn set_table(on: bool) {
+    TABLE.store(on, Ordering::Relaxed);
+}
+
+/// Are stderr epoch tables enabled?
+pub fn table_enabled() -> bool {
+    TABLE.load(Ordering::Relaxed)
+}
+
+/// Minimal JSON string escaping for labels going into sink lines.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_guard_restores_nesting() {
+        assert_eq!(current_scope(), 0);
+        {
+            let _a = enter_scope(3);
+            assert_eq!(current_scope(), 3);
+            {
+                let _b = enter_scope(7);
+                assert_eq!(current_scope(), 7);
+            }
+            assert_eq!(current_scope(), 3);
+        }
+        assert_eq!(current_scope(), 0);
+        // Out-of-range scopes clamp into the bank.
+        let _c = enter_scope(MAX_SCOPES + 5);
+        assert_eq!(current_scope(), MAX_SCOPES - 1);
+    }
+
+    #[test]
+    fn local_counter_attributes_by_scope() {
+        // A local (non-registry) counter: immune to concurrent tests.
+        let c = Counter::new("test_local");
+        c.add(2);
+        {
+            let _g = enter_scope(4);
+            c.add(5);
+        }
+        c.add(1);
+        assert_eq!(c.total(), 8);
+        let by = c.by_scope();
+        assert_eq!(by[0], 3);
+        assert_eq!(by[4], 5);
+        c.reset();
+        assert_eq!(c.total(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        static H: Histogram = Histogram::new("test_hist", &[10, 100]);
+        H.reset();
+        for v in [0, 10, 11, 100, 101, 5000] {
+            H.record(v);
+        }
+        assert_eq!(H.counts(), vec![2, 2, 2]);
+        assert_eq!(H.total(), 6);
+    }
+
+    #[test]
+    fn snapshot_merge_is_cellwise() {
+        let mk = |name, v0, v1| CounterSnap {
+            name,
+            by_scope: {
+                let mut b = [0u64; MAX_SCOPES];
+                b[0] = v0;
+                b[1] = v1;
+                b
+            },
+        };
+        let mut a = Snapshot { entries: vec![mk("x", 1, 2), mk("y", 0, 0)] };
+        let b = Snapshot { entries: vec![mk("x", 10, 20), mk("z", 5, 5)] };
+        a.merge(&b);
+        assert_eq!(a.get("x"), 33);
+        assert_eq!(a.get("y"), 0);
+        assert_eq!(a.get("z"), 0); // unknown names ignored
+    }
+
+    #[test]
+    fn snapshot_json_trims_scopes() {
+        let mut by = [0u64; MAX_SCOPES];
+        by[0] = 3;
+        let plain = Snapshot { entries: vec![CounterSnap { name: "a", by_scope: by }] };
+        assert_eq!(plain.to_json(), "{\"a\":{\"total\":3}}");
+        by[2] = 4;
+        let scoped = Snapshot { entries: vec![CounterSnap { name: "a", by_scope: by }] };
+        assert_eq!(scoped.to_json(), "{\"a\":{\"total\":7,\"per_scope\":[3,0,4]}}");
+    }
+
+    #[test]
+    fn tally_flush_routes_fixed_counters() {
+        // Registry counters are shared process-wide; assert on deltas so
+        // concurrent lib tests cannot race this one into flakiness.
+        let before = (FIXED_MUL_SAT.total(), FIXED_ACC_SAT.total());
+        let t = ObsTally { mul_sat: 3, acc_sat: 2, ..Default::default() };
+        t.flush_fixed();
+        assert!(FIXED_MUL_SAT.total() >= before.0 + 3);
+        assert!(FIXED_ACC_SAT.total() >= before.1 + 2);
+    }
+
+    #[test]
+    fn json_escape_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,125 @@
+//! Observability: numerics counters, span tracing, and the telemetry
+//! plumbing behind worker heartbeats. Zero dependencies, zero effect on
+//! values.
+//!
+//! # The invariant
+//!
+//! **Observation is read-only.** Enabling any part of this subsystem —
+//! counters, spans, heartbeats — produces bit-identical trained weights,
+//! losses and eval metrics to running with it disabled, on every backend
+//! and every execution path (serial / rayon / tiled / lanes / sharded /
+//! multi-process). `tests/obs_exactness.rs` pins this end to end; the
+//! clause lives in `docs/NUMERICS.md` §6 and the design rationale in
+//! `docs/OBSERVABILITY.md`.
+//!
+//! Two consequences shape the implementation:
+//!
+//! * **Counting runs the scalar kernel bodies.** When counters are on,
+//!   the slice-kernel dispatchers (`LnsSystem::mac_row` & co.) route to
+//!   `*_counted` twins — exact copies of the scalar reference bodies
+//!   with a stack-local [`metrics::ObsTally`]. The lane-exactness
+//!   contract (NUMERICS.md §2) makes the lane and scalar kernels
+//!   bit-identical, so forcing the scalar body changes no values *and*
+//!   makes counter totals independent of the lane switch — which is what
+//!   lets `tests/obs_exactness.rs` pin identical tallies with lanes on
+//!   and off.
+//! * **Disabled cost is one relaxed load** per slice-kernel call (plus
+//!   one per parallel task for scope hand-off, and one per frame on the
+//!   wire paths). The `obs_overhead` lines in `benches/ops.rs` pin the
+//!   disabled path within noise of the pre-obs hot path.
+//!
+//! Counter values are **deterministic** for a fixed configuration
+//! (backend, model, seed, shard/worker count): they count arithmetic
+//! events, and the arithmetic is bit-reproducible. Span *timings* are
+//! not deterministic — only their structure is.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{layer_scope, reenter_scope, task_scope, ObsTally, ScopeGuard};
+pub use trace::{span, Span, SpanKind};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static COUNTERS_ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Are the numerics counters enabled? One relaxed load — this is the
+/// whole disabled-path cost the hot paths pay.
+#[inline(always)]
+pub fn counters_enabled() -> bool {
+    COUNTERS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable/disable the numerics counters (process-wide).
+pub fn set_counters(on: bool) {
+    COUNTERS_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is span tracing enabled? One relaxed load.
+#[inline(always)]
+pub fn trace_enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable/disable span tracing (process-wide).
+pub fn set_trace(on: bool) {
+    TRACE_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable/disable both pillars at once.
+pub fn set_all(on: bool) {
+    set_counters(on);
+    set_trace(on);
+}
+
+/// Zero every counter, histogram and span rollup and clear the trace
+/// event buffer (the enable flags are left as they are).
+pub fn reset_all() {
+    metrics::reset_all();
+    trace::reset();
+}
+
+/// Per-epoch flush: emit the `--obs` stderr table and/or one JSONL sink
+/// line (cumulative counter totals and span rollups, labelled with
+/// `label`/`epoch`). No-op when neither output is configured.
+pub fn flush_epoch(label: &str, epoch: usize) {
+    let table = metrics::table_enabled();
+    let sink = metrics::sink_active();
+    if !table && !sink {
+        return;
+    }
+    let snap = metrics::snapshot();
+    let spans = trace::rollup_snapshot();
+    if table {
+        let mut line = format!("[obs] {label} epoch {epoch}:");
+        let mut any = false;
+        for e in &snap.entries {
+            let total = e.total();
+            if total != 0 {
+                line.push_str(&format!(" {}={total}", e.name));
+                any = true;
+            }
+        }
+        if !any {
+            line.push_str(" (no counter activity)");
+        }
+        eprintln!("{line}");
+    }
+    if sink {
+        let mut line = format!(
+            "{{\"label\":\"{}\",\"epoch\":{epoch},\"counters\":{}",
+            metrics::json_escape(label),
+            snap.to_json()
+        );
+        line.push_str(",\"spans\":{");
+        for (i, (name, count, ns)) in spans.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("\"{name}\":{{\"count\":{count},\"ns\":{ns}}}"));
+        }
+        line.push_str("}}");
+        metrics::sink_line(&line);
+    }
+}

@@ -1,0 +1,322 @@
+//! Span tracing: RAII timers around the training phases, exported as
+//! Chrome `trace_event` JSON (loadable in `about:tracing` / Perfetto)
+//! plus always-on per-kind rollups (count + total ns).
+//!
+//! Like the counters, tracing is **observation only** — spans time code,
+//! they never feed a value back into it. Unlike the counters, span
+//! *timings* are inherently non-deterministic; the determinism clause in
+//! `docs/NUMERICS.md` therefore covers counter values but not span
+//! durations. When tracing is disabled ([`crate::obs::trace_enabled`] is
+//! `false`) a [`span`] call is one relaxed load and no `Instant` is ever
+//! taken.
+//!
+//! Event buffering is bounded ([`MAX_EVENTS`]): phase-level spans emit
+//! begin/end event pairs for the Chrome export, the per-matmul kinds
+//! ([`SpanKind::MatmulRow`], [`SpanKind::MatmulTiled`]) are rollup-only
+//! so a long training run cannot flood the buffer from the hot loop.
+
+use std::cell::Cell;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Span taxonomy — one timer class per pipeline phase or kernel tier.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Model forward pass (one batch or eval chunk).
+    Forward,
+    /// Model backward pass (gradient sums for one batch).
+    Backward,
+    /// Shard/worker gradient merge (the canonical ⊞ chain).
+    Merge,
+    /// Gradient scaling by `1/B`.
+    Scale,
+    /// SGD parameter update.
+    Update,
+    /// Validation/test evaluation pass.
+    Eval,
+    /// One full training epoch.
+    Epoch,
+    /// Row-engine matmul call (rollup-only).
+    MatmulRow,
+    /// Cache-tiled matmul call (rollup-only).
+    MatmulTiled,
+    /// im2col / col2im lowering.
+    Im2col,
+    /// Wire frame write (header + payload + flush).
+    WireEncode,
+    /// Wire frame read (header + payload + checksum).
+    WireDecode,
+    /// One worker-side batch loop iteration (multi-process).
+    WorkerBatch,
+}
+
+/// Every span kind, in rollup-bank order.
+pub const SPAN_KINDS: [SpanKind; 13] = [
+    SpanKind::Forward,
+    SpanKind::Backward,
+    SpanKind::Merge,
+    SpanKind::Scale,
+    SpanKind::Update,
+    SpanKind::Eval,
+    SpanKind::Epoch,
+    SpanKind::MatmulRow,
+    SpanKind::MatmulTiled,
+    SpanKind::Im2col,
+    SpanKind::WireEncode,
+    SpanKind::WireDecode,
+    SpanKind::WorkerBatch,
+];
+
+impl SpanKind {
+    /// Stable name used in trace events, heartbeats and sink lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Forward => "forward",
+            SpanKind::Backward => "backward",
+            SpanKind::Merge => "merge",
+            SpanKind::Scale => "scale",
+            SpanKind::Update => "update",
+            SpanKind::Eval => "eval",
+            SpanKind::Epoch => "epoch",
+            SpanKind::MatmulRow => "matmul_row",
+            SpanKind::MatmulTiled => "matmul_tiled",
+            SpanKind::Im2col => "im2col",
+            SpanKind::WireEncode => "wire_encode",
+            SpanKind::WireDecode => "wire_decode",
+            SpanKind::WorkerBatch => "worker_batch",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Phase-level kinds emit Chrome events; per-matmul kinds are
+    /// rollup-only (they fire millions of times per run).
+    #[inline]
+    fn emits_events(self) -> bool {
+        !matches!(self, SpanKind::MatmulRow | SpanKind::MatmulTiled)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rollups and the event buffer
+// ---------------------------------------------------------------------
+
+struct SpanCell {
+    count: AtomicU64,
+    ns: AtomicU64,
+}
+
+static ROLLUPS: [SpanCell; SPAN_KINDS.len()] =
+    [const { SpanCell { count: AtomicU64::new(0), ns: AtomicU64::new(0) } }; SPAN_KINDS.len()];
+
+#[derive(Copy, Clone, Debug)]
+struct Event {
+    kind: SpanKind,
+    tid: u64,
+    ts_ns: u64,
+    dur_ns: u64,
+}
+
+/// Event-buffer capacity; spans past it bump the dropped counter instead
+/// of growing the buffer (rollups keep counting regardless).
+pub const MAX_EVENTS: usize = 1 << 16;
+
+static EVENTS: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static PROCESS_EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn process_epoch() -> Instant {
+    *PROCESS_EPOCH.get_or_init(Instant::now)
+}
+
+fn tid() -> u64 {
+    let t = TID.get();
+    if t != 0 {
+        return t;
+    }
+    let t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    TID.set(t);
+    t
+}
+
+/// RAII span: records its rollup (and, for phase-level kinds, a Chrome
+/// event) when dropped. Inert when tracing was disabled at creation.
+pub struct Span {
+    live: Option<(SpanKind, Instant)>,
+}
+
+/// Open a span of `kind`. One relaxed load when tracing is disabled.
+#[inline]
+pub fn span(kind: SpanKind) -> Span {
+    if super::trace_enabled() {
+        process_epoch(); // pin t=0 before the first timestamp
+        Span { live: Some((kind, Instant::now())) }
+    } else {
+        Span { live: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some((kind, start)) = self.live else {
+            return;
+        };
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        let cell = &ROLLUPS[kind.idx()];
+        cell.count.fetch_add(1, Ordering::Relaxed);
+        cell.ns.fetch_add(dur_ns, Ordering::Relaxed);
+        if kind.emits_events() {
+            let ts_ns = start.duration_since(process_epoch()).as_nanos() as u64;
+            let mut ev = EVENTS.lock().unwrap_or_else(PoisonError::into_inner);
+            if ev.len() < MAX_EVENTS {
+                ev.push(Event { kind, tid: tid(), ts_ns, dur_ns });
+            } else {
+                DROPPED.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// `(name, count, total_ns)` for every span kind with a non-zero count —
+/// the rollup form heartbeat frames and sink lines carry.
+pub fn rollup_snapshot() -> Vec<(&'static str, u64, u64)> {
+    SPAN_KINDS
+        .iter()
+        .filter_map(|&k| {
+            let cell = &ROLLUPS[k.idx()];
+            let count = cell.count.load(Ordering::Relaxed);
+            (count != 0).then(|| (k.name(), count, cell.ns.load(Ordering::Relaxed)))
+        })
+        .collect()
+}
+
+/// Buffered event count (tests; the Chrome export writes 2× this many
+/// `B`/`E` records).
+pub fn events_len() -> usize {
+    EVENTS.lock().unwrap_or_else(PoisonError::into_inner).len()
+}
+
+/// Spans dropped after the event buffer filled.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Zero the rollups and clear the event buffer.
+pub fn reset() {
+    for cell in &ROLLUPS {
+        cell.count.store(0, Ordering::Relaxed);
+        cell.ns.store(0, Ordering::Relaxed);
+    }
+    EVENTS.lock().unwrap_or_else(PoisonError::into_inner).clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace_event export
+// ---------------------------------------------------------------------
+
+fn render_chrome(events: &[Event], dropped: u64) -> String {
+    // Begin/end pairs (`ph: B`/`ph: E`) rather than complete (`X`)
+    // events: about:tracing accepts both, and balanced pairs are what
+    // `bench_util::validate_chrome_trace` pins structurally.
+    let mut out = String::with_capacity(64 + events.len() * 160);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    for e in events {
+        let ts_us = e.ts_ns as f64 / 1000.0;
+        let end_us = (e.ts_ns + e.dur_ns) as f64 / 1000.0;
+        for (ph, ts) in [("B", ts_us), ("E", end_us)] {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"lnsdnn\",\"ph\":\"{ph}\",\"pid\":1,\"tid\":{},\"ts\":{ts:.3}}}",
+                e.kind.name(),
+                e.tid,
+            ));
+        }
+    }
+    out.push_str("],\"otherData\":{\"dropped_spans\":");
+    out.push_str(&dropped.to_string());
+    out.push_str("}}");
+    out
+}
+
+/// Write the buffered events to `path` as Chrome `trace_event` JSON.
+/// Every buffered span becomes a balanced `B`/`E` pair; the file footer
+/// records how many spans the bounded buffer dropped.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    let rendered = {
+        let ev = EVENTS.lock().unwrap_or_else(PoisonError::into_inner);
+        render_chrome(&ev, DROPPED.load(Ordering::Relaxed))
+    };
+    std::fs::write(path, rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_are_unique_and_ordered() {
+        for (i, k) in SPAN_KINDS.iter().enumerate() {
+            assert_eq!(k.idx(), i, "{k:?} bank index");
+            for other in &SPAN_KINDS[i + 1..] {
+                assert_ne!(k.name(), other.name());
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tiers_are_rollup_only() {
+        assert!(!SpanKind::MatmulRow.emits_events());
+        assert!(!SpanKind::MatmulTiled.emits_events());
+        assert!(SpanKind::Forward.emits_events());
+        assert!(SpanKind::Epoch.emits_events());
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Tracing defaults off and lib unit tests never enable it, so
+        // span() here must not touch the rollups or the event buffer.
+        let before = events_len();
+        {
+            let _s = span(SpanKind::Forward);
+        }
+        assert_eq!(events_len(), before);
+    }
+
+    #[test]
+    fn chrome_render_emits_balanced_pairs() {
+        let events = [
+            Event { kind: SpanKind::Forward, tid: 1, ts_ns: 1_500, dur_ns: 2_000 },
+            Event { kind: SpanKind::Update, tid: 2, ts_ns: 4_000, dur_ns: 500 },
+        ];
+        let json = render_chrome(&events, 3);
+        assert_eq!(json.matches("\"ph\":\"B\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"E\"").count(), 2);
+        assert!(json.contains("\"name\":\"forward\""));
+        assert!(json.contains("\"ts\":1.500"));
+        assert!(json.contains("\"ts\":3.500"));
+        assert!(json.contains("\"dropped_spans\":3"));
+        // And the structural checker accepts its own writer's output.
+        assert_eq!(crate::bench_util::validate_chrome_trace(&json), Ok(2));
+    }
+
+    #[test]
+    fn chrome_render_empty_buffer_is_valid() {
+        let json = render_chrome(&[], 0);
+        assert_eq!(crate::bench_util::validate_chrome_trace(&json), Ok(0));
+    }
+}

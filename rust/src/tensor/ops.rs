@@ -40,6 +40,7 @@
 //! (once per panel or dot slice on the tiled paths).
 
 use super::{Backend, Tensor};
+use crate::obs::{reenter_scope, span, task_scope, SpanKind};
 use rayon::prelude::*;
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -111,6 +112,7 @@ pub fn matmul<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B
 /// Single-thread reference implementation of [`matmul`].
 pub fn matmul_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
+    let _sp = span(SpanKind::MatmulRow);
     let (m, n) = (a.rows, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     for i in 0..m {
@@ -124,15 +126,21 @@ pub fn matmul_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> T
 /// bit-identical to [`matmul_serial`].
 pub fn matmul_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
+    let _sp = span(SpanKind::MatmulRow);
     let (m, n) = (a.rows, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     if n == 0 {
         return out;
     }
-    out.data
-        .par_chunks_mut(n)
-        .enumerate()
-        .for_each(|(i, orow)| matmul_row(b, a.row(i), w, orow));
+    // Thread-local counter scope does not cross the rayon pool: capture
+    // it here and re-enter per task (None — and free — when counting is
+    // off). Scope is a function of the *spawning* context, never of
+    // scheduling, so counter attribution stays deterministic.
+    let scope = task_scope();
+    out.data.par_chunks_mut(n).enumerate().for_each(|(i, orow)| {
+        let _g = reenter_scope(scope);
+        matmul_row(b, a.row(i), w, orow)
+    });
     out
 }
 
@@ -177,6 +185,7 @@ pub fn matmul_bt<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tenso
 /// Single-thread reference implementation of [`matmul_bt`].
 pub fn matmul_bt_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
+    let _sp = span(SpanKind::MatmulRow);
     let (m, n) = (a.rows, w.rows);
     let mut out = Tensor::full(m, n, b.zero());
     for i in 0..m {
@@ -188,15 +197,17 @@ pub fn matmul_bt_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -
 /// Rayon row-parallel [`matmul_bt`], bit-identical to the serial path.
 pub fn matmul_bt_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
+    let _sp = span(SpanKind::MatmulRow);
     let (m, n) = (a.rows, w.rows);
     let mut out = Tensor::full(m, n, b.zero());
     if n == 0 {
         return out;
     }
-    out.data
-        .par_chunks_mut(n)
-        .enumerate()
-        .for_each(|(i, orow)| matmul_bt_row(b, a.row(i), w, orow));
+    let scope = task_scope();
+    out.data.par_chunks_mut(n).enumerate().for_each(|(i, orow)| {
+        let _g = reenter_scope(scope);
+        matmul_bt_row(b, a.row(i), w, orow)
+    });
     out
 }
 
@@ -227,6 +238,7 @@ pub fn matmul_at<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tenso
 /// accumulates over `k` ascending, which is all the numeric spec fixes.
 pub fn matmul_at_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
+    let _sp = span(SpanKind::MatmulRow);
     let (k, m, n) = (a.rows, a.cols, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     for p in 0..k {
@@ -249,12 +261,15 @@ pub fn matmul_at_serial<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -
 /// are bit-identical.
 pub fn matmul_at_par<B: Backend>(b: &B, a: &Tensor<B::E>, w: &Tensor<B::E>) -> Tensor<B::E> {
     assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
+    let _sp = span(SpanKind::MatmulRow);
     let (k, m, n) = (a.rows, a.cols, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     if n == 0 {
         return out;
     }
+    let scope = task_scope();
     out.data.par_chunks_mut(n).enumerate().for_each(|(i, orow)| {
+        let _g = reenter_scope(scope);
         for p in 0..k {
             let av = a.row(p)[i];
             if b.is_zero(av) {
@@ -485,10 +500,13 @@ where
 {
     let (m, n) = (out.rows, out.cols);
     if parallel_worthwhile(m.div_ceil(mc), work) {
-        out.data
-            .par_chunks_mut(mc * n)
-            .enumerate()
-            .for_each(|(ci, chunk)| kernel(ci * mc, chunk));
+        // Hand the spawning task's counter scope to the pool workers (see
+        // `matmul_par`); `None` — and free — when counting is off.
+        let scope = task_scope();
+        out.data.par_chunks_mut(mc * n).enumerate().for_each(|(ci, chunk)| {
+            let _g = reenter_scope(scope);
+            kernel(ci * mc, chunk)
+        });
     } else {
         for ci in 0..m.div_ceil(mc) {
             let lo = ci * mc * n;
@@ -516,6 +534,7 @@ pub fn matmul_tiled_with<B: Backend>(
 ) -> Tensor<B::E> {
     assert_eq!(a.cols, w.rows, "matmul inner-dim mismatch");
     t.validate();
+    let _sp = span(SpanKind::MatmulTiled);
     let (m, k, n) = (a.rows, a.cols, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     if m == 0 || n == 0 || k == 0 {
@@ -549,6 +568,7 @@ pub fn matmul_at_tiled_with<B: Backend>(
 ) -> Tensor<B::E> {
     assert_eq!(a.rows, w.rows, "matmul_at inner-dim mismatch");
     t.validate();
+    let _sp = span(SpanKind::MatmulTiled);
     let (k, m, n) = (a.rows, a.cols, w.cols);
     let mut out = Tensor::full(m, n, b.zero());
     if m == 0 || n == 0 || k == 0 {
@@ -614,6 +634,7 @@ pub fn matmul_bt_tiled_with<B: Backend>(
 ) -> Tensor<B::E> {
     assert_eq!(a.cols, w.cols, "matmul_bt inner-dim mismatch");
     t.validate();
+    let _sp = span(SpanKind::MatmulTiled);
     let (m, k, n) = (a.rows, a.cols, w.rows);
     let mut out = Tensor::full(m, n, b.zero());
     if m == 0 || n == 0 || k == 0 {
@@ -658,7 +679,11 @@ pub fn add_bias<B: Backend>(b: &B, x: &mut Tensor<B::E>, bias: &[B::E]) {
     assert_eq!(x.cols, bias.len(), "bias length mismatch");
     let n = x.cols;
     if n > 0 && parallel_worthwhile(x.rows, x.rows * n) {
-        x.data.par_chunks_mut(n).for_each(|row| b.add_slice(row, bias));
+        let scope = task_scope();
+        x.data.par_chunks_mut(n).for_each(|row| {
+            let _g = reenter_scope(scope);
+            b.add_slice(row, bias)
+        });
     } else {
         for i in 0..x.rows {
             b.add_slice(x.row_mut(i), bias);

@@ -15,6 +15,7 @@
 //! final batches (PR 4).
 
 use crate::nn::Mlp;
+use crate::obs::{span, SpanKind};
 use crate::tensor::{ops, Backend, Tensor};
 use crate::train::EpochLoss;
 use rayon::prelude::*;
@@ -60,6 +61,10 @@ where
     if labels.is_empty() {
         return EvalResult::default();
     }
+    // Every evaluation caller lands here, so this one span covers the
+    // epoch-loop validation passes, the final test pass, and the
+    // multi-process coordinator alike.
+    let _sp = span(SpanKind::Eval);
     // Evaluate in modest chunks to bound peak memory on large test sets.
     const CHUNK: usize = 256;
     let mut correct = 0usize;

@@ -35,6 +35,7 @@ pub use shard::ShardConfig;
 
 use crate::data::Dataset;
 use crate::nn::{Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig};
+use crate::obs::{self, span, SpanKind};
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, Tensor};
 
@@ -172,8 +173,10 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
     let bs = cfg.batch_size;
     let mut curve = Vec::with_capacity(cfg.epochs);
     let mut order: Vec<usize> = (0..n).collect();
+    let tag = backend.tag();
 
     for epoch in 1..=cfg.epochs {
+        let _sp = span(SpanKind::Epoch);
         rng.shuffle(&mut order);
         let start = std::time::Instant::now();
         let mut loss = EpochLoss::default();
@@ -207,6 +210,7 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
             val_accuracy: val.accuracy,
             seconds,
         });
+        obs::flush_epoch(&tag, epoch);
     }
 
     let test = eval_pooled(pool.as_ref(), || evaluate(backend, &model, &test_x, &test_y));
@@ -302,8 +306,10 @@ pub fn train_cnn<B: Backend>(
     let classes = cfg.arch.classes;
     let mut curve = Vec::with_capacity(cfg.epochs);
     let mut order: Vec<usize> = (0..n).collect();
+    let tag = backend.tag();
 
     for epoch in 1..=cfg.epochs {
+        let _sp = span(SpanKind::Epoch);
         rng.shuffle(&mut order);
         let start = std::time::Instant::now();
         let mut loss = EpochLoss::default();
@@ -330,6 +336,7 @@ pub fn train_cnn<B: Backend>(
             val_accuracy: val.accuracy,
             seconds,
         });
+        obs::flush_epoch(&tag, epoch);
     }
 
     let test = eval_pooled(pool.as_ref(), || {
@@ -356,6 +363,7 @@ where
     F: Fn(usize) -> (G, RawStepStats) + Sync,
 {
     let (mut g, raw) = shard::sharded_backprop_sums(backend, pool, batch, local);
+    let _sp = span(SpanKind::Scale);
     g.scale(backend, 1.0 / raw.n as f64);
     (g, raw)
 }

@@ -63,9 +63,12 @@ use crate::data::Dataset;
 use crate::fixed::{FixedConfig, FixedSystem};
 use crate::lns::{DeltaMode, LnsConfig, LnsSystem};
 use crate::nn::{Cnn, Gradients, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig};
+use crate::obs::{self, span, SpanKind};
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
-use crate::train::wire::{self, DigestMsg, FrameKind, GradFrame, JobSpec, ModelSpec, WireElem};
+use crate::train::wire::{
+    self, DigestMsg, FrameKind, GradFrame, HeartbeatMsg, JobSpec, ModelSpec, WireElem,
+};
 use crate::train::{
     evaluate_with, shard, CnnTrainConfig, EpochLoss, EpochRecord, TrainConfig, TrainResult,
 };
@@ -398,6 +401,133 @@ where
 }
 
 // ---------------------------------------------------------------------
+// Worker heartbeats (observability)
+// ---------------------------------------------------------------------
+
+/// Heartbeat cadence in steps. Emission is a pure function of the step
+/// index (plus "final batch of the epoch"), never of wall-clock time, so
+/// the frame sequence is reproducible run-to-run.
+const HEARTBEAT_EVERY: u32 = 8;
+
+/// Last-known progress of one worker, distilled from its heartbeat
+/// frames on the coordinator side.
+#[derive(Clone, Debug, Default)]
+struct WorkerHealth {
+    last: Option<HeartbeatSeen>,
+}
+
+#[derive(Clone, Debug)]
+struct HeartbeatSeen {
+    epoch: u32,
+    step: u32,
+    samples_done: u64,
+    at: std::time::Instant,
+}
+
+fn note_heartbeat(health: &mut [WorkerHealth], rank: usize, hb: &HeartbeatMsg) {
+    if obs::counters_enabled() {
+        obs::metrics::HEARTBEAT_RX.add(1);
+    }
+    health[rank].last = Some(HeartbeatSeen {
+        epoch: hb.epoch,
+        step: hb.step,
+        samples_done: hb.samples_done,
+        at: std::time::Instant::now(),
+    });
+    if obs::metrics::table_enabled() {
+        eprintln!(
+            "[obs] worker {rank}: epoch {} step {} ({} samples done)",
+            hb.epoch, hb.step, hb.samples_done
+        );
+    }
+}
+
+fn describe_last_heartbeat(h: &WorkerHealth) -> String {
+    match &h.last {
+        Some(hb) => format!(
+            "last heartbeat: epoch {} step {} ({} samples done), {} ms ago",
+            hb.epoch,
+            hb.step,
+            hb.samples_done,
+            hb.at.elapsed().as_millis()
+        ),
+        None => "no heartbeat received from this worker".into(),
+    }
+}
+
+/// Read the next non-heartbeat frame from a worker, folding heartbeat
+/// frames into its health record along the way. A read failure becomes
+/// a dead-worker report carrying the worker's last-known progress; the
+/// detection latency (now − last heartbeat) feeds the
+/// [`obs::metrics::WORKER_DETECT_LATENCY_MS`] histogram.
+fn read_data_frame(
+    peer: &mut PeerIo,
+    rank: usize,
+    health: &mut [WorkerHealth],
+) -> Result<wire::Frame> {
+    loop {
+        let frame = match wire::read_frame(&mut peer.rx) {
+            Ok(f) => f,
+            Err(e) => {
+                if obs::counters_enabled() {
+                    obs::metrics::WORKER_DEATHS.add(1);
+                    if let Some(hb) = &health[rank].last {
+                        obs::metrics::WORKER_DETECT_LATENCY_MS
+                            .record(hb.at.elapsed().as_millis() as u64);
+                    }
+                }
+                let ctx = describe_last_heartbeat(&health[rank]);
+                return Err(e.context(format!("worker {rank} stream failed ({ctx})")));
+            }
+        };
+        if frame.kind == FrameKind::Heartbeat {
+            let hb = HeartbeatMsg::decode(&frame.payload)?;
+            ensure!(
+                hb.rank as usize == rank,
+                "heartbeat for rank {} arrived on worker {rank}'s stream",
+                hb.rank
+            );
+            note_heartbeat(health, rank, &hb);
+            continue;
+        }
+        return Ok(frame);
+    }
+}
+
+/// Worker side: emit a heartbeat frame if this step is on the cadence.
+/// Only fires when this process has counters enabled — the payload
+/// (span rollups + counter totals) would be empty noise otherwise.
+fn maybe_heartbeat<W: Write>(
+    tx: &mut W,
+    job: &JobSpec,
+    epoch: usize,
+    step: u32,
+    samples_done: u64,
+    last_batch: bool,
+) -> Result<()> {
+    if !obs::counters_enabled() {
+        return Ok(());
+    }
+    if step % HEARTBEAT_EVERY != 0 && !last_batch {
+        return Ok(());
+    }
+    let hb = HeartbeatMsg {
+        rank: job.rank as u32,
+        epoch: epoch as u32,
+        step,
+        samples_done,
+        spans: obs::trace::rollup_snapshot()
+            .into_iter()
+            .map(|(name, count, ns)| (name.to_string(), count, ns))
+            .collect(),
+        counters: obs::metrics::named_totals(),
+    };
+    obs::metrics::HEARTBEAT_TX.add(1);
+    wire::write_frame(tx, FrameKind::Heartbeat, &hb.encode())
+        .with_context(|| format!("worker {}: sending heartbeat", job.rank))
+}
+
+// ---------------------------------------------------------------------
 // Coordinator side
 // ---------------------------------------------------------------------
 
@@ -514,15 +644,19 @@ where
     let classes = model.classes();
     let mut curve = Vec::with_capacity(params.epochs);
     let mut order: Vec<usize> = (0..n).collect();
+    let mut health: Vec<WorkerHealth> = vec![WorkerHealth::default(); workers];
+    let tag = backend.tag();
 
     for epoch in 1..=params.epochs {
+        let _sp = span(SpanKind::Epoch);
         rng.shuffle(&mut order);
         let start = std::time::Instant::now();
         let mut loss = EpochLoss::default();
         let mut step: u32 = 0;
         for batch_start in (0..n).step_by(bs) {
             let m = (batch_start + bs).min(n) - batch_start;
-            let (merged, raw) = collect_step(backend, &model, &mut peers, epoch, step, m)?;
+            let (merged, raw) =
+                collect_step(backend, &model, &mut peers, &mut health, epoch, step, m)?;
 
             // Broadcast the merged *unscaled* sums; every replica then
             // applies the identical scale + update.
@@ -542,7 +676,10 @@ where
             }
 
             let mut grads = merged;
-            grads.scale(backend, 1.0 / raw.n as f64);
+            {
+                let _sp = span(SpanKind::Scale);
+                grads.scale(backend, 1.0 / raw.n as f64);
+            }
             model.apply_update(backend, &params.sgd, &grads);
             loss.add_sum(raw.loss_sum, raw.n);
             step += 1;
@@ -555,6 +692,7 @@ where
             val_accuracy: val.accuracy,
             seconds,
         });
+        obs::flush_epoch(&tag, epoch);
     }
 
     let test = evaluate_with(backend, classes, |v| model.logits(backend, v), &test_x, &test_y);
@@ -563,7 +701,7 @@ where
     // must equal ours bit for bit.
     let mine = param_digest::<B, M>(&model);
     for (rank, peer) in peers.iter_mut().enumerate() {
-        let frame = wire::read_frame(&mut peer.rx)
+        let frame = read_data_frame(peer, rank, &mut health)
             .with_context(|| format!("reading final digest from worker {rank}"))?;
         ensure!(
             frame.kind == FrameKind::Digest,
@@ -593,6 +731,7 @@ fn collect_step<B, M>(
     backend: &B,
     model: &M,
     peers: &mut [PeerIo],
+    health: &mut [WorkerHealth],
     epoch: usize,
     step: u32,
     m: usize,
@@ -610,7 +749,7 @@ where
     for (rank, peer) in peers.iter_mut().enumerate() {
         let range = shard::worker_range(m, workers, rank);
         for _ in range.clone() {
-            let frame = wire::read_frame(&mut peer.rx).with_context(|| {
+            let frame = read_data_frame(peer, rank, health).with_context(|| {
                 format!(
                     "reading gradient frame from worker {rank} \
                      (epoch {epoch}, step {step}) — did the worker die?"
@@ -780,14 +919,22 @@ where
     let sgd = SgdConfig { lr: job.lr, weight_decay: job.weight_decay };
     let shapes = model.grad_shapes();
     let mut order: Vec<usize> = (0..n).collect();
+    let mut samples_done: u64 = 0;
 
     for epoch in 1..=job.epochs {
         rng.shuffle(&mut order);
         let mut step: u32 = 0;
         for batch_start in (0..n).step_by(bs) {
+            let _sp = span(SpanKind::WorkerBatch);
             let end = (batch_start + bs).min(n);
             let chunk = &order[batch_start..end];
             let m = chunk.len();
+
+            // Progress/telemetry frame ahead of the gradient frames, so
+            // the coordinator's collect loop can fold it in before the
+            // data it is waiting for. Pure observability (see
+            // [`HeartbeatMsg`]); emitted only when counters are on.
+            maybe_heartbeat(&mut tx, job, epoch, step, samples_done, end == n)?;
 
             // Compute and ship this worker's slice of the batch, one
             // frame per sample slot (never pre-reduced — see module
@@ -796,6 +943,7 @@ where
                 let xi = shard::sample_row(&train_x, chunk[slot]);
                 let lbl = [train_y[chunk[slot]]];
                 let (g, s) = model.backprop_sums(backend, &xi, &lbl);
+                samples_done += 1;
                 let views = GradStore::<B>::flat_views(&g);
                 let payload = GradFrame::<B::E>::encode_parts(
                     epoch as u32,
@@ -841,7 +989,10 @@ where
             );
             let mut grads = build_grads(&shapes, mf.views)
                 .map_err(|e| anyhow::anyhow!("worker {}: {e}", job.rank))?;
-            grads.scale(backend, 1.0 / mf.stats.n as f64);
+            {
+                let _sp = span(SpanKind::Scale);
+                grads.scale(backend, 1.0 / mf.stats.n as f64);
+            }
             model.apply_update(backend, &sgd, &grads);
             step += 1;
         }

@@ -47,6 +47,7 @@
 //! same per-sample partials, and the coordinator merges them by index.
 
 use crate::nn::{GradStore, RawStepStats};
+use crate::obs::{span, SpanKind};
 use crate::tensor::{Backend, Tensor};
 use rayon::prelude::*;
 
@@ -195,6 +196,10 @@ pub fn accumulate_slots<B: Backend, G: GradStore<B>>(
 /// lands in its own slot (`tests/shard_determinism.rs` proves this by
 /// filling the slots in permuted order). Returns `None` for no parts.
 pub fn accumulate_tree<B: Backend, G: GradStore<B>>(backend: &B, parts: Vec<G>) -> Option<G> {
+    // Every gradient merge — in-process sharding and the multi-process
+    // slot table alike — funnels through this chain, so one span here
+    // covers the whole reduction phase.
+    let _sp = span(SpanKind::Merge);
     let mut it = parts.into_iter();
     let mut acc = it.next()?;
     for p in it {

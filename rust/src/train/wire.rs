@@ -46,6 +46,7 @@
 use crate::data::Dataset;
 use crate::lns::LnsValue;
 use crate::nn::{CnnArch, CnnVariant, InitScheme, PoolKind, RawStepStats};
+use crate::obs::{self, span, SpanKind};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
@@ -55,7 +56,10 @@ pub const WIRE_MAGIC: [u8; 4] = *b"LNSW";
 /// Wire protocol version. Bump on ANY layout change — peers reject every
 /// other version outright (bit-exactness makes "best-effort" decoding of
 /// a near-miss layout worse than failing).
-pub const WIRE_VERSION: u16 = 1;
+///
+/// History: v1 = initial framing; v2 = added [`FrameKind::Heartbeat`]
+/// (worker progress/telemetry frames).
+pub const WIRE_VERSION: u16 = 2;
 
 /// Upper bound on a single payload (guards against allocating from a
 /// corrupt or hostile length field).
@@ -80,6 +84,11 @@ pub enum FrameKind {
     /// Worker → coordinator: final parameter digest ([`DigestMsg`]) for
     /// end-of-run replica verification.
     Digest = 4,
+    /// Worker → coordinator: progress + telemetry ([`HeartbeatMsg`]).
+    /// Pure observability — carries no values that feed any reduction,
+    /// so the coordinator may consume it at any point between gradient
+    /// frames without touching the numerics (since wire v2).
+    Heartbeat = 5,
 }
 
 impl FrameKind {
@@ -89,6 +98,7 @@ impl FrameKind {
             2 => FrameKind::GradSums,
             3 => FrameKind::Merged,
             4 => FrameKind::Digest,
+            5 => FrameKind::Heartbeat,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -172,6 +182,8 @@ pub fn write_frame_with_version<W: Write>(
     kind: FrameKind,
     payload: &[u8],
 ) -> Result<()> {
+    let _sp = span(SpanKind::WireEncode);
+    tally_tx(payload.len());
     let header = frame_header(version, kind, payload.len(), fnv1a64(payload));
     w.write_all(&header).context("writing frame header")?;
     w.write_all(payload).context("writing frame payload")?;
@@ -179,9 +191,20 @@ pub fn write_frame_with_version<W: Write>(
     Ok(())
 }
 
+/// Observability hook for an outgoing frame: frame/byte counters plus
+/// the payload-size histogram. One relaxed load when counting is off.
+fn tally_tx(payload_len: usize) {
+    if obs::counters_enabled() {
+        obs::metrics::WIRE_FRAMES_TX.add(1);
+        obs::metrics::WIRE_BYTES_TX.add(19 + payload_len as u64);
+        obs::metrics::WIRE_FRAME_BYTES.record(payload_len as u64);
+    }
+}
+
 /// Read one frame, verifying magic, version, length bound and checksum.
 /// Every failure (including EOF mid-frame) is a hard error.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let _sp = span(SpanKind::WireDecode);
     let mut header = [0u8; 19];
     r.read_exact(&mut header).context("reading frame header (peer closed the stream?)")?;
     ensure!(
@@ -201,6 +224,13 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload).context("reading frame payload (truncated frame)")?;
     let got_sum = fnv1a64(&payload);
+    if obs::counters_enabled() {
+        obs::metrics::WIRE_FRAMES_RX.add(1);
+        obs::metrics::WIRE_BYTES_RX.add(19 + len as u64);
+        if got_sum != want_sum {
+            obs::metrics::WIRE_CHECKSUM_FAIL.add(1);
+        }
+    }
     ensure!(
         got_sum == want_sum,
         "frame checksum mismatch (corrupt frame): got {got_sum:#018x}, header says {want_sum:#018x}"
@@ -498,6 +528,94 @@ impl DigestMsg {
 }
 
 // ---------------------------------------------------------------------
+// Heartbeat frames (wire v2)
+// ---------------------------------------------------------------------
+
+/// Worker → coordinator progress + telemetry (a [`FrameKind::Heartbeat`]
+/// payload). Strictly observational: nothing in it feeds a reduction or
+/// an update, so a heartbeat can never change trained bits. Workers emit
+/// them at *deterministic* points in the batch loop (a function of the
+/// step index, never of wall-clock time) so the frame sequence itself is
+/// reproducible run-to-run; only the latencies the coordinator derives
+/// from them are timing-dependent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeartbeatMsg {
+    /// Sender's worker rank.
+    pub rank: u32,
+    /// Epoch the worker is in (1-based, mirrors the trainer).
+    pub epoch: u32,
+    /// Step index within the epoch (0-based).
+    pub step: u32,
+    /// Samples processed so far across the whole run.
+    pub samples_done: u64,
+    /// Span rollups at emission time: `(span name, count, total ns)`.
+    pub spans: Vec<(String, u64, u64)>,
+    /// Counter totals at emission time: `(counter name, total)`.
+    pub counters: Vec<(String, u64)>,
+}
+
+impl HeartbeatMsg {
+    /// Encode to a payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.spans.len() * 40 + self.counters.len() * 32);
+        put_u32(&mut out, self.rank);
+        put_u32(&mut out, self.epoch);
+        put_u32(&mut out, self.step);
+        put_u64(&mut out, self.samples_done);
+        put_u32(&mut out, self.spans.len() as u32);
+        for (name, count, ns) in &self.spans {
+            put_str(&mut out, name);
+            put_u64(&mut out, *count);
+            put_u64(&mut out, *ns);
+        }
+        put_u32(&mut out, self.counters.len() as u32);
+        for (name, total) in &self.counters {
+            put_str(&mut out, name);
+            put_u64(&mut out, *total);
+        }
+        out
+    }
+
+    /// Decode from a payload.
+    pub fn decode(payload: &[u8]) -> Result<HeartbeatMsg> {
+        let mut r = ByteReader::new(payload);
+        let rank = r.u32()?;
+        let epoch = r.u32()?;
+        let step = r.u32()?;
+        let samples_done = r.u64()?;
+        let n_spans = r.u32()? as usize;
+        // A span entry costs at least its 8-byte name prefix plus two
+        // u64s; reject corrupt counts before allocating by them.
+        ensure!(
+            n_spans <= r.remaining() / 24,
+            "heartbeat claims {n_spans} spans but only {} payload bytes remain",
+            r.remaining()
+        );
+        let mut spans = Vec::with_capacity(n_spans);
+        for _ in 0..n_spans {
+            let name = r.string()?;
+            let count = r.u64()?;
+            let ns = r.u64()?;
+            spans.push((name, count, ns));
+        }
+        let n_counters = r.u32()? as usize;
+        ensure!(
+            n_counters <= r.remaining() / 16,
+            "heartbeat claims {n_counters} counters but only {} payload bytes remain",
+            r.remaining()
+        );
+        let mut counters = Vec::with_capacity(n_counters);
+        for _ in 0..n_counters {
+            let name = r.string()?;
+            let total = r.u64()?;
+            counters.push((name, total));
+        }
+        r.done()?;
+        Ok(HeartbeatMsg { rank, epoch, step, samples_done, spans, counters })
+    }
+}
+
+// ---------------------------------------------------------------------
 // Job frames
 // ---------------------------------------------------------------------
 
@@ -724,6 +842,7 @@ pub fn encode_job(job: &JobSpec, ds: &Dataset) -> Vec<u8> {
 /// coordinator sends one job frame per worker). Byte-for-byte identical
 /// to `write_frame(w, FrameKind::Job, &encode_job(job, ds))`.
 pub fn write_job_frame<W: Write>(w: &mut W, job: &JobSpec, ds: &Dataset) -> Result<()> {
+    let _sp = span(SpanKind::WireEncode);
     let head = encode_job_head(job, ds);
     let arrays: [&[u8]; 4] =
         [&ds.train_images, &ds.train_labels, &ds.test_images, &ds.test_labels];
@@ -738,6 +857,7 @@ pub fn write_job_frame<W: Write>(w: &mut W, job: &JobSpec, ds: &Dataset) -> Resu
         len += 8 + arr.len();
     }
     ensure!(len <= MAX_FRAME_LEN as usize, "job frame too large: {len} bytes");
+    tally_tx(len);
     let header = frame_header(WIRE_VERSION, FrameKind::Job, len, crc.finish());
     w.write_all(&header).context("writing job frame header")?;
     w.write_all(&head).context("writing job frame head")?;
@@ -1059,6 +1179,51 @@ mod tests {
     fn digest_roundtrip() {
         let d = DigestMsg { digest: 0xDEAD_BEEF_0BAD_F00D, params: 1234 };
         assert_eq!(DigestMsg::decode(&d.encode()).unwrap(), d);
+    }
+
+    #[test]
+    fn heartbeat_roundtrip() {
+        let hb = HeartbeatMsg {
+            rank: 3,
+            epoch: 2,
+            step: 17,
+            samples_done: 4242,
+            spans: vec![("forward".into(), 12, 345_678), ("wire_encode".into(), 9, 1000)],
+            counters: vec![("lns_cancel".into(), 7), ("delta_lut_adds".into(), 99_000)],
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Heartbeat, &hb.encode()).unwrap();
+        let frame = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(frame.kind, FrameKind::Heartbeat);
+        assert_eq!(HeartbeatMsg::decode(&frame.payload).unwrap(), hb);
+
+        // Empty rollups are a valid (early) heartbeat.
+        let hb0 = HeartbeatMsg {
+            rank: 0,
+            epoch: 1,
+            step: 0,
+            samples_done: 0,
+            spans: Vec::new(),
+            counters: Vec::new(),
+        };
+        assert_eq!(HeartbeatMsg::decode(&hb0.encode()).unwrap(), hb0);
+    }
+
+    #[test]
+    fn heartbeat_hostile_counts_error_instead_of_panicking() {
+        let hb = HeartbeatMsg {
+            rank: 1,
+            epoch: 1,
+            step: 0,
+            samples_done: 1,
+            spans: vec![("eval".into(), 1, 2)],
+            counters: Vec::new(),
+        };
+        let mut payload = hb.encode();
+        // The span-count u32 sits right after rank/epoch/step/samples
+        // (offset 4 + 4 + 4 + 8 = 20).
+        payload[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(HeartbeatMsg::decode(&payload).is_err());
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! Observation is read-only.
+//!
+//! The acceptance theorem for the telemetry subsystem: enabling
+//! counters and span tracing changes **nothing** about the numbers a
+//! run produces — trained weights, per-epoch losses, and test metrics
+//! are bit-identical with observation on and off, on all four backends,
+//! serial and sharded and across real worker processes. On top of that,
+//! counter values are pinned on hand-counted operand sets through the
+//! *public* kernel dispatchers, under both the scalar and the lane ⊞
+//! paths, and the `--trace` output is a valid Chrome trace with every
+//! B event matched by an E.
+//!
+//! Every test here toggles process-global observation flags, so they
+//! all serialize on one mutex and restore the flags on exit (including
+//! panic exits — the lock is poison-tolerant for that reason).
+
+use lnsdnn::coordinator::server::{train_multiproc, MultiprocSpec};
+use lnsdnn::data::{stripes_dataset, synth_dataset, Dataset, StripeSpec, SynthSpec};
+use lnsdnn::fixed::{FixedConfig, FixedSystem};
+use lnsdnn::lns::{lanes, LnsConfig, LnsSystem, LnsValue};
+use lnsdnn::nn::{Cnn, InitScheme, Mlp, SgdConfig};
+use lnsdnn::obs::{self, metrics};
+use lnsdnn::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend};
+use lnsdnn::train::{
+    train, train_cnn, CnnTrainConfig, ShardConfig, TrainConfig, TrainResult, Transport,
+};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// One lock for every test in this file: observation flags and lane
+/// selection are process-global, and cargo runs tests concurrently.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII session: takes the lock, starts from a clean observation state,
+/// and restores "everything off, lanes on" however the test exits.
+struct ObsSession {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl ObsSession {
+    fn begin() -> ObsSession {
+        // A previous test that panicked while holding the lock poisons
+        // it; the shared state is just atomics, so recovery is safe.
+        let guard = OBS_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        obs::set_all(false);
+        obs::reset_all();
+        lanes::set_enabled(true);
+        ObsSession { _guard: guard }
+    }
+}
+
+impl Drop for ObsSession {
+    fn drop(&mut self) {
+        obs::set_all(false);
+        obs::reset_all();
+        lanes::set_enabled(true);
+    }
+}
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_lnsdnn"))
+}
+
+fn tiny_ds() -> Dataset {
+    synth_dataset(&SynthSpec {
+        name: "tiny".into(),
+        classes: 3,
+        train_per_class: 14,
+        test_per_class: 5,
+        strokes: 4,
+        jitter_px: 1.5,
+        jitter_rot: 0.15,
+        noise: 0.04,
+        seed: 42,
+    })
+}
+
+fn tiny_cfg() -> TrainConfig {
+    TrainConfig {
+        dims: vec![784, 8, 3],
+        epochs: 2,
+        batch_size: 5,
+        sgd: SgdConfig { lr: 0.02, weight_decay: 1e-4 },
+        val_ratio: 5,
+        init: InitScheme::HeNormal,
+        seed: 3,
+        shard: ShardConfig::default(),
+    }
+}
+
+fn assert_mlp_runs_equal<E: PartialEq + std::fmt::Debug>(
+    label: &str,
+    a: &TrainResult<Mlp<E>>,
+    b: &TrainResult<Mlp<E>>,
+) {
+    assert_eq!(a.model.layers.len(), b.model.layers.len(), "{label}: layer count");
+    for l in 0..a.model.layers.len() {
+        assert_eq!(a.model.layers[l].w.data, b.model.layers[l].w.data, "{label}: layer {l} w");
+        assert_eq!(a.model.layers[l].b, b.model.layers[l].b, "{label}: layer {l} b");
+    }
+    assert_eq!(a.test.accuracy, b.test.accuracy, "{label}: test accuracy");
+    assert_eq!(a.test.loss, b.test.loss, "{label}: test loss");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (x, y) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(x.train_loss, y.train_loss, "{label}: epoch {} train loss", x.epoch);
+        assert_eq!(x.val_accuracy, y.val_accuracy, "{label}: epoch {} val acc", x.epoch);
+    }
+}
+
+/// Train the same config with observation off, then with counters and
+/// tracing both on, and demand bit-identical results — at 1 and 2
+/// in-process shards. `expect_counter`, when given, names a counter
+/// that must have actually ticked during the observed run (proof the
+/// counted path engaged rather than silently staying off).
+fn check_obs_invariant_mlp<B, F>(label: &str, mk: F, expect_counter: Option<&str>)
+where
+    B: Backend,
+    F: Fn() -> B,
+{
+    let ds = tiny_ds();
+    for shards in [1usize, 2] {
+        let mut cfg = tiny_cfg();
+        if shards > 1 {
+            cfg.shard = ShardConfig::with_shards(shards);
+        }
+        obs::set_all(false);
+        let off = train(&mk(), &ds, &cfg);
+
+        obs::set_all(true);
+        obs::reset_all();
+        let on = train(&mk(), &ds, &cfg);
+        let snap = metrics::snapshot();
+        obs::set_all(false);
+
+        assert_mlp_runs_equal(&format!("{label} shards={shards} obs on vs off"), &off, &on);
+        if let Some(name) = expect_counter {
+            assert!(
+                snap.get(name) > 0,
+                "{label} shards={shards}: expected counter {name} to tick during training"
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_obs_invariant_float() {
+    let _s = ObsSession::begin();
+    check_obs_invariant_mlp("float32", FloatBackend::default, None);
+}
+
+#[test]
+fn mlp_obs_invariant_fixed16() {
+    let _s = ObsSession::begin();
+    check_obs_invariant_mlp(
+        "lin16",
+        || FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01),
+        None,
+    );
+}
+
+#[test]
+fn mlp_obs_invariant_lns16_lut() {
+    let _s = ObsSession::begin();
+    check_obs_invariant_mlp(
+        "log16-lut",
+        || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01),
+        Some("delta_lut_adds"),
+    );
+}
+
+#[test]
+fn mlp_obs_invariant_lns16_bitshift() {
+    let _s = ObsSession::begin();
+    check_obs_invariant_mlp(
+        "log16-bs",
+        || LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01),
+        Some("delta_shift_adds"),
+    );
+}
+
+#[test]
+fn cnn_obs_invariant_lns16_lut() {
+    let _s = ObsSession::begin();
+    let ds = stripes_dataset(&StripeSpec {
+        train_per_class: 8,
+        test_per_class: 3,
+        ..StripeSpec::cnn_default(1.0, 17)
+    });
+    let mut cfg = CnnTrainConfig::lenet(12, 4);
+    cfg.arch.c1 = 2;
+    cfg.arch.c2 = 3;
+    cfg.arch.hidden = 8;
+    cfg.epochs = 1;
+    cfg.sgd = SgdConfig { lr: 0.02, weight_decay: 0.0 };
+    cfg.seed = 19;
+    let mk = || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+
+    obs::set_all(false);
+    let off = train_cnn(&mk(), &ds, &cfg);
+
+    obs::set_all(true);
+    obs::reset_all();
+    let on = train_cnn(&mk(), &ds, &cfg);
+    let adds = metrics::snapshot().get("delta_lut_adds");
+    obs::set_all(false);
+
+    assert_cnn_runs_equal("cnn log16-lut obs on vs off", &off, &on);
+    assert!(adds > 0, "CNN training under obs must tick the ⊞ counter");
+}
+
+fn assert_cnn_runs_equal<E: PartialEq + std::fmt::Debug>(
+    label: &str,
+    a: &TrainResult<Cnn<E>>,
+    b: &TrainResult<Cnn<E>>,
+) {
+    assert_eq!(a.model.conv1.w.data, b.model.conv1.w.data, "{label}: conv1 w");
+    assert_eq!(a.model.conv2.w.data, b.model.conv2.w.data, "{label}: conv2 w");
+    assert_eq!(a.model.fc1.w.data, b.model.fc1.w.data, "{label}: fc1 w");
+    assert_eq!(a.model.fc2.w.data, b.model.fc2.w.data, "{label}: fc2 w");
+    assert_eq!(a.model.conv1.b, b.model.conv1.b, "{label}: conv1 b");
+    assert_eq!(a.model.fc2.b, b.model.fc2.b, "{label}: fc2 b");
+    assert_eq!(a.test.accuracy, b.test.accuracy, "{label}: test accuracy");
+    assert_eq!(a.test.loss, b.test.loss, "{label}: test loss");
+}
+
+/// Two real worker processes, with heartbeats flowing: the observed run
+/// must still be bit-identical to the unobserved one (and to serial).
+#[test]
+fn multiproc_obs_invariant_with_heartbeats() {
+    let _s = ObsSession::begin();
+    let ds = tiny_ds();
+    let cfg = tiny_cfg();
+    let mut spec = MultiprocSpec::new(2);
+    spec.worker_exe = Some(worker_exe());
+    spec.transport = Transport::Stdio;
+    spec.worker_threads = 1;
+
+    obs::set_all(false);
+    let off = train_multiproc(&FloatBackend::default(), &ds, &cfg, &spec)
+        .unwrap_or_else(|e| panic!("obs-off multi-process run failed: {e:#}"));
+
+    obs::set_all(true);
+    obs::reset_all();
+    let on = train_multiproc(&FloatBackend::default(), &ds, &cfg, &spec)
+        .unwrap_or_else(|e| panic!("obs-on multi-process run failed: {e:#}"));
+    let snap = metrics::snapshot();
+    obs::set_all(false);
+
+    assert_mlp_runs_equal("float32 multiproc obs on vs off", &off, &on);
+    let serial = train(&FloatBackend::default(), &ds, &cfg);
+    assert_mlp_runs_equal("float32 serial obs-off vs multiproc obs-on", &serial, &on);
+
+    // Heartbeats really flowed during the observed run — the invariant
+    // holds *with* the extra frames on the wire, not by omitting them.
+    assert!(snap.get("wire_frames_tx") > 0, "coordinator sent no frames?");
+    assert!(snap.get("heartbeat_rx") > 0, "no worker heartbeats were received");
+    assert_eq!(snap.get("worker_deaths"), 0, "no worker should die in a clean run");
+}
+
+#[test]
+fn multiproc_obs_invariant_lns16_lut() {
+    let _s = ObsSession::begin();
+    let ds = tiny_ds();
+    let cfg = tiny_cfg();
+    let mut spec = MultiprocSpec::new(2);
+    spec.worker_exe = Some(worker_exe());
+    spec.transport = Transport::Stdio;
+    spec.worker_threads = 1;
+    let mk = || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+
+    obs::set_all(false);
+    let off = train_multiproc(&mk(), &ds, &cfg, &spec)
+        .unwrap_or_else(|e| panic!("obs-off LNS multi-process run failed: {e:#}"));
+    obs::set_all(true);
+    obs::reset_all();
+    let on = train_multiproc(&mk(), &ds, &cfg, &spec)
+        .unwrap_or_else(|e| panic!("obs-on LNS multi-process run failed: {e:#}"));
+    let hb = metrics::snapshot().get("heartbeat_rx");
+    obs::set_all(false);
+
+    assert_mlp_runs_equal("log16-lut multiproc obs on vs off", &off, &on);
+    assert!(hb > 0, "no worker heartbeats were received");
+}
+
+/// Counter pins on hand-counted operand sets, driven through the
+/// *public* dispatchers (`add_slice` / `mac_row` / `dot_acc`) rather
+/// than the `_tallied` twins, under both lane settings. The counts are
+/// part of the numerics contract: deterministic per config, identical
+/// whether the lane kernels are enabled or not.
+#[test]
+fn lns_counter_pins_are_lane_invariant() {
+    let _s = ObsSession::begin();
+    obs::set_counters(true);
+    for lanes_on in [true, false] {
+        lanes::set_enabled(lanes_on);
+        for (mode, cfg) in
+            [("lut", LnsConfig::w16_lut()), ("bitshift", LnsConfig::w16_bitshift())]
+        {
+            let s = LnsSystem::new(cfg);
+            let hi = s.config().m_max();
+            let pos_max = LnsValue::new(hi, true);
+            let one = LnsValue::ONE;
+            let x = s.encode_f64(2.75);
+            let label = format!("{mode} lanes={lanes_on}");
+            obs::reset_all();
+
+            // Exact cancellation: one ⊞ fold, one cancel.
+            let mut acc = vec![x];
+            s.add_slice(&mut acc, &[x.neg()]);
+            assert!(acc[0].is_zero(), "{label}: x ⊞ (−x) must cancel to zero");
+
+            // Top-of-range same-sign add: Δ+ pushes past m_max.
+            let mut acc = vec![pos_max];
+            s.add_slice(&mut acc, &[pos_max]);
+            assert_eq!(acc[0].m, hi, "{label}: clamped add stays at m_max");
+
+            // mac_row over [1, 0, max] with a = max: one zero skip, one
+            // product saturation (max ⊡ max), two ⊞ folds onto acc = 1.
+            let mut acc = vec![one, one, one];
+            s.mac_row(&mut acc, pos_max, &[one, LnsValue::ZERO, pos_max]);
+
+            // dot_acc zero skips count either-operand-zero pairs; the
+            // surviving product lands in a zero accumulator (no ⊞).
+            let out =
+                s.dot_acc(LnsValue::ZERO, &[x, LnsValue::ZERO, x], &[LnsValue::ZERO, x, x]);
+            assert!(!out.is_zero(), "{label}: dot_acc lost its product");
+
+            let snap = metrics::snapshot();
+            let (lut, shift) = if mode == "lut" { (4, 0) } else { (0, 4) };
+            assert_eq!(snap.get("delta_lut_adds"), lut, "{label}: LUT ⊞ count");
+            assert_eq!(snap.get("delta_shift_adds"), shift, "{label}: bit-shift ⊞ count");
+            assert_eq!(snap.get("lns_cancel"), 1, "{label}: cancellations");
+            assert_eq!(snap.get("lns_clamp_hi"), 1, "{label}: high clamps");
+            assert_eq!(snap.get("lns_mul_sat"), 1, "{label}: product saturations");
+            assert_eq!(snap.get("dot_zero_skip"), 3, "{label}: zero skips");
+        }
+    }
+}
+
+/// Fixed-point pins plus full-registry lane invariance: the same ops
+/// under lanes on and lanes off leave identical counter totals.
+#[test]
+fn fixed_counter_pins_are_lane_invariant() {
+    let _s = ObsSession::begin();
+    obs::set_counters(true);
+    let s = FixedSystem::new(FixedConfig::w16());
+    let mc = s.config().max_code();
+    let mut totals = Vec::new();
+    for lanes_on in [true, false] {
+        lanes::set_enabled(lanes_on);
+        obs::reset_all();
+        // max·max saturates the product; adding it to a max accumulator
+        // saturates the accumulate too.
+        let mut acc = vec![mc, 0];
+        s.mac_row(&mut acc, mc, &[mc, 0]);
+        assert_eq!(acc, vec![mc, 0], "lanes={lanes_on}: saturated mac_row values");
+        let snap = metrics::snapshot();
+        assert_eq!(snap.get("fixed_mul_sat"), 1, "lanes={lanes_on}: product saturation");
+        assert_eq!(snap.get("fixed_acc_sat"), 1, "lanes={lanes_on}: accumulate saturation");
+        totals.push(metrics::named_totals());
+    }
+    assert_eq!(totals[0], totals[1], "fixed counts must not depend on the lane path");
+}
+
+/// `--trace` output is structurally sound: valid JSON, Chrome
+/// trace_event shape, every B matched by an E, nothing dropped.
+#[test]
+fn trace_output_is_valid_chrome_json() {
+    let _s = ObsSession::begin();
+    obs::set_all(true);
+    obs::reset_all();
+    let ds = tiny_ds();
+    let mut cfg = tiny_cfg();
+    cfg.epochs = 1;
+    train(&FloatBackend::default(), &ds, &cfg);
+
+    let path = std::env::temp_dir().join(format!("lnsdnn_obs_trace_{}.json", std::process::id()));
+    obs::trace::write_chrome_trace(&path).expect("writing Chrome trace");
+    let text = std::fs::read_to_string(&path).expect("reading trace back");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(obs::trace::dropped(), 0, "tiny run must fit the event buffer");
+    obs::set_all(false);
+
+    let pairs = lnsdnn::bench_util::validate_chrome_trace(&text)
+        .unwrap_or_else(|e| panic!("trace failed validation: {e}"));
+    assert!(pairs > 0, "trace must contain at least one completed span pair");
+}
