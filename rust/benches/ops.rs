@@ -11,7 +11,8 @@
 //! The bench opens with the **pinned record suite**: fixed shapes and
 //! seeds, one [`BenchRecord`] per (backend, kernel, shape), including the
 //! lane-vs-scalar `mac_panel` pair that quantifies the branchless lane
-//! kernels and the obs off/on pair that prices the telemetry gate
+//! kernels, the obs off/on pair that prices the telemetry gate, and the
+//! `obs_serve` idle/scraped pair that prices a live `/metrics` scraper
 //! (docs/OBSERVABILITY.md). CI runs it in quick mode and persists the records as the
 //! repo's `BENCH_*.json` trajectory. Environment knobs:
 //!
@@ -147,9 +148,63 @@ fn record_obs_pair(rec: &mut Recorder, b: &LnsBackend, seed: u64, budget_ms: u64
     println!("    ↳ counting cost {:.2}× (obs off vs on)", off / on);
 }
 
+/// Record the live-endpoint cost pair at 256³: the same tiled matmul
+/// (counters on, so `/metrics` renders real content) with the HTTP
+/// endpoint bound but idle, then with a scraper thread looping `GET
+/// /metrics` for the whole measurement. The pair prices a worst-case
+/// scrape storm; a real Prometheus scrape arrives every few seconds, so
+/// the production cost sits between the two records and near the idle
+/// one.
+fn record_serve_pair(rec: &mut Recorder, b: &LnsBackend, seed: u64, budget_ms: u64) {
+    use std::io::{Read, Write};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let shape = (256usize, 256usize, 256usize);
+    let (m, k, n) = shape;
+    let (a, w) = encoded_mats(b, m, k, n, seed);
+    let macs = (m * k * n) as f64;
+    let tag = b.tag();
+    obs::set_counters(true);
+    let srv = obs::serve::ObsServer::start("127.0.0.1:0").expect("bind bench obs endpoint");
+    let addr = srv.addr();
+    let idle_label = format!("record/{tag}/obs_serve_idle/{m}x{k}x{n}");
+    let idle = timed(&idle_label, budget_ms, macs, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    let stop = std::sync::Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+                    let _ = s.write_all(
+                        b"GET /metrics HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n",
+                    );
+                    let mut body = String::new();
+                    let _ = s.read_to_string(&mut body);
+                    scrapes += 1;
+                }
+            }
+            scrapes
+        })
+    };
+    let scraped_label = format!("record/{tag}/obs_serve_scraped/{m}x{k}x{n}");
+    let scraped = timed(&scraped_label, budget_ms, macs, || {
+        black_box(ops::matmul_tiled(b, &a, &w));
+    });
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap_or(0);
+    srv.stop();
+    obs::set_counters(false);
+    obs::reset_all();
+    rec.add(&tag, "obs_serve_idle", shape, idle);
+    rec.add(&tag, "obs_serve_scraped", shape, scraped);
+    println!("    ↳ scrape cost {:.2}× (idle vs scraped, {scrapes} scrapes)", idle / scraped);
+}
+
 /// The pinned record suite: 256³ on all four backends, the lane-vs-scalar
-/// pairs on both LNS Δ modes, the obs off/on pair, and the MLP / im2col
-/// shapes.
+/// pairs on both LNS Δ modes, the obs off/on pair, the live-endpoint
+/// idle/scraped pair, and the MLP / im2col shapes.
 fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
     let mut rec = Recorder::new();
     let cube = (256usize, 256usize, 256usize);
@@ -163,6 +218,7 @@ fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
     record_lane_vs_scalar(&mut rec, &lut, 22, budget_ms);
     record_lane_vs_scalar(&mut rec, &bs, 22, budget_ms);
     record_obs_pair(&mut rec, &lut, 22, budget_ms);
+    record_serve_pair(&mut rec, &lut, 22, budget_ms);
     for shape in [(256usize, 784usize, 100usize), (6272, 150, 12)] {
         record_tiled(&mut rec, &FloatBackend::default(), shape, 23, budget_ms);
         record_tiled(&mut rec, &lut, shape, 23, budget_ms);

@@ -133,6 +133,48 @@ pub fn obs_markdown(label: &str) -> String {
     if !any {
         out.push_str("| _(no counter activity)_ | | |\n");
     }
+    let dist = crate::obs::dist::snapshot();
+    if !dist.entries.is_empty() {
+        out.push_str("\n## Range occupancy\n\n");
+        if let Some((lo, hi)) = crate::obs::dist::exp_range() {
+            out.push_str(&format!(
+                "Backend representable exponent range: [{lo}, {hi}] \
+                 ({} bits of exponent span).\n\n",
+                hi - lo + 1
+            ));
+        }
+        out.push_str("| class | layer | samples | zeros | negative | occupied exp span | headroom (bits) | range used |\n");
+        out.push_str("|---|---:|---:|---:|---:|---|---:|---:|\n");
+        for e in &dist.entries {
+            let class = crate::obs::dist::TensorClass::from_code(e.class)
+                .map(|c| c.name())
+                .unwrap_or("?");
+            let (span, headroom, frac) = match (e.occupied_span(), crate::obs::dist::exp_range()) {
+                (Some((lo, hi)), Some((rmin, rmax))) => (
+                    format!("[{lo}, {hi}]"),
+                    format!("{}", rmax - hi),
+                    format!("{:.2}", (hi - lo + 1) as f64 / (rmax - rmin + 1).max(1) as f64),
+                ),
+                (Some((lo, hi)), None) => (format!("[{lo}, {hi}]"), "–".into(), "–".into()),
+                _ => ("–".into(), "–".into(), "–".into()),
+            };
+            out.push_str(&format!(
+                "| {class} | {} | {} | {} | {} | {span} | {headroom} | {frac} |\n",
+                e.layer,
+                e.total(),
+                e.zeros,
+                e.neg
+            ));
+        }
+        let norms = crate::obs::dist::grad_norms();
+        if !norms.is_empty() {
+            out.push_str("\nGradient norms (backend arithmetic, last recorded batch):\n\n");
+            out.push_str("| layer | L1 | L∞ |\n|---:|---:|---:|\n");
+            for (layer, l1, linf) in &norms {
+                out.push_str(&format!("| {layer} | {l1:.6} | {linf:.6} |\n"));
+            }
+        }
+    }
     if !spans.is_empty() {
         out.push_str("\n## Spans\n\n| span | count | total ms |\n|---|---:|---:|\n");
         for (name, count, ns) in &spans {

@@ -113,6 +113,9 @@ OBSERVABILITY (any command; most useful on train/cnn/fig2/table1/worker)
                    plus an end-of-run summary at <out>/obs_summary.md
   --trace FILE     record phase spans; writes Chrome trace JSON on exit
   --metrics FILE   stream per-epoch counter snapshots as JSON lines
+  --obs-listen A   serve live /metrics (Prometheus), /health and /trace
+                   on A (e.g. 127.0.0.1:9184; port 0 picks one and the
+                   resolved address is printed to stderr)
 Observation is read-only: trained weights are bit-identical with or
 without these flags (see docs/OBSERVABILITY.md).
 
@@ -142,6 +145,21 @@ fn run() -> Result<()> {
         lnsdnn::obs::metrics::set_table(true);
     }
     let trace = obs_flags(&flags)?;
+    // `--obs-listen ADDR` starts the blocking HTTP endpoint before the
+    // command runs; counters must be on or every scrape would read zeros.
+    let server = match flags.get("obs-listen") {
+        Some(addr) => {
+            lnsdnn::obs::set_counters(true);
+            lnsdnn::obs::set_trace(true);
+            let srv = lnsdnn::obs::serve::ObsServer::start(addr)
+                .with_context(|| format!("binding --obs-listen {addr}"))?;
+            // CI and scripts parse this line to learn the resolved port
+            // when ADDR asked for an ephemeral one (`127.0.0.1:0`).
+            eprintln!("[obs] listening on http://{}", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let result = match cmd.as_str() {
         "fig1" => cmd_fig1(&flags),
         "fig2" => cmd_fig2(&flags),
@@ -172,6 +190,11 @@ fn run() -> Result<()> {
         let path = out_dir(&flags).join("obs_summary.md");
         report::write_markdown(&path, &report::obs_markdown(cmd))?;
         eprintln!("[obs] summary → {}", path.display());
+    }
+    // Stop the endpoint last so a scraper can still read the final state
+    // of a failed run while the error propagates.
+    if let Some(srv) = server {
+        srv.stop();
     }
     result
 }

@@ -765,6 +765,15 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
             let _scope = layer_scope(1);
             let (cols1, z1) = self.conv1.forward_mode(backend, x, mode);
             let a1 = ops::leaky_relu(backend, &z1);
+            // Value-distribution sampling of each layer output (read-only
+            // probe, gated inside; NUMERICS.md §7). Scopes 1–4 mirror the
+            // counter attribution above.
+            crate::obs::dist::record_slice(
+                backend,
+                crate::obs::dist::TensorClass::Activations,
+                1,
+                &a1.data,
+            );
             (cols1, z1, a1)
         };
         // Strided variant: the activation map feeds conv-2 directly
@@ -778,6 +787,12 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
             let _scope = layer_scope(2);
             let (cols2, z2) = self.conv2.forward_mode(backend, &p1, mode);
             let a2 = ops::leaky_relu(backend, &z2);
+            crate::obs::dist::record_slice(
+                backend,
+                crate::obs::dist::TensorClass::Activations,
+                2,
+                &a2.data,
+            );
             (cols2, z2, a2)
         };
         let (p2, route2) = if pooled {
@@ -790,12 +805,24 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
             let mut zf = mm(backend, &p2, &self.fc1.w, mode);
             ops::add_bias(backend, &mut zf, &self.fc1.b);
             let af = ops::leaky_relu(backend, &zf);
+            crate::obs::dist::record_slice(
+                backend,
+                crate::obs::dist::TensorClass::Activations,
+                3,
+                &af.data,
+            );
             (zf, af)
         };
         let logits = {
             let _scope = layer_scope(4);
             let mut logits = mm(backend, &af, &self.fc2.w, mode);
             ops::add_bias(backend, &mut logits, &self.fc2.b);
+            crate::obs::dist::record_slice(
+                backend,
+                crate::obs::dist::TensorClass::Activations,
+                4,
+                &logits.data,
+            );
             logits
         };
         CnnCache { cols1, z1, p1, route1, cols2, z2, p2, route2, zf, af, logits }

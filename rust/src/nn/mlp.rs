@@ -136,6 +136,14 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
             } else {
                 ops::leaky_relu(backend, &z)
             };
+            // Value-distribution sampling of the layer output (read-only
+            // probe, gated inside; NUMERICS.md §7).
+            crate::obs::dist::record_slice(
+                backend,
+                crate::obs::dist::TensorClass::Activations,
+                l + 1,
+                &a.data,
+            );
             zs.push(z);
             acts.push(a);
         }

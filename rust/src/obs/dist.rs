@@ -1,0 +1,584 @@
+//! Value-distribution telemetry: per-layer, per-tensor-class exponent
+//! occupancy histograms and derived training-dynamics metrics.
+//!
+//! The paper's bet is that a 16-bit log-domain word has *enough dynamic
+//! range* for training. The counters in [`super::metrics`] say *that*
+//! clamps and cancellations happen; this module says *where in value
+//! space* each layer actually lives, which is the measurement substrate
+//! for per-layer bitwidth selection (see `docs/OBSERVABILITY.md`,
+//! "Reading range occupancy").
+//!
+//! # What is recorded
+//!
+//! Every sampled element is reduced by its backend to a read-only
+//! [`Sample`] — zero flag, linear-domain sign, and the base-2 exponent
+//! of its magnitude (the integer part of the LNS log-magnitude `m ≫ q_f`;
+//! `⌊log2 |code|⌋ − q_f` for fixed point; the IEEE exponent for floats).
+//! Samples land in a fixed bank of [`EXP_BUCKETS`] occupancy buckets per
+//! (tensor class × layer scope), plus per-cell zero and negative totals.
+//!
+//! # Where it is recorded (determinism)
+//!
+//! Sampling happens only at *deterministic* points of the training loop:
+//! activations as each layer's forward output is produced, gradients on
+//! the per-batch (or per-sample, in workers) gradient sums, and weights
+//! on the post-update parameters at epoch end. Because the sampled
+//! values are themselves bit-reproducible per configuration
+//! (`docs/NUMERICS.md`), the histograms are too: two runs of the same
+//! config produce identical banks (pinned in `tests/obs_exactness.rs`).
+//!
+//! # The invariant
+//!
+//! Recording is **read-only** (NUMERICS.md §7): backends expose
+//! [`crate::tensor::Backend::dist_sample`] as a pure projection, nothing
+//! here is ever read back by an arithmetic path, and every entry point
+//! is gated on [`crate::obs::counters_enabled`] so the disabled cost is
+//! one relaxed load. The gradient-norm gauges fold through the backend's
+//! own *scalar* `add`/`sub`/`gt` — which are not counter-gated and touch
+//! no shared state — so even they leave counters and values untouched.
+
+use crate::obs::metrics::MAX_SCOPES;
+use crate::tensor::Backend;
+use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+/// Occupancy buckets per (class × layer) cell. Bucket `i` holds samples
+/// with exponent `i - EXP_OFFSET`; the edge buckets absorb anything
+/// beyond the covered span (float gradients can undershoot any fixed
+/// word's range).
+pub const EXP_BUCKETS: usize = 48;
+
+/// Exponent of bucket 0 is `-EXP_OFFSET`; the covered span is
+/// `[-EXP_OFFSET, EXP_BUCKETS - 1 - EXP_OFFSET]` = `[-32, 15]`, which
+/// contains every representable 12/16-bit LNS and fixed-point exponent.
+pub const EXP_OFFSET: i32 = 32;
+
+/// Tensor classes tracked per layer.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TensorClass {
+    /// Post-update parameters (weights and biases).
+    Weights,
+    /// Forward-pass layer outputs.
+    Activations,
+    /// Per-batch (coordinator) / per-sample (worker) gradient sums.
+    Gradients,
+}
+
+/// Number of [`TensorClass`] variants (bank sizing).
+pub const CLASSES: usize = 3;
+
+impl TensorClass {
+    /// All classes, in wire-code order.
+    pub const ALL: [TensorClass; CLASSES] =
+        [TensorClass::Weights, TensorClass::Activations, TensorClass::Gradients];
+
+    /// Stable label (metric label values and report rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            TensorClass::Weights => "weights",
+            TensorClass::Activations => "activations",
+            TensorClass::Gradients => "gradients",
+        }
+    }
+
+    /// Wire code (heartbeat v3 payloads).
+    pub fn code(self) -> u8 {
+        match self {
+            TensorClass::Weights => 0,
+            TensorClass::Activations => 1,
+            TensorClass::Gradients => 2,
+        }
+    }
+
+    /// Decode a wire code.
+    pub fn from_code(code: u8) -> Option<TensorClass> {
+        match code {
+            0 => Some(TensorClass::Weights),
+            1 => Some(TensorClass::Activations),
+            2 => Some(TensorClass::Gradients),
+            _ => None,
+        }
+    }
+}
+
+/// A backend's read-only projection of one element for sampling — see
+/// [`crate::tensor::Backend::dist_sample`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Sample {
+    /// Exact additive identity (not binned; counted separately).
+    pub zero: bool,
+    /// Linear-domain sign is negative. Meaningless when `zero`.
+    pub neg: bool,
+    /// Base-2 exponent of the magnitude. Meaningless when `zero`.
+    pub exp: i32,
+}
+
+/// Bucket index of an exponent (edge buckets absorb out-of-span values).
+#[inline]
+pub fn bucket_of(exp: i32) -> usize {
+    (exp + EXP_OFFSET).clamp(0, EXP_BUCKETS as i32 - 1) as usize
+}
+
+// ---------------------------------------------------------------------
+// The banks
+// ---------------------------------------------------------------------
+
+const EXP_CELLS_LEN: usize = CLASSES * MAX_SCOPES * EXP_BUCKETS;
+const SIDE_CELLS_LEN: usize = CLASSES * MAX_SCOPES;
+/// Flat bank length: exponent buckets, then zero cells, then neg cells.
+const FLAT_LEN: usize = EXP_CELLS_LEN + 2 * SIDE_CELLS_LEN;
+
+static EXP_CELLS: [AtomicU64; EXP_CELLS_LEN] = [const { AtomicU64::new(0) }; EXP_CELLS_LEN];
+static ZERO_CELLS: [AtomicU64; SIDE_CELLS_LEN] = [const { AtomicU64::new(0) }; SIDE_CELLS_LEN];
+static NEG_CELLS: [AtomicU64; SIDE_CELLS_LEN] = [const { AtomicU64::new(0) }; SIDE_CELLS_LEN];
+
+/// Representable-exponent range of the recording backend (for headroom
+/// and fraction-of-range metrics). `i32::MIN` marks "not registered".
+static EXP_RANGE_MIN: AtomicI32 = AtomicI32::new(i32::MIN);
+static EXP_RANGE_MAX: AtomicI32 = AtomicI32::new(i32::MIN);
+
+/// Latest per-layer gradient norms, decoded once to `f64` and stored as
+/// IEEE bit patterns (gauges: the newest recorded batch wins).
+static GRAD_L1: [AtomicU64; MAX_SCOPES] = [const { AtomicU64::new(0) }; MAX_SCOPES];
+static GRAD_LINF: [AtomicU64; MAX_SCOPES] = [const { AtomicU64::new(0) }; MAX_SCOPES];
+
+#[inline]
+fn side_idx(class: TensorClass, layer: usize) -> usize {
+    class.code() as usize * MAX_SCOPES + layer.min(MAX_SCOPES - 1)
+}
+
+#[inline]
+fn exp_base(class: TensorClass, layer: usize) -> usize {
+    side_idx(class, layer) * EXP_BUCKETS
+}
+
+// ---------------------------------------------------------------------
+// Recording
+// ---------------------------------------------------------------------
+
+/// Record every element of `xs` into the (class, layer) occupancy cell.
+/// Gated on [`crate::obs::counters_enabled`]; the per-element work is a
+/// pure [`Backend::dist_sample`] projection into a stack-local tally,
+/// flushed as one batch of relaxed `fetch_add`s.
+pub fn record_slice<B: Backend>(backend: &B, class: TensorClass, layer: usize, xs: &[B::E]) {
+    if !crate::obs::counters_enabled() {
+        return;
+    }
+    let (lo, hi) = backend.dist_exp_range();
+    EXP_RANGE_MIN.store(lo, Ordering::Relaxed);
+    EXP_RANGE_MAX.store(hi, Ordering::Relaxed);
+    let mut buckets = [0u64; EXP_BUCKETS];
+    let mut zeros = 0u64;
+    let mut negs = 0u64;
+    for &x in xs {
+        let s = backend.dist_sample(x);
+        if s.zero {
+            zeros += 1;
+            continue;
+        }
+        if s.neg {
+            negs += 1;
+        }
+        buckets[bucket_of(s.exp)] += 1;
+    }
+    let base = exp_base(class, layer);
+    for (i, &b) in buckets.iter().enumerate() {
+        if b != 0 {
+            EXP_CELLS[base + i].fetch_add(b, Ordering::Relaxed);
+        }
+    }
+    if zeros != 0 {
+        ZERO_CELLS[side_idx(class, layer)].fetch_add(zeros, Ordering::Relaxed);
+    }
+    if negs != 0 {
+        NEG_CELLS[side_idx(class, layer)].fetch_add(negs, Ordering::Relaxed);
+    }
+}
+
+/// Record flat per-layer views in the canonical [`crate::nn::GradStore`]
+/// order (each layer's weight buffer, then its bias buffer, layers
+/// ascending — the same order [`crate::train::wire`] frames use), so
+/// view `i` belongs to layer `i/2 + 1`.
+pub fn record_layer_views<B: Backend>(backend: &B, class: TensorClass, views: &[&[B::E]]) {
+    if !crate::obs::counters_enabled() {
+        return;
+    }
+    for (i, view) in views.iter().enumerate() {
+        record_slice(backend, class, i / 2 + 1, view);
+    }
+}
+
+/// Record per-layer gradient L1/L∞ norms **in the backend's own
+/// arithmetic** (|g| is exact in every backend; the L1 fold is the
+/// backend's scalar ⊞ chain over view order), decoded once at the end
+/// into the gauge bank. Views in canonical order, like
+/// [`record_layer_views`].
+pub fn record_grad_norms<B: Backend>(backend: &B, views: &[&[B::E]]) {
+    if !crate::obs::counters_enabled() {
+        return;
+    }
+    let zero = backend.zero();
+    for (l, pair) in views.chunks(2).enumerate() {
+        let layer = (l + 1).min(MAX_SCOPES - 1);
+        let mut l1 = zero;
+        let mut linf = zero;
+        for view in pair {
+            for &g in view.iter() {
+                let s = backend.dist_sample(g);
+                if s.zero {
+                    continue;
+                }
+                let a = if s.neg { backend.sub(zero, g) } else { g };
+                l1 = backend.add(l1, a);
+                if backend.gt(a, linf) {
+                    linf = a;
+                }
+            }
+        }
+        GRAD_L1[layer].store(backend.decode(l1).to_bits(), Ordering::Relaxed);
+        GRAD_LINF[layer].store(backend.decode(linf).to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// One call covering a batch's gradient views: occupancy histogram plus
+/// the norm gauges. The trainers call this on every batch's gradient
+/// sums (deterministic points), so the histograms are reproducible.
+pub fn record_gradients<B: Backend>(backend: &B, views: &[&[B::E]]) {
+    if !crate::obs::counters_enabled() {
+        return;
+    }
+    record_layer_views(backend, TensorClass::Gradients, views);
+    record_grad_norms(backend, views);
+}
+
+/// The recording backend's representable exponent range, if any slice
+/// has been recorded.
+pub fn exp_range() -> Option<(i32, i32)> {
+    let lo = EXP_RANGE_MIN.load(Ordering::Relaxed);
+    let hi = EXP_RANGE_MAX.load(Ordering::Relaxed);
+    if lo == i32::MIN && hi == i32::MIN {
+        None
+    } else {
+        Some((lo, hi))
+    }
+}
+
+/// `(layer, l1, linf)` for every layer with a recorded gradient norm.
+pub fn grad_norms() -> Vec<(usize, f64, f64)> {
+    let mut out = Vec::new();
+    for layer in 1..MAX_SCOPES {
+        let l1 = f64::from_bits(GRAD_L1[layer].load(Ordering::Relaxed));
+        let linf = f64::from_bits(GRAD_LINF[layer].load(Ordering::Relaxed));
+        if l1 != 0.0 || linf != 0.0 {
+            out.push((layer, l1, linf));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Snapshots and merging
+// ---------------------------------------------------------------------
+
+/// One (class, layer) occupancy cell — the unit heartbeat v3 frames
+/// carry and snapshots are made of. Plain data; all counts monotone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DistEntry {
+    /// [`TensorClass::code`].
+    pub class: u8,
+    /// Layer scope (1-based; see [`MAX_SCOPES`]).
+    pub layer: u8,
+    /// Exact zeros seen.
+    pub zeros: u64,
+    /// Negative (non-zero) samples seen.
+    pub neg: u64,
+    /// Exponent occupancy (index `i` ⇒ exponent `i - EXP_OFFSET`).
+    pub buckets: Vec<u64>,
+}
+
+impl DistEntry {
+    /// Non-zero samples binned in this cell.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Occupied exponent span `(lo, hi)`, if any sample landed.
+    pub fn occupied_span(&self) -> Option<(i32, i32)> {
+        let first = self.buckets.iter().position(|&b| b != 0)?;
+        let last = self.buckets.iter().rposition(|&b| b != 0)?;
+        Some((first as i32 - EXP_OFFSET, last as i32 - EXP_OFFSET))
+    }
+}
+
+/// A set of [`DistEntry`] cells, kept sorted by `(class, layer)`.
+/// Cell-wise merge is associative and commutative (u64 addition on
+/// key-matched cells), so cross-worker aggregation is order-free —
+/// pinned by the unit tests below.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DistSnapshot {
+    /// Entries sorted by `(class, layer)`.
+    pub entries: Vec<DistEntry>,
+}
+
+impl DistSnapshot {
+    /// Add `entries` into `self` cell-wise; unknown `(class, layer)`
+    /// keys are inserted in sorted position. Shorter bucket vectors are
+    /// zero-extended, so peers with a different (older/newer) bucket
+    /// count still merge losslessly.
+    pub fn merge_entries(&mut self, entries: &[DistEntry]) {
+        for e in entries {
+            let key = (e.class, e.layer);
+            match self.entries.binary_search_by_key(&key, |x| (x.class, x.layer)) {
+                Ok(i) => {
+                    let mine = &mut self.entries[i];
+                    mine.zeros += e.zeros;
+                    mine.neg += e.neg;
+                    if mine.buckets.len() < e.buckets.len() {
+                        mine.buckets.resize(e.buckets.len(), 0);
+                    }
+                    for (a, &b) in mine.buckets.iter_mut().zip(e.buckets.iter()) {
+                        *a += b;
+                    }
+                }
+                Err(i) => self.entries.insert(i, e.clone()),
+            }
+        }
+    }
+
+    /// Merge a whole snapshot (cell-wise, see [`Self::merge_entries`]).
+    pub fn merge(&mut self, other: &DistSnapshot) {
+        self.merge_entries(&other.entries);
+    }
+
+    /// The entry for `(class, layer)`, if present.
+    pub fn get(&self, class: TensorClass, layer: usize) -> Option<&DistEntry> {
+        let key = (class.code(), layer as u8);
+        self.entries
+            .binary_search_by_key(&key, |x| (x.class, x.layer))
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+}
+
+/// Copy the banks into flat form (exp cells, then zeros, then negs).
+fn flat_now() -> Vec<u64> {
+    let mut out = Vec::with_capacity(FLAT_LEN);
+    out.extend(EXP_CELLS.iter().map(|c| c.load(Ordering::Relaxed)));
+    out.extend(ZERO_CELLS.iter().map(|c| c.load(Ordering::Relaxed)));
+    out.extend(NEG_CELLS.iter().map(|c| c.load(Ordering::Relaxed)));
+    out
+}
+
+/// Build sorted entries from a flat bank image, dropping all-zero cells.
+fn entries_from_flat(flat: &[u64]) -> Vec<DistEntry> {
+    let mut entries = Vec::new();
+    for class in TensorClass::ALL {
+        for layer in 0..MAX_SCOPES {
+            let base = exp_base(class, layer);
+            let buckets = &flat[base..base + EXP_BUCKETS];
+            let zeros = flat[EXP_CELLS_LEN + side_idx(class, layer)];
+            let neg = flat[EXP_CELLS_LEN + SIDE_CELLS_LEN + side_idx(class, layer)];
+            if zeros == 0 && neg == 0 && buckets.iter().all(|&b| b == 0) {
+                continue;
+            }
+            entries.push(DistEntry {
+                class: class.code(),
+                layer: layer as u8,
+                zeros,
+                neg,
+                buckets: buckets.to_vec(),
+            });
+        }
+    }
+    entries
+}
+
+/// Element-wise `cur - last` (counts are monotone, so this never
+/// underflows in a well-formed delta; `saturating_sub` guards a reset
+/// race anyway).
+fn diff_flat(cur: &[u64], last: &[u64]) -> Vec<u64> {
+    cur.iter()
+        .enumerate()
+        .map(|(i, &c)| c.saturating_sub(last.get(i).copied().unwrap_or(0)))
+        .collect()
+}
+
+/// Point-in-time snapshot of this process's local banks.
+pub fn snapshot() -> DistSnapshot {
+    DistSnapshot { entries: entries_from_flat(&flat_now()) }
+}
+
+/// Bank image at the last [`take_wire_delta`] call (empty = never).
+static LAST_SENT: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+
+/// Entries covering everything recorded since the previous call — the
+/// delta payload a worker's heartbeat carries. Counts are monotone, so
+/// the coordinator reconstructs each worker's full histogram by summing
+/// its deltas (order-free; see [`DistSnapshot::merge_entries`]).
+pub fn take_wire_delta() -> Vec<DistEntry> {
+    let cur = flat_now();
+    let mut last = LAST_SENT.lock().unwrap_or_else(PoisonError::into_inner);
+    let delta = diff_flat(&cur, &last);
+    *last = cur;
+    entries_from_flat(&delta)
+}
+
+// ---------------------------------------------------------------------
+// Coordinator-side worker aggregation
+// ---------------------------------------------------------------------
+
+/// Per-rank accumulated worker distributions (heartbeat v3 deltas).
+static WORKERS: Mutex<Vec<(u32, DistSnapshot)>> = Mutex::new(Vec::new());
+
+/// Fold one worker's heartbeat delta into its accumulated snapshot.
+pub fn merge_worker_delta(rank: u32, entries: &[DistEntry]) {
+    if entries.is_empty() {
+        return;
+    }
+    let mut workers = WORKERS.lock().unwrap_or_else(PoisonError::into_inner);
+    match workers.iter_mut().find(|(r, _)| *r == rank) {
+        Some((_, snap)) => snap.merge_entries(entries),
+        None => {
+            let mut snap = DistSnapshot::default();
+            snap.merge_entries(entries);
+            workers.push((rank, snap));
+            workers.sort_by_key(|(r, _)| *r);
+        }
+    }
+}
+
+/// Accumulated per-rank worker snapshots (ranks ascending).
+pub fn worker_snapshots() -> Vec<(u32, DistSnapshot)> {
+    WORKERS.lock().unwrap_or_else(PoisonError::into_inner).clone()
+}
+
+/// The fleet-wide view: this process's local banks plus every worker's
+/// accumulated deltas.
+pub fn fleet_snapshot() -> DistSnapshot {
+    let mut snap = snapshot();
+    for (_, w) in worker_snapshots() {
+        snap.merge(&w);
+    }
+    snap
+}
+
+/// Zero every bank, gauge, delta baseline and worker accumulation.
+pub fn reset() {
+    for c in EXP_CELLS.iter().chain(ZERO_CELLS.iter()).chain(NEG_CELLS.iter()) {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in GRAD_L1.iter().chain(GRAD_LINF.iter()) {
+        g.store(0, Ordering::Relaxed);
+    }
+    EXP_RANGE_MIN.store(i32::MIN, Ordering::Relaxed);
+    EXP_RANGE_MAX.store(i32::MIN, Ordering::Relaxed);
+    LAST_SENT.lock().unwrap_or_else(PoisonError::into_inner).clear();
+    WORKERS.lock().unwrap_or_else(PoisonError::into_inner).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(class: u8, layer: u8, zeros: u64, neg: u64, occupied: &[(usize, u64)]) -> DistEntry {
+        let mut buckets = vec![0u64; EXP_BUCKETS];
+        for &(i, v) in occupied {
+            buckets[i] = v;
+        }
+        DistEntry { class, layer, zeros, neg, buckets }
+    }
+
+    #[test]
+    fn bucket_of_covers_and_clamps() {
+        assert_eq!(bucket_of(-EXP_OFFSET), 0);
+        assert_eq!(bucket_of(0), EXP_OFFSET as usize);
+        assert_eq!(bucket_of(15), EXP_OFFSET as usize + 15);
+        // Out-of-span exponents land in the edge buckets, never panic.
+        assert_eq!(bucket_of(-1000), 0);
+        assert_eq!(bucket_of(1000), EXP_BUCKETS - 1);
+    }
+
+    #[test]
+    fn entry_occupied_span() {
+        let e = entry(0, 1, 3, 0, &[(30, 2), (35, 1)]);
+        assert_eq!(e.occupied_span(), Some((30 - EXP_OFFSET, 35 - EXP_OFFSET)));
+        assert_eq!(e.total(), 3);
+        assert_eq!(entry(0, 1, 5, 0, &[]).occupied_span(), None);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        // Three "worker delta" sets with overlapping and disjoint keys —
+        // the shapes cross-worker aggregation actually sees.
+        let a = vec![entry(2, 1, 1, 2, &[(10, 5), (11, 1)]), entry(2, 2, 0, 0, &[(12, 7)])];
+        let b = vec![entry(2, 1, 3, 1, &[(10, 2), (20, 4)]), entry(0, 1, 0, 0, &[(31, 9)])];
+        let c = vec![entry(2, 2, 2, 2, &[(12, 1)]), entry(1, 3, 1, 0, &[(33, 3)])];
+
+        let fold = |sets: &[&Vec<DistEntry>]| {
+            let mut s = DistSnapshot::default();
+            for set in sets {
+                s.merge_entries(set);
+            }
+            s
+        };
+        // Commutative: every arrival order gives the same aggregate.
+        let abc = fold(&[&a, &b, &c]);
+        assert_eq!(abc, fold(&[&c, &b, &a]));
+        assert_eq!(abc, fold(&[&b, &a, &c]));
+        // Associative: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) as snapshot merges.
+        let mut ab = fold(&[&a, &b]);
+        ab.merge_entries(&c);
+        let mut bc = fold(&[&b, &c]);
+        let mut a_first = fold(&[&a]);
+        a_first.merge(&bc);
+        assert_eq!(ab, a_first);
+        // Entries stay sorted by (class, layer) whatever the order.
+        let keys: Vec<(u8, u8)> = abc.entries.iter().map(|e| (e.class, e.layer)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        // And the overlapping cell really summed.
+        let g1 = abc.get(TensorClass::Gradients, 1).unwrap();
+        assert_eq!((g1.zeros, g1.neg), (4, 3));
+        assert_eq!(g1.buckets[10], 7);
+    }
+
+    #[test]
+    fn merge_zero_extends_shorter_bucket_vectors() {
+        let mut s = DistSnapshot::default();
+        s.merge_entries(&[DistEntry { class: 0, layer: 1, zeros: 0, neg: 0, buckets: vec![1] }]);
+        s.merge_entries(&[entry(0, 1, 0, 0, &[(4, 9)])]);
+        let e = s.get(TensorClass::Weights, 1).unwrap();
+        assert_eq!(e.buckets.len(), EXP_BUCKETS);
+        assert_eq!((e.buckets[0], e.buckets[4]), (1, 9));
+    }
+
+    #[test]
+    fn flat_diff_is_monotone_delta() {
+        let last = vec![3u64, 0, 7];
+        let cur = vec![5u64, 2, 7];
+        assert_eq!(diff_flat(&cur, &last), vec![2, 2, 0]);
+        // Empty baseline = everything is new.
+        assert_eq!(diff_flat(&cur, &[]), cur);
+    }
+
+    #[test]
+    fn entries_from_flat_drops_empty_cells_and_keys_correctly() {
+        let mut flat = vec![0u64; FLAT_LEN];
+        flat[exp_base(TensorClass::Gradients, 2) + 40] = 6;
+        flat[EXP_CELLS_LEN + side_idx(TensorClass::Gradients, 2)] = 11;
+        let entries = entries_from_flat(&flat);
+        assert_eq!(entries.len(), 1);
+        assert_eq!((entries[0].class, entries[0].layer), (TensorClass::Gradients.code(), 2));
+        assert_eq!(entries[0].zeros, 11);
+        assert_eq!(entries[0].buckets[40], 6);
+    }
+
+    #[test]
+    fn class_codes_roundtrip() {
+        for c in TensorClass::ALL {
+            assert_eq!(TensorClass::from_code(c.code()), Some(c));
+        }
+        assert_eq!(TensorClass::from_code(9), None);
+    }
+}

@@ -9,7 +9,7 @@
 //! losses and eval metrics to running with it disabled, on every backend
 //! and every execution path (serial / rayon / tiled / lanes / sharded /
 //! multi-process). `tests/obs_exactness.rs` pins this end to end; the
-//! clause lives in `docs/NUMERICS.md` §6 and the design rationale in
+//! clause lives in `docs/NUMERICS.md` §7 and the design rationale in
 //! `docs/OBSERVABILITY.md`.
 //!
 //! Two consequences shape the implementation:
@@ -33,11 +33,20 @@
 //! events, and the arithmetic is bit-reproducible. Span *timings* are
 //! not deterministic — only their structure is.
 
+pub mod dist;
 pub mod metrics;
+pub mod serve;
 pub mod trace;
 
 pub use metrics::{layer_scope, reenter_scope, task_scope, ObsTally, ScopeGuard};
 pub use trace::{span, Span, SpanKind};
+
+/// Schema version stamped into every `--metrics` JSONL line as `"v"`.
+/// v1 (unstamped): PR 7 counters + spans. v2: adds the stamp itself;
+/// the shape change this PR makes (dist telemetry lives on /metrics,
+/// not in the sink) is detectable via its presence. Readers must
+/// tolerate absence (⇒ v1).
+pub const METRICS_LINE_VERSION: u32 = 2;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -78,6 +87,8 @@ pub fn set_all(on: bool) {
 pub fn reset_all() {
     metrics::reset_all();
     trace::reset();
+    dist::reset();
+    serve::reset_workers();
 }
 
 /// Per-epoch flush: emit the `--obs` stderr table and/or one JSONL sink
@@ -108,7 +119,7 @@ pub fn flush_epoch(label: &str, epoch: usize) {
     }
     if sink {
         let mut line = format!(
-            "{{\"label\":\"{}\",\"epoch\":{epoch},\"counters\":{}",
+            "{{\"v\":{METRICS_LINE_VERSION},\"label\":\"{}\",\"epoch\":{epoch},\"counters\":{}",
             metrics::json_escape(label),
             snap.to_json()
         );
@@ -121,5 +132,36 @@ pub fn flush_epoch(label: &str, epoch: usize) {
         }
         line.push_str("}}");
         metrics::sink_line(&line);
+    }
+}
+
+/// Schema version of a `--metrics` JSONL line. Lines written before the
+/// `"v"` stamp existed (PR 7) parse as version 1; downstream readers
+/// must go through this so old sinks keep loading.
+pub fn metrics_line_version(line: &str) -> u32 {
+    let trimmed = line.trim_start();
+    let Some(rest) = trimmed.strip_prefix("{\"v\":") else {
+        return 1;
+    };
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_line_version_tolerates_absence() {
+        // v2 line as flush_epoch writes it.
+        let v2 =
+            format!("{{\"v\":{METRICS_LINE_VERSION},\"label\":\"x\",\"epoch\":0,\"counters\":{{}}}}");
+        assert_eq!(metrics_line_version(&v2), METRICS_LINE_VERSION);
+        // PR 7 line shape: no stamp ⇒ version 1.
+        let v1 = "{\"label\":\"x\",\"epoch\":0,\"counters\":{},\"spans\":{}}";
+        assert_eq!(metrics_line_version(v1), 1);
+        // Garbage degrades to 1, never panics.
+        assert_eq!(metrics_line_version(""), 1);
+        assert_eq!(metrics_line_version("{\"v\":\"nope\"}"), 1);
     }
 }

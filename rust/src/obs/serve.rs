@@ -1,0 +1,517 @@
+//! Zero-dependency observation endpoint: a blocking HTTP 1.1 server on
+//! its own thread (`std::net::TcpListener`, no async runtime, no crates)
+//! exposing the live telemetry of a running training process:
+//!
+//! * `GET /metrics` — Prometheus text format 0.0.4: every counter from
+//!   [`super::metrics`] (with per-layer attribution), both wire
+//!   histograms, the per-layer exponent-occupancy distributions and
+//!   derived gauges from [`super::dist`] (gradient norms, headroom to
+//!   clamp, fraction of range used, cancellation density), and — on a
+//!   multi-process coordinator — the per-rank worker distributions plus
+//!   the fleet aggregate.
+//! * `GET /health` — JSON liveness: process status and, on a
+//!   coordinator, per-worker heartbeat freshness (rank, last progress,
+//!   milliseconds since the last heartbeat).
+//! * `GET /trace` — the current Chrome trace buffer
+//!   ([`super::trace::render_chrome_trace`]), loadable in Perfetto
+//!   mid-run.
+//!
+//! Wired as `--obs-listen ADDR` on every training subcommand (see the
+//! CLI usage text). The server only ever *reads* the telemetry banks —
+//! scraping mid-run cannot perturb training values or counters, which
+//! `tests/obs_exactness.rs` pins with a live scraper hammering
+//! `/metrics` during a run.
+
+use super::dist::{self, DistSnapshot, TensorClass, EXP_OFFSET};
+use super::metrics;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long the accept loop sleeps between polls (the listener is
+/// non-blocking so `stop` can interrupt it promptly).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Per-connection read deadline; a stalled client cannot wedge the
+/// serving thread.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Request head size cap (we only ever need the request line).
+const MAX_REQUEST_BYTES: usize = 8192;
+
+// ---------------------------------------------------------------------
+// Worker freshness registry (/health)
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct WorkerSeen {
+    rank: u32,
+    epoch: u32,
+    step: u32,
+    samples_done: u64,
+    at: Instant,
+}
+
+static WORKERS_SEEN: Mutex<Vec<WorkerSeen>> = Mutex::new(Vec::new());
+
+/// Record a worker heartbeat arrival (called by the multi-process
+/// coordinator's heartbeat fold) so `/health` can report freshness.
+pub fn note_worker(rank: u32, epoch: u32, step: u32, samples_done: u64) {
+    let mut seen = WORKERS_SEEN.lock().unwrap_or_else(PoisonError::into_inner);
+    let rec = WorkerSeen { rank, epoch, step, samples_done, at: Instant::now() };
+    match seen.iter_mut().find(|w| w.rank == rank) {
+        Some(w) => *w = rec,
+        None => {
+            seen.push(rec);
+            seen.sort_by_key(|w| w.rank);
+        }
+    }
+}
+
+/// Clear the worker freshness registry (part of `obs::reset_all`).
+pub fn reset_workers() {
+    WORKERS_SEEN.lock().unwrap_or_else(PoisonError::into_inner).clear();
+}
+
+fn render_health() -> String {
+    let seen = WORKERS_SEEN.lock().unwrap_or_else(PoisonError::into_inner).clone();
+    let mut out = String::from("{\"status\":\"ok\",\"workers\":[");
+    for (i, w) in seen.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"rank\":{},\"epoch\":{},\"step\":{},\"samples_done\":{},\"age_ms\":{}}}",
+            w.rank,
+            w.epoch,
+            w.step,
+            w.samples_done,
+            w.at.elapsed().as_millis()
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Prometheus rendering (/metrics)
+// ---------------------------------------------------------------------
+
+/// Escape a Prometheus label value (`\`, `"`, newline).
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn family(out: &mut String, name: &str, help: &str, typ: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+}
+
+fn dist_series(out: &mut String, metric: &str, extra: &str, snap: &DistSnapshot) {
+    for e in &snap.entries {
+        let class = TensorClass::from_code(e.class).map(TensorClass::name).unwrap_or("unknown");
+        for (i, &count) in e.buckets.iter().enumerate() {
+            if count != 0 {
+                out.push_str(&format!(
+                    "{metric}{{{extra}class=\"{class}\",layer=\"{}\",exp=\"{}\"}} {count}\n",
+                    e.layer,
+                    i as i32 - EXP_OFFSET
+                ));
+            }
+        }
+    }
+}
+
+fn dist_side_series(
+    out: &mut String,
+    metric: &str,
+    extra: &str,
+    snap: &DistSnapshot,
+    pick: fn(&dist::DistEntry) -> u64,
+) {
+    for e in &snap.entries {
+        let v = pick(e);
+        if v != 0 {
+            let class = TensorClass::from_code(e.class).map(TensorClass::name).unwrap_or("unknown");
+            out.push_str(&format!(
+                "{metric}{{{extra}class=\"{class}\",layer=\"{}\"}} {v}\n",
+                e.layer
+            ));
+        }
+    }
+}
+
+/// Render the full `/metrics` payload (public so the Prometheus-format
+/// golden test and the serve-overhead bench can call it directly).
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    // -- Numerics + wire counters ------------------------------------
+    for c in metrics::all() {
+        let name = format!("lnsdnn_{}_total", c.name());
+        family(&mut out, &name, "Monotone event counter (see docs/OBSERVABILITY.md).", "counter");
+        out.push_str(&format!("{name} {}\n", c.total()));
+        let by = c.by_scope();
+        let layer_name = format!("lnsdnn_{}_layer_total", c.name());
+        let mut wrote_head = false;
+        for (scope, &v) in by.iter().enumerate().skip(1) {
+            if v == 0 {
+                continue;
+            }
+            if !wrote_head {
+                family(&mut out, &layer_name, "Per-layer attribution of the counter.", "counter");
+                wrote_head = true;
+            }
+            out.push_str(&format!("{layer_name}{{layer=\"{scope}\"}} {v}\n"));
+        }
+    }
+
+    // -- Wire histograms ---------------------------------------------
+    for h in [&metrics::WIRE_FRAME_BYTES, &metrics::WORKER_DETECT_LATENCY_MS] {
+        let name = format!("lnsdnn_{}", h.name());
+        family(&mut out, &name, "Bucketed observation histogram.", "histogram");
+        let counts = h.counts();
+        let mut cum = 0u64;
+        for (i, &bound) in h.bounds().iter().enumerate() {
+            cum += counts[i];
+            out.push_str(&format!("{name}_bucket{{le=\"{bound}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.total()));
+        out.push_str(&format!("{name}_count {}\n", h.total()));
+    }
+
+    // -- Value distributions (this process) --------------------------
+    let local = dist::snapshot();
+    family(
+        &mut out,
+        "lnsdnn_dist_exp_total",
+        "Samples per base-2 exponent bucket, by tensor class and layer.",
+        "counter",
+    );
+    dist_series(&mut out, "lnsdnn_dist_exp_total", "", &local);
+    family(&mut out, "lnsdnn_dist_zero_total", "Exact zeros sampled.", "counter");
+    dist_side_series(&mut out, "lnsdnn_dist_zero_total", "", &local, |e| e.zeros);
+    family(&mut out, "lnsdnn_dist_neg_total", "Negative (non-zero) samples.", "counter");
+    dist_side_series(&mut out, "lnsdnn_dist_neg_total", "", &local, |e| e.neg);
+
+    // -- Derived training-dynamics gauges ----------------------------
+    if let Some((lo, hi)) = dist::exp_range() {
+        family(
+            &mut out,
+            "lnsdnn_dist_exp_range",
+            "Representable exponent range of the recording backend.",
+            "gauge",
+        );
+        out.push_str(&format!("lnsdnn_dist_exp_range{{bound=\"min\"}} {lo}\n"));
+        out.push_str(&format!("lnsdnn_dist_exp_range{{bound=\"max\"}} {hi}\n"));
+        family(
+            &mut out,
+            "lnsdnn_dist_headroom_bits",
+            "Bits between the hottest occupied exponent and the clamp ceiling.",
+            "gauge",
+        );
+        let mut headroom = String::new();
+        let mut range_frac = String::new();
+        for e in &local.entries {
+            let Some((olo, ohi)) = e.occupied_span() else {
+                continue;
+            };
+            let class = TensorClass::from_code(e.class).map(TensorClass::name).unwrap_or("unknown");
+            headroom.push_str(&format!(
+                "lnsdnn_dist_headroom_bits{{class=\"{class}\",layer=\"{}\"}} {}\n",
+                e.layer,
+                hi - ohi
+            ));
+            let span = (ohi - olo + 1) as f64 / (hi - lo + 1).max(1) as f64;
+            range_frac.push_str(&format!(
+                "lnsdnn_dist_range_frac{{class=\"{class}\",layer=\"{}\"}} {span}\n",
+                e.layer
+            ));
+        }
+        out.push_str(&headroom);
+        family(
+            &mut out,
+            "lnsdnn_dist_range_frac",
+            "Fraction of the representable exponent range a cell occupies.",
+            "gauge",
+        );
+        out.push_str(&range_frac);
+    }
+
+    let norms = dist::grad_norms();
+    if !norms.is_empty() {
+        family(
+            &mut out,
+            "lnsdnn_grad_l1",
+            "Latest per-layer gradient L1 norm (backend arithmetic, decoded).",
+            "gauge",
+        );
+        for &(layer, l1, _) in &norms {
+            out.push_str(&format!("lnsdnn_grad_l1{{layer=\"{layer}\"}} {l1}\n"));
+        }
+        family(
+            &mut out,
+            "lnsdnn_grad_linf",
+            "Latest per-layer gradient L-infinity norm (backend arithmetic, decoded).",
+            "gauge",
+        );
+        for &(layer, _, linf) in &norms {
+            out.push_str(&format!("lnsdnn_grad_linf{{layer=\"{layer}\"}} {linf}\n"));
+        }
+    }
+
+    // Cancellation density: catastrophic ⊟ cancellations per ⊞/⊟
+    // evaluation — a dynamics signal the raw counters only imply.
+    let snap = metrics::snapshot();
+    let adds =
+        snap.get("delta_lut_adds") + snap.get("delta_shift_adds") + snap.get("delta_exact_adds");
+    if adds != 0 {
+        family(
+            &mut out,
+            "lnsdnn_cancel_density",
+            "lns_cancel per delta-evaluated add (cancellation density).",
+            "gauge",
+        );
+        out.push_str(&format!(
+            "lnsdnn_cancel_density {}\n",
+            snap.get("lns_cancel") as f64 / adds as f64
+        ));
+    }
+
+    // -- Cross-worker aggregation (multi-process coordinator) --------
+    let workers = dist::worker_snapshots();
+    if !workers.is_empty() {
+        family(
+            &mut out,
+            "lnsdnn_worker_dist_exp_total",
+            "Per-rank worker exponent occupancy (from heartbeat v3 deltas).",
+            "counter",
+        );
+        for (rank, snap) in &workers {
+            dist_series(
+                &mut out,
+                "lnsdnn_worker_dist_exp_total",
+                &format!("rank=\"{rank}\","),
+                snap,
+            );
+        }
+        family(
+            &mut out,
+            "lnsdnn_fleet_dist_exp_total",
+            "Fleet-wide exponent occupancy: local banks plus all worker deltas.",
+            "counter",
+        );
+        dist_series(&mut out, "lnsdnn_fleet_dist_exp_total", "", &dist::fleet_snapshot());
+    }
+
+    out
+}
+
+// ---------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------
+
+/// Handle to a running observation endpoint. Dropping (or calling
+/// [`ObsServer::stop`]) shuts the serving thread down.
+pub struct ObsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`, port `0` for ephemeral) and
+    /// start serving on a background thread.
+    pub fn start(addr: &str) -> std::io::Result<ObsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("lnsdnn-obs-serve".into())
+            .spawn(move || serve_loop(listener, &flag))?;
+        Ok(ObsServer { addr: local, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves an ephemeral port request).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shut the serving thread down and join it.
+    pub fn stop(self) {
+        drop(self);
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, shutdown: &AtomicBool) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Serve inline: endpoints render fast and the scrape
+                // cadence is seconds — one thread is plenty.
+                let _ = handle_conn(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > MAX_REQUEST_BYTES {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+    }
+    match path {
+        "/metrics" => {
+            respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &render_prometheus())
+        }
+        "/health" => respond(&mut stream, "200 OK", "application/json", &render_health()),
+        "/trace" => {
+            respond(&mut stream, "200 OK", "application/json", &super::trace::render_chrome_trace())
+        }
+        "/" => respond(
+            &mut stream,
+            "200 OK",
+            "text/plain",
+            "lnsdnn observation endpoint: /metrics /health /trace\n",
+        ),
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "unknown path\n"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    /// Structural Prometheus-format check on whatever state the process
+    /// has (lib unit tests never enable the global counters, so this
+    /// asserts format, not totals — the golden totals test lives in
+    /// `tests/obs_exactness.rs` under the obs lock).
+    #[test]
+    fn prometheus_payload_is_well_formed() {
+        let text = render_prometheus();
+        assert!(text.contains("# HELP lnsdnn_lns_clamp_hi_total"));
+        assert!(text.contains("# TYPE lnsdnn_lns_clamp_hi_total counter"));
+        assert!(text.contains("# TYPE lnsdnn_wire_frame_bytes histogram"));
+        assert!(text.contains("lnsdnn_wire_frame_bytes_bucket{le=\"+Inf\"}"));
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "bad comment line: {line}"
+                );
+                continue;
+            }
+            let (name_part, value) = line.rsplit_once(' ').expect("sample line has a value");
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparsable value: {line}"));
+            assert!(v.is_finite(), "non-finite sample: {line}");
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn server_serves_and_stops() {
+        let srv = ObsServer::start("127.0.0.1:0").expect("bind ephemeral");
+        let addr = srv.addr();
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(b"GET /health HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+        // Unknown path 404s, wrong method 405s.
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        s2.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+        let mut r2 = String::new();
+        s2.read_to_string(&mut r2).unwrap();
+        assert!(r2.starts_with("HTTP/1.1 404"), "{r2}");
+        let mut s3 = TcpStream::connect(addr).unwrap();
+        s3.write_all(b"POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let mut r3 = String::new();
+        s3.read_to_string(&mut r3).unwrap();
+        assert!(r3.starts_with("HTTP/1.1 405"), "{r3}");
+        srv.stop();
+        // The port is released after stop: a fresh bind to it succeeds
+        // (best-effort — other processes could grab it, so only assert
+        // the join completed by reaching this point).
+    }
+
+    #[test]
+    fn health_reports_worker_freshness() {
+        // note_worker feeds a process-global registry; use ranks high
+        // enough not to collide with other tests' entries.
+        note_worker(901, 3, 7, 4242);
+        let body = render_health();
+        assert!(body.contains("\"rank\":901"), "{body}");
+        assert!(body.contains("\"samples_done\":4242"), "{body}");
+    }
+}

@@ -257,11 +257,14 @@ fn render_chrome(events: &[Event], dropped: u64) -> String {
 /// Every buffered span becomes a balanced `B`/`E` pair; the file footer
 /// records how many spans the bounded buffer dropped.
 pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
-    let rendered = {
-        let ev = EVENTS.lock().unwrap_or_else(PoisonError::into_inner);
-        render_chrome(&ev, DROPPED.load(Ordering::Relaxed))
-    };
-    std::fs::write(path, rendered)
+    std::fs::write(path, render_chrome_trace())
+}
+
+/// Render the current buffer as Chrome `trace_event` JSON without
+/// touching the filesystem — the `/trace` endpoint serves this.
+pub fn render_chrome_trace() -> String {
+    let ev = EVENTS.lock().unwrap_or_else(PoisonError::into_inner);
+    render_chrome(&ev, DROPPED.load(Ordering::Relaxed))
 }
 
 #[cfg(test)]

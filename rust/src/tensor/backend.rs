@@ -160,6 +160,30 @@ pub trait Backend: Send + Sync {
     /// `a > b` in the linear ordering (argmax for accuracy metrics).
     fn gt(&self, a: Self::E, b: Self::E) -> bool;
 
+    /// Read-only value-distribution probe: classify `e` as zero/negative
+    /// and report its base-2 exponent (⌊log2 |v|⌋) in the backend's own
+    /// representation. **Observation only** — implementations must not
+    /// mutate backend state (no SR dither draws, no counters) and callers
+    /// must never feed the result back into the value path
+    /// (NUMERICS.md §7).
+    #[inline]
+    fn dist_sample(&self, e: Self::E) -> crate::obs::dist::Sample {
+        let v = self.decode(e);
+        crate::obs::dist::Sample {
+            zero: self.is_zero(e),
+            neg: v < 0.0,
+            exp: if v == 0.0 { 0 } else { v.abs().log2().floor() as i32 },
+        }
+    }
+
+    /// Representable exponent range `(lo, hi)` of this backend's word
+    /// format: the ⌊log2 |v|⌋ of the smallest and largest nonzero
+    /// magnitudes. Headroom-to-clamp gauges are measured against `hi`.
+    #[inline]
+    fn dist_exp_range(&self) -> (i32, i32) {
+        (-126, 127)
+    }
+
     /// Human-readable backend tag for reports (e.g. `log16-lut`).
     fn tag(&self) -> String;
 }
@@ -397,6 +421,25 @@ impl Backend for FixedBackend {
     fn gt(&self, a: FixedValue, b: FixedValue) -> bool {
         a > b
     }
+    /// Integer-exact probe: `⌊log2 |code|⌋ − frac_bits` from the code's
+    /// bit length — no float round-trip.
+    #[inline]
+    fn dist_sample(&self, e: FixedValue) -> crate::obs::dist::Sample {
+        let frac = self.sys.config().frac_bits as i32;
+        crate::obs::dist::Sample {
+            zero: e == 0,
+            neg: e < 0,
+            exp: if e == 0 { 0 } else { 31 - e.unsigned_abs().leading_zeros() as i32 - frac },
+        }
+    }
+    /// Code 1 (one ulp) up to `max_code`, as base-2 exponents.
+    #[inline]
+    fn dist_exp_range(&self) -> (i32, i32) {
+        let cfg = self.sys.config();
+        let frac = cfg.frac_bits as i32;
+        let hi = 31 - cfg.max_code().unsigned_abs().leading_zeros() as i32 - frac;
+        (-frac, hi)
+    }
     fn tag(&self) -> String {
         format!("lin{}", self.sys.config().total_bits)
     }
@@ -517,6 +560,23 @@ impl Backend for LnsBackend {
     fn gt(&self, a: LnsValue, b: LnsValue) -> bool {
         self.sys.gt(a, b)
     }
+    /// Field-exact probe: the LNS word *is* the exponent — integer part
+    /// of the log-magnitude via arithmetic shift (floor), sign from the
+    /// `s` flag (`s == true ⇔ v > 0`).
+    #[inline]
+    fn dist_sample(&self, e: LnsValue) -> crate::obs::dist::Sample {
+        crate::obs::dist::Sample {
+            zero: e.is_zero(),
+            neg: !e.is_zero() && !e.s,
+            exp: if e.is_zero() { 0 } else { e.m >> self.sys.config().frac_bits },
+        }
+    }
+    /// `m_min()` to `m_max()`, floored to integer exponents.
+    #[inline]
+    fn dist_exp_range(&self) -> (i32, i32) {
+        let cfg = self.sys.config();
+        (cfg.m_min() >> cfg.frac_bits, cfg.m_max() >> cfg.frac_bits)
+    }
     fn tag(&self) -> String {
         let cfg = self.sys.config();
         let d = match cfg.delta {
@@ -628,6 +688,31 @@ mod tests {
             }
         }
         assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn dist_probe_matches_representation() {
+        // LNS: exponent comes straight off the word's integer field.
+        let lb = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let s = lb.dist_sample(lb.encode(-8.0));
+        assert!(!s.zero && s.neg);
+        assert_eq!(s.exp, 3);
+        assert!(lb.dist_sample(lb.zero()).zero);
+        let (lo, hi) = lb.dist_exp_range();
+        assert!(lo < 0 && hi > 0, "{lo}..{hi}");
+
+        // Fixed: bit length of the code minus the fraction width.
+        let fb = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let s = fb.dist_sample(fb.encode(0.5));
+        assert!(!s.zero && !s.neg);
+        assert_eq!(s.exp, -1);
+        assert_eq!(fb.dist_exp_range().0, -(fb.system().config().frac_bits as i32));
+
+        // Float: default decode-based probe.
+        let flb = FloatBackend::default();
+        let s = flb.dist_sample(-3.0f32);
+        assert!(s.neg);
+        assert_eq!(s.exp, 1);
     }
 
     #[test]

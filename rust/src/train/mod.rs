@@ -33,6 +33,8 @@ pub use metrics::{evaluate, evaluate_with, EvalResult};
 pub use multiproc::{JobEnv, PeerIo, Transport};
 pub use shard::ShardConfig;
 
+use multiproc::ProtoModel;
+
 use crate::data::Dataset;
 use crate::nn::{Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig};
 use crate::obs::{self, span, SpanKind};
@@ -199,8 +201,22 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
             } else {
                 model.backprop_avg(backend, &bx, &by)
             };
+            // Deterministic sampling point: the batch gradient about to
+            // be applied (read-only; see obs::dist module docs).
+            if obs::counters_enabled() {
+                obs::dist::record_gradients(backend, &GradStore::<B>::flat_views(&grads));
+            }
             cfg.sgd.apply(backend, &mut model, &grads);
             loss.add_sum(raw.loss_sum, raw.n);
+        }
+        // Deterministic sampling point: post-update parameters at epoch
+        // end, in canonical param_views order.
+        if obs::counters_enabled() {
+            obs::dist::record_layer_views(
+                backend,
+                obs::dist::TensorClass::Weights,
+                &ProtoModel::<B>::param_views(&model),
+            );
         }
         let seconds = start.elapsed().as_secs_f64();
         let val = eval_pooled(pool.as_ref(), || evaluate(backend, &model, &val_x, &val_y));
@@ -323,8 +339,19 @@ pub fn train_cnn<B: Backend>(
                 let xi = shard::sample_row(&bx, i);
                 model.backprop_sums(backend, &xi, &by[i..i + 1])
             });
+            // Same deterministic sampling points as [`train`].
+            if obs::counters_enabled() {
+                obs::dist::record_gradients(backend, &GradStore::<B>::flat_views(&grads));
+            }
             cfg.sgd.apply_cnn(backend, &mut model, &grads);
             loss.add_sum(raw.loss_sum, raw.n);
+        }
+        if obs::counters_enabled() {
+            obs::dist::record_layer_views(
+                backend,
+                obs::dist::TensorClass::Weights,
+                &ProtoModel::<B>::param_views(&model),
+            );
         }
         let seconds = start.elapsed().as_secs_f64();
         let val = eval_pooled(pool.as_ref(), || {

@@ -427,6 +427,11 @@ struct HeartbeatSeen {
 fn note_heartbeat(health: &mut [WorkerHealth], rank: usize, hb: &HeartbeatMsg) {
     if obs::counters_enabled() {
         obs::metrics::HEARTBEAT_RX.add(1);
+        // Fold the worker's distribution delta into its per-rank
+        // accumulation (feeds the /metrics fleet view) and refresh its
+        // /health freshness record. Both are observation-only.
+        obs::dist::merge_worker_delta(hb.rank, &hb.dist);
+        obs::serve::note_worker(hb.rank, hb.epoch, hb.step, hb.samples_done);
     }
     health[rank].last = Some(HeartbeatSeen {
         epoch: hb.epoch,
@@ -521,6 +526,7 @@ fn maybe_heartbeat<W: Write>(
             .map(|(name, count, ns)| (name.to_string(), count, ns))
             .collect(),
         counters: obs::metrics::named_totals(),
+        dist: obs::dist::take_wire_delta(),
     };
     obs::metrics::HEARTBEAT_TX.add(1);
     wire::write_frame(tx, FrameKind::Heartbeat, &hb.encode())
@@ -680,9 +686,22 @@ where
                 let _sp = span(SpanKind::Scale);
                 grads.scale(backend, 1.0 / raw.n as f64);
             }
+            // Same deterministic sampling points as the in-process
+            // trainers: the scaled batch gradient, then post-update
+            // weights at epoch end (read-only; NUMERICS.md §7).
+            if obs::counters_enabled() {
+                obs::dist::record_gradients(backend, &GradStore::<B>::flat_views(&grads));
+            }
             model.apply_update(backend, &params.sgd, &grads);
             loss.add_sum(raw.loss_sum, raw.n);
             step += 1;
+        }
+        if obs::counters_enabled() {
+            obs::dist::record_layer_views(
+                backend,
+                obs::dist::TensorClass::Weights,
+                &model.param_views(),
+            );
         }
         let seconds = start.elapsed().as_secs_f64();
         let val = evaluate_with(backend, classes, |v| model.logits(backend, v), &val_x, &val_y);
@@ -945,6 +964,10 @@ where
                 let (g, s) = model.backprop_sums(backend, &xi, &lbl);
                 samples_done += 1;
                 let views = GradStore::<B>::flat_views(&g);
+                // Worker-side sampling point: this rank's per-sample
+                // gradient sums (read-only; ships to the coordinator as
+                // a heartbeat v3 delta).
+                obs::dist::record_gradients(backend, &views);
                 let payload = GradFrame::<B::E>::encode_parts(
                     epoch as u32,
                     step,
@@ -995,6 +1018,14 @@ where
             }
             model.apply_update(backend, &sgd, &grads);
             step += 1;
+        }
+        // Worker epoch-end weights (mirror of the coordinator's point).
+        if obs::counters_enabled() {
+            obs::dist::record_layer_views(
+                backend,
+                obs::dist::TensorClass::Weights,
+                &model.param_views(),
+            );
         }
     }
 

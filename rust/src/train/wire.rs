@@ -58,8 +58,11 @@ pub const WIRE_MAGIC: [u8; 4] = *b"LNSW";
 /// a near-miss layout worse than failing).
 ///
 /// History: v1 = initial framing; v2 = added [`FrameKind::Heartbeat`]
-/// (worker progress/telemetry frames).
-pub const WIRE_VERSION: u16 = 2;
+/// (worker progress/telemetry frames); v3 = heartbeat payloads grew the
+/// trailing `dist` section (value-distribution histogram deltas,
+/// [`crate::obs::dist::DistEntry`]) for fleet-wide range-occupancy
+/// aggregation.
+pub const WIRE_VERSION: u16 = 3;
 
 /// Upper bound on a single payload (guards against allocating from a
 /// corrupt or hostile length field).
@@ -552,6 +555,12 @@ pub struct HeartbeatMsg {
     pub spans: Vec<(String, u64, u64)>,
     /// Counter totals at emission time: `(counter name, total)`.
     pub counters: Vec<(String, u64)>,
+    /// Value-distribution histogram *deltas* since the previous
+    /// heartbeat ([`crate::obs::dist::take_wire_delta`]); the
+    /// coordinator reconstructs the worker's full occupancy banks by
+    /// summing them (order-free — cell-wise u64 addition). Since
+    /// wire v3.
+    pub dist: Vec<crate::obs::dist::DistEntry>,
 }
 
 impl HeartbeatMsg {
@@ -572,6 +581,17 @@ impl HeartbeatMsg {
         for (name, total) in &self.counters {
             put_str(&mut out, name);
             put_u64(&mut out, *total);
+        }
+        put_u32(&mut out, self.dist.len() as u32);
+        for e in &self.dist {
+            put_u8(&mut out, e.class);
+            put_u8(&mut out, e.layer);
+            put_u64(&mut out, e.zeros);
+            put_u64(&mut out, e.neg);
+            put_u32(&mut out, e.buckets.len() as u32);
+            for &b in &e.buckets {
+                put_u64(&mut out, b);
+            }
         }
         out
     }
@@ -610,8 +630,35 @@ impl HeartbeatMsg {
             let total = r.u64()?;
             counters.push((name, total));
         }
+        let n_dist = r.u32()? as usize;
+        // A dist entry costs at least class + layer + zeros + neg + the
+        // bucket-count u32 (22 bytes); reject hostile counts before
+        // allocating by them.
+        ensure!(
+            n_dist <= r.remaining() / 22,
+            "heartbeat claims {n_dist} dist entries but only {} payload bytes remain",
+            r.remaining()
+        );
+        let mut dist = Vec::with_capacity(n_dist);
+        for _ in 0..n_dist {
+            let class = r.u8()?;
+            let layer = r.u8()?;
+            let zeros = r.u64()?;
+            let neg = r.u64()?;
+            let n_buckets = r.u32()? as usize;
+            ensure!(
+                n_buckets <= r.remaining() / 8,
+                "heartbeat dist entry claims {n_buckets} buckets but only {} payload bytes remain",
+                r.remaining()
+            );
+            let mut buckets = Vec::with_capacity(n_buckets);
+            for _ in 0..n_buckets {
+                buckets.push(r.u64()?);
+            }
+            dist.push(crate::obs::dist::DistEntry { class, layer, zeros, neg, buckets });
+        }
         r.done()?;
-        Ok(HeartbeatMsg { rank, epoch, step, samples_done, spans, counters })
+        Ok(HeartbeatMsg { rank, epoch, step, samples_done, spans, counters, dist })
     }
 }
 
@@ -1190,6 +1237,13 @@ mod tests {
             samples_done: 4242,
             spans: vec![("forward".into(), 12, 345_678), ("wire_encode".into(), 9, 1000)],
             counters: vec![("lns_cancel".into(), 7), ("delta_lut_adds".into(), 99_000)],
+            dist: vec![crate::obs::dist::DistEntry {
+                class: 2,
+                layer: 1,
+                zeros: 5,
+                neg: 9,
+                buckets: vec![0, 3, 0, 11],
+            }],
         };
         let mut buf = Vec::new();
         write_frame(&mut buf, FrameKind::Heartbeat, &hb.encode()).unwrap();
@@ -1205,6 +1259,7 @@ mod tests {
             samples_done: 0,
             spans: Vec::new(),
             counters: Vec::new(),
+            dist: Vec::new(),
         };
         assert_eq!(HeartbeatMsg::decode(&hb0.encode()).unwrap(), hb0);
     }
@@ -1218,11 +1273,36 @@ mod tests {
             samples_done: 1,
             spans: vec![("eval".into(), 1, 2)],
             counters: Vec::new(),
+            dist: Vec::new(),
         };
         let mut payload = hb.encode();
         // The span-count u32 sits right after rank/epoch/step/samples
         // (offset 4 + 4 + 4 + 8 = 20).
         payload[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(HeartbeatMsg::decode(&payload).is_err());
+
+        // The dist-entry count is the trailing u32 section (v3): an
+        // empty-dist payload ends with its count, then each entry's
+        // bucket count is length-guarded too.
+        let mut payload = hb.encode();
+        let n = payload.len();
+        payload[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(HeartbeatMsg::decode(&payload).is_err());
+
+        let with_dist = HeartbeatMsg {
+            dist: vec![crate::obs::dist::DistEntry {
+                class: 0,
+                layer: 1,
+                zeros: 0,
+                neg: 0,
+                buckets: vec![1, 2],
+            }],
+            ..hb
+        };
+        let mut payload = with_dist.encode();
+        // The bucket-count u32 sits 2 × 8 bucket bytes from the end.
+        let off = payload.len() - 16 - 4;
+        payload[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(HeartbeatMsg::decode(&payload).is_err());
     }
 

@@ -10,6 +10,12 @@
 //! paths, and the `--trace` output is a valid Chrome trace with every
 //! B event matched by an E.
 //!
+//! PR 8 extends the theorem to the value-distribution recorders and the
+//! live HTTP endpoint: occupancy snapshots are deterministic per
+//! config, the Prometheus rendering is well-formed with monotone
+//! counters, and a scraper hammering `/metrics` mid-run still leaves
+//! training bit-identical to the unobserved baseline.
+//!
 //! Every test here toggles process-global observation flags, so they
 //! all serialize on one mutex and restore the flags on exit (including
 //! panic exits — the lock is poison-tolerant for that reason).
@@ -276,10 +282,19 @@ fn multiproc_obs_invariant_lns16_lut() {
     let on = train_multiproc(&mk(), &ds, &cfg, &spec)
         .unwrap_or_else(|e| panic!("obs-on LNS multi-process run failed: {e:#}"));
     let hb = metrics::snapshot().get("heartbeat_rx");
+    let worker_dist = obs::dist::worker_snapshots();
     obs::set_all(false);
 
     assert_mlp_runs_equal("log16-lut multiproc obs on vs off", &off, &on);
     assert!(hb > 0, "no worker heartbeats were received");
+    assert!(
+        !worker_dist.is_empty(),
+        "no worker distribution deltas arrived via heartbeat v3"
+    );
+    assert!(
+        worker_dist.iter().any(|(_, s)| s.entries.iter().any(|e| e.total() > 0)),
+        "worker distribution deltas were all empty"
+    );
 }
 
 /// Counter pins on hand-counted operand sets, driven through the
@@ -384,4 +399,165 @@ fn trace_output_is_valid_chrome_json() {
     let pairs = lnsdnn::bench_util::validate_chrome_trace(&text)
         .unwrap_or_else(|e| panic!("trace failed validation: {e}"));
     assert!(pairs > 0, "trace must contain at least one completed span pair");
+}
+
+/// Two identical observed runs produce identical distribution
+/// snapshots: the recorders sample at deterministic points (per-batch
+/// gradient sums, post-update weights, forward activations), so the
+/// occupancy histograms are reproducible per config.
+#[test]
+fn occupancy_snapshots_are_deterministic() {
+    let _s = ObsSession::begin();
+    let ds = tiny_ds();
+    let cfg = tiny_cfg();
+    let mk = || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+
+    obs::set_counters(true);
+    obs::reset_all();
+    train(&mk(), &ds, &cfg);
+    let first = obs::dist::snapshot();
+
+    obs::reset_all();
+    train(&mk(), &ds, &cfg);
+    let second = obs::dist::snapshot();
+    obs::set_counters(false);
+
+    assert!(!first.entries.is_empty(), "observed run recorded no distributions");
+    for class in obs::dist::TensorClass::ALL {
+        assert!(
+            first.entries.iter().any(|e| e.class == class.code() && e.total() > 0),
+            "no samples recorded for class {}",
+            class.name()
+        );
+    }
+    assert_eq!(first, second, "occupancy snapshots must be reproducible per config");
+}
+
+/// Parse Prometheus text samples into `series-with-labels → value`.
+fn parse_prometheus(text: &str) -> std::collections::HashMap<String, f64> {
+    let mut out = std::collections::HashMap::new();
+    for l in text.lines() {
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        let (series, value) = l.rsplit_once(' ').expect("sample line has a value");
+        out.insert(series.to_string(), value.parse().expect("sample value parses"));
+    }
+    out
+}
+
+/// The `/metrics` rendering declares the new distribution families,
+/// populates the per-layer series, and every counter-typed series is
+/// monotone across scrapes (the Prometheus contract a scraper relies
+/// on for `rate()`).
+#[test]
+fn prometheus_counters_are_monotone_and_declared() {
+    let _s = ObsSession::begin();
+    let ds = tiny_ds();
+    let mut cfg = tiny_cfg();
+    cfg.epochs = 1;
+    let mk = || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+
+    obs::set_counters(true);
+    obs::reset_all();
+    train(&mk(), &ds, &cfg);
+    let first = parse_prometheus(&obs::serve::render_prometheus());
+    train(&mk(), &ds, &cfg);
+    let text = obs::serve::render_prometheus();
+    let second = parse_prometheus(&text);
+    obs::set_counters(false);
+
+    for family in ["lnsdnn_dist_exp_total", "lnsdnn_grad_l1", "lnsdnn_grad_linf"] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing TYPE for {family}");
+        assert!(text.contains(&format!("# HELP {family} ")), "missing HELP for {family}");
+    }
+    assert!(
+        second.keys().any(|k| k.starts_with("lnsdnn_dist_exp_total{")),
+        "no exponent-occupancy series rendered"
+    );
+    assert!(
+        second.keys().any(|k| k.starts_with("lnsdnn_grad_l1{layer=")),
+        "no per-layer gradient-norm gauge rendered"
+    );
+    let mut compared = 0;
+    for (k, v1) in &first {
+        let name = k.split('{').next().unwrap();
+        if !(name.ends_with("_total") || name.ends_with("_bucket") || name.ends_with("_count")) {
+            continue;
+        }
+        let v2 = second.get(k).unwrap_or_else(|| panic!("counter series vanished: {k}"));
+        assert!(v2 >= v1, "counter went backwards: {k} {v1} -> {v2}");
+        compared += 1;
+    }
+    assert!(compared > 0, "no counter series to compare across scrapes");
+}
+
+/// HTTP GET against a live endpoint; returns the raw response.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).expect("connect obs endpoint");
+    let req = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read response");
+    resp
+}
+
+/// Run `f` with full observation on, an [`obs::serve::ObsServer`]
+/// bound, and a scraper thread looping `GET /metrics` for the
+/// duration. Asserts the scraper actually landed successful scrapes.
+fn run_under_scraper<T>(f: impl FnOnce() -> T) -> T {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    obs::set_all(true);
+    obs::reset_all();
+    let srv = obs::serve::ObsServer::start("127.0.0.1:0").expect("bind obs endpoint");
+    let addr = srv.addr();
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut n = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let resp = http_get(addr, "/metrics");
+                assert!(resp.starts_with("HTTP/1.1 200"), "mid-run scrape failed");
+                n += 1;
+            }
+            n
+        })
+    };
+    let out = f();
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread panicked");
+    assert!(scrapes > 0, "the scraper never landed a scrape during the run");
+    srv.stop();
+    obs::set_all(false);
+    out
+}
+
+/// A live `--obs-listen` endpoint with a scraper hammering `/metrics`
+/// throughout the observed run still cannot perturb training: results
+/// stay bit-identical to the unobserved baseline on the LNS backend
+/// and on the dither-sensitive stochastic-rounding fixed backend.
+#[test]
+fn live_scraper_does_not_perturb_training() {
+    let _s = ObsSession::begin();
+    let ds = tiny_ds();
+    let mut cfg = tiny_cfg();
+    cfg.epochs = 1;
+
+    {
+        let mk = || LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        obs::set_all(false);
+        let off = train(&mk(), &ds, &cfg);
+        let on = run_under_scraper(|| train(&mk(), &ds, &cfg));
+        assert_mlp_runs_equal("log16-lut scraped obs on vs off", &off, &on);
+    }
+    {
+        let mk = || FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        obs::set_all(false);
+        let off = train(&mk(), &ds, &cfg);
+        let on = run_under_scraper(|| train(&mk(), &ds, &cfg));
+        assert_mlp_runs_equal("lin16 scraped obs on vs off", &off, &on);
+    }
 }
