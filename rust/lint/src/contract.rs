@@ -1,0 +1,224 @@
+//! Contract-drift checks: keep docs/NUMERICS.md §9 and the code honest
+//! with each other.
+//!
+//! Two directions of drift are caught:
+//!
+//! * **§9 table → tree.** Every backticked reference in the §9
+//!   clause→test table must resolve: file paths (`tests/foo.rs`,
+//!   `train/shard.rs`) must exist under `rust/`, and bare identifiers
+//!   (`accumulate_slots`, `occupancy_snapshots_are_deterministic`) must
+//!   appear as a token in the most recent file referenced on the same
+//!   table row. Renaming a pinned test without updating the table — or
+//!   pointing the table at a test that no longer exists — fails CI.
+//! * **Scalar twins → pins.** Every `fn *_scalar` reference kernel in
+//!   `src/lns/system.rs` and `src/fixed/mod.rs` must be exercised by
+//!   name in `tests/lane_exactness.rs`; a lane kernel whose scalar twin
+//!   loses its exactness pin is an unguarded ⊞ chain.
+//!
+//! Both checks take the file set as data (`&[(path, contents)]`, paths
+//! relative to `rust/`) so the self-tests can feed fixtures without
+//! touching the filesystem.
+
+use crate::lexer::lex;
+use crate::rules::Violation;
+
+/// Does `name` appear in `src` as a whole token (not as a substring of a
+/// longer identifier)? Comments count — a pin named only in a comment is
+/// caught by the test run itself going red, not by this linter.
+fn contains_token(src: &str, name: &str) -> bool {
+    let sb = src.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = src[start..].find(name) {
+        let p = start + pos;
+        let before_ok = p == 0 || {
+            let c = sb[p - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        let e = p + name.len();
+        let after_ok = e >= sb.len() || {
+            let c = sb[e];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+fn backticked(line: &str) -> Vec<&str> {
+    line.split('`').enumerate().filter(|(i, _)| i % 2 == 1).map(|(_, s)| s).collect()
+}
+
+fn lookup<'a>(files: &'a [(String, String)], rel: &str) -> Option<&'a str> {
+    files.iter().find(|(p, _)| p == rel).map(|(_, s)| s.as_str())
+}
+
+fn is_ident(s: &str) -> bool {
+    let b = s.as_bytes();
+    !b.is_empty()
+        && (b[0].is_ascii_alphabetic() || b[0] == b'_')
+        && b.iter().all(|&c| c.is_ascii_alphanumeric() || c == b'_')
+}
+
+/// Check the §9 clause→test table of `md` (the NUMERICS.md text) against
+/// the file set. Violations anchor to `docs/NUMERICS.md` lines.
+pub fn check_contract(md: &str, files: &[(String, String)]) -> Vec<Violation> {
+    let mut viol = Vec::new();
+    let mut in_sec9 = false;
+    for (idx, raw) in md.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.trim();
+        if line.starts_with("## ") {
+            in_sec9 = line.starts_with("## 9");
+            continue;
+        }
+        if !in_sec9 || !line.starts_with('|') {
+            continue;
+        }
+        // Identifiers bind to the nearest path reference earlier in the
+        // same row: "`train/shard.rs` (`accumulate_slots` tests)".
+        let mut row_file: Option<String> = None;
+        for span in backticked(line) {
+            if span.contains('/') && span.ends_with(".rs") {
+                let rel = if span.starts_with("tests/") {
+                    span.to_string()
+                } else {
+                    format!("src/{}", span)
+                };
+                if lookup(files, &rel).is_none() {
+                    viol.push(Violation {
+                        file: "docs/NUMERICS.md".to_string(),
+                        line: lineno,
+                        rule: "contract-drift",
+                        msg: format!("§9 pins `{}` but rust/{} does not exist", span, rel),
+                    });
+                    row_file = None;
+                } else {
+                    row_file = Some(rel);
+                }
+            } else if is_ident(span) {
+                match row_file.as_deref().and_then(|rel| lookup(files, rel).map(|s| (rel, s))) {
+                    None => viol.push(Violation {
+                        file: "docs/NUMERICS.md".to_string(),
+                        line: lineno,
+                        rule: "contract-drift",
+                        msg: format!("§9 names `{}` but no file earlier in the row resolves", span),
+                    }),
+                    Some((rel, src)) => {
+                        if !contains_token(src, span) {
+                            viol.push(Violation {
+                                file: "docs/NUMERICS.md".to_string(),
+                                line: lineno,
+                                rule: "contract-drift",
+                                msg: format!("§9 names `{}` but rust/{} lacks it", span, rel),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    viol
+}
+
+/// Every `fn *_scalar` in the lane-kernel modules must be named in
+/// `tests/lane_exactness.rs`.
+pub fn check_scalar_twins(files: &[(String, String)]) -> Vec<Violation> {
+    let mut viol = Vec::new();
+    let pin_src = lookup(files, "tests/lane_exactness.rs");
+    for twin_file in ["src/lns/system.rs", "src/fixed/mod.rs"] {
+        let Some(src) = lookup(files, twin_file) else { continue };
+        let (toks, _) = lex(src);
+        for w in 0..toks.len().saturating_sub(1) {
+            if toks[w].text == "fn" && toks[w + 1].text.ends_with("_scalar") {
+                let name = toks[w + 1].text.as_str();
+                let pinned = pin_src.map_or(false, |s| contains_token(s, name));
+                if !pinned {
+                    viol.push(Violation {
+                        file: format!("rust/{}", twin_file),
+                        line: toks[w].line,
+                        rule: "contract-drift",
+                        msg: format!("scalar twin `{}` has no pin in lane_exactness.rs", name),
+                    });
+                }
+            }
+        }
+    }
+    viol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect()
+    }
+
+    const MD: &str = "## 9. Where each clause is pinned\n\n\
+        | Clause | Test |\n|--------|------|\n\
+        | §2 | `tests/good.rs` |\n\
+        | §3 | `train/shard.rs` (`accumulate_slots` tests) |\n\n\
+        ## 10. Something else\n\n| `tests/ignored.rs` |\n";
+
+    #[test]
+    fn intact_table_is_clean() {
+        let files = fx(&[
+            ("tests/good.rs", "fn pin() {}"),
+            ("src/train/shard.rs", "fn accumulate_slots() {}"),
+        ]);
+        assert!(check_contract(MD, &files).is_empty());
+    }
+
+    #[test]
+    fn missing_file_and_renamed_fn_are_drift() {
+        // `tests/good.rs` gone → drift; `accumulate_slots` renamed → drift
+        let files = fx(&[("src/train/shard.rs", "fn accumulate_slots_v2() {}")]);
+        let got = check_contract(MD, &files);
+        assert_eq!(got.len(), 2, "{:?}", got);
+        assert!(got.iter().all(|v| v.rule == "contract-drift"));
+        assert!(got[0].msg.contains("tests/good.rs"));
+        assert!(got[1].msg.contains("accumulate_slots"));
+    }
+
+    #[test]
+    fn rows_outside_section_9_are_ignored() {
+        // `tests/ignored.rs` is referenced under §10 and does not exist,
+        // but only §9 rows are contract rows.
+        let files = fx(&[
+            ("tests/good.rs", "x"),
+            ("src/train/shard.rs", "accumulate_slots"),
+        ]);
+        assert!(check_contract(MD, &files).is_empty());
+    }
+
+    #[test]
+    fn token_matching_is_boundary_aware() {
+        assert!(contains_token("call accumulate_slots here", "accumulate_slots"));
+        assert!(!contains_token("call accumulate_slots_v2 here", "accumulate_slots"));
+        assert!(contains_token("x.mac_row_scalar(k)", "mac_row_scalar"));
+    }
+
+    #[test]
+    fn scalar_twin_without_pin_is_drift() {
+        let files = fx(&[
+            ("src/lns/system.rs", "fn mac_row(a: u8) {}\nfn mac_row_scalar(a: u8) {}"),
+            ("tests/lane_exactness.rs", "fn pins() { mac_row(); }"),
+        ]);
+        let got = check_scalar_twins(&files);
+        assert_eq!(got.len(), 1, "{:?}", got);
+        assert!(got[0].msg.contains("mac_row_scalar"));
+        assert_eq!(got[0].line, 2);
+    }
+
+    #[test]
+    fn pinned_scalar_twin_is_clean() {
+        let files = fx(&[
+            ("src/lns/system.rs", "fn mac_row_scalar(a: u8) {}"),
+            ("tests/lane_exactness.rs", "fn pins() { mac_row_scalar(); }"),
+        ]);
+        assert!(check_scalar_twins(&files).is_empty());
+    }
+}

@@ -1,0 +1,542 @@
+//! A small hand-rolled Rust lexer — just enough structure for the
+//! numerics rules.
+//!
+//! The lexer strips comments and string/char literals, and emits a flat
+//! stream of tokens (identifiers, numeric literals, `::`, and single-char
+//! punctuation) each tagged with its 1-based source line. It is *not* a
+//! full Rust lexer: the rules in [`crate::rules`] only need token
+//! adjacency (`as f64`, `Ordering :: Relaxed`, `. unwrap`), so anything
+//! fancier would be wasted precision. What it does get right, because the
+//! rules depend on it:
+//!
+//! * nested block comments (`/* /* */ */`);
+//! * raw and byte strings (`r#"…"#`, `br"…"`, `b"…"`);
+//! * string escapes, including the `\<newline>` line-continuation (which
+//!   must still count the newline so diagnostics stay line-accurate);
+//! * lifetimes (`'a`) vs char literals (`'x'`, `'\n'`);
+//! * numeric literals: `0..4` must lex as `0`, `.`, `.`, `4` (the dot
+//!   only joins a literal when a digit follows), `1e-3` is one token,
+//!   and `0x1E` is hex, not scientific notation;
+//! * `// numerics-lint: allow(<rule>) — <reason>` waiver pragmas, which
+//!   are collected out of comments with their line numbers.
+
+/// One lexed token: its text and 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+}
+
+/// A `// numerics-lint: allow(<rule>) — <reason>` waiver found in a
+/// comment. A pragma covers findings on its own line and on the line
+/// immediately below (the usual "pragma above the offending statement"
+/// placement).
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+fn utf8_width(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b < 0xC0 {
+        1 // stray continuation byte; advance one so we cannot loop
+    } else if b < 0xE0 {
+        2
+    } else if b < 0xF0 {
+        3
+    } else {
+        4
+    }
+}
+
+fn parse_pragma(comment: &str, line: usize) -> Option<Pragma> {
+    let at = comment.find("numerics-lint:")?;
+    let rest = comment[at + "numerics-lint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = &rest[..close];
+    if rule.is_empty()
+        || !rule
+            .bytes()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-')
+    {
+        return None;
+    }
+    let reason = rest[close + 1..]
+        .trim()
+        .trim_start_matches(|c: char| c == '—' || c == '-' || c == ':' || c == ' ')
+        .trim()
+        .to_string();
+    Some(Pragma { line, rule: rule.to_string(), reason })
+}
+
+/// Lex `text`, returning the token stream and every waiver pragma.
+pub fn lex(text: &str) -> (Vec<Tok>, Vec<Pragma>) {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut pragmas = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (and pragma harvesting)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = b[i..].iter().position(|&x| x == b'\n').map_or(n, |p| i + p);
+            if let Some(p) = parse_pragma(&text[i..j], line) {
+                pragmas.push(p);
+            }
+            i = j;
+            continue;
+        }
+        // block comment, nesting like Rust's
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / raw-byte strings: r"…", r#"…"#, br"…", br##"…"##
+        {
+            let mut k = i;
+            if b[k] == b'b' {
+                k += 1;
+            }
+            if k < n && b[k] == b'r' {
+                let mut h = k + 1;
+                let mut hashes = 0usize;
+                while h < n && b[h] == b'#' {
+                    hashes += 1;
+                    h += 1;
+                }
+                if h < n && b[h] == b'"' {
+                    let mut j = h + 1;
+                    while j < n {
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        if b[j] == b'"' {
+                            let mut m = 0usize;
+                            while m < hashes && j + 1 + m < n && b[j + 1 + m] == b'#' {
+                                m += 1;
+                            }
+                            if m == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // ordinary / byte strings
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == b'\\' {
+                    // a `\<newline>` continuation still advances the line
+                    if i + 1 < n && b[i + 1] == b'\n' {
+                        line += 1;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // lifetime vs char literal
+        if c == b'\'' {
+            let lifetime_like = i + 2 < n
+                && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_')
+                && b[i + 2] != b'\'';
+            if lifetime_like {
+                i += 2;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                continue;
+            }
+            i += 1;
+            if i < n && b[i] == b'\\' {
+                i += 2;
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i < n {
+                i += utf8_width(b[i]);
+                if i < n && b[i] == b'\'' {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // identifier / keyword
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok { text: text[i..j].to_string(), line });
+            i = j;
+            continue;
+        }
+        // numeric literal (int / float / hex, with suffixes)
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let is_hex = text[i..].starts_with("0x") || text[i..].starts_with("0X");
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            if j < n && b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                // fraction — but only when a digit follows, so `0..4` and
+                // `1.max(x)` do not swallow the dot
+                j += 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+            } else if j < n && b[j] == b'.' {
+                // trailing-dot float `1.` — but never `0..4` or `1.max(x)`
+                let nxt = if j + 1 < n { b[j + 1] } else { 0 };
+                if !(nxt == b'.' || nxt.is_ascii_alphabetic() || nxt == b'_') {
+                    j += 1;
+                }
+            }
+            // signed exponent: `1e-3` — never inside a hex literal
+            while j < n
+                && !is_hex
+                && (b[j - 1] == b'e' || b[j - 1] == b'E')
+                && (b[j] == b'+' || b[j] == b'-')
+            {
+                j += 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { text: text[i..j].to_string(), line });
+            i = j;
+            continue;
+        }
+        // `::` is one token so path checks are simple adjacency
+        if c == b':' && i + 1 < n && b[i + 1] == b':' {
+            toks.push(Tok { text: "::".to_string(), line });
+            i += 2;
+            continue;
+        }
+        if c.is_ascii() {
+            toks.push(Tok { text: (c as char).to_string(), line });
+            i += 1;
+        } else {
+            // non-ASCII outside comments/strings: skip the code point
+            i += utf8_width(c);
+        }
+    }
+    (toks, pragmas)
+}
+
+/// Is this token a floating-point literal? Hex literals are never floats
+/// (`0x1E` is not scientific notation), and an `e`/`E` only makes a float
+/// when no integer suffix is present (`1e3` yes, `1e3u64` is not valid
+/// Rust anyway but stays conservative).
+pub fn is_float_literal(t: &str) -> bool {
+    let b = t.as_bytes();
+    if b.is_empty() || !b[0].is_ascii_digit() {
+        return false;
+    }
+    if t.starts_with("0x") || t.starts_with("0X") {
+        return false;
+    }
+    if t.ends_with("f32") || t.ends_with("f64") {
+        return true;
+    }
+    if t.contains('.') {
+        return true;
+    }
+    if t.contains('e') || t.contains('E') {
+        const INT_SUFFIXES: [&str; 10] =
+            ["u8", "u16", "u32", "u64", "usize", "i8", "i16", "i32", "i64", "isize"];
+        return !INT_SUFFIXES.iter().any(|s| t.contains(s));
+    }
+    false
+}
+
+/// Per-token structural facts computed by one pass of brace matching.
+pub struct Analysis {
+    /// Token is inside a `#[cfg(test)] mod … { … }` span.
+    pub in_test: Vec<bool>,
+    /// Name of the innermost enclosing `fn`, if any.
+    pub fn_of: Vec<Option<String>>,
+    /// Space-joined header of the innermost enclosing `impl` block, if
+    /// any (e.g. `WireElem for f32` or `ByteReader < 'a >`).
+    pub impl_of: Vec<Option<String>>,
+}
+
+/// Walk the token stream once, tracking `{}` depth to attribute each
+/// token to its enclosing fn / impl block and to `#[cfg(test)]` mods.
+///
+/// Heuristics (sufficient for this crate's style): a fn's body opens at
+/// the first `{` at bracket depth 0 after its name (a `;` first means a
+/// trait method declaration); `impl` headers are collected the same way;
+/// `-> impl Trait` in a return type cannot mis-trigger because signature
+/// tokens are consumed while a fn is pending.
+pub fn analyze(toks: &[Tok]) -> Analysis {
+    let n = toks.len();
+    let mut in_test = vec![false; n];
+    let mut fn_of: Vec<Option<String>> = vec![None; n];
+    let mut impl_of: Vec<Option<String>> = vec![None; n];
+    let mut depth: i64 = 0;
+    let mut test_until_depth: Option<i64> = None;
+    let mut fn_stack: Vec<(String, i64)> = Vec::new();
+    let mut impl_stack: Vec<(String, i64)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut pending_impl: Option<Vec<String>> = None;
+    let mut paren: i64 = 0;
+    let mut i = 0usize;
+    while i < n {
+        let t = toks[i].text.as_str();
+        if pending_impl.is_some() {
+            if t == "{" && paren == 0 {
+                let hdr = pending_impl.take().unwrap();
+                impl_stack.push((hdr.join(" "), depth));
+                depth += 1;
+                i += 1;
+                continue;
+            } else if t == ";" && paren == 0 {
+                pending_impl = None; // `impl Trait for T;`-style — not a block
+            } else {
+                if t == "(" || t == "[" {
+                    paren += 1;
+                }
+                if t == ")" || t == "]" {
+                    paren -= 1;
+                }
+                if let Some(h) = pending_impl.as_mut() {
+                    h.push(t.to_string());
+                }
+                i += 1;
+                continue;
+            }
+        }
+        if pending_fn.is_some() {
+            if t == "{" && paren == 0 {
+                let name = pending_fn.take().unwrap();
+                fn_stack.push((name, depth));
+                depth += 1;
+                i += 1;
+                continue;
+            } else if t == ";" && paren == 0 {
+                pending_fn = None; // trait method declaration — no body
+            } else {
+                if t == "(" || t == "[" {
+                    paren += 1;
+                }
+                if t == ")" || t == "]" {
+                    paren -= 1;
+                }
+                i += 1;
+                continue;
+            }
+        }
+        if t == "{" {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t == "}" {
+            depth -= 1;
+            if fn_stack.last().map_or(false, |f| f.1 == depth) {
+                fn_stack.pop();
+            }
+            if impl_stack.last().map_or(false, |s| s.1 == depth) {
+                impl_stack.pop();
+            }
+            if test_until_depth == Some(depth) {
+                test_until_depth = None;
+            }
+            i += 1;
+            continue;
+        }
+        // `#[cfg(test)]` (possibly followed by more attributes) + `mod`
+        if t == "#"
+            && i + 6 < n
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]"
+        {
+            let mut j = i + 7;
+            while j < n && toks[j].text == "#" {
+                j += 1;
+                if j < n && toks[j].text == "[" {
+                    let mut d = 1i64;
+                    j += 1;
+                    while j < n && d > 0 {
+                        if toks[j].text == "[" {
+                            d += 1;
+                        }
+                        if toks[j].text == "]" {
+                            d -= 1;
+                        }
+                        j += 1;
+                    }
+                }
+            }
+            if j < n && toks[j].text == "mod" {
+                let mut k = j;
+                while k < n && toks[k].text != "{" {
+                    k += 1;
+                }
+                test_until_depth = Some(depth);
+                for m in i..(k + 1).min(n) {
+                    in_test[m] = true;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if t == "fn" && i + 1 < n && toks[i + 1].text != "(" && toks[i + 1].text != "<" {
+            pending_fn = Some(toks[i + 1].text.clone());
+            paren = 0;
+            fn_of[i] = fn_stack.last().map(|f| f.0.clone());
+            in_test[i] = test_until_depth.is_some();
+            i += 1;
+            continue;
+        }
+        if t == "impl" {
+            pending_impl = Some(Vec::new());
+            paren = 0;
+            i += 1;
+            continue;
+        }
+        in_test[i] = test_until_depth.is_some();
+        fn_of[i] = fn_stack.last().map(|f| f.0.clone());
+        impl_of[i] = impl_stack.last().map(|s| s.0.clone());
+        i += 1;
+    }
+    Analysis { in_test, fn_of, impl_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn ranges_do_not_become_floats() {
+        assert_eq!(texts("for i in 0..4 {}"), ["for", "i", "in", "0", ".", ".", "4", "{", "}"]);
+        assert!(!is_float_literal("0"));
+        assert!(is_float_literal("0.5"));
+        assert!(is_float_literal("1e-3"));
+        assert!(is_float_literal("3f32"));
+        assert!(!is_float_literal("0x1E"));
+        assert!(!is_float_literal("1_000"));
+    }
+
+    #[test]
+    fn path_sep_is_one_token() {
+        assert_eq!(texts("f64::MAX"), ["f64", "::", "MAX"]);
+    }
+
+    #[test]
+    fn comments_and_strings_keep_line_numbers() {
+        let src = "/* a\nb */ x\n\"s\\\n t\" y\nr#\"raw\n\"# z";
+        let toks = lex(src).0;
+        let got: Vec<(String, usize)> = toks.into_iter().map(|t| (t.text, t.line)).collect();
+        assert_eq!(got, [("x".to_string(), 2), ("y".to_string(), 4), ("z".to_string(), 6)]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        assert_eq!(texts("<'a> 'x' '\\n' q"), ["<", ">", "q"]);
+    }
+
+    #[test]
+    fn pragmas_are_collected_with_reason() {
+        let src = "// numerics-lint: allow(float-leak) — because reasons\nlet x = 1;";
+        let (_, pragmas) = lex(src);
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].line, 1);
+        assert_eq!(pragmas[0].rule, "float-leak");
+        assert_eq!(pragmas[0].reason, "because reasons");
+    }
+
+    #[test]
+    fn pragma_without_reason_is_empty() {
+        let (_, pragmas) = lex("// numerics-lint: allow(atomics)\n");
+        assert_eq!(pragmas.len(), 1);
+        assert!(pragmas[0].reason.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_mod_spans_are_marked() {
+        let src = "fn live() { let a = 1; }\n#[cfg(test)]\nmod tests { fn t() { let b = 2; } }";
+        let (toks, _) = lex(src);
+        let a = analyze(&toks);
+        for (i, t) in toks.iter().enumerate() {
+            if t.text == "a" {
+                assert!(!a.in_test[i], "`a` must be live code");
+            }
+            if t.text == "b" {
+                assert!(a.in_test[i], "`b` must be in the test mod");
+            }
+        }
+    }
+
+    #[test]
+    fn fn_and_impl_attribution() {
+        let src = "impl ByteReader { fn read_u8(&self) { self.pos } }\nfn free() { marker }";
+        let (toks, _) = lex(src);
+        let a = analyze(&toks);
+        for (i, t) in toks.iter().enumerate() {
+            if t.text == "pos" {
+                assert_eq!(a.fn_of[i].as_deref(), Some("read_u8"));
+                assert!(a.impl_of[i].as_deref().unwrap().contains("ByteReader"));
+            }
+            if t.text == "marker" {
+                assert_eq!(a.fn_of[i].as_deref(), Some("free"));
+                assert_eq!(a.impl_of[i], None);
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! `numerics-lint` CLI — blocking CI gate for docs/NUMERICS.md.
+//!
+//! Usage: `numerics-lint [repo-root]`. With no argument the repository
+//! root is found by walking up from the current directory looking for
+//! `docs/NUMERICS.md` next to `rust/src` (so `cargo run -p numerics-lint`
+//! works from anywhere inside the workspace).
+//!
+//! Exit codes: 0 clean, 1 violations (one `file:line: [rule] message`
+//! per line on stdout), 2 usage or I/O error.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn find_repo_root(start: PathBuf) -> Option<PathBuf> {
+    let mut d = start;
+    loop {
+        if d.join("docs").join("NUMERICS.md").is_file() && d.join("rust").join("src").is_dir() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => match std::env::current_dir().ok().and_then(find_repo_root) {
+            Some(r) => r,
+            None => {
+                eprintln!(
+                    "numerics-lint: no repo root found (want docs/NUMERICS.md beside rust/src); \
+                     pass the root as the first argument"
+                );
+                return ExitCode::from(2);
+            }
+        },
+    };
+    match numerics_lint::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("numerics-lint: failed to read the tree: {}", e);
+            ExitCode::from(2)
+        }
+        Ok(viol) if viol.is_empty() => {
+            eprintln!("numerics-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(viol) => {
+            for v in &viol {
+                println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+            }
+            eprintln!(
+                "numerics-lint: {} violation(s) — fix the site or waive it with \
+                 `// numerics-lint: allow(<rule>) — <reason>` (NUMERICS.md §10)",
+                viol.len()
+            );
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,443 @@
+//! The lexical numerics rules (docs/NUMERICS.md §10).
+//!
+//! Each rule is a pass over the token stream of one file. Paths are
+//! relative to `rust/` (so `src/lns/system.rs`, `tests/lane_exactness.rs`).
+//! The **value path** — the modules whose arithmetic the bit-exactness
+//! contract covers — is `src/{lns,fixed,tensor,nn,train}/`. Code inside
+//! `#[cfg(test)]` mods is exempt everywhere: tests may compare against
+//! float references, time things, and unwrap freely.
+//!
+//! A finding is suppressed by a waiver pragma on the same line or the
+//! line above: `// numerics-lint: allow(<rule>) — <reason>`. A waiver
+//! without a reason is itself reported.
+
+use crate::lexer::{analyze, is_float_literal, lex, Analysis, Pragma};
+
+/// One diagnostic. `file` is whatever path the caller handed in (the
+/// tree walker passes repo-relative paths so terminals can link them).
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// The rule names a pragma may waive.
+pub const RULES: [&str; 6] = [
+    "float-leak",
+    "regrouping",
+    "nondeterminism",
+    "atomics",
+    "hostile-input",
+    "contract-drift",
+];
+
+/// Module prefixes whose arithmetic is contract-covered.
+pub const VALUE_PATH: [&str; 5] =
+    ["src/lns/", "src/fixed/", "src/tensor/", "src/nn/", "src/train/"];
+
+/// Files where float arithmetic is the *point* and already documented:
+/// the float reference backend, config/unit conversion (`log2(x)·2^F` at
+/// the boundary), Δ LUT construction, reporting/statistics, and the wire
+/// format's f32 lane (§6 carries IEEE bits, it does not compute on them).
+pub const FLOAT_ALLOW_FILES: [&str; 10] = [
+    "src/tensor/backend.rs",
+    "src/tensor/autotune.rs",
+    "src/lns/config.rs",
+    "src/lns/delta.rs",
+    "src/lns/cost.rs",
+    "src/lns/analysis.rs",
+    "src/lns/linconv.rs",
+    "src/nn/init.rs",
+    "src/train/metrics.rs",
+    "src/train/wire.rs",
+];
+
+/// Any fn whose name carries these markers converts to/from the float
+/// domain by design (`decode_f64`, `to_f32`, …).
+pub const FLOAT_ALLOW_FN_SUBSTR: [&str; 2] = ["_f64", "_f32"];
+
+/// Exact `(file, fn)` pairs allowed to touch floats: constructors that
+/// encode f64 *configuration* into the backend domain, and report/stat
+/// helpers that leave the value path on purpose.
+pub const FLOAT_ALLOW_FNS: [(&str, &str); 9] = [
+    ("src/fixed/mod.rs", "unit"),
+    ("src/lns/system.rs", "new"),
+    ("src/nn/sgd.rs", "default"),
+    ("src/train/mod.rs", "paper"),
+    ("src/train/mod.rs", "lenet"),
+    ("src/train/mod.rs", "mean"),
+    ("src/train/multiproc.rs", "default"),
+    ("src/train/multiproc.rs", "act_probe"),
+    ("src/nn/grad.rs", "finish"),
+];
+
+/// Value-path files exempt from the nondeterminism scan: the autotuner
+/// is timing-driven by nature and perf-only by contract (§2).
+pub const NONDET_ALLOW_FILES: [&str; 1] = ["src/tensor/autotune.rs"];
+
+const PAR_ITERS: [&str; 6] =
+    ["par_iter", "into_par_iter", "par_iter_mut", "par_chunks", "par_chunks_mut", "par_bridge"];
+const REDUCERS: [&str; 3] = ["sum", "reduce", "fold"];
+const NONDET_TYPES: [&str; 5] =
+    ["HashMap", "HashSet", "RandomState", "DefaultHasher", "thread_rng"];
+const PANIC_MACROS: [&str; 7] =
+    ["panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne"];
+/// Keywords that may legitimately precede `[` without being an indexing
+/// base (`as [u8; 4]` never parses, but stay conservative).
+const NOT_INDEX_BASE: [&str; 14] = [
+    "as", "in", "return", "mut", "ref", "else", "match", "if", "while", "box", "dyn", "impl",
+    "where", "move",
+];
+
+fn covered(pragmas: &[Pragma], rule: &str, line: usize) -> bool {
+    pragmas.iter().any(|p| p.rule == rule && (p.line == line || p.line + 1 == line))
+}
+
+fn fn_name(a: &Analysis, i: usize) -> &str {
+    a.fn_of[i].as_deref().unwrap_or("<module scope>")
+}
+
+/// Run every lexical rule over one file. `rel` is the path relative to
+/// `rust/`.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Violation> {
+    let (toks, pragmas) = lex(text);
+    let a = analyze(&toks);
+    let n = toks.len();
+    let is_value = VALUE_PATH.iter().any(|p| rel.starts_with(p));
+    let mut viol: Vec<Violation> = Vec::new();
+
+    // Waiver hygiene: a pragma naming an unknown rule is a typo that
+    // would silently fail to waive; a pragma without a reason defeats
+    // the audit trail. Both are reported at the pragma itself.
+    for p in &pragmas {
+        if !RULES.contains(&p.rule.as_str()) {
+            viol.push(Violation {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "pragma",
+                msg: format!("waiver names unknown rule `{}`", p.rule),
+            });
+        } else if p.reason.is_empty() {
+            viol.push(Violation {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "pragma",
+                msg: format!("waiver for `{}` has no reason — say why the site is sound", p.rule),
+            });
+        }
+    }
+
+    let mut push = |viol: &mut Vec<Violation>, rule: &'static str, line: usize, msg: String| {
+        if !covered(&pragmas, rule, line) {
+            viol.push(Violation { file: rel.to_string(), line, rule, msg });
+        }
+    };
+
+    // ------------------------------------------------------ float-leak
+    if is_value && !FLOAT_ALLOW_FILES.contains(&rel) {
+        for i in 0..n {
+            if a.in_test[i] {
+                continue;
+            }
+            if let Some(f) = a.fn_of[i].as_deref() {
+                if FLOAT_ALLOW_FN_SUBSTR.iter().any(|s| f.contains(s)) {
+                    continue;
+                }
+                if FLOAT_ALLOW_FNS.contains(&(rel, f)) {
+                    continue;
+                }
+            }
+            let t = toks[i].text.as_str();
+            if t == "as" && i + 1 < n && (toks[i + 1].text == "f32" || toks[i + 1].text == "f64") {
+                push(
+                    &mut viol,
+                    "float-leak",
+                    toks[i].line,
+                    format!("cast `as {}` in `{}`", toks[i + 1].text, fn_name(&a, i)),
+                );
+            } else if (t == "f32" || t == "f64") && i + 1 < n && toks[i + 1].text == "::" {
+                let tail = if i + 2 < n { toks[i + 2].text.as_str() } else { "" };
+                push(
+                    &mut viol,
+                    "float-leak",
+                    toks[i].line,
+                    format!("float path `{}::{}` in `{}`", t, tail, fn_name(&a, i)),
+                );
+            } else if is_float_literal(t) {
+                push(
+                    &mut viol,
+                    "float-leak",
+                    toks[i].line,
+                    format!("float literal `{}` in `{}`", t, fn_name(&a, i)),
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------ regrouping
+    if is_value {
+        for i in 0..n {
+            if a.in_test[i] {
+                continue;
+            }
+            let t = toks[i].text.as_str();
+            if PAR_ITERS.contains(&t) {
+                let mut j = i;
+                while j < n && toks[j].text != ";" && j < i + 120 {
+                    if j > 0
+                        && REDUCERS.contains(&toks[j].text.as_str())
+                        && toks[j - 1].text == "."
+                    {
+                        push(
+                            &mut viol,
+                            "regrouping",
+                            toks[j].line,
+                            format!("parallel reduction `{}…{}` regroups ⊞ (§2)", t, toks[j].text),
+                        );
+                        break;
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    // -------------------------------------------------- nondeterminism
+    if is_value && !NONDET_ALLOW_FILES.contains(&rel) {
+        for i in 0..n {
+            if a.in_test[i] {
+                continue;
+            }
+            let t = toks[i].text.as_str();
+            if NONDET_TYPES.contains(&t) {
+                push(
+                    &mut viol,
+                    "nondeterminism",
+                    toks[i].line,
+                    format!("`{}` in `{}` — iteration order is ambient", t, fn_name(&a, i)),
+                );
+            }
+            if (t == "Instant" || t == "SystemTime")
+                && i + 2 < n
+                && toks[i + 1].text == "::"
+                && toks[i + 2].text == "now"
+            {
+                push(
+                    &mut viol,
+                    "nondeterminism",
+                    toks[i].line,
+                    format!("`{}::now` in `{}`", t, fn_name(&a, i)),
+                );
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- atomics
+    if rel.starts_with("src/") {
+        for i in 0..n {
+            if a.in_test[i] {
+                continue;
+            }
+            if toks[i].text == "Ordering" && i + 2 < n && toks[i + 1].text == "::" {
+                let ord = toks[i + 2].text.as_str();
+                if rel.starts_with("src/obs/") && ord == "Relaxed" {
+                    continue;
+                }
+                push(
+                    &mut viol,
+                    "atomics",
+                    toks[i].line,
+                    format!("`Ordering::{}` outside obs/ needs a waiver (§7)", ord),
+                );
+            }
+        }
+    }
+
+    // ---------------------------------------------------- hostile-input
+    if rel == "src/train/wire.rs" {
+        // Indexing into a fn-local fixed array (`let buf = [0u8; N]; … buf[i]`)
+        // is driven by our own constants, not the wire — collect those names.
+        let mut local_arrays: Vec<(String, String)> = Vec::new();
+        for i in 0..n {
+            if toks[i].text == "let" {
+                let mut j = i + 1;
+                if j < n && toks[j].text == "mut" {
+                    j += 1;
+                }
+                if j + 2 < n {
+                    let name = toks[j].text.as_str();
+                    let c0 = name.as_bytes()[0];
+                    if (c0.is_ascii_alphabetic() || c0 == b'_')
+                        && toks[j + 1].text == "="
+                        && toks[j + 2].text == "["
+                    {
+                        local_arrays
+                            .push((a.fn_of[i].clone().unwrap_or_default(), name.to_string()));
+                    }
+                }
+            }
+        }
+        let in_decode = |i: usize| -> bool {
+            match a.fn_of[i].as_deref() {
+                None => false,
+                Some(f) => {
+                    f.starts_with("read")
+                        || f.starts_with("decode")
+                        || f.starts_with("from_")
+                        || f == "take"
+                        || a.impl_of[i].as_deref().map_or(false, |imp| imp.contains("ByteReader"))
+                }
+            }
+        };
+        for i in 0..n {
+            if a.in_test[i] || !in_decode(i) {
+                continue;
+            }
+            let t = toks[i].text.as_str();
+            if (t == "unwrap" || t == "expect") && i > 0 && toks[i - 1].text == "." {
+                push(
+                    &mut viol,
+                    "hostile-input",
+                    toks[i].line,
+                    format!("`.{}()` in decode fn `{}` (§6)", t, fn_name(&a, i)),
+                );
+            } else if PANIC_MACROS.contains(&t) && i + 1 < n && toks[i + 1].text == "!" {
+                push(
+                    &mut viol,
+                    "hostile-input",
+                    toks[i].line,
+                    format!("`{}!` in decode fn `{}` — return WireError (§6)", t, fn_name(&a, i)),
+                );
+            } else if t == "[" && i > 0 {
+                let p = toks[i - 1].text.as_str();
+                let c0 = p.as_bytes()[0];
+                let indexable =
+                    c0.is_ascii_alphabetic() || c0 == b'_' || p == ")" || p == "]" || p == "?";
+                if indexable && !NOT_INDEX_BASE.contains(&p) {
+                    let owner = a.fn_of[i].clone().unwrap_or_default();
+                    let is_local = local_arrays.iter().any(|(f, nm)| *f == owner && nm == p);
+                    if !is_local {
+                        push(
+                            &mut viol,
+                            "hostile-input",
+                            toks[i].line,
+                            format!("slice index after `{}` in `{}` (§6)", p, fn_name(&a, i)),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    viol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(rel: &str, src: &str) -> Vec<String> {
+        lint_source(rel, src).into_iter().map(|v| v.rule.to_string()).collect()
+    }
+
+    #[test]
+    fn float_leak_positive_and_negative() {
+        let bad = "fn f(x: i64) -> i64 { let y = x as f64; let z = 0.5; f64::to_bits(z); x }";
+        let got = rules_of("src/lns/fixture.rs", bad);
+        assert_eq!(got, ["float-leak", "float-leak", "float-leak"]);
+        // same text outside the value path is fine
+        assert!(rules_of("src/obs/fixture.rs", bad).is_empty());
+        // clean integer math is fine
+        assert!(rules_of("src/lns/fixture.rs", "fn f(x: i64) -> i64 { x + 1 }").is_empty());
+    }
+
+    #[test]
+    fn float_leak_exemptions() {
+        // `_f64` marker fns convert by design
+        let conv = "fn decode_f64(x: u32) -> f64 { x as f64 }";
+        assert!(rules_of("src/lns/fixture.rs", conv).is_empty());
+        // cfg(test) mods may float freely
+        let tested = "fn live(x: i64) -> i64 { x }
+#[cfg(test)]
+mod tests { fn t() { let y = 0.5; } }";
+        assert!(rules_of("src/lns/fixture.rs", tested).is_empty());
+        // allowlisted files may float
+        assert!(rules_of("src/lns/delta.rs", "fn lut() -> f64 { 0.5 }").is_empty());
+    }
+
+    #[test]
+    fn regrouping_positive_and_negative() {
+        let bad = "fn f(v: &[u64]) -> u64 { v.par_iter().map(|x| x + 1).sum() }";
+        assert_eq!(rules_of("src/tensor/fixture.rs", bad), ["regrouping"]);
+        let ok = "fn f(v: &mut [u64]) { v.par_iter_mut().for_each(|x| *x += 1); }";
+        assert!(rules_of("src/tensor/fixture.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn nondeterminism_positive_and_negative() {
+        let bad = "fn f() { let m: HashMap<u32, u32> = HashMap::new(); let t = Instant::now(); }";
+        assert_eq!(
+            rules_of("src/train/fixture.rs", bad),
+            ["nondeterminism", "nondeterminism", "nondeterminism"]
+        );
+        // outside the value path: fine
+        assert!(rules_of("src/coordinator/fixture.rs", bad).is_empty());
+        let ok = "fn f() { let m: BTreeMap<u32, u32> = BTreeMap::new(); }";
+        assert!(rules_of("src/train/fixture.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn atomics_positive_and_negative() {
+        let site = "fn f(a: &AtomicU64) { a.store(1, Ordering::SeqCst); }";
+        assert_eq!(rules_of("src/tensor/fixture.rs", site), ["atomics"]);
+        // Relaxed inside obs/ is the sanctioned pattern
+        let relaxed = "fn f(a: &AtomicU64) { a.store(1, Ordering::Relaxed); }";
+        assert!(rules_of("src/obs/fixture.rs", relaxed).is_empty());
+        // …but SeqCst in obs/ still needs a waiver
+        assert_eq!(rules_of("src/obs/fixture.rs", site), ["atomics"]);
+    }
+
+    #[test]
+    fn hostile_input_decode_scope() {
+        let bad = "impl<'a> ByteReader<'a> {
+fn u8(&mut self) -> u8 { self.buf[0] }
+}
+fn decode_x(b: &[u8]) -> u8 { b.first().unwrap() }";
+        let got = rules_of("src/train/wire.rs", bad);
+        assert_eq!(got, ["hostile-input", "hostile-input"]);
+        // same code in any other file: out of scope
+        assert!(rules_of("src/train/fixture.rs", bad).is_empty());
+        // helper fns outside decode scope are out of scope
+        let helper = "fn checksum(v: &[u8]) -> u8 { v[0] }";
+        assert!(rules_of("src/train/wire.rs", helper).is_empty());
+        // indexing a fn-local fixed array is our constant, not the wire's
+        let local = "fn read_header(r: &mut R) -> u8 { let mut h = [0u8; 4]; h[1] }";
+        assert!(rules_of("src/train/wire.rs", local).is_empty());
+    }
+
+    #[test]
+    fn pragma_waives_and_requires_reason() {
+        let waived = "fn f(x: i64) -> i64 {
+// numerics-lint: allow(float-leak) — fixture justification
+let y = x as f64;
+x }";
+        assert!(rules_of("src/lns/fixture.rs", waived).is_empty());
+        // a waiver with no reason is itself flagged (and does still waive)
+        let bare = "fn f(x: i64) -> i64 {
+// numerics-lint: allow(float-leak)
+let y = x as f64;
+x }";
+        assert_eq!(rules_of("src/lns/fixture.rs", bare), ["pragma"]);
+        // a waiver for the wrong rule does not suppress the finding
+        let wrong = "fn f(x: i64) -> i64 {
+// numerics-lint: allow(atomics) — wrong rule
+let y = x as f64;
+x }";
+        assert_eq!(rules_of("src/lns/fixture.rs", wrong), ["float-leak"]);
+        // unknown rule names are typo-guarded
+        let typo = "// numerics-lint: allow(float-leek) — oops\nfn f() {}";
+        assert_eq!(rules_of("src/obs/fixture.rs", typo), ["pragma"]);
+    }
+}

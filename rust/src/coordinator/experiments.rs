@@ -351,6 +351,7 @@ pub fn run_grid(
                 } else {
                     run_one(ds, tag, &cfg)
                 };
+                // numerics-lint: allow(atomics) — sweep progress counter for log lines; relaxed count is enough
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
                     "[{finished}/{} done] {} × {:<10} acc={:.3} ({:.1}s)",
@@ -502,6 +503,7 @@ pub fn cnn_grid(
                 } else {
                     run_one_cnn(ds, tag, &cfg)
                 };
+                // numerics-lint: allow(atomics) — sweep progress counter for log lines; relaxed count is enough
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
                 eprintln!(
                     "[{finished}/{} done] cnn/{} {} × {:<10} acc={:.3} ({:.1}s)",

@@ -40,6 +40,11 @@
 //! assert!((sys.decode_f64(s) - 1.5).abs() < 0.02);
 //! ```
 
+// The whole engine is safe Rust; keep it that way mechanically. Bit-level
+// work (LNS packing, wire encode/decode) goes through integer ops and
+// `to_le_bytes`/`from_le_bytes`, never transmutes.
+#![forbid(unsafe_code)]
+
 pub mod bench_util;
 pub mod coordinator;
 pub mod data;

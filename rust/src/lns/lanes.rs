@@ -62,12 +62,14 @@ static LANES_ENABLED: AtomicBool = AtomicBool::new(true);
 
 /// Enable or disable the lane kernels process-wide.
 pub fn set_enabled(on: bool) {
+    // numerics-lint: allow(atomics) — perf-only toggle: both paths are bit-identical (§2)
     LANES_ENABLED.store(on, Ordering::Relaxed);
 }
 
 /// Whether the lane kernels are enabled.
 #[inline]
 pub fn enabled() -> bool {
+    // numerics-lint: allow(atomics) — perf-only toggle: both paths are bit-identical (§2)
     LANES_ENABLED.load(Ordering::Relaxed)
 }
 

@@ -652,6 +652,7 @@ impl LnsSystem {
         }
         // log2 p_j = t_j − lse (plain saturating fixed-point subtract).
         let lse_m = if lse.is_zero() { self.cfg.m_min() as i64 } else { lse.m as i64 };
+        // numerics-lint: allow(float-leak) — the CE loss leaves the value path here as an f64 statistic (§4)
         let mut log2_p_label = 0.0;
         for j in 0..logits.len() {
             let m_p = self.sat(t[j] - lse_m);

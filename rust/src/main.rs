@@ -13,6 +13,8 @@
 //! Argument parsing is hand-rolled (`clap` is unavailable offline); every
 //! flag is `--key value`.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context, Result};
 use lnsdnn::coordinator::experiments::ConfigTag;
 use lnsdnn::coordinator::{experiments, report, MultiprocSpec};

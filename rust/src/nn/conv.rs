@@ -404,6 +404,7 @@ impl Pool2d {
         let mut out = Tensor::full(x.rows, out_len, backend.zero());
         let mut route =
             if self.kind == PoolKind::Max { vec![0usize; x.rows * out_len] } else { Vec::new() };
+        // numerics-lint: allow(float-leak) — constant 1/k² pool weight, encoded once; averaging is ⊡
         let inv = backend.encode(1.0 / (self.k * self.k) as f64);
         for s in 0..x.rows {
             let xrow = x.row(s);
@@ -463,6 +464,7 @@ impl Pool2d {
         }
         let (oh, ow) = (self.out_h(), self.out_w());
         let mut dx = Tensor::full(upstream.rows, self.in_len(), backend.zero());
+        // numerics-lint: allow(float-leak) — constant 1/k² pool weight, encoded once; averaging is ⊡
         let inv = backend.encode(1.0 / (self.k * self.k) as f64);
         for s in 0..upstream.rows {
             let urow = upstream.row(s);
@@ -869,6 +871,7 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Cnn<E> {
         labels: &[usize],
     ) -> (Gradients<E>, RawStepStats) {
         let (mut grads, raw) = self.backprop_sums(backend, x, labels);
+        // numerics-lint: allow(float-leak) — the single 1/B scale (§3), computed in f64, encoded once
         grads.scale(backend, 1.0 / raw.n as f64);
         (grads, raw)
     }

@@ -188,6 +188,7 @@ impl<E: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static> Mlp<E> {
         labels: &[usize],
     ) -> (Gradients<E>, RawStepStats) {
         let (mut grads, raw) = self.backprop_sums(backend, x, labels);
+        // numerics-lint: allow(float-leak) — the single 1/B scale (§3), computed in f64, encoded once
         grads.scale(backend, 1.0 / raw.n as f64);
         (grads, raw)
     }

@@ -42,6 +42,7 @@ impl SgdConfig {
         debug_assert_eq!(b.len(), db.len());
         let lr = backend.encode(self.lr);
         let wd = backend.encode(self.weight_decay);
+        // numerics-lint: allow(float-leak) — hyper-parameter gate on the f64 config, not value math
         let use_wd = self.weight_decay != 0.0;
         for (w, &g) in w.data.iter_mut().zip(&dw.data) {
             let g = if use_wd { backend.add(g, backend.mul(wd, *w)) } else { g };

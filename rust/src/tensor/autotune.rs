@@ -63,12 +63,14 @@ static HAS_ENTRIES: AtomicBool = AtomicBool::new(false);
 
 /// Turn autotuning on or off process-wide (overrides `LNSDNN_AUTOTUNE`).
 pub fn set_autotune(on: bool) {
+    // numerics-lint: allow(atomics) — perf-only autotune flag; tiling choice never changes bits (§2)
     ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
 }
 
 /// Whether a [`tiling_for`] miss triggers a sweep: explicit
 /// [`set_autotune`] wins, else `LNSDNN_AUTOTUNE=1` in the environment.
 pub fn autotune_enabled() -> bool {
+    // numerics-lint: allow(atomics) — perf-only autotune flag; tiling choice never changes bits (§2)
     match ENABLED.load(Ordering::Relaxed) {
         1 => true,
         2 => false,
@@ -88,6 +90,7 @@ fn registry() -> &'static Registry {
 /// autotuning enabled) the winner of a first-use sweep, else
 /// [`Tiling::DEFAULT`].
 pub fn tiling_for<B: Backend>(b: &B, m: usize, k: usize, n: usize) -> Tiling {
+    // numerics-lint: allow(atomics) — perf-only autotune flag; tiling choice never changes bits (§2)
     if !HAS_ENTRIES.load(Ordering::Relaxed) && !autotune_enabled() {
         return Tiling::DEFAULT;
     }
@@ -106,12 +109,14 @@ pub fn tiling_for<B: Backend>(b: &B, m: usize, k: usize, n: usize) -> Tiling {
 /// the warm-start path for tilings carried in `BENCH_*.json`.
 pub fn seed_tiling(tag: &str, m: usize, k: usize, n: usize, t: Tiling) {
     registry().lock().unwrap().insert((tag.to_string(), ShapeClass::of(m, k, n)), t);
+    // numerics-lint: allow(atomics) — perf-only autotune flag; tiling choice never changes bits (§2)
     HAS_ENTRIES.store(true, Ordering::Relaxed);
 }
 
 /// Forget every tuned/seeded tiling (test isolation).
 pub fn clear() {
     registry().lock().unwrap().clear();
+    // numerics-lint: allow(atomics) — perf-only autotune flag; tiling choice never changes bits (§2)
     HAS_ENTRIES.store(false, Ordering::Relaxed);
 }
 
@@ -216,6 +221,7 @@ pub fn seed_from_records(records: &[BenchRecord]) -> usize {
         for (key, (_, t)) in best {
             reg.insert(key, t);
         }
+        // numerics-lint: allow(atomics) — perf-only autotune flag; tiling choice never changes bits (§2)
         HAS_ENTRIES.store(true, Ordering::Relaxed);
     }
     n

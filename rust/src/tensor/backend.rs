@@ -302,6 +302,7 @@ impl Clone for FixedBackend {
             slope: self.slope,
             slope_q: self.slope_q,
             sr_counter: std::sync::atomic::AtomicU64::new(
+                // numerics-lint: allow(atomics) — clone snapshots the instance-local SR dither counter (§5)
                 self.sr_counter.load(std::sync::atomic::Ordering::Relaxed),
             ),
         }
@@ -321,6 +322,7 @@ impl FixedBackend {
 
     /// Next dither word (SplitMix64 output of an incrementing counter).
     fn next_dither(&self) -> u32 {
+        // numerics-lint: allow(atomics) — SR dither sequence is per-instance and update-path-serial (§5)
         let c = self.sr_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut z = c.wrapping_add(0x9E37_79B9_7F4A_7C15);
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);

@@ -382,11 +382,13 @@ pub fn set_matmul_dispatch(d: MatmulDispatch) {
         MatmulDispatch::ForceTiled => 1,
         MatmulDispatch::ForceRow => 2,
     };
+    // numerics-lint: allow(atomics) — dispatch override is perf-only: every path is bit-identical (§2)
     MATMUL_DISPATCH.store(v, Ordering::Relaxed);
 }
 
 /// The dispatch override currently in effect.
 pub fn matmul_dispatch() -> MatmulDispatch {
+    // numerics-lint: allow(atomics) — dispatch override is perf-only: every path is bit-identical (§2)
     match MATMUL_DISPATCH.load(Ordering::Relaxed) {
         1 => MatmulDispatch::ForceTiled,
         2 => MatmulDispatch::ForceRow,
@@ -798,6 +800,7 @@ pub fn softmax_ce_head<B: Backend>(
             })
             .collect()
     };
+    // numerics-lint: allow(float-leak) — §4 loss accounting: raw per-row f64 sums folded in row order
     let mut loss = 0.0;
     let mut correct = 0usize;
     for &(ln_p, ok) in &per_row {

@@ -180,6 +180,7 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
     for epoch in 1..=cfg.epochs {
         let _sp = span(SpanKind::Epoch);
         rng.shuffle(&mut order);
+        // numerics-lint: allow(nondeterminism) — wall-clock for the reported `seconds` field only (§8)
         let start = std::time::Instant::now();
         let mut loss = EpochLoss::default();
         let mut chunk = Vec::with_capacity(bs);
@@ -327,6 +328,7 @@ pub fn train_cnn<B: Backend>(
     for epoch in 1..=cfg.epochs {
         let _sp = span(SpanKind::Epoch);
         rng.shuffle(&mut order);
+        // numerics-lint: allow(nondeterminism) — wall-clock for the reported `seconds` field only (§8)
         let start = std::time::Instant::now();
         let mut loss = EpochLoss::default();
         let mut chunk = Vec::with_capacity(bs);
@@ -391,6 +393,7 @@ where
 {
     let (mut g, raw) = shard::sharded_backprop_sums(backend, pool, batch, local);
     let _sp = span(SpanKind::Scale);
+    // numerics-lint: allow(float-leak) — the single 1/B scale (§3), computed in f64, encoded once
     g.scale(backend, 1.0 / raw.n as f64);
     (g, raw)
 }

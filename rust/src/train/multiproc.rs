@@ -437,6 +437,7 @@ fn note_heartbeat(health: &mut [WorkerHealth], rank: usize, hb: &HeartbeatMsg) {
         epoch: hb.epoch,
         step: hb.step,
         samples_done: hb.samples_done,
+        // numerics-lint: allow(nondeterminism) — heartbeat freshness timestamp: telemetry only (§7)
         at: std::time::Instant::now(),
     });
     if obs::metrics::table_enabled() {
@@ -656,6 +657,7 @@ where
     for epoch in 1..=params.epochs {
         let _sp = span(SpanKind::Epoch);
         rng.shuffle(&mut order);
+        // numerics-lint: allow(nondeterminism) — wall-clock for the reported `seconds` field only (§8)
         let start = std::time::Instant::now();
         let mut loss = EpochLoss::default();
         let mut step: u32 = 0;
@@ -684,6 +686,7 @@ where
             let mut grads = merged;
             {
                 let _sp = span(SpanKind::Scale);
+                // numerics-lint: allow(float-leak) — the single 1/B scale (§3), in f64, encoded once
                 grads.scale(backend, 1.0 / raw.n as f64);
             }
             // Same deterministic sampling points as the in-process
@@ -840,6 +843,7 @@ pub fn serve_job<R: Read, W: Write>(
 ) -> Result<()> {
     let slope = job.slope;
     match job.backend_tag.as_str() {
+        // numerics-lint: allow(float-leak) — float-backend construction: config slope → native f32
         "float32" => dispatch_model(&FloatBackend { slope: slope as f32 }, job, ds, rx, tx),
         "lin12" => {
             let b = FixedBackend::new(FixedSystem::new(FixedConfig::w12()), slope);
@@ -1014,6 +1018,7 @@ where
                 .map_err(|e| anyhow::anyhow!("worker {}: {e}", job.rank))?;
             {
                 let _sp = span(SpanKind::Scale);
+                // numerics-lint: allow(float-leak) — the single 1/B scale (§3), in f64, encoded once
                 grads.scale(backend, 1.0 / mf.stats.n as f64);
             }
             model.apply_update(backend, &sgd, &grads);

@@ -223,6 +223,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let kind = FrameKind::from_u8(header[6])?;
     let len = u32::from_le_bytes([header[7], header[8], header[9], header[10]]);
     ensure!(len <= MAX_FRAME_LEN, "frame payload length {len} exceeds MAX_FRAME_LEN");
+    // numerics-lint: allow(hostile-input) — constant 8-byte split of the stack header; cannot fail
     let want_sum = u64::from_le_bytes(header[11..19].try_into().unwrap());
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload).context("reading frame payload (truncated frame)")?;
@@ -271,6 +272,7 @@ impl WireElem for f32 {
         out.extend_from_slice(&self.to_bits().to_le_bytes());
     }
     fn take(bytes: &[u8]) -> Self {
+        // numerics-lint: allow(hostile-input) — callers hand exactly SIZE length-checked bytes
         f32::from_bits(u32::from_le_bytes(bytes[0..4].try_into().unwrap()))
     }
 }
@@ -283,6 +285,7 @@ impl WireElem for i32 {
         out.extend_from_slice(&self.to_le_bytes());
     }
     fn take(bytes: &[u8]) -> Self {
+        // numerics-lint: allow(hostile-input) — callers hand exactly SIZE length-checked bytes
         i32::from_le_bytes(bytes[0..4].try_into().unwrap())
     }
 }
@@ -295,6 +298,7 @@ impl WireElem for LnsValue {
         out.push(self.s as u8);
     }
     fn take(bytes: &[u8]) -> Self {
+        // numerics-lint: allow(hostile-input) — callers hand exactly SIZE length-checked bytes
         LnsValue::new(i32::from_le_bytes(bytes[0..4].try_into().unwrap()), bytes[4] != 0)
     }
 }
@@ -354,20 +358,24 @@ impl<'a> ByteReader<'a> {
                 self.remaining()
             );
         };
+        // numerics-lint: allow(hostile-input) — `end` was overflow- and bounds-checked just above
         let s = &self.buf[self.pos..end];
         self.pos = end;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8> {
+        // numerics-lint: allow(hostile-input) — take(1) returned exactly one byte
         Ok(self.take(1)?[0])
     }
 
     fn u32(&mut self) -> Result<u32> {
+        // numerics-lint: allow(hostile-input) — take(4) returned exactly four bytes; cannot fail
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // numerics-lint: allow(hostile-input) — take(8) returned exactly eight bytes; cannot fail
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -491,6 +499,7 @@ impl<E: WireElem> GradFrame<E> {
             let bytes = r.take(byte_len)?;
             let mut view = Vec::with_capacity(len);
             for i in 0..len {
+                // numerics-lint: allow(hostile-input) — byte_len = len·SIZE was checked above; i < len
                 view.push(E::take(&bytes[i * E::SIZE..(i + 1) * E::SIZE]));
             }
             views.push(view);

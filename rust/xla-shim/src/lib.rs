@@ -9,6 +9,8 @@
 //! pass), while every path that would need a real PJRT client fails at
 //! runtime with an error naming the swap-in procedure.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// Shim error: carries a human-readable message, convertible into
