@@ -3,7 +3,7 @@
 //! plus per-epoch wall-clock so the curves double as a training-throughput
 //! benchmark. Full-scale regeneration: `cargo run --release -- fig2`.
 
-use lnsdnn::coordinator::experiments::{fig2, ConfigTag};
+use lnsdnn::coordinator::experiments::{fig2, ConfigTag, LogMode};
 use lnsdnn::coordinator::{report, MultiprocSpec};
 use lnsdnn::data::{synth_dataset, SynthSpec};
 use std::path::Path;
@@ -43,8 +43,8 @@ fn main() {
 
     // Paper-shape assertions: 16-bit tracks its linear twin; curves rise.
     let get = |t: ConfigTag| recs.iter().find(|r| r.tag == t).unwrap();
-    let log16 = get(ConfigTag::Log16Lut);
-    let lin16 = get(ConfigTag::Lin16);
+    let log16 = get(ConfigTag::Log(16, LogMode::Lut));
+    let lin16 = get(ConfigTag::Lin(16));
     assert!(
         log16.test_accuracy > lin16.test_accuracy - 0.15,
         "log16 should track lin16: {} vs {}",

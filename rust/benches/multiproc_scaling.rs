@@ -39,6 +39,7 @@ fn bench_cfg(classes: usize) -> TrainConfig {
         init: InitScheme::HeNormal,
         seed: 7,
         shard: ShardConfig::default(),
+        precision: lnsdnn::precision::PrecisionMap::uniform(),
     }
 }
 

@@ -203,8 +203,9 @@ fn record_serve_pair(rec: &mut Recorder, b: &LnsBackend, seed: u64, budget_ms: u
 }
 
 /// The pinned record suite: 256³ on all four backends, the lane-vs-scalar
-/// pairs on both LNS Δ modes, the obs off/on pair, the live-endpoint
-/// idle/scraped pair, and the MLP / im2col shapes.
+/// pairs on both LNS Δ modes plus the w8-vs-w16 width pair, the obs
+/// off/on pair, the live-endpoint idle/scraped pair, and the MLP /
+/// im2col shapes.
 fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
     let mut rec = Recorder::new();
     let cube = (256usize, 256usize, 256usize);
@@ -217,6 +218,14 @@ fn record_suite(budget_ms: u64) -> Vec<BenchRecord> {
     record_tiled(&mut rec, &bs, cube, 21, budget_ms);
     record_lane_vs_scalar(&mut rec, &lut, 22, budget_ms);
     record_lane_vs_scalar(&mut rec, &bs, 22, budget_ms);
+    // The w8-vs-w16 width pair (PR 10): the same tiled matmul and lane
+    // toggle on the 8-bit word, so the trajectory shows what narrowing
+    // the word buys (or costs) in software — in hardware the win is
+    // area, but the soft-max LUT shrinks with the word too (640 → 40
+    // entries at the q_f = 2 grid) and both Δ paths stay in cache.
+    let lut8 = LnsBackend::new(LnsSystem::new(LnsConfig::w8_lut()), 0.01);
+    record_tiled(&mut rec, &lut8, cube, 21, budget_ms);
+    record_lane_vs_scalar(&mut rec, &lut8, 22, budget_ms);
     record_obs_pair(&mut rec, &lut, 22, budget_ms);
     record_serve_pair(&mut rec, &lut, 22, budget_ms);
     for shape in [(256usize, 784usize, 100usize), (6272, 150, 12)] {

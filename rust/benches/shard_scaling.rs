@@ -66,6 +66,7 @@ fn mlp_case<B: Backend>(label: &str, backend: &B) {
             init: lnsdnn::nn::InitScheme::HeNormal,
             seed: 5,
             shard: ShardConfig::with_shards(n),
+            precision: lnsdnn::precision::PrecisionMap::uniform(),
         };
         let r = with_workers(n, || train(backend, &ds, &cfg));
         let secs: f64 = r.curve.iter().map(|e| e.seconds).sum();

@@ -3,7 +3,7 @@
 //! paper's qualitative claims. Full-scale: `cargo run --release -- table1
 //! --scale 1.0 --epochs 20`.
 
-use lnsdnn::coordinator::experiments::{table1, ConfigTag};
+use lnsdnn::coordinator::experiments::{table1, ConfigTag, LogMode};
 use lnsdnn::coordinator::{report, MultiprocSpec};
 use lnsdnn::data::paper_datasets;
 use std::path::Path;
@@ -50,9 +50,9 @@ fn main() {
     let mut claims = 0;
     for d in ["mnist", "fmnist", "emnistd", "emnistl"] {
         let float = acc(d, ConfigTag::Float);
-        let l16 = acc(d, ConfigTag::Log16Lut);
-        let l12 = acc(d, ConfigTag::Log12Lut);
-        let b16 = acc(d, ConfigTag::Log16Bs);
+        let l16 = acc(d, ConfigTag::Log(16, LogMode::Lut));
+        let l12 = acc(d, ConfigTag::Log(12, LogMode::Lut));
+        let b16 = acc(d, ConfigTag::Log(16, LogMode::Bs));
         claims += 3;
         claims_ok += (l16 > float - 0.12) as i32;
         claims_ok += (l16 > b16 - 0.06) as i32;

@@ -11,6 +11,7 @@ use crate::data::Dataset;
 use crate::fixed::{FixedConfig, FixedSystem};
 use crate::lns::{DeltaApprox, DeltaMode, LnsConfig, LnsSystem, LutSpec};
 use crate::nn::{CnnArch, CnnVariant};
+use crate::precision::PrecisionMap;
 use crate::tensor::{FixedBackend, FloatBackend, LnsBackend};
 use crate::train::{train, train_cnn, CnnTrainConfig, EpochRecord, ShardConfig, TrainConfig};
 use rayon::prelude::*;
@@ -19,25 +20,40 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// The leaky/llReLU slope used everywhere (paper's leaky-ReLU).
 pub const SLOPE: f64 = 0.01;
 
-/// The seven Table-1 number-system columns (+ an exact-Δ ablation).
+/// Δ-approximation family of a log-domain column.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum LogMode {
+    /// Uniformly sampled LUT (paper's Table-1 default).
+    Lut,
+    /// Generalized bit-shift rule.
+    Bs,
+    /// Exact (float-evaluated) Δ — ablation only.
+    Exact,
+}
+
+impl LogMode {
+    fn suffix(&self) -> &'static str {
+        match self {
+            LogMode::Lut => "lut",
+            LogMode::Bs => "bs",
+            LogMode::Exact => "exact",
+        }
+    }
+}
+
+/// A number-system column: the float baseline, or a fixed/log word at a
+/// **runtime** width. The paper's seven Table-1 columns are the 12/16-bit
+/// instances; any width the validators accept (`lin8`, `log23-bs`, …)
+/// is a legal column, which is what the accuracy-vs-bitwidth frontier
+/// sweeps over.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub enum ConfigTag {
     /// Floating-point baseline.
     Float,
-    /// Linear fixed-point, 12-bit.
-    Lin12,
-    /// Linear fixed-point, 16-bit.
-    Lin16,
-    /// Log-domain, 12-bit, LUT Δ.
-    Log12Lut,
-    /// Log-domain, 16-bit, LUT Δ.
-    Log16Lut,
-    /// Log-domain, 12-bit, bit-shift Δ.
-    Log12Bs,
-    /// Log-domain, 16-bit, bit-shift Δ.
-    Log16Bs,
-    /// Ablation: log-domain 16-bit with exact (float-evaluated) Δ.
-    Log16Exact,
+    /// Linear fixed-point at a total word width (preset layout).
+    Lin(u32),
+    /// Log-domain at a total word width (preset layout) with a Δ mode.
+    Log(u32, LogMode),
 }
 
 impl ConfigTag {
@@ -45,54 +61,60 @@ impl ConfigTag {
     pub fn table1_columns() -> [ConfigTag; 7] {
         [
             ConfigTag::Float,
-            ConfigTag::Lin12,
-            ConfigTag::Lin16,
-            ConfigTag::Log12Lut,
-            ConfigTag::Log16Lut,
-            ConfigTag::Log12Bs,
-            ConfigTag::Log16Bs,
+            ConfigTag::Lin(12),
+            ConfigTag::Lin(16),
+            ConfigTag::Log(12, LogMode::Lut),
+            ConfigTag::Log(16, LogMode::Lut),
+            ConfigTag::Log(12, LogMode::Bs),
+            ConfigTag::Log(16, LogMode::Bs),
         ]
     }
 
     /// The four Fig. 2 series.
     pub fn fig2_series() -> [ConfigTag; 4] {
-        [ConfigTag::Lin12, ConfigTag::Lin16, ConfigTag::Log12Lut, ConfigTag::Log16Lut]
+        [
+            ConfigTag::Lin(12),
+            ConfigTag::Lin(16),
+            ConfigTag::Log(12, LogMode::Lut),
+            ConfigTag::Log(16, LogMode::Lut),
+        ]
     }
 
-    /// Parse a CLI tag like `log16-lut`.
+    /// Parse a CLI tag like `log16-lut` or `lin8` — any width the
+    /// config validators accept, through the same `from_tag` parsers the
+    /// worker processes reconstruct backends with.
     pub fn parse(s: &str) -> Option<ConfigTag> {
-        Some(match s {
-            "float" => ConfigTag::Float,
-            "lin12" => ConfigTag::Lin12,
-            "lin16" => ConfigTag::Lin16,
-            "log12-lut" => ConfigTag::Log12Lut,
-            "log16-lut" => ConfigTag::Log16Lut,
-            "log12-bs" => ConfigTag::Log12Bs,
-            "log16-bs" => ConfigTag::Log16Bs,
-            "log16-exact" => ConfigTag::Log16Exact,
-            _ => return None,
-        })
+        if s == "float" {
+            return Some(ConfigTag::Float);
+        }
+        if let Some(fc) = FixedConfig::from_tag(s) {
+            return Some(ConfigTag::Lin(fc.total_bits));
+        }
+        let lc = LnsConfig::from_tag(s)?;
+        let mode = match lc.delta {
+            DeltaMode::Lut(_) => LogMode::Lut,
+            DeltaMode::BitShift => LogMode::Bs,
+            DeltaMode::Exact => LogMode::Exact,
+        };
+        Some(ConfigTag::Log(lc.total_bits, mode))
     }
 
-    /// Report label.
-    pub fn label(&self) -> &'static str {
+    /// Report label (also the wire/CLI backend tag).
+    pub fn label(&self) -> String {
         match self {
-            ConfigTag::Float => "float",
-            ConfigTag::Lin12 => "lin12",
-            ConfigTag::Lin16 => "lin16",
-            ConfigTag::Log12Lut => "log12-lut",
-            ConfigTag::Log16Lut => "log16-lut",
-            ConfigTag::Log12Bs => "log12-bs",
-            ConfigTag::Log16Bs => "log16-bs",
-            ConfigTag::Log16Exact => "log16-exact",
+            ConfigTag::Float => "float".into(),
+            ConfigTag::Lin(w) => format!("lin{w}"),
+            ConfigTag::Log(w, mode) => format!("log{w}-{}", mode.suffix()),
         }
     }
 
     /// The paper notes 12-bit runs needed a larger weight-decay constant;
-    /// these defaults encode that (overridable from the CLI).
+    /// these defaults extend that to every narrow word (overridable from
+    /// the CLI).
     pub fn default_weight_decay(&self) -> f64 {
-        match self {
-            ConfigTag::Lin12 | ConfigTag::Log12Lut | ConfigTag::Log12Bs => 1e-3,
+        match self.bits() {
+            0 => 1e-4,
+            w if w <= 12 => 1e-3,
             _ => 1e-4,
         }
     }
@@ -101,8 +123,7 @@ impl ConfigTag {
     pub fn bits(&self) -> u32 {
         match self {
             ConfigTag::Float => 0,
-            ConfigTag::Lin12 | ConfigTag::Log12Lut | ConfigTag::Log12Bs => 12,
-            _ => 16,
+            ConfigTag::Lin(w) | ConfigTag::Log(w, _) => *w,
         }
     }
 }
@@ -124,20 +145,27 @@ pub struct RunRecord {
     pub seconds: f64,
 }
 
-/// Build the LNS config for a log-domain tag.
+/// Build the LNS config for a log-domain tag (any valid runtime width).
 pub fn lns_config_for(tag: ConfigTag) -> Option<LnsConfig> {
-    Some(match tag {
-        ConfigTag::Log12Lut => LnsConfig::w12_lut(),
-        ConfigTag::Log16Lut => LnsConfig::w16_lut(),
-        ConfigTag::Log12Bs => LnsConfig::w12_bitshift(),
-        ConfigTag::Log16Bs => LnsConfig::w16_bitshift(),
-        ConfigTag::Log16Exact => LnsConfig {
-            delta: DeltaMode::Exact,
-            softmax_delta: DeltaMode::Exact,
-            ..LnsConfig::w16_lut()
-        },
-        _ => return None,
-    })
+    match tag {
+        ConfigTag::Log(w, mode) => {
+            let mut cfg = LnsConfig::for_width(w, mode == LogMode::Bs).ok()?;
+            if mode == LogMode::Exact {
+                cfg.delta = DeltaMode::Exact;
+                cfg.softmax_delta = DeltaMode::Exact;
+            }
+            Some(cfg)
+        }
+        _ => None,
+    }
+}
+
+/// Build the fixed-point config for a linear tag (any valid width).
+pub fn fixed_config_for(tag: ConfigTag) -> Option<FixedConfig> {
+    match tag {
+        ConfigTag::Lin(w) => FixedConfig::for_width(w).ok(),
+        _ => None,
+    }
 }
 
 /// Train one (dataset × config) cell.
@@ -148,8 +176,8 @@ pub fn run_one(ds: &Dataset, tag: ConfigTag, cfg: &TrainConfig) -> RunRecord {
             let r = train(&FloatBackend { slope: SLOPE as f32 }, ds, cfg);
             (r.curve, r.test)
         }
-        ConfigTag::Lin12 | ConfigTag::Lin16 => {
-            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+        ConfigTag::Lin(_) => {
+            let fc = fixed_config_for(tag).expect("valid lin width");
             let r = train(&FixedBackend::new(FixedSystem::new(fc), SLOPE), ds, cfg);
             (r.curve, r.test)
         }
@@ -187,8 +215,8 @@ pub fn run_one_mp(
             let r = train_multiproc(&b, ds, cfg, spec)?;
             (r.curve, r.test)
         }
-        ConfigTag::Lin12 | ConfigTag::Lin16 => {
-            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+        ConfigTag::Lin(_) => {
+            let fc = fixed_config_for(tag).expect("valid lin width");
             let b = FixedBackend::new(FixedSystem::new(fc), SLOPE);
             let r = train_multiproc(&b, ds, cfg, spec)?;
             (r.curve, r.test)
@@ -224,8 +252,8 @@ pub fn run_one_cnn_mp(
             let r = train_cnn_multiproc(&b, ds, cfg, spec)?;
             (r.curve, r.test)
         }
-        ConfigTag::Lin12 | ConfigTag::Lin16 => {
-            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+        ConfigTag::Lin(_) => {
+            let fc = fixed_config_for(tag).expect("valid lin width");
             let b = FixedBackend::new(FixedSystem::new(fc), SLOPE);
             let r = train_cnn_multiproc(&b, ds, cfg, spec)?;
             (r.curve, r.test)
@@ -402,6 +430,145 @@ pub fn fig2(
     )
 }
 
+/// One cell of the accuracy-vs-bitwidth frontier sweep.
+#[derive(Clone, Debug)]
+pub struct FrontierRecord {
+    /// Dataset tag.
+    pub dataset: String,
+    /// Backend/column label (`float`, `lin8`, `log16-lut`, …).
+    pub label: String,
+    /// Narrowest storage width in play: the word width for uniform
+    /// cells, the narrowest assigned layer width for mixed cells
+    /// (0 = float).
+    pub bits: u32,
+    /// Per-layer precision assignment label (`uniform` or e.g. `8,-`).
+    pub precision: String,
+    /// Final test accuracy.
+    pub test_accuracy: f64,
+    /// Final test loss.
+    pub test_loss: f64,
+    /// Training seconds.
+    pub seconds: f64,
+    /// Minimum top-of-range headroom over weight layers (exponent
+    /// steps), from this cell's own occupancy histograms.
+    pub headroom_bits: Option<i32>,
+}
+
+/// Minimum top-of-range headroom over all weight-layer occupancy cells:
+/// how many exponent steps the hottest layer leaves unused below the
+/// active word's ceiling. This is the "choosing per-layer bitwidth from
+/// range occupancy" signal of `docs/OBSERVABILITY.md`, computed from
+/// whatever the current process banks hold.
+pub fn weight_headroom_bits() -> Option<i32> {
+    use crate::obs::dist;
+    let (_, hi) = dist::exp_range()?;
+    let snap = dist::snapshot();
+    let mut min_headroom: Option<i32> = None;
+    for e in &snap.entries {
+        if e.class != dist::TensorClass::Weights.code() {
+            continue;
+        }
+        if let Some((_, ohi)) = e.occupied_span() {
+            let h = hi - ohi;
+            min_headroom = Some(min_headroom.map_or(h, |m| m.min(h)));
+        }
+    }
+    min_headroom
+}
+
+/// Train one frontier cell with a clean, per-cell telemetry bank and
+/// annotate the record with its weight-range headroom.
+fn frontier_cell(
+    ds: &Dataset,
+    tag: ConfigTag,
+    pmap: PrecisionMap,
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+) -> FrontierRecord {
+    // Frontier cells run *sequentially* so the process-global occupancy
+    // banks attribute to exactly one cell — the opposite trade from
+    // `run_grid`, which runs cells concurrently and can only report
+    // sweep-wide aggregates.
+    crate::obs::reset_all();
+    let mut cfg = paper_config(ds, tag, epochs, hidden, seed);
+    cfg.precision = pmap.clone();
+    let rec = run_one(ds, tag, &cfg);
+    let headroom = weight_headroom_bits();
+    let bits = pmap
+        .layers()
+        .iter()
+        .flatten()
+        .map(|w| w.total_bits)
+        .min()
+        .unwrap_or_else(|| tag.bits());
+    eprintln!(
+        "  frontier {} × {:<12} precision={:<8} acc={:.3} headroom={} ({:.1}s)",
+        rec.dataset,
+        tag.label(),
+        pmap.label(),
+        rec.test_accuracy,
+        headroom.map_or("-".to_string(), |h| h.to_string()),
+        rec.seconds
+    );
+    FrontierRecord {
+        dataset: rec.dataset,
+        label: tag.label(),
+        bits,
+        precision: pmap.label(),
+        test_accuracy: rec.test_accuracy,
+        test_loss: rec.test_loss,
+        seconds: rec.seconds,
+        headroom_bits: headroom,
+    }
+}
+
+/// The accuracy-vs-bitwidth frontier (Table-1-style artifact): for every
+/// dataset, a float anchor plus `lin`/`log-lut`/`log-bs` columns at each
+/// requested width, plus — when at least two widths are given — two
+/// per-layer mixed-precision rows on the widest log-LUT base word
+/// (narrowest width stored in the first layer, then in the last), so the
+/// artifact shows what per-layer assignment buys over uniform narrowing.
+/// Every cell carries its occupancy-histogram headroom, linking the
+/// frontier back to the range-occupancy workflow.
+pub fn width_frontier(
+    datasets: &[Dataset],
+    widths: &[u32],
+    epochs: usize,
+    hidden: usize,
+    seed: u64,
+) -> Vec<FrontierRecord> {
+    assert!(!widths.is_empty(), "width frontier needs at least one width");
+    let counters_were_on = crate::obs::counters_enabled();
+    crate::obs::set_counters(true);
+    let mut out = Vec::new();
+    for ds in datasets {
+        out.push(frontier_cell(ds, ConfigTag::Float, PrecisionMap::uniform(), epochs, hidden, seed));
+        for &w in widths {
+            for tag in [
+                ConfigTag::Lin(w),
+                ConfigTag::Log(w, LogMode::Lut),
+                ConfigTag::Log(w, LogMode::Bs),
+            ] {
+                out.push(frontier_cell(ds, tag, PrecisionMap::uniform(), epochs, hidden, seed));
+            }
+        }
+        let lo = *widths.iter().min().expect("non-empty widths");
+        let hi = *widths.iter().max().expect("non-empty widths");
+        if lo != hi {
+            let base = ConfigTag::Log(hi, LogMode::Lut);
+            let base_tag = base.label();
+            for spec in [format!("{lo},-"), format!("-,{lo}")] {
+                let pmap =
+                    PrecisionMap::parse(&spec, &base_tag).expect("frontier precision spec");
+                out.push(frontier_cell(ds, base, pmap, epochs, hidden, seed));
+            }
+        }
+    }
+    crate::obs::set_counters(counters_were_on);
+    out
+}
+
 /// CNN training protocol for a dataset of square images: the requested
 /// architecture variant (pooled LeNet or stride-2 convs) sized from the
 /// dataset, the tag's weight decay, paper epochs/batching, and the
@@ -436,8 +603,8 @@ pub fn run_one_cnn(ds: &Dataset, tag: ConfigTag, cfg: &CnnTrainConfig) -> RunRec
             let r = train_cnn(&FloatBackend { slope: SLOPE as f32 }, ds, cfg);
             (r.curve, r.test)
         }
-        ConfigTag::Lin12 | ConfigTag::Lin16 => {
-            let fc = if tag == ConfigTag::Lin12 { FixedConfig::w12() } else { FixedConfig::w16() };
+        ConfigTag::Lin(_) => {
+            let fc = fixed_config_for(tag).expect("valid lin width");
             let r = train_cnn(&FixedBackend::new(FixedSystem::new(fc), SLOPE), ds, cfg);
             (r.curve, r.test)
         }
@@ -665,9 +832,35 @@ mod tests {
     #[test]
     fn tags_roundtrip_through_parse() {
         for t in ConfigTag::table1_columns() {
-            assert_eq!(ConfigTag::parse(t.label()), Some(t));
+            assert_eq!(ConfigTag::parse(&t.label()), Some(t));
         }
-        assert_eq!(ConfigTag::parse("nope"), None);
+        // Runtime widths beyond the presets parse through the same path.
+        for (s, t) in [
+            ("lin8", ConfigTag::Lin(8)),
+            ("log8-lut", ConfigTag::Log(8, LogMode::Lut)),
+            ("log23-bs", ConfigTag::Log(23, LogMode::Bs)),
+            ("log16-exact", ConfigTag::Log(16, LogMode::Exact)),
+        ] {
+            assert_eq!(ConfigTag::parse(s), Some(t), "{s}");
+            assert_eq!(t.label(), s);
+        }
+        for bad in ["nope", "lin3", "log6-lut", "log16-nope", "lin99"] {
+            assert_eq!(ConfigTag::parse(bad), None, "{bad}");
+        }
+        assert_eq!(ConfigTag::Lin(8).default_weight_decay(), 1e-3);
+        assert_eq!(ConfigTag::Log(16, LogMode::Lut).default_weight_decay(), 1e-4);
+        assert_eq!(ConfigTag::Float.bits(), 0);
+        assert_eq!(ConfigTag::Log(8, LogMode::Bs).bits(), 8);
+    }
+
+    #[test]
+    fn width_configs_resolve_for_parsed_tags() {
+        let lc = lns_config_for(ConfigTag::parse("log8-lut").unwrap()).unwrap();
+        assert_eq!((lc.total_bits, lc.frac_bits), (8, 2));
+        let fc = fixed_config_for(ConfigTag::parse("lin8").unwrap()).unwrap();
+        assert_eq!((fc.total_bits, fc.frac_bits), (8, 3));
+        assert!(lns_config_for(ConfigTag::Log(5, LogMode::Lut)).is_none(), "invalid width");
+        assert!(fixed_config_for(ConfigTag::Float).is_none());
     }
 
     #[test]
@@ -698,10 +891,10 @@ mod tests {
     fn grid_runs_all_cells_in_parallel() {
         let ds = vec![tiny()];
         let mp = MultiprocSpec::new(1);
-        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin16], 1, 8, 3, 2, 1, &mp);
+        let recs = run_grid(&ds, &[ConfigTag::Float, ConfigTag::Lin(16)], 1, 8, 3, 2, 1, &mp);
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
-        assert_eq!(recs[1].tag, ConfigTag::Lin16);
+        assert_eq!(recs[1].tag, ConfigTag::Lin(16));
     }
 
     #[test]
@@ -724,13 +917,36 @@ mod tests {
             ..StripeSpec::cnn_default(1.0, 5)
         });
         let mp = MultiprocSpec::new(1);
-        let tags = [ConfigTag::Float, ConfigTag::Log16Lut];
+        let tags = [ConfigTag::Float, ConfigTag::Log(16, LogMode::Lut)];
         let recs = cnn_grid(&ds, &tags, 1, 3, 2, CnnVariant::Pooled, 1, &mp);
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].tag, ConfigTag::Float);
-        assert_eq!(recs[1].tag, ConfigTag::Log16Lut);
+        assert_eq!(recs[1].tag, ConfigTag::Log(16, LogMode::Lut));
         assert_eq!(recs[0].curve.len(), 1);
         assert_eq!(recs[0].dataset, "stripes");
+    }
+
+    #[test]
+    fn width_frontier_emits_expected_grid() {
+        let ds = vec![tiny()];
+        let recs = width_frontier(&ds, &[8, 12], 1, 6, 3);
+        // float + 3 columns × 2 widths + 2 mixed-precision rows.
+        assert_eq!(recs.len(), 9);
+        assert_eq!(recs[0].label, "float");
+        assert_eq!(recs[0].bits, 0);
+        assert_eq!(recs[1].label, "lin8");
+        assert_eq!(recs[2].label, "log8-lut");
+        assert_eq!(recs[3].label, "log8-bs");
+        assert_eq!(recs[4].label, "lin12");
+        let mixed: Vec<&FrontierRecord> =
+            recs.iter().filter(|r| r.precision != "uniform").collect();
+        assert_eq!(mixed.len(), 2);
+        for m in &mixed {
+            assert_eq!(m.label, "log12-lut", "mixed rows ride the widest log-LUT base");
+            assert_eq!(m.bits, 8, "mixed rows report the narrowest assigned width");
+        }
+        assert_eq!(mixed[0].precision, "8,-");
+        assert_eq!(mixed[1].precision, "-,8");
     }
 
     #[test]

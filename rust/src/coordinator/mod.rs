@@ -10,6 +10,9 @@ pub mod experiments;
 pub mod report;
 pub mod server;
 
-pub use experiments::{fig1_rows, fig2, run_one, run_one_mp, table1, ConfigTag, RunRecord};
+pub use experiments::{
+    fig1_rows, fig2, run_one, run_one_mp, table1, width_frontier, ConfigTag, FrontierRecord,
+    LogMode, RunRecord,
+};
 pub use report::{write_csv, write_markdown};
 pub use server::{train_cnn_multiproc, train_multiproc, BatchServer, MultiprocSpec, ServerStats};

@@ -1,6 +1,6 @@
 //! Report writers: CSV series and markdown tables under `results/`.
 
-use super::experiments::{ConfigTag, Fig1Row, RunRecord};
+use super::experiments::{ConfigTag, Fig1Row, FrontierRecord, RunRecord};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -89,6 +89,52 @@ pub fn table1_markdown(recs: &[RunRecord]) -> String {
         s.push('\n');
     }
     s
+}
+
+/// Accuracy-vs-bitwidth frontier as markdown: one row per cell, with
+/// the per-layer precision assignment and the occupancy-histogram
+/// headroom that motivates (or refutes) narrowing each cell further.
+pub fn frontier_markdown(recs: &[FrontierRecord]) -> String {
+    let mut s = String::new();
+    s.push_str("# Accuracy-vs-bitwidth frontier\n\n");
+    s.push_str(
+        "Headroom = min over weight layers of (representable exponent \
+         ceiling − occupied exponent ceiling); large headroom means the \
+         layer could store narrower (see docs/OBSERVABILITY.md).\n\n",
+    );
+    s.push_str("| Dataset | Config | Bits | Per-layer precision | Test acc (%) | Test loss | Headroom (bits) |\n");
+    s.push_str("|---|---|---:|---|---:|---:|---:|\n");
+    for r in recs {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {:.1} | {:.4} | {} |\n",
+            r.dataset,
+            r.label,
+            if r.bits == 0 { "–".to_string() } else { r.bits.to_string() },
+            r.precision,
+            r.test_accuracy * 100.0,
+            r.test_loss,
+            r.headroom_bits.map_or("–".to_string(), |h| h.to_string()),
+        ));
+    }
+    s
+}
+
+/// Frontier CSV rows (same cells as [`frontier_markdown`]).
+pub fn frontier_csv_rows(recs: &[FrontierRecord]) -> Vec<Vec<String>> {
+    recs.iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.label.clone(),
+                r.bits.to_string(),
+                r.precision.clone(),
+                format!("{:.4}", r.test_accuracy),
+                format!("{:.4}", r.test_loss),
+                r.headroom_bits.map_or(String::new(), |h| h.to_string()),
+                format!("{:.1}", r.seconds),
+            ]
+        })
+        .collect()
 }
 
 /// Generic per-run CSV (used by `table1.csv` for machine-readable output).
@@ -187,6 +233,7 @@ pub fn obs_markdown(label: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::experiments::LogMode;
     use crate::train::EpochRecord;
 
     fn rec(ds: &str, tag: ConfigTag, acc: f64) -> RunRecord {
@@ -202,8 +249,10 @@ mod tests {
 
     #[test]
     fn table1_markdown_layout() {
-        let recs =
-            vec![rec("mnist", ConfigTag::Float, 0.974), rec("mnist", ConfigTag::Log16Lut, 0.972)];
+        let recs = vec![
+            rec("mnist", ConfigTag::Float, 0.974),
+            rec("mnist", ConfigTag::Log(16, LogMode::Lut), 0.972),
+        ];
         let md = table1_markdown(&recs);
         assert!(md.contains("| mnist |"));
         assert!(md.contains("97.4"));
@@ -223,9 +272,41 @@ mod tests {
 
     #[test]
     fn fig2_rows_flatten_curves() {
-        let rows = fig2_csv_rows(&[rec("mnist", ConfigTag::Lin16, 0.9)]);
+        let rows = fig2_csv_rows(&[rec("mnist", ConfigTag::Lin(16), 0.9)]);
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0][1], "lin16");
+    }
+
+    #[test]
+    fn frontier_writers_render_cells() {
+        let recs = vec![
+            FrontierRecord {
+                dataset: "mnist".into(),
+                label: "log8-lut".into(),
+                bits: 8,
+                precision: "uniform".into(),
+                test_accuracy: 0.91,
+                test_loss: 0.4,
+                seconds: 2.0,
+                headroom_bits: Some(3),
+            },
+            FrontierRecord {
+                dataset: "mnist".into(),
+                label: "log16-lut".into(),
+                bits: 8,
+                precision: "8,-".into(),
+                test_accuracy: 0.95,
+                test_loss: 0.3,
+                seconds: 2.5,
+                headroom_bits: None,
+            },
+        ];
+        let md = frontier_markdown(&recs);
+        assert!(md.contains("| mnist | log8-lut | 8 | uniform | 91.0 |"));
+        assert!(md.contains("| mnist | log16-lut | 8 | 8,- | 95.0 |"));
+        let rows = frontier_csv_rows(&recs);
+        assert_eq!(rows[0][6], "3");
+        assert_eq!(rows[1][6], "");
     }
 
     #[test]

@@ -16,6 +16,43 @@ pub struct FixedConfig {
 }
 
 impl FixedConfig {
+    /// Validated arbitrary-width constructor — the runtime word-width
+    /// axis. `4 ≤ W ≤ 31` keeps the code (and its products' rounding
+    /// constants) inside `i32`/`i64`; `1 ≤ b_f ≤ W − 2` leaves the sign
+    /// bit plus at least one integer bit.
+    pub fn try_new(total_bits: u32, frac_bits: u32) -> Result<Self, String> {
+        if !(4..=31).contains(&total_bits) {
+            return Err(format!("fixed total_bits must be in 4..=31, got {total_bits}"));
+        }
+        if frac_bits == 0 || frac_bits > total_bits - 2 {
+            return Err(format!(
+                "fixed frac_bits must be in 1..={} for a {total_bits}-bit word, got {frac_bits}",
+                total_bits - 2
+            ));
+        }
+        Ok(FixedConfig { total_bits, frac_bits })
+    }
+
+    /// Config for a total width with the preset sign/int/frac split
+    /// (1 sign + 4 integer bits, matching the paper's 16- and 12-bit
+    /// baselines, so `b_f = W − 5`). Valid for `W ∈ 6..=31`.
+    pub fn for_width(total_bits: u32) -> Result<Self, String> {
+        if total_bits < 6 {
+            return Err(format!(
+                "preset-layout fixed widths are 6..=31 (b_f = W − 5 ≥ 1), got {total_bits}"
+            ));
+        }
+        Self::try_new(total_bits, total_bits - 5)
+    }
+
+    /// Parse a backend tag of the form `lin<W>` into a validated
+    /// preset-layout config. Inverse of `FixedBackend::tag()`; `None` on
+    /// anything unparseable or out of range.
+    pub fn from_tag(tag: &str) -> Option<Self> {
+        let width: u32 = tag.strip_prefix("lin")?.parse().ok()?;
+        Self::for_width(width).ok()
+    }
+
     /// Paper's 16-bit linear baseline: `b_i = 4, b_f = 11`.
     pub fn w16() -> Self {
         FixedConfig { total_bits: 16, frac_bits: 11 }
@@ -24,6 +61,11 @@ impl FixedConfig {
     /// Paper's 12-bit linear baseline: `b_i = 4, b_f = 7`.
     pub fn w12() -> Self {
         FixedConfig { total_bits: 12, frac_bits: 7 }
+    }
+
+    /// 8-bit linear baseline with the same layout: `b_i = 4, b_f = 3`.
+    pub fn w8() -> Self {
+        FixedConfig { total_bits: 8, frac_bits: 3 }
     }
 
     /// Largest representable code.
@@ -331,8 +373,27 @@ mod tests {
     }
 
     #[test]
+    fn width_constructors_validate_and_match_presets() {
+        assert_eq!(FixedConfig::for_width(16).unwrap(), FixedConfig::w16());
+        assert_eq!(FixedConfig::for_width(12).unwrap(), FixedConfig::w12());
+        assert_eq!(FixedConfig::for_width(8).unwrap(), FixedConfig::w8());
+        assert_eq!(FixedConfig::from_tag("lin8"), Some(FixedConfig::w8()));
+        assert_eq!(FixedConfig::from_tag("lin16"), Some(FixedConfig::w16()));
+        for bad in ["lin", "lin5", "lin32", "linx", "log16-lut"] {
+            assert_eq!(FixedConfig::from_tag(bad), None, "{bad}");
+        }
+        assert!(FixedConfig::try_new(3, 1).is_err(), "too narrow");
+        assert!(FixedConfig::try_new(32, 11).is_err(), "code would not fit i32");
+        assert!(FixedConfig::try_new(8, 0).is_err(), "no fractional bits");
+        assert!(FixedConfig::try_new(8, 7).is_err(), "no integer bit left");
+        let c = FixedConfig::w8();
+        assert_eq!(c.max_code(), 127);
+        assert_eq!(c.min_code(), -127);
+    }
+
+    #[test]
     fn mac_row_bitexact_vs_scalar_mac() {
-        for cfg in [FixedConfig::w16(), FixedConfig::w12()] {
+        for cfg in [FixedConfig::w16(), FixedConfig::w12(), FixedConfig::w8()] {
             let s = FixedSystem::new(cfg);
             let mc = cfg.max_code();
             // Deterministic mix of interior, boundary, and zero codes.

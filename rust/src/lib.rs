@@ -52,6 +52,7 @@ pub mod fixed;
 pub mod lns;
 pub mod nn;
 pub mod obs;
+pub mod precision;
 pub mod proptest_util;
 pub mod rng;
 pub mod runtime;

@@ -26,6 +26,22 @@ impl LutSpec {
     /// Paper's soft-max table: `d_max = 10, r = 1/64` → 640 entries.
     pub const SOFTMAX640: LutSpec = LutSpec { d_max: 10, log2_inv_r: 6 };
 
+    /// MAC-path table for an arbitrary word: the paper's `d_max = 10`
+    /// range at `r = 1/2`, with the resolution capped at the word's own
+    /// fractional grid (a table finer than `2^-q_f` cannot be indexed by
+    /// shifting — `DeltaApprox::new` rejects it).
+    pub fn mac_for(frac_bits: u32) -> LutSpec {
+        LutSpec { d_max: 10, log2_inv_r: 1.min(frac_bits) }
+    }
+
+    /// Soft-max table for an arbitrary word: the paper's `d_max = 10`
+    /// range at `r = 1/64`, capped at the word's fractional grid. At
+    /// `q_f = 10` this is exactly [`LutSpec::SOFTMAX640`]; an 8-bit word
+    /// (`q_f = 2`) gets the 40-entry `r = 1/4` table its grid supports.
+    pub fn softmax_for(frac_bits: u32) -> LutSpec {
+        LutSpec { d_max: 10, log2_inv_r: 6.min(frac_bits) }
+    }
+
     /// Number of entries `d_max / r`.
     pub fn len(&self) -> usize {
         (self.d_max as usize) << self.log2_inv_r
@@ -76,6 +92,101 @@ pub struct LnsConfig {
 }
 
 impl LnsConfig {
+    /// Validated arbitrary-width constructor — the runtime word-width
+    /// axis. Checks the word layout (`4 ≤ W ≤ 32` so the magnitude field
+    /// fits an `i32`; `1 ≤ q_f ≤ W − 3` so there is at least one integer
+    /// bit and the fixed-point grid is non-degenerate) and every LUT
+    /// spec's indexability (`log2(1/r) ≤ q_f`, the precondition
+    /// `DeltaApprox::new` would otherwise panic on).
+    pub fn custom(
+        total_bits: u32,
+        frac_bits: u32,
+        delta: DeltaMode,
+        softmax_delta: DeltaMode,
+    ) -> Result<Self, String> {
+        if !(4..=32).contains(&total_bits) {
+            return Err(format!("LNS total_bits must be in 4..=32, got {total_bits}"));
+        }
+        if frac_bits == 0 || frac_bits > total_bits - 3 {
+            return Err(format!(
+                "LNS frac_bits must be in 1..={} for a {total_bits}-bit word, got {frac_bits}",
+                total_bits - 3
+            ));
+        }
+        for (path, mode) in [("delta", delta), ("softmax_delta", softmax_delta)] {
+            if let DeltaMode::Lut(spec) = mode {
+                if spec.d_max == 0 {
+                    return Err(format!("{path}: LUT d_max must be nonzero"));
+                }
+                if spec.log2_inv_r > frac_bits {
+                    return Err(format!(
+                        "{path}: LUT resolution 2^-{} finer than word resolution 2^-{frac_bits}",
+                        spec.log2_inv_r
+                    ));
+                }
+            }
+        }
+        Ok(LnsConfig { total_bits, frac_bits, delta, softmax_delta })
+    }
+
+    /// Config for a total width with the preset int/frac split
+    /// (`q_i = 4`, matching the paper's 16- and 12-bit settings, so
+    /// `q_f = W − 6`) and width-capped LUTs. `bitshift` selects the Δ
+    /// mode for both paths. Valid for `W ∈ 7..=32`.
+    pub fn for_width(total_bits: u32, bitshift: bool) -> Result<Self, String> {
+        if !(7..=32).contains(&total_bits) {
+            return Err(format!(
+                "preset-layout LNS widths are 7..=32 (q_f = W − 6 ≥ 1), got {total_bits}"
+            ));
+        }
+        let frac_bits = total_bits - 6;
+        let (delta, softmax_delta) = if bitshift {
+            (DeltaMode::BitShift, DeltaMode::BitShift)
+        } else {
+            (
+                DeltaMode::Lut(LutSpec::mac_for(frac_bits)),
+                DeltaMode::Lut(LutSpec::softmax_for(frac_bits)),
+            )
+        };
+        Self::custom(total_bits, frac_bits, delta, softmax_delta)
+    }
+
+    /// Parse a backend tag of the form `log<W>-lut`, `log<W>-bs`, or
+    /// `log<W>-exact` into a validated config. Inverse of
+    /// `LnsBackend::tag()` for preset-layout widths; `None` on anything
+    /// unparseable or out of range.
+    pub fn from_tag(tag: &str) -> Option<Self> {
+        let rest = tag.strip_prefix("log")?;
+        let dash = rest.find('-')?;
+        let width: u32 = rest[..dash].parse().ok()?;
+        let mut cfg = Self::for_width(width, false).ok()?;
+        match &rest[dash + 1..] {
+            "lut" => {}
+            "bs" => {
+                cfg.delta = DeltaMode::BitShift;
+                cfg.softmax_delta = DeltaMode::BitShift;
+            }
+            "exact" => {
+                cfg.delta = DeltaMode::Exact;
+                cfg.softmax_delta = DeltaMode::Exact;
+            }
+            _ => return None,
+        }
+        Some(cfg)
+    }
+
+    /// 8-bit LUT configuration (`q_f = 2`): the MAC table keeps the
+    /// paper's `r = 1/2`, the soft-max table is capped to the word's
+    /// `r = 1/4` grid (40 entries).
+    pub fn w8_lut() -> Self {
+        Self::for_width(8, false).expect("8-bit preset is statically valid")
+    }
+
+    /// 8-bit bit-shift configuration.
+    pub fn w8_bitshift() -> Self {
+        Self::for_width(8, true).expect("8-bit preset is statically valid")
+    }
+
     /// Paper's 16-bit LUT configuration (`q_f = 10`, MAC LUT 20 entries,
     /// soft-max LUT 640 entries).
     pub fn w16_lut() -> Self {
@@ -206,6 +317,54 @@ mod tests {
         let c = LnsConfig::w12_lut();
         for m in [-500i32, -1, 0, 1, 700] {
             assert_eq!(c.to_units(c.from_units(m)) as i32, m);
+        }
+    }
+
+    #[test]
+    fn word_layout_8() {
+        let c = LnsConfig::w8_lut();
+        assert_eq!(c.int_bits(), 4); // 8 = 2 + 4 + 2
+        assert_eq!(c.frac_bits, 2);
+        assert_eq!(c.m_max(), 63);
+        // The soft-max LUT is capped at the word's grid: r = 1/4.
+        assert_eq!(c.delta, DeltaMode::Lut(LutSpec { d_max: 10, log2_inv_r: 1 }));
+        assert_eq!(c.softmax_delta, DeltaMode::Lut(LutSpec { d_max: 10, log2_inv_r: 2 }));
+        assert_eq!(LutSpec::softmax_for(2).len(), 40);
+    }
+
+    #[test]
+    fn presets_agree_with_for_width() {
+        assert_eq!(LnsConfig::for_width(16, false).unwrap(), LnsConfig::w16_lut());
+        assert_eq!(LnsConfig::for_width(12, false).unwrap(), LnsConfig::w12_lut());
+        assert_eq!(LnsConfig::for_width(16, true).unwrap(), LnsConfig::w16_bitshift());
+        assert_eq!(LnsConfig::for_width(12, true).unwrap(), LnsConfig::w12_bitshift());
+        assert_eq!(LnsConfig::for_width(8, true).unwrap(), LnsConfig::w8_bitshift());
+    }
+
+    #[test]
+    fn custom_rejects_bad_layouts() {
+        let bs = DeltaMode::BitShift;
+        assert!(LnsConfig::custom(3, 1, bs, bs).is_err(), "too narrow");
+        assert!(LnsConfig::custom(33, 10, bs, bs).is_err(), "too wide for i32 magnitude");
+        assert!(LnsConfig::custom(8, 0, bs, bs).is_err(), "no fractional bits");
+        assert!(LnsConfig::custom(8, 6, bs, bs).is_err(), "no integer bit left");
+        // An un-indexable LUT is refused here, not at DeltaApprox::new.
+        let fine = DeltaMode::Lut(LutSpec::SOFTMAX640);
+        assert!(LnsConfig::custom(8, 2, fine, bs).is_err(), "LUT finer than word");
+        assert!(LnsConfig::custom(8, 2, bs, fine).is_err(), "softmax LUT finer than word");
+        assert!(LnsConfig::custom(8, 2, bs, bs).is_ok());
+    }
+
+    #[test]
+    fn tag_parse_roundtrips_and_rejects_garbage() {
+        assert_eq!(LnsConfig::from_tag("log16-lut"), Some(LnsConfig::w16_lut()));
+        assert_eq!(LnsConfig::from_tag("log12-bs"), Some(LnsConfig::w12_bitshift()));
+        assert_eq!(LnsConfig::from_tag("log8-lut"), Some(LnsConfig::w8_lut()));
+        let exact = LnsConfig::from_tag("log16-exact").unwrap();
+        assert_eq!(exact.delta, DeltaMode::Exact);
+        assert_eq!(exact.softmax_delta, DeltaMode::Exact);
+        for bad in ["log16", "log-lut", "logx-lut", "log16-nope", "lin16", "log6-lut", "log99-bs"] {
+            assert_eq!(LnsConfig::from_tag(bad), None, "{bad}");
         }
     }
 }

@@ -16,7 +16,7 @@
 #![forbid(unsafe_code)]
 
 use anyhow::{bail, Context, Result};
-use lnsdnn::coordinator::experiments::ConfigTag;
+use lnsdnn::coordinator::experiments::{ConfigTag, LogMode};
 use lnsdnn::coordinator::{experiments, report, MultiprocSpec};
 use lnsdnn::data;
 use lnsdnn::lns;
@@ -90,13 +90,21 @@ COMMANDS
   table1    [--epochs 20] [--scale 0.1] [--hidden 100] [--seed 7]
             [--threads N] [--shards 1] [--workers 1]
             [--transport stdio|tcp] [--worker-threads 0] [--out results]
-            [--data-dir DIR] [--datasets a,b]
+            [--data-dir DIR] [--datasets a,b] [--widths 8,12,16]
+            (--widths W,... switches to the accuracy-vs-bitwidth frontier:
+             lin/log-lut/log-bs columns at each width plus per-layer
+             mixed-precision rows, run sequentially with per-cell range
+             occupancy → results/width_frontier.{md,csv})
   bitwidth  (prints the Eq. 15 bound table)
   cost      (first-order MAC gate counts: LNS vs linear, per config)
   train     --config log16-lut [--dataset mnist] [--epochs 20]
             [--scale 0.1] [--hidden 100] [--lr 0.01] [--wd 0.0001]
             [--batch 5] [--seed 7] [--shards 1] [--workers 1]
             [--transport stdio|tcp] [--worker-threads 0] [--data-dir DIR]
+            [--precision 8,16]
+            (--precision assigns per-layer storage widths on the base
+             word, layer-ordered, '-' = keep the base width; weights are
+             snapped to the narrower grid after init and every update)
   cnn       [--dataset stripes] [--configs float,log16-lut,log16-bs]
             [--arch lenet|strided-v1] [--epochs 8] [--scale 1.0]
             [--seed 7] [--threads N] [--shards 1] [--workers 1]
@@ -108,7 +116,10 @@ COMMANDS
   artifacts [--dir artifacts] (list and smoke-compile the AOT bundle)
 
 CONFIG TAGS
-  float lin12 lin16 log12-lut log16-lut log12-bs log16-bs log16-exact
+  float lin<W> log<W>-lut log<W>-bs log<W>-exact — W is a runtime word
+  width (lin: 6..=31, log: 7..=32); the paper's columns are lin12 lin16
+  log12-lut log16-lut log12-bs log16-bs log16-exact, and 8-bit presets
+  (lin8, log8-lut, log8-bs) ride the same validators.
 
 OBSERVABILITY (any command; most useful on train/cnn/fig2/table1/worker)
   --obs            enable numerics counters + a per-epoch stderr table,
@@ -329,6 +340,40 @@ fn cmd_table1(flags: &Flags) -> Result<()> {
         .unwrap_or_else(|| vec!["mnist", "fmnist", "emnistd", "emnistl"]);
     let datasets: Vec<data::Dataset> =
         names.iter().map(|n| load_dataset(flags, n)).collect::<Result<_>>()?;
+    // `--widths W,...` switches table1 into the accuracy-vs-bitwidth
+    // frontier sweep: lin/log columns at every requested width plus
+    // per-layer mixed-precision cells, each annotated with the range
+    // occupancy headroom collected while that cell ran.
+    if let Some(spec) = flags.get("widths") {
+        let widths: Vec<u32> = spec
+            .split(',')
+            .map(|w| w.trim().parse().with_context(|| format!("--widths: bad width '{w}'")))
+            .collect::<Result<_>>()?;
+        if widths.is_empty() {
+            bail!("--widths needs at least one width (e.g. 8,12,16)");
+        }
+        let recs = experiments::width_frontier(&datasets, &widths, epochs, hidden, seed);
+        let md = report::frontier_markdown(&recs);
+        let dir = out_dir(flags);
+        report::write_markdown(&dir.join("width_frontier.md"), &md)?;
+        report::write_csv(
+            &dir.join("width_frontier.csv"),
+            &[
+                "dataset",
+                "config",
+                "bits",
+                "precision",
+                "test_accuracy",
+                "test_loss",
+                "headroom_bits",
+                "seconds",
+            ],
+            &report::frontier_csv_rows(&recs),
+        )?;
+        println!("{md}");
+        println!("Width frontier → {}/width_frontier.{{md,csv}}", dir.display());
+        return Ok(());
+    }
     let shards = shards_flag(flags)?;
     let mp = mp_spec(flags)?;
     let recs = experiments::table1(&datasets, epochs, hidden, seed, threads, shards, &mp);
@@ -402,6 +447,10 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     cfg.sgd.lr = flags.f64("lr", cfg.sgd.lr)?;
     cfg.sgd.weight_decay = flags.f64("wd", cfg.sgd.weight_decay)?;
     cfg.batch_size = flags.usize("batch", cfg.batch_size)?;
+    if let Some(spec) = flags.get("precision") {
+        cfg.precision = lnsdnn::precision::PrecisionMap::parse(spec, &tag.label())
+            .map_err(|e| anyhow::anyhow!("--precision: {e}"))?;
+    }
     cfg.shard = lnsdnn::train::ShardConfig::with_shards(shards_flag(flags)?);
     let mut mp = mp_spec(flags)?;
     // Without an explicit --worker-threads, split the machine across the
@@ -461,7 +510,11 @@ fn cmd_cnn(flags: &Flags) -> Result<()> {
             .split(',')
             .map(|t| ConfigTag::parse(t).with_context(|| format!("bad config tag '{t}'")))
             .collect::<Result<_>>()?,
-        None => vec![ConfigTag::Float, ConfigTag::Log16Lut, ConfigTag::Log16Bs],
+        None => vec![
+            ConfigTag::Float,
+            ConfigTag::Log(16, LogMode::Lut),
+            ConfigTag::Log(16, LogMode::Bs),
+        ],
     };
     let mp = mp_spec(flags)?;
     println!(

@@ -13,4 +13,4 @@ pub use conv::{Cnn, CnnArch, CnnCache, CnnVariant, Conv2d, Pool2d, PoolKind};
 pub use grad::{GradStore, RawStepStats};
 pub use init::{he_normal_init, log_domain_init, InitScheme};
 pub use mlp::{Dense, Gradients, Mlp, StepStats};
-pub use sgd::SgdConfig;
+pub use sgd::{quantize_cnn, quantize_mlp, SgdConfig};

@@ -8,6 +8,7 @@
 use super::conv::Cnn;
 use super::mlp::{Gradients, Mlp};
 use crate::obs::{span, SpanKind};
+use crate::precision::{PrecisionMap, WordSpec};
 use crate::tensor::{Backend, Tensor};
 
 /// SGD hyper-parameters (paper §5: lr = 0.01, mini-batch 5, per-dataset
@@ -73,6 +74,54 @@ impl SgdConfig {
     }
 }
 
+/// Snap one layer's parameters to its storage word (weights and biases —
+/// both are parameters, both live in the narrow word on real hardware).
+fn quantize_layer<B: Backend>(backend: &B, w: &mut Tensor<B::E>, b: &mut [B::E], spec: WordSpec) {
+    for w in w.data.iter_mut() {
+        *w = backend.quantize(*w, spec);
+    }
+    for b in b.iter_mut() {
+        *b = backend.quantize(*b, spec);
+    }
+}
+
+/// Snap every MLP layer with an assigned storage word to that word
+/// (NUMERICS.md §11). Called at the two points where parameters change —
+/// after init and after every [`SgdConfig::apply`] — identically on every
+/// execution path (serial, sharded, multi-process replica), so mixed
+/// precision never perturbs the bit-identity guarantees. No-op for the
+/// uniform map.
+pub fn quantize_mlp<B: Backend>(backend: &B, mlp: &mut Mlp<B::E>, pmap: &PrecisionMap) {
+    if pmap.is_uniform() {
+        return;
+    }
+    for (l, layer) in mlp.layers.iter_mut().enumerate() {
+        if let Some(spec) = pmap.get(l) {
+            quantize_layer(backend, &mut layer.w, &mut layer.b, spec);
+        }
+    }
+}
+
+/// CNN variant of [`quantize_mlp`]; layer indices follow the gradient
+/// order of [`Cnn::backprop`]: `0 = conv1, 1 = conv2, 2 = fc1, 3 = fc2`.
+pub fn quantize_cnn<B: Backend>(backend: &B, cnn: &mut Cnn<B::E>, pmap: &PrecisionMap) {
+    if pmap.is_uniform() {
+        return;
+    }
+    if let Some(spec) = pmap.get(0) {
+        quantize_layer(backend, &mut cnn.conv1.w, &mut cnn.conv1.b, spec);
+    }
+    if let Some(spec) = pmap.get(1) {
+        quantize_layer(backend, &mut cnn.conv2.w, &mut cnn.conv2.b, spec);
+    }
+    if let Some(spec) = pmap.get(2) {
+        quantize_layer(backend, &mut cnn.fc1.w, &mut cnn.fc1.b, spec);
+    }
+    if let Some(spec) = pmap.get(3) {
+        quantize_layer(backend, &mut cnn.fc2.w, &mut cnn.fc2.b, spec);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +170,27 @@ mod tests {
             s0.loss,
             s1.loss
         );
+    }
+
+    #[test]
+    fn quantize_mlp_snaps_assigned_layers_only() {
+        use crate::lns::{LnsConfig, LnsSystem};
+        use crate::tensor::LnsBackend;
+        let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let mut rng = SplitMix64::new(11);
+        let mut mlp = crate::nn::Mlp::init(&b, &[4, 6, 3], InitScheme::HeNormal, &mut rng);
+        let untouched = mlp.layers[1].w.data.clone();
+        let pmap = PrecisionMap::parse("8,-", "log16-lut").unwrap();
+        quantize_mlp(&b, &mut mlp, &pmap);
+        // Layer 0 magnitudes sit on the w8 grid (2^(10−2) base units)…
+        for w in &mlp.layers[0].w.data {
+            assert!(w.is_zero() || w.m % (1 << 8) == 0, "off-grid m = {}", w.m);
+        }
+        // …layer 1 (no assignment) is untouched, and the snap is idempotent.
+        assert_eq!(mlp.layers[1].w.data, untouched);
+        let snapped = mlp.layers[0].w.data.clone();
+        quantize_mlp(&b, &mut mlp, &pmap);
+        assert_eq!(mlp.layers[0].w.data, snapped);
     }
 
     #[test]

@@ -179,7 +179,12 @@ pub fn record_slice<B: Backend>(backend: &B, class: TensorClass, layer: usize, x
         if s.neg {
             negs += 1;
         }
-        buckets[bucket_of(s.exp)] += 1;
+        // Clamp to the *backend's* representable range before binning:
+        // the bank's fixed span was sized for the 12/16-bit presets, and
+        // a wider runtime word (or a float outlier) must saturate at the
+        // active config's boundary — not the bank's — so occupied spans
+        // and headroom stay meaningful at every width.
+        buckets[bucket_of(s.exp.clamp(lo, hi))] += 1;
     }
     let base = exp_base(class, layer);
     for (i, &b) in buckets.iter().enumerate() {

@@ -1,0 +1,200 @@
+//! Per-layer precision assignment (the mixed-precision axis).
+//!
+//! A [`PrecisionMap`] assigns an optional storage [`WordSpec`] to each
+//! model layer. Semantics (NUMERICS.md §11): mixed precision is
+//! **weight-storage quantization** — arithmetic (forward, backward, the
+//! ⊞/⊡ chains) always runs in the backend's base word format; after
+//! initialization and after every SGD update, a layer's parameters are
+//! snapped to its assigned narrower word (round-half-away-from-zero to
+//! the coarser grid, clamped to the narrower range) via
+//! [`crate::tensor::Backend::quantize`]. Layers without an assignment
+//! keep the base word untouched. Assignment is **per-layer, never
+//! per-element**, and changes *values*, never any chain's order — so
+//! every execution-path guarantee (serial ≡ sharded ≡ multi-process)
+//! holds for mixed-precision runs exactly as for uniform ones.
+//!
+//! The float backend has no storage-width axis; its `quantize` is the
+//! identity and a map parsed for it is rejected at construction.
+
+use crate::fixed::FixedConfig;
+use crate::lns::LnsConfig;
+
+/// Most layers any supported model has; the wire decoder uses the same
+/// bound to reject hostile layer counts.
+pub const MAX_PRECISION_LAYERS: usize = 4096;
+
+/// A storage word format: total width and fractional bits. The meaning
+/// of `frac_bits` follows the backend family the spec is built for
+/// (LNS log-magnitude grid vs linear Q-format grid).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct WordSpec {
+    /// Total word width in bits.
+    pub total_bits: u32,
+    /// Fractional bits of the word's grid.
+    pub frac_bits: u32,
+}
+
+impl WordSpec {
+    /// Family-agnostic layout check (the wire decoder's guard): width
+    /// fits the engine's `i32` words and the split leaves at least one
+    /// non-fractional bit. Family constructors enforce tighter bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(4..=32).contains(&self.total_bits) {
+            return Err(format!("word total_bits must be in 4..=32, got {}", self.total_bits));
+        }
+        if self.frac_bits == 0 || self.frac_bits > self.total_bits - 2 {
+            return Err(format!(
+                "word frac_bits must be in 1..={} for a {}-bit word, got {}",
+                self.total_bits - 2,
+                self.total_bits,
+                self.frac_bits
+            ));
+        }
+        Ok(())
+    }
+
+    /// Preset-layout spec for a width under the backend family named by
+    /// `tag` (`log…` → LNS layout `q_f = W − 6`, `lin…` → Q-format
+    /// layout `b_f = W − 5`). The float backend has no width axis.
+    pub fn for_backend_tag(width: u32, tag: &str) -> Result<WordSpec, String> {
+        if tag.starts_with("log") {
+            let c = LnsConfig::for_width(width, true)?;
+            Ok(WordSpec { total_bits: c.total_bits, frac_bits: c.frac_bits })
+        } else if tag.starts_with("lin") {
+            let c = FixedConfig::for_width(width)?;
+            Ok(WordSpec { total_bits: c.total_bits, frac_bits: c.frac_bits })
+        } else {
+            Err(format!("backend '{tag}' has no per-layer storage-width axis"))
+        }
+    }
+}
+
+/// Layer → optional storage word. `None` (and any layer beyond the
+/// vector's length) means "base word, no quantization".
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrecisionMap {
+    layers: Vec<Option<WordSpec>>,
+}
+
+impl PrecisionMap {
+    /// The uniform map: every layer keeps the backend's base word.
+    pub fn uniform() -> Self {
+        PrecisionMap::default()
+    }
+
+    /// Build from explicit per-layer entries (validated).
+    pub fn from_layers(layers: Vec<Option<WordSpec>>) -> Result<Self, String> {
+        if layers.len() > MAX_PRECISION_LAYERS {
+            return Err(format!(
+                "precision map has {} layers; the engine caps at {MAX_PRECISION_LAYERS}",
+                layers.len()
+            ));
+        }
+        for (l, spec) in layers.iter().enumerate() {
+            if let Some(s) = spec {
+                s.validate().map_err(|e| format!("layer {l}: {e}"))?;
+            }
+        }
+        Ok(PrecisionMap { layers })
+    }
+
+    /// Parse a CLI spec like `"8,16"` or `"-,8"` for the backend named
+    /// by `tag`: one comma-separated entry per layer, a width in bits or
+    /// `-` for "base word".
+    pub fn parse(spec: &str, tag: &str) -> Result<Self, String> {
+        let mut layers = Vec::new();
+        for (l, part) in spec.split(',').enumerate() {
+            let part = part.trim();
+            if part.is_empty() || part == "-" {
+                layers.push(None);
+            } else {
+                let width: u32 = part
+                    .parse()
+                    .map_err(|_| format!("layer {l}: '{part}' is not a width in bits"))?;
+                layers.push(Some(WordSpec::for_backend_tag(width, tag)?));
+            }
+        }
+        Self::from_layers(layers)
+    }
+
+    /// The storage word for `layer` (0-based), if one is assigned.
+    pub fn get(&self, layer: usize) -> Option<WordSpec> {
+        self.layers.get(layer).copied().flatten()
+    }
+
+    /// True when no layer has an assignment — the base-word fast path.
+    pub fn is_uniform(&self) -> bool {
+        self.layers.iter().all(|s| s.is_none())
+    }
+
+    /// The raw per-layer entries (wire encoding, reports).
+    pub fn layers(&self) -> &[Option<WordSpec>] {
+        &self.layers
+    }
+
+    /// Compact human-readable label (`uniform`, `8,16`, `-,8`).
+    pub fn label(&self) -> String {
+        if self.is_uniform() {
+            return "uniform".into();
+        }
+        self.layers
+            .iter()
+            .map(|s| match s {
+                Some(w) => w.total_bits.to_string(),
+                None => "-".into(),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_maps_widths_per_family() {
+        let m = PrecisionMap::parse("8,16", "log16-lut").unwrap();
+        assert_eq!(m.get(0), Some(WordSpec { total_bits: 8, frac_bits: 2 }));
+        assert_eq!(m.get(1), Some(WordSpec { total_bits: 16, frac_bits: 10 }));
+        assert_eq!(m.get(2), None, "layers beyond the spec keep the base word");
+        assert!(!m.is_uniform());
+        assert_eq!(m.label(), "8,16");
+
+        let m = PrecisionMap::parse("-,8", "lin16").unwrap();
+        assert_eq!(m.get(0), None);
+        assert_eq!(m.get(1), Some(WordSpec { total_bits: 8, frac_bits: 3 }));
+        assert_eq!(m.label(), "-,8");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(PrecisionMap::parse("8", "float32").is_err(), "float has no width axis");
+        assert!(PrecisionMap::parse("5", "log16-lut").is_err(), "below preset range");
+        assert!(PrecisionMap::parse("x", "log16-lut").is_err(), "not a number");
+        assert!(PrecisionMap::parse("99", "lin16").is_err(), "beyond i32 codes");
+    }
+
+    #[test]
+    fn uniform_map_is_uniform() {
+        assert!(PrecisionMap::uniform().is_uniform());
+        assert_eq!(PrecisionMap::uniform().label(), "uniform");
+        let m = PrecisionMap::parse("-,-", "log16-lut").unwrap();
+        assert!(m.is_uniform(), "all-dash spec is uniform too");
+    }
+
+    #[test]
+    fn word_spec_validation_bounds() {
+        assert!(WordSpec { total_bits: 8, frac_bits: 2 }.validate().is_ok());
+        assert!(WordSpec { total_bits: 3, frac_bits: 1 }.validate().is_err());
+        assert!(WordSpec { total_bits: 33, frac_bits: 10 }.validate().is_err());
+        assert!(WordSpec { total_bits: 8, frac_bits: 0 }.validate().is_err());
+        assert!(WordSpec { total_bits: 8, frac_bits: 7 }.validate().is_err());
+    }
+
+    #[test]
+    fn from_layers_caps_layer_count() {
+        let too_many = vec![None; MAX_PRECISION_LAYERS + 1];
+        assert!(PrecisionMap::from_layers(too_many).is_err());
+    }
+}

@@ -17,6 +17,7 @@
 
 use crate::fixed::{FixedSystem, FixedValue};
 use crate::lns::{LnsSystem, LnsValue};
+use crate::precision::WordSpec;
 
 /// Everything the generic NN/training engine needs from a number system.
 pub trait Backend: Send + Sync {
@@ -139,6 +140,19 @@ pub trait Backend: Send + Sync {
     #[inline]
     fn mul_update(&self, a: Self::E, b: Self::E) -> Self::E {
         self.mul(a, b)
+    }
+
+    /// Snap `x` to the per-layer storage word `spec` (mixed precision,
+    /// NUMERICS.md §11): round half-away-from-zero onto the spec's
+    /// coarser grid and saturate to the spec's range, with the result
+    /// still expressed in the backend's **base** word. Identity by
+    /// default — the float backend has no storage-width axis. Called on
+    /// *parameters only* (after init and after every SGD update), never
+    /// inside a ⊞/⊡ chain, so it changes values, never reduction order.
+    #[inline]
+    fn quantize(&self, x: Self::E, spec: WordSpec) -> Self::E {
+        let _ = spec;
+        x
     }
 
     /// Leaky-ReLU (slope fixed at construction; the paper's llReLU β in
@@ -372,6 +386,29 @@ impl Backend for FixedBackend {
     fn mul_update(&self, a: FixedValue, b: FixedValue) -> FixedValue {
         self.sys.mul_sr(a, b, self.next_dither())
     }
+    /// Per-layer storage word: round half-away-from-zero onto the spec's
+    /// coarser code grid (`2^(b_f − spec.frac_bits)` base codes) and
+    /// saturate to the spec's `±(2^(W−1) − 1)` code range. Deterministic
+    /// — no SR dither draw, so replicas stay bit-identical.
+    fn quantize(&self, x: FixedValue, spec: WordSpec) -> FixedValue {
+        let cfg = self.sys.config();
+        let bf = cfg.frac_bits;
+        let spec_max = (1i64 << (spec.total_bits - 1)) - 1;
+        let m = x as i64;
+        let q = if spec.frac_bits >= bf {
+            // Finer/equal grid: every base code is representable — pure
+            // range clamp, with the spec bound floored onto base codes.
+            let bound = (spec_max >> (spec.frac_bits - bf)).min(cfg.max_code() as i64);
+            m.clamp(-bound, bound)
+        } else {
+            let shift = bf - spec.frac_bits;
+            let half = (1i64 << shift) >> 1;
+            let snapped = if m >= 0 { (m + half) >> shift } else { -((-m + half) >> shift) };
+            (snapped.clamp(-spec_max, spec_max) << shift)
+                .clamp(-(cfg.max_code() as i64), cfg.max_code() as i64)
+        };
+        q as FixedValue
+    }
     /// Branchless lane override (see [`FixedSystem::mac_row`]): the
     /// round/saturate pipeline runs mask-style with no per-element
     /// branches, so LLVM autovectorizes it. Bit-exact with the default;
@@ -527,6 +564,33 @@ impl Backend for LnsBackend {
     #[inline]
     fn add_slice(&self, acc: &mut [LnsValue], x: &[LnsValue]) {
         self.sys.add_slice(acc, x);
+    }
+    /// Per-layer storage word: round the log-magnitude half-away-from-zero
+    /// onto the spec's coarser grid (`2^(q_f − spec.frac_bits)` base
+    /// units) and saturate to the spec's `±(2^(W−2) − 1)` magnitude
+    /// range — the same saturation (never flush-to-zero) the base encode
+    /// applies at its own range edge. Zero is exact in every width.
+    fn quantize(&self, x: LnsValue, spec: WordSpec) -> LnsValue {
+        if x.is_zero() {
+            return x;
+        }
+        let cfg = self.sys.config();
+        let bf = cfg.frac_bits;
+        let spec_max = (1i64 << (spec.total_bits - 2)) - 1;
+        let m = x.m as i64;
+        let q = if spec.frac_bits >= bf {
+            // Finer/equal grid: every base magnitude is representable —
+            // pure range clamp, spec bound floored onto base units.
+            let bound = (spec_max >> (spec.frac_bits - bf)).min(cfg.m_max() as i64);
+            m.clamp(-bound, bound)
+        } else {
+            let shift = bf - spec.frac_bits;
+            let half = (1i64 << shift) >> 1;
+            let snapped = if m >= 0 { (m + half) >> shift } else { -((-m + half) >> shift) };
+            (snapped.clamp(-spec_max, spec_max) << shift)
+                .clamp(cfg.m_min() as i64, cfg.m_max() as i64)
+        };
+        LnsValue::new(q as i32, x.s)
     }
     /// llReLU (Eq. 11): positive values pass; negative values get β added
     /// to the log-magnitude — a single fixed-point add, no multiplier.
@@ -715,6 +779,38 @@ mod tests {
         let s = flb.dist_sample(-3.0f32);
         assert!(s.neg);
         assert_eq!(s.exp, 1);
+    }
+
+    #[test]
+    fn quantize_snaps_to_narrow_word() {
+        let lb = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
+        let w8 = WordSpec { total_bits: 8, frac_bits: 2 };
+        // 2^1.5 → m = 1.5·2^10 = 1536 = 6·2^8: already on the w8 grid.
+        let x = lb.encode(2.0f64.powf(1.5));
+        assert_eq!(lb.quantize(x, w8), x);
+        // Round half-away on the 2^8-unit grid.
+        assert_eq!(lb.quantize(LnsValue::new(1536 + 100, true), w8).m, 1536);
+        assert_eq!(lb.quantize(LnsValue::new(1536 + 128, true), w8).m, 1536 + 256);
+        assert_eq!(lb.quantize(LnsValue::new(-(1536 + 128), false), w8).m, -(1536 + 256));
+        // Base m_max (16383) saturates to the w8 range 63·2^8 = 16128.
+        let top = LnsValue::new(lb.system().config().m_max(), true);
+        assert_eq!(lb.quantize(top, w8).m, 63 << 8);
+        // Zero is exact in every width; the base word is an identity spec.
+        assert!(lb.quantize(lb.zero(), w8).is_zero());
+        let w16 = WordSpec { total_bits: 16, frac_bits: 10 };
+        assert_eq!(lb.quantize(LnsValue::new(1536 + 100, true), w16).m, 1536 + 100);
+
+        // Fixed: w16 (b_f 11) → w8 (b_f 3): grid 2^8 codes, range ±127·2^8.
+        let fb = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), 0.01);
+        let w8f = WordSpec { total_bits: 8, frac_bits: 3 };
+        let c = fb.encode(1.4375); // 2944 codes = 11.5 · 2^8: exactly half
+        assert_eq!(fb.quantize(c, w8f), 12 << 8, "half rounds away from zero");
+        assert_eq!(fb.quantize(-c, w8f), -(12 << 8));
+        assert_eq!(fb.quantize(fb.encode(100.0), w8f), 127 << 8, "clamped to w8 range");
+
+        // Float backend: identity (no storage-width axis).
+        let flb = FloatBackend::default();
+        assert_eq!(flb.quantize(1.234f32, w8f), 1.234f32);
     }
 
     #[test]

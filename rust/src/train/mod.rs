@@ -36,8 +36,11 @@ pub use shard::ShardConfig;
 use multiproc::ProtoModel;
 
 use crate::data::Dataset;
-use crate::nn::{Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig};
+use crate::nn::{
+    quantize_cnn, quantize_mlp, Cnn, CnnArch, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig,
+};
 use crate::obs::{self, span, SpanKind};
+use crate::precision::PrecisionMap;
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, Tensor};
 
@@ -60,6 +63,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Data-parallel execution (bit-exact for every worker count).
     pub shard: ShardConfig,
+    /// Per-layer storage words (mixed precision, NUMERICS.md §11);
+    /// uniform = every layer keeps the backend's base word.
+    pub precision: PrecisionMap,
 }
 
 impl TrainConfig {
@@ -74,6 +80,7 @@ impl TrainConfig {
             init: InitScheme::HeNormal,
             seed: 0x5EED,
             shard: ShardConfig::default(),
+            precision: PrecisionMap::uniform(),
         }
     }
 }
@@ -160,6 +167,9 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
     let pool = cfg.shard.build_pool();
     let mut rng = SplitMix64::new(cfg.seed);
     let mut model = Mlp::init(backend, &cfg.dims, cfg.init, &mut rng);
+    // Mixed precision: parameters live in their per-layer storage words
+    // from the very first forward pass (NUMERICS.md §11).
+    quantize_mlp(backend, &mut model, &cfg.precision);
 
     let split = ds.split_validation(cfg.val_ratio, cfg.seed ^ 0xA11CE);
     // Encode everything once: conversion is the paper's offline
@@ -208,6 +218,9 @@ pub fn train<B: Backend>(backend: &B, ds: &Dataset, cfg: &TrainConfig) -> TrainR
                 obs::dist::record_gradients(backend, &GradStore::<B>::flat_views(&grads));
             }
             cfg.sgd.apply(backend, &mut model, &grads);
+            // Snap updated parameters back to their storage words — the
+            // same point in the step on every execution path.
+            quantize_mlp(backend, &mut model, &cfg.precision);
             loss.add_sum(raw.loss_sum, raw.n);
         }
         // Deterministic sampling point: post-update parameters at epoch
@@ -268,6 +281,9 @@ pub struct CnnTrainConfig {
     pub seed: u64,
     /// Data-parallel execution (bit-exact for every worker count).
     pub shard: ShardConfig,
+    /// Per-layer storage words (mixed precision, NUMERICS.md §11);
+    /// layer order `[conv1, conv2, fc1, fc2]`.
+    pub precision: PrecisionMap,
 }
 
 impl CnnTrainConfig {
@@ -283,6 +299,7 @@ impl CnnTrainConfig {
             init: InitScheme::HeNormal,
             seed: 0x5EED,
             shard: ShardConfig::default(),
+            precision: PrecisionMap::uniform(),
         }
     }
 }
@@ -309,6 +326,8 @@ pub fn train_cnn<B: Backend>(
     let pool = cfg.shard.build_pool();
     let mut rng = SplitMix64::new(cfg.seed);
     let mut model = Cnn::init(backend, &cfg.arch, cfg.init, &mut rng);
+    // Same mixed-precision points as [`train`] (NUMERICS.md §11).
+    quantize_cnn(backend, &mut model, &cfg.precision);
 
     let split = ds.split_validation(cfg.val_ratio, cfg.seed ^ 0xA11CE);
     let train_x = ds.encode_batch(backend, &ds.train_images, &split.train_idx);
@@ -346,6 +365,7 @@ pub fn train_cnn<B: Backend>(
                 obs::dist::record_gradients(backend, &GradStore::<B>::flat_views(&grads));
             }
             cfg.sgd.apply_cnn(backend, &mut model, &grads);
+            quantize_cnn(backend, &mut model, &cfg.precision);
             loss.add_sum(raw.loss_sum, raw.n);
         }
         if obs::counters_enabled() {
@@ -447,6 +467,7 @@ mod tests {
             init: InitScheme::HeNormal,
             seed: 7,
             shard: ShardConfig::default(),
+            precision: PrecisionMap::uniform(),
         }
     }
 

@@ -61,9 +61,13 @@
 
 use crate::data::Dataset;
 use crate::fixed::{FixedConfig, FixedSystem};
-use crate::lns::{DeltaMode, LnsConfig, LnsSystem};
-use crate::nn::{Cnn, Gradients, GradStore, InitScheme, Mlp, RawStepStats, SgdConfig};
+use crate::lns::{LnsConfig, LnsSystem};
+use crate::nn::{
+    quantize_cnn, quantize_mlp, Cnn, Gradients, GradStore, InitScheme, Mlp, RawStepStats,
+    SgdConfig,
+};
 use crate::obs::{self, span, SpanKind};
+use crate::precision::PrecisionMap;
 use crate::rng::SplitMix64;
 use crate::tensor::{Backend, FixedBackend, FloatBackend, LnsBackend, Tensor};
 use crate::train::wire::{
@@ -142,7 +146,7 @@ pub struct PeerIo {
 
 /// Training hyper-parameters shared by both model families (the
 /// model-specific part travels as [`ModelSpec`]).
-#[derive(Copy, Clone, Debug)]
+#[derive(Clone, Debug)]
 pub struct JobParams {
     /// Epochs.
     pub epochs: usize,
@@ -156,6 +160,10 @@ pub struct JobParams {
     pub init: InitScheme,
     /// Master seed.
     pub seed: u64,
+    /// Per-layer storage-width assignment, replicated to every worker
+    /// (wire v4). Every replica must quantize at the same two points
+    /// (post-init, post-update) or the digests diverge.
+    pub precision: PrecisionMap,
 }
 
 // ---------------------------------------------------------------------
@@ -191,6 +199,10 @@ pub trait ProtoModel<B: Backend>: Sized {
     fn grad_shapes(&self) -> Vec<(usize, usize, usize)>;
     /// Apply one SGD update.
     fn apply_update(&mut self, backend: &B, sgd: &SgdConfig, grads: &Gradients<B::E>);
+    /// Snap parameters to the per-layer storage widths (NUMERICS.md §11).
+    /// Called at the same two points as the in-process trainers —
+    /// after init and after every update — on every replica.
+    fn quantize_params(&mut self, backend: &B, pmap: &PrecisionMap);
     /// Logits for an input chunk (evaluation path).
     fn logits(&self, backend: &B, x: &Tensor<B::E>) -> Tensor<B::E>;
     /// Flat parameter views in canonical layer order (weights then bias
@@ -237,6 +249,10 @@ impl<B: Backend> ProtoModel<B> for Mlp<B::E> {
 
     fn apply_update(&mut self, backend: &B, sgd: &SgdConfig, grads: &Gradients<B::E>) {
         sgd.apply(backend, self, grads);
+    }
+
+    fn quantize_params(&mut self, backend: &B, pmap: &PrecisionMap) {
+        quantize_mlp(backend, self, pmap);
     }
 
     fn logits(&self, backend: &B, x: &Tensor<B::E>) -> Tensor<B::E> {
@@ -296,6 +312,10 @@ impl<B: Backend> ProtoModel<B> for Cnn<B::E> {
         sgd.apply_cnn(backend, self, grads);
     }
 
+    fn quantize_params(&mut self, backend: &B, pmap: &PrecisionMap) {
+        quantize_cnn(backend, self, pmap);
+    }
+
     fn logits(&self, backend: &B, x: &Tensor<B::E>) -> Tensor<B::E> {
         Cnn::logits(self, backend, x)
     }
@@ -324,12 +344,15 @@ impl<B: Backend> ProtoModel<B> for Cnn<B::E> {
 ///
 /// The probe exercises each configuration axis a tag cannot express:
 /// `leaky_relu(encode(−1))` (slope / word format), ⊞ and ⊟ at generic
-/// operands (the Δ± approximation mode *and* LUT shape), and the
-/// soft-max/CE head (the separate soft-max Δ tables). It is a spot
-/// check at fixed sample points, not an exhaustive equality proof — but
-/// any config divergence visible at these points is caught before a
-/// single gradient flows.
-pub fn act_probe<B: Backend>(backend: &B) -> Vec<u8>
+/// operands (the Δ± approximation mode *and* LUT shape), the
+/// soft-max/CE head (the separate soft-max Δ tables), and — per
+/// assigned layer of the precision map — a `quantize` sample at the
+/// layer's storage width, so a coordinator/worker disagreement over a
+/// per-layer grid is refused at the handshake instead of surfacing as
+/// an end-of-run digest divergence. It is a spot check at fixed sample
+/// points, not an exhaustive equality proof — but any config divergence
+/// visible at these points is caught before a single gradient flows.
+pub fn act_probe<B: Backend>(backend: &B, precision: &PrecisionMap) -> Vec<u8>
 where
     B::E: WireElem,
 {
@@ -344,6 +367,16 @@ where
         g.put(&mut out);
     }
     out.extend_from_slice(&ln_p.to_bits().to_le_bytes());
+    // Per-layer width samples: a value off every coarser grid, snapped.
+    for spec in precision.layers() {
+        match spec {
+            Some(w) => {
+                out.push(1);
+                backend.quantize(backend.encode(0.7), *w).put(&mut out);
+            }
+            None => out.push(0),
+        }
+    }
     out
 }
 
@@ -564,6 +597,7 @@ where
         val_ratio: cfg.val_ratio,
         init: cfg.init,
         seed: cfg.seed,
+        precision: cfg.precision.clone(),
     };
     coordinate::<B, Mlp<B::E>>(backend, ds, spec, params, env, peers)
 }
@@ -587,6 +621,7 @@ where
         val_ratio: cfg.val_ratio,
         init: cfg.init,
         seed: cfg.seed,
+        precision: cfg.precision.clone(),
     };
     coordinate::<B, Cnn<B::E>>(backend, ds, spec, params, env, peers)
 }
@@ -609,7 +644,7 @@ where
     ensure!(params.batch_size > 0, "batch_size must be positive");
 
     // Hand every worker its job (rank + shared spec + the dataset).
-    let probe = act_probe(backend);
+    let probe = act_probe(backend, &params.precision);
     for (rank, peer) in peers.iter_mut().enumerate() {
         let job = JobSpec {
             backend_tag: backend.tag(),
@@ -626,6 +661,7 @@ where
             rank,
             workers,
             worker_threads: env.worker_threads,
+            precision: params.precision.clone(),
         };
         wire::write_job_frame(&mut peer.tx, &job, ds)
             .with_context(|| format!("sending job to worker {rank}"))?;
@@ -635,6 +671,7 @@ where
     // (init then per-epoch shuffles), same split, same encode.
     let mut rng = SplitMix64::new(params.seed);
     let mut model = M::from_spec(backend, &spec, params.init, &mut rng)?;
+    model.quantize_params(backend, &params.precision);
     ensure!(model.input_len() == ds.pixels, "model input must match dataset pixels");
     ensure!(model.classes() == ds.classes, "model head must match dataset classes");
 
@@ -696,6 +733,7 @@ where
                 obs::dist::record_gradients(backend, &GradStore::<B>::flat_views(&grads));
             }
             model.apply_update(backend, &params.sgd, &grads);
+            model.quantize_params(backend, &params.precision);
             loss.add_sum(raw.loss_sum, raw.n);
             step += 1;
         }
@@ -835,6 +873,10 @@ pub fn serve_connection<R: Read, W: Write>(mut rx: R, tx: W) -> Result<()> {
 
 /// Run the worker training loop for an already-decoded job: reconstruct
 /// the backend from its tag + slope, then dispatch the model family.
+/// Tags are parsed through the same width-generic validators the
+/// coordinator uses ([`FixedConfig::from_tag`], [`LnsConfig::from_tag`]),
+/// so every runtime width a coordinator can run — `lin8`, `log8-lut`,
+/// `log23-bs`, … — is servable, not just the preset list.
 pub fn serve_job<R: Read, W: Write>(
     job: &JobSpec,
     ds: &Dataset,
@@ -842,34 +884,19 @@ pub fn serve_job<R: Read, W: Write>(
     tx: W,
 ) -> Result<()> {
     let slope = job.slope;
-    match job.backend_tag.as_str() {
+    let tag = job.backend_tag.as_str();
+    if tag == "float32" {
         // numerics-lint: allow(float-leak) — float-backend construction: config slope → native f32
-        "float32" => dispatch_model(&FloatBackend { slope: slope as f32 }, job, ds, rx, tx),
-        "lin12" => {
-            let b = FixedBackend::new(FixedSystem::new(FixedConfig::w12()), slope);
-            dispatch_model(&b, job, ds, rx, tx)
-        }
-        "lin16" => {
-            let b = FixedBackend::new(FixedSystem::new(FixedConfig::w16()), slope);
-            dispatch_model(&b, job, ds, rx, tx)
-        }
-        "log12-lut" => lns_dispatch(LnsConfig::w12_lut(), job, ds, rx, tx),
-        "log16-lut" => lns_dispatch(LnsConfig::w16_lut(), job, ds, rx, tx),
-        "log12-bs" => lns_dispatch(LnsConfig::w12_bitshift(), job, ds, rx, tx),
-        "log16-bs" => lns_dispatch(LnsConfig::w16_bitshift(), job, ds, rx, tx),
-        "log16-exact" => lns_dispatch(
-            LnsConfig {
-                delta: DeltaMode::Exact,
-                softmax_delta: DeltaMode::Exact,
-                ..LnsConfig::w16_lut()
-            },
-            job,
-            ds,
-            rx,
-            tx,
-        ),
-        other => bail!("unknown backend tag '{other}' in job spec"),
+        return dispatch_model(&FloatBackend { slope: slope as f32 }, job, ds, rx, tx);
     }
+    if let Some(cfg) = FixedConfig::from_tag(tag) {
+        let b = FixedBackend::new(FixedSystem::new(cfg), slope);
+        return dispatch_model(&b, job, ds, rx, tx);
+    }
+    if let Some(cfg) = LnsConfig::from_tag(tag) {
+        return lns_dispatch(cfg, job, ds, rx, tx);
+    }
+    bail!("unknown backend tag '{tag}' in job spec")
 }
 
 fn lns_dispatch<R: Read, W: Write>(
@@ -898,9 +925,11 @@ where
 {
     // Refuse to run on a backend that is not bit-for-bit the
     // coordinator's: the tag + slope under-determine it (see
-    // [`act_probe`]).
+    // [`act_probe`]). The probe also covers the per-layer storage grids
+    // of the job's precision map, so a width disagreement is refused
+    // here too.
     ensure!(
-        act_probe(backend) == job.act_probe,
+        act_probe(backend, &job.precision) == job.act_probe,
         "worker backend mismatch: activation probe differs for tag '{}' at slope {} — \
          the coordinator's backend was built differently (check MultiprocSpec/JobEnv slope)",
         job.backend_tag,
@@ -930,6 +959,7 @@ where
     // trainers): one RNG stream for init + shuffles, one for the split.
     let mut rng = SplitMix64::new(job.seed);
     let mut model = M::from_spec(backend, &job.model, job.init, &mut rng)?;
+    model.quantize_params(backend, &job.precision);
     ensure!(model.input_len() == ds.pixels, "job model input must match dataset pixels");
     ensure!(model.classes() == ds.classes, "job model head must match dataset classes");
 
@@ -1022,6 +1052,7 @@ where
                 grads.scale(backend, 1.0 / mf.stats.n as f64);
             }
             model.apply_update(backend, &sgd, &grads);
+            model.quantize_params(backend, &job.precision);
             step += 1;
         }
         // Worker epoch-end weights (mirror of the coordinator's point).
@@ -1216,6 +1247,7 @@ mod tests {
             init: InitScheme::HeNormal,
             seed: 11,
             shard: ShardConfig::default(),
+            precision: crate::precision::PrecisionMap::uniform(),
         }
     }
 

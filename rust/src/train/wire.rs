@@ -47,6 +47,7 @@ use crate::data::Dataset;
 use crate::lns::LnsValue;
 use crate::nn::{CnnArch, CnnVariant, InitScheme, PoolKind, RawStepStats};
 use crate::obs::{self, span, SpanKind};
+use crate::precision::{PrecisionMap, WordSpec, MAX_PRECISION_LAYERS};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
@@ -61,8 +62,11 @@ pub const WIRE_MAGIC: [u8; 4] = *b"LNSW";
 /// (worker progress/telemetry frames); v3 = heartbeat payloads grew the
 /// trailing `dist` section (value-distribution histogram deltas,
 /// [`crate::obs::dist::DistEntry`]) for fleet-wide range-occupancy
-/// aggregation.
-pub const WIRE_VERSION: u16 = 3;
+/// aggregation; v4 = job payloads carry the per-layer precision table
+/// ([`PrecisionMap`] — mixed-precision training) between the
+/// `worker_threads` field and the dataset section, so workers reproduce
+/// the exact per-layer storage widths (v3 peers are refused outright).
+pub const WIRE_VERSION: u16 = 4;
 
 /// Upper bound on a single payload (guards against allocating from a
 /// corrupt or hostile length field).
@@ -733,6 +737,12 @@ pub struct JobSpec {
     /// Rayon threads the worker should build its global pool with
     /// (0 = library default).
     pub worker_threads: usize,
+    /// Per-layer storage words (mixed precision, NUMERICS.md §11).
+    /// Replicated exactly: a replica quantizing to different widths
+    /// would train different bits, so the table travels in the job
+    /// frame and the [`crate::train::multiproc::act_probe`] fingerprint
+    /// covers it too (since wire v4).
+    pub precision: PrecisionMap,
 }
 
 fn put_init(out: &mut Vec<u8>, init: InitScheme) {
@@ -848,6 +858,62 @@ fn read_model(r: &mut ByteReader<'_>) -> Result<ModelSpec> {
     })
 }
 
+/// Per-layer precision table (wire v4): a `u32` layer count, then per
+/// layer a presence flag `u8` (0 = base word, 1 = assigned) followed by
+/// `total_bits` and `frac_bits` as one byte each (zero when unassigned).
+fn put_precision(out: &mut Vec<u8>, pmap: &PrecisionMap) {
+    let layers = pmap.layers();
+    put_u32(out, layers.len() as u32);
+    for spec in layers {
+        match spec {
+            Some(w) => {
+                put_u8(out, 1);
+                put_u8(out, w.total_bits as u8);
+                put_u8(out, w.frac_bits as u8);
+            }
+            None => {
+                put_u8(out, 0);
+                put_u8(out, 0);
+                put_u8(out, 0);
+            }
+        }
+    }
+}
+
+/// Decode the wire-v4 precision table. Hard errors on a hostile layer
+/// count, an unknown presence flag, or a word layout outside
+/// [`WordSpec::validate`] bounds (e.g. out-of-range `frac_bits`) — a
+/// silently defaulted table would train different bits than the
+/// coordinator.
+fn decode_precision(r: &mut ByteReader<'_>) -> Result<PrecisionMap> {
+    let n = r.u32()? as usize;
+    // Each entry costs exactly 3 bytes; also cap at the engine's layer
+    // bound so hostile counts are rejected before allocating by them.
+    ensure!(
+        n <= MAX_PRECISION_LAYERS && n <= r.remaining() / 3,
+        "job precision table claims {n} layers but only {} payload bytes remain",
+        r.remaining()
+    );
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let flag = r.u8()?;
+        let total = r.u8()? as u32;
+        let frac = r.u8()? as u32;
+        match flag {
+            0 => {
+                ensure!(
+                    total == 0 && frac == 0,
+                    "unassigned precision entry carries width bits {total}/{frac}"
+                );
+                layers.push(None);
+            }
+            1 => layers.push(Some(WordSpec { total_bits: total, frac_bits: frac })),
+            other => bail!("unknown precision entry flag {other}"),
+        }
+    }
+    PrecisionMap::from_layers(layers).map_err(|e| anyhow::anyhow!("job precision table: {e}"))
+}
+
 /// Everything in a job payload *before* the four dataset byte arrays
 /// (which [`write_job_frame`] streams rather than materializing).
 fn encode_job_head(job: &JobSpec, ds: &Dataset) -> Vec<u8> {
@@ -866,6 +932,7 @@ fn encode_job_head(job: &JobSpec, ds: &Dataset) -> Vec<u8> {
     put_u32(&mut out, job.rank as u32);
     put_u32(&mut out, job.workers as u32);
     put_u32(&mut out, job.worker_threads as u32);
+    put_precision(&mut out, &job.precision);
     put_str(&mut out, &ds.name);
     put_u64(&mut out, ds.classes as u64);
     put_u64(&mut out, ds.pixels as u64);
@@ -942,6 +1009,7 @@ pub fn decode_job(payload: &[u8]) -> Result<(JobSpec, Dataset)> {
     let rank = r.u32()? as usize;
     let workers = r.u32()? as usize;
     let worker_threads = r.u32()? as usize;
+    let precision = decode_precision(&mut r)?;
     let name = r.string()?;
     let classes = r.usize()?;
     let pixels = r.usize()?;
@@ -986,6 +1054,7 @@ pub fn decode_job(payload: &[u8]) -> Result<(JobSpec, Dataset)> {
         rank,
         workers,
         worker_threads,
+        precision,
     };
     Ok((job, ds))
 }
@@ -1145,6 +1214,7 @@ mod tests {
             rank: 1,
             workers: 2,
             worker_threads: 1,
+            precision: PrecisionMap::parse("8,-", "log16-lut").unwrap(),
         };
         let payload = encode_job(&job, &ds);
         let (j2, d2) = decode_job(&payload).unwrap();
@@ -1153,6 +1223,7 @@ mod tests {
         assert_eq!(j2.model, job.model);
         assert_eq!((j2.rank, j2.workers), (1, 2));
         assert_eq!(j2.seed, job.seed);
+        assert_eq!(j2.precision, job.precision, "per-layer widths round-trip exactly");
         assert_eq!(d2.name, ds.name);
         assert_eq!(d2.train_images, ds.train_images);
         assert_eq!(d2.test_labels, ds.test_labels);
@@ -1177,6 +1248,7 @@ mod tests {
             rank: 0,
             workers: 1,
             worker_threads: 0,
+            precision: PrecisionMap::uniform(),
         };
         let payload = encode_job(&job, &ds);
         let (j2, _) = decode_job(&payload).unwrap();
@@ -1188,6 +1260,85 @@ mod tests {
         bad.train_images.pop();
         let payload = encode_job(&job, &bad);
         assert!(decode_job(&payload).is_err());
+    }
+
+    #[test]
+    fn job_precision_table_hostile_inputs_error() {
+        let ds = toy_dataset();
+        let job = JobSpec {
+            backend_tag: "log16-lut".into(),
+            slope: 0.01,
+            act_probe: Vec::new(),
+            model: ModelSpec::Mlp { dims: vec![4, 8, 2] },
+            epochs: 1,
+            batch_size: 5,
+            lr: 0.01,
+            weight_decay: 0.0,
+            val_ratio: 5,
+            init: InitScheme::HeNormal,
+            seed: 1,
+            rank: 0,
+            workers: 1,
+            worker_threads: 0,
+            precision: PrecisionMap::parse("8,-", "log16-lut").unwrap(),
+        };
+        let payload = encode_job(&job, &ds);
+        // The precision section (count u32 + 2 × 3-byte entries) sits
+        // right before the dataset tail: name + classes + pixels + four
+        // length-prefixed arrays.
+        let tail = (8 + ds.name.len())
+            + 8
+            + 8
+            + (8 + ds.train_images.len())
+            + (8 + ds.train_labels.len())
+            + (8 + ds.test_images.len())
+            + (8 + ds.test_labels.len());
+        let sect = payload.len() - tail - (4 + 2 * 3);
+        assert_eq!(
+            u32::from_le_bytes(payload[sect..sect + 4].try_into().unwrap()),
+            2,
+            "offset arithmetic must land on the layer count"
+        );
+
+        // Oversized layer count (≈4 billion entries claimed).
+        let mut p = payload.clone();
+        p[sect..sect + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_job(&p).is_err());
+
+        // Truncated width table: count says 3 but only 2 entries follow —
+        // the decoder walks into the dataset section and must Err, never
+        // panic or silently mis-decode.
+        let mut p = payload.clone();
+        p[sect..sect + 4].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_job(&p).is_err());
+
+        // Out-of-range frac_bits on the assigned entry (an 8-bit word
+        // cannot carry 7 fractional bits).
+        let mut p = payload.clone();
+        p[sect + 6] = 7;
+        assert!(decode_job(&p).is_err());
+
+        // Unknown presence flag.
+        let mut p = payload.clone();
+        p[sect + 4] = 9;
+        assert!(decode_job(&p).is_err());
+
+        // An unassigned entry must not smuggle width bits.
+        let mut p = payload.clone();
+        p[sect + 8] = 16;
+        assert!(decode_job(&p).is_err());
+    }
+
+    #[test]
+    fn v3_job_frame_is_refused_by_v4_reader() {
+        // A pre-mixed-precision peer (wire v3) must be rejected at the
+        // framing layer — its job payload has no precision table, so
+        // "best-effort" decoding it would fabricate widths.
+        let mut buf = Vec::new();
+        write_frame_with_version(&mut buf, 3, FrameKind::Job, b"v3 job bytes").unwrap();
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version mismatch") && msg.contains("v3"), "{msg}");
     }
 
     #[test]
@@ -1210,6 +1361,7 @@ mod tests {
             rank: 0,
             workers: 2,
             worker_threads: 1,
+            precision: PrecisionMap::parse("-,8", "lin16").unwrap(),
         };
         let mut buffered = Vec::new();
         write_frame(&mut buffered, FrameKind::Job, &encode_job(&job, &ds)).unwrap();

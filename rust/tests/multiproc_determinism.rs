@@ -59,6 +59,7 @@ fn tiny_cfg() -> TrainConfig {
         init: InitScheme::HeNormal,
         seed: 3,
         shard: ShardConfig::default(),
+        precision: lnsdnn::precision::PrecisionMap::uniform(),
     }
 }
 
@@ -124,6 +125,16 @@ fn mlp_multiproc_bit_identical_lns16_lut() {
 fn mlp_multiproc_bit_identical_lns16_bitshift() {
     check_mlp_backend("log16-bs", || {
         LnsBackend::new(LnsSystem::new(LnsConfig::w16_bitshift()), 0.01)
+    });
+}
+
+#[test]
+fn mlp_multiproc_bit_identical_lns8_lut() {
+    // The narrow end of the runtime width axis (PR 10): the worker
+    // processes reconstruct the w8 config from the `log8-lut` tag, and
+    // the act-probe handshake must accept it.
+    check_mlp_backend("log8-lut", || {
+        LnsBackend::new(LnsSystem::new(LnsConfig::w8_lut()), 0.01)
     });
 }
 

@@ -91,6 +91,7 @@ fn tiny_cfg() -> TrainConfig {
         init: InitScheme::HeNormal,
         seed: 3,
         shard: ShardConfig::default(),
+        precision: lnsdnn::precision::PrecisionMap::uniform(),
     }
 }
 

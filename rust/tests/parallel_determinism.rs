@@ -263,6 +263,7 @@ fn training_bitexact_across_runs_with_parallel_engine() {
         init: InitScheme::HeNormal,
         seed: 7,
         shard: Default::default(),
+        precision: Default::default(),
     };
     let b = LnsBackend::new(LnsSystem::new(LnsConfig::w16_lut()), 0.01);
     let r1 = train(&b, &ds, &cfg);

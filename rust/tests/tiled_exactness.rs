@@ -222,6 +222,7 @@ fn mlp_cfg(n_shards: usize) -> TrainConfig {
         init: InitScheme::HeNormal,
         seed: 13,
         shard: ShardConfig::with_shards(n_shards),
+        precision: lnsdnn::precision::PrecisionMap::uniform(),
     }
 }
 

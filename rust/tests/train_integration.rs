@@ -34,6 +34,7 @@ fn cfg(classes: usize) -> TrainConfig {
         init: InitScheme::HeNormal,
         seed: 11,
         shard: ShardConfig::default(),
+        precision: lnsdnn::precision::PrecisionMap::uniform(),
     }
 }
 
